@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 10 — TPC-C per-txn at n=50 (quick scale; run
+//! `cargo run --release --example figures -- fig10 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig10_tpcc_workloads", || {
+        last = Some(figures::fig10(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 11 — TPC-C at n=11 and n=50 (quick scale; run
+//! `cargo run --release --example figures -- fig11 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig11_tpcc_scales", || {
+        last = Some(figures::fig11(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

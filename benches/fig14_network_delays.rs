@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 14 — D1/D2 network delays (quick scale; run
+//! `cargo run --release --example figures -- fig14 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig14_network_delays", || {
+        last = Some(figures::fig14(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

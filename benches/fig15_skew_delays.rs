@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 15 — skew delays, all YCSB workloads (quick scale; run
+//! `cargo run --release --example figures -- fig15 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig15_skew_delays", || {
+        last = Some(figures::fig15(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

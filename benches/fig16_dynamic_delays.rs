@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 16 — rotating delays (D3) series (quick scale; run
+//! `cargo run --release --example figures -- fig16 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig16_dynamic_delays", || {
+        last = Some(figures::fig16(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 17 — bursting delays (D4) + HQC (quick scale; run
+//! `cargo run --release --example figures -- fig17 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig17_bursting_hqc", || {
+        last = Some(figures::fig17(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 18 — CPU contention (quick scale; run
+//! `cargo run --release --example figures -- fig18 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig18_contention", || {
+        last = Some(figures::fig18(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

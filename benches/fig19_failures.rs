@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating Fig 19 — crash failures (quick scale; run
+//! `cargo run --release --example figures -- fig19 --paper` for the
+//! full 100-round version). See DESIGN.md §5 and EXPERIMENTS.md.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig19_failures", || {
+        last = Some(figures::fig19(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmarks for the L3 hot paths (used by the §Perf pass in
+//! EXPERIMENTS.md): quorum accumulation, FIFO weight re-deal, log append,
+//! batch generation, native apply, and a full simulated round.
+
+use std::sync::Arc;
+
+use cabinet::bench::Bencher;
+use cabinet::consensus::message::{Message, Payload};
+use cabinet::consensus::node::{Input, Mode, Node, Role};
+use cabinet::sim::{run, Protocol, SimConfig};
+use cabinet::storage::digest::DigestState;
+use cabinet::storage::DocStore;
+use cabinet::workload::{Workload, YcsbGen};
+
+/// Build an n-node Cabinet leader with all votes collected.
+fn make_leader(n: usize, t: usize) -> Node {
+    let mut leader = Node::new(0, n, Mode::cabinet(n, t));
+    let _ = leader.step(Input::ElectionTimeout);
+    for p in 1..n {
+        let _ = leader.step(Input::Receive(
+            p,
+            Message::RequestVoteReply { term: 1, from: p, granted: true },
+        ));
+        if leader.role() == Role::Leader {
+            break;
+        }
+    }
+    assert_eq!(leader.role(), Role::Leader);
+    leader
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    // 1. replication round at the leader: propose + n-1 replies + commit
+    for (n, t) in [(11usize, 1usize), (50, 5), (100, 10)] {
+        let leader0 = make_leader(n, t);
+        b.iter(&format!("leader_round/n{n}_t{t}"), || {
+            let mut leader = leader0.clone();
+            let _ = leader.step(Input::Propose(Payload::Noop));
+            let wc = leader.wclock();
+            let last = leader.log().last_index();
+            for p in 1..n {
+                let _ = leader.step(Input::Receive(
+                    p,
+                    Message::AppendEntriesReply {
+                        term: 1,
+                        from: p,
+                        success: true,
+                        match_index: last,
+                        wclock: wc,
+                    },
+                ));
+            }
+            leader.commit_index()
+        });
+    }
+
+    // 2. YCSB batch generation (5k ops, workload A)
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 1);
+    b.iter("ycsb_gen/5k", || gen.batch(5000));
+
+    // 3. native digest apply (the simulator's state-machine path)
+    let batch = YcsbGen::new(Workload::A, 100_000, 2).batch(5000).padded_to(5120);
+    b.iter("native_apply/5120", || {
+        let mut st = DigestState::default();
+        st.apply_ycsb(&batch.ops, &batch.keys, &batch.vals)
+    });
+
+    // 4. document-store apply (real CRUD + digest)
+    b.iter("docstore_apply/5k", || {
+        let mut store = DocStore::new();
+        store.apply(&batch)
+    });
+
+    // 5. full simulated experiment (12 rounds, n=50 het)
+    b.iter("sim_run/n50_cab_f10_12rounds", || {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 5 }, 50, true);
+        c.rounds = 12;
+        run(&c).tput_ops_s
+    });
+
+    // 6. wire-size accounting on a large AppendEntries
+    let entries_batch = Arc::new(YcsbGen::new(Workload::A, 100_000, 3).batch(5000));
+    b.iter("wire_size/5k", || {
+        Message::AppendEntries {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: vec![cabinet::consensus::message::Entry {
+                term: 1,
+                index: 1,
+                payload: Payload::Ycsb(Arc::clone(&entries_batch)),
+                wclock: 1,
+            }],
+            leader_commit: 0,
+            wclock: 1,
+            weight: 1.0,
+        }
+        .wire_size()
+    });
+}

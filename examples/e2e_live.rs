@@ -1,0 +1,109 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E): boots a real
+//! 7-node Cabinet cluster on OS threads, elects a leader, serves 60
+//! batched YCSB-A rounds (2,000 ops each) through the full stack —
+//!
+//!   client → L3 Rust coordinator (weighted consensus, FIFO weight
+//!   re-deal) → commit → L2/L1 AOT-compiled JAX+Pallas state-machine
+//!   apply executed via PJRT (Python-free) → replica digests
+//!
+//! — then runs the same workload under Raft for comparison and verifies
+//! all replicas converged to bit-identical state digests.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_live`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cabinet::bench::{fmt_tps, Summary};
+use cabinet::consensus::{Mode, Payload};
+use cabinet::live::{ApplyService, Backend, LiveCluster, LiveTimers};
+use cabinet::runtime::default_artifact_dir;
+use cabinet::workload::{Workload, YcsbGen};
+
+const N: usize = 7;
+const T: usize = 2;
+const ROUNDS: usize = 60;
+const BATCH: usize = 2000;
+
+fn drive(label: &str, mode: Mode, svc: &ApplyService) -> (f64, Vec<f64>, usize, bool) {
+    let cluster =
+        LiveCluster::start(N, mode, LiveTimers::default(), Some(svc.submitter()), 1234);
+    cluster.force_election(0);
+    let leader = cluster
+        .wait_for_leader(Duration::from_secs(5))
+        .expect("no leader elected");
+    // wait for the no-op barrier round
+    cluster.wait_for_round(1, Duration::from_secs(5)).expect("noop round");
+
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 99);
+    let mut lats_ms = Vec::with_capacity(ROUNDS);
+    let t0 = Instant::now();
+    for i in 0..ROUNDS {
+        let batch = gen.batch(BATCH);
+        let r0 = Instant::now();
+        cluster.propose(leader, Payload::Ycsb(Arc::new(batch)));
+        cluster
+            .wait_for_round((i + 2) as u64, Duration::from_secs(30))
+            .expect("round timed out");
+        lats_ms.push(r0.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let tput = (ROUNDS * BATCH) as f64 / wall;
+
+    std::thread::sleep(Duration::from_millis(300)); // commit propagation
+    let reports = cluster.shutdown();
+    let digests: Vec<[u32; 2]> = reports.iter().filter_map(|r| r.final_digest).collect();
+    let converged = digests.len() >= 2 && digests.windows(2).all(|w| w[0] == w[1]);
+    println!(
+        "[{label}] replicas with applied state: {}/{N}, digests converged: {converged}",
+        digests.len()
+    );
+    (tput, lats_ms, digests.len(), converged)
+}
+
+fn main() {
+    println!("=== Cabinet end-to-end live driver ===");
+    println!("n={N}, t={T}, {ROUNDS} rounds x {BATCH} YCSB-A ops\n");
+
+    let mut svc = ApplyService::spawn(default_artifact_dir());
+    let backend = svc.backend();
+    println!("state-machine apply backend: {backend:?}");
+    assert!(
+        backend == Backend::Pjrt || !default_artifact_dir().exists(),
+        "artifacts exist but PJRT failed to load"
+    );
+    if backend == Backend::Native {
+        println!("WARNING: artifacts not built — run `make artifacts` for the PJRT path\n");
+    }
+
+    let (cab_tput, cab_lat, cab_replicas, cab_ok) =
+        drive("cabinet", Mode::cabinet(N, T), &svc);
+    let (raft_tput, raft_lat, _raft_replicas, raft_ok) = drive("raft", Mode::Raft, &svc);
+
+    let cs = Summary::of(&cab_lat);
+    let rs = Summary::of(&raft_lat);
+    println!("\n--- results (live wall clock, {backend:?} apply) ---");
+    println!(
+        "cabinet t={T}: {} ops/s | round lat mean {:.1} ms p50 {:.1} p99 {:.1}",
+        fmt_tps(cab_tput),
+        cs.mean,
+        cs.p50,
+        cs.p99
+    );
+    println!(
+        "raft        : {} ops/s | round lat mean {:.1} ms p50 {:.1} p99 {:.1}",
+        fmt_tps(raft_tput),
+        rs.mean,
+        rs.p50,
+        rs.p99
+    );
+    println!(
+        "cabinet/raft throughput ratio: {:.2}x (in-process transport: both \
+         quorums are fast; the paper's gap comes from heterogeneous apply \
+         times, reproduced in the simulator figures)",
+        cab_tput / raft_tput
+    );
+    assert!(cab_ok && raft_ok, "replica digests diverged");
+    assert!(cab_replicas >= 2);
+    println!("\nE2E OK: consensus + PJRT apply + replica convergence verified");
+}

@@ -1,0 +1,45 @@
+//! Regenerate every paper table/figure (DESIGN.md §5 index).
+//!
+//! Run: `cargo run --release --example figures -- [all|fig3|fig4|fig8|...]
+//!      [--paper]`
+//!
+//! `--paper` uses the paper's 100-round scale; the default quick scale uses
+//! 12 rounds (same shapes, faster).
+
+use cabinet::bench::{figures, Scale};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let paper = args.iter().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Quick };
+    let which = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+
+    let tables = match which.as_str() {
+        "all" => figures::all_figures(scale),
+        "fig3" => vec![figures::fig3()],
+        "fig4" => vec![figures::fig4()],
+        "fig8" => vec![figures::fig8(scale)],
+        "fig9" => vec![figures::fig9(scale)],
+        "fig10" => vec![figures::fig10(scale)],
+        "fig11" => vec![figures::fig11(scale)],
+        "fig12" => vec![figures::fig12(scale)],
+        "fig13" => vec![figures::fig13()],
+        "fig14" => vec![figures::fig14(scale)],
+        "fig15" => vec![figures::fig15(scale)],
+        "fig16" => vec![figures::fig16(scale)],
+        "fig17" => vec![figures::fig17(scale), figures::fig17_series(scale)],
+        "fig18" => vec![figures::fig18(scale)],
+        "fig19" => vec![figures::fig19(scale)],
+        other => {
+            eprintln!("unknown figure {other}; use fig3..fig19 or all");
+            std::process::exit(1);
+        }
+    };
+    for t in tables {
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,66 @@
+//! TPC-C + relational store (the paper's "TPC-C+PostgreSQL" scenario,
+//! §5.2): n = 11 and n = 50 clusters, b = 2k, per-transaction-type
+//! breakdown (Fig. 10/11) and the lock-contention profile of the batch.
+//!
+//! Run: `cargo run --release --example tpcc_cluster [--paper]`
+
+use cabinet::bench::{fmt_tps, lineup, Scale, Table};
+use cabinet::sim::{run, DigestMode, SimConfig, WorkloadSpec};
+use cabinet::storage::RelStore;
+use cabinet::workload::tpcc::TXN_NAMES;
+use cabinet::workload::TpccGen;
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Quick };
+
+    for n in [11usize, 50] {
+        let mut table = Table::new(
+            format!("TPC-C (n={n}, b=2k, het) — total + per-txn-type throughput"),
+            &["algo", "txn_s", "lat_ms", "NewOrder", "Payment", "OrdStat", "Deliv", "StkLvl", "digests"],
+        );
+        for (label, proto) in lineup(n) {
+            let mut c = SimConfig::new(proto, n, true);
+            c.rounds = scale.rounds();
+            c.workload = WorkloadSpec::tpcc2k();
+            c.digest_mode = DigestMode::Sample;
+            let r = run(&c);
+            let mut cols = vec![
+                label,
+                fmt_tps(r.tput_ops_s),
+                format!("{:.1}", r.mean_latency_ms),
+            ];
+            for (_, share) in cabinet::workload::tpcc::MIX {
+                cols.push(fmt_tps(r.tput_ops_s * share));
+            }
+            cols.push(format!("{:?}", r.digests_match.unwrap_or(false)));
+            table.row(cols);
+        }
+        println!("{}", table.render());
+    }
+
+    // cost anatomy of one 2k-txn batch (what followers execute per round)
+    let mut gen = TpccGen::new(10, 9);
+    let batch = gen.batch(2000);
+    let breakdown = RelStore::cost_breakdown(&batch, 10);
+    let total: f64 = breakdown.iter().sum();
+    let mut anatomy = Table::new(
+        "cost anatomy of one b=2k batch (work units; lock contention included)",
+        &["txn", "count", "work_units", "share"],
+    );
+    let counts = batch.type_counts();
+    for (i, name) in TXN_NAMES.iter().enumerate() {
+        anatomy.row(vec![
+            (*name).into(),
+            counts[i].to_string(),
+            format!("{:.0}", breakdown[i]),
+            format!("{:.1}%", 100.0 * breakdown[i] / total),
+        ]);
+    }
+    println!("{}", anatomy.render());
+    println!(
+        "batch apply cost at Z3 speed: {:.1} ms (the follower service time the \
+         consensus layer sees)",
+        RelStore::estimate_cost_ms(&batch, 10)
+    );
+}

@@ -1,0 +1,69 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE here; the Rust binary is self-contained afterwards
+(`make artifacts` is a no-op when the artifacts are newer than this tree).
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import (
+    MAX_NODES,
+    STATE_SLOTS,
+    TPCC_BATCH,
+    TPCC_WAREHOUSES,
+    YCSB_BATCH,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, lowered in model.lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Artifact manifest: the shape contract the Rust runtime validates
+    # against its compiled-in constants at load time.
+    manifest = {
+        "state_slots": STATE_SLOTS,
+        "ycsb_batch": YCSB_BATCH,
+        "tpcc_batch": TPCC_BATCH,
+        "tpcc_warehouses": TPCC_WAREHOUSES,
+        "max_nodes": MAX_NODES,
+        "artifacts": ["ycsb_apply", "tpcc_cost", "weight_scheme"],
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernels for the Cabinet reproduction.
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest asserts bit-exact
+equality (all state-machine arithmetic is uint32 modular, so there is no
+tolerance to argue about). The constants here are the *shared spec* with the
+Rust coordinator (`rust/src/storage/digest.rs` mirrors them exactly).
+"""
+
+# --- shared spec constants (mirrored in rust/src/storage/digest.rs) ---------
+
+# State-machine state: S uint32 slots (power of two).
+STATE_SLOTS = 8192
+# YCSB batch: padded op-batch size and Pallas block size.
+YCSB_BATCH = 5120
+YCSB_BLOCK = 512
+# TPC-C batch: padded txn-batch size, block size, warehouse count.
+TPCC_BATCH = 2048
+TPCC_BLOCK = 256
+TPCC_WAREHOUSES = 64
+# Weight-scheme artifact: max cluster size.
+MAX_NODES = 128
+
+# Mixing constants (xxhash/murmur-style odd constants).
+MIX1 = 0x9E3779B1
+MIX2 = 0x85EBCA77
+MIX3 = 0xC2B2AE3D
+MIX4 = 0x27D4EB2F
+
+# YCSB op codes (shared with rust workload::ycsb).
+OP_READ = 0
+OP_UPDATE = 1
+OP_SCAN = 2
+OP_INSERT = 3
+OP_RMW = 4
+OP_NOP = 5
+
+# TPC-C transaction codes (shared with rust workload::tpcc).
+TXN_NEW_ORDER = 0
+TXN_PAYMENT = 1
+TXN_ORDER_STATUS = 2
+TXN_DELIVERY = 3
+TXN_STOCK_LEVEL = 4
+TXN_NOP = 5
+
+# TPC-C cost model: base work units per txn type and lock-contention
+# coefficient (write txns serialized per warehouse). Mirrored in rust.
+TPCC_BASE_COST = (45.0, 18.0, 9.0, 30.0, 22.0)
+TPCC_ARG_COEF = 0.35
+TPCC_LOCK_COEF = 2.5
+
+from . import ref  # noqa: E402,F401
+from .ycsb_apply import ycsb_apply_pallas  # noqa: E402,F401
+from .tpcc_cost import tpcc_cost_pallas  # noqa: E402,F401

@@ -1,0 +1,138 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground-truth semantics of the replicated state machine. All
+arithmetic is uint32 modular (wrap on overflow), which makes every reduction
+associative + commutative — so the tiled Pallas kernels, the XLA CPU
+executable and the native Rust mirror (rust/src/storage/digest.rs) must all
+produce *bit-identical* results. The integration tests lean on that: replica
+convergence is asserted as digest equality.
+"""
+
+import jax.numpy as jnp
+
+from . import (
+    MIX1,
+    MIX2,
+    MIX3,
+    MIX4,
+    OP_INSERT,
+    OP_NOP,
+    OP_RMW,
+    OP_SCAN,
+    OP_UPDATE,
+    OP_READ,
+    TPCC_ARG_COEF,
+    TPCC_BASE_COST,
+    TPCC_LOCK_COEF,
+    TXN_DELIVERY,
+    TXN_NEW_ORDER,
+    TXN_NOP,
+    TXN_PAYMENT,
+)
+
+U32 = jnp.uint32
+
+
+def mix(k):
+    """Primary key-mixing function: m(k) = ((k*MIX1) ^ (k>>15)) * MIX3."""
+    k = k.astype(U32)
+    m = (k * U32(MIX1)) ^ (k >> U32(15))
+    return m * U32(MIX3)
+
+
+def op_contrib(ops, keys, vals):
+    """Per-op state contribution c = ((m ^ v*MIX2) * (2*op+1)) + MIX4."""
+    m = mix(keys)
+    v = vals.astype(U32) * U32(MIX2)
+    c = ((m ^ v) * (U32(2) * ops.astype(U32) + U32(1))) + U32(MIX4)
+    return c
+
+
+def slot_of(keys, n_slots):
+    """State slot for a key; n_slots must be a power of two."""
+    return mix(keys) & U32(n_slots - 1)
+
+
+def write_mask(ops):
+    return (ops == OP_UPDATE) | (ops == OP_INSERT) | (ops == OP_RMW)
+
+
+def read_mask(ops):
+    return (ops == OP_READ) | (ops == OP_SCAN) | (ops == OP_RMW)
+
+
+def ycsb_apply_ref(state, ops, keys, vals):
+    """Oracle for the YCSB batch apply.
+
+    state: uint32[S]; ops/keys/vals: uint32[B].
+    Returns (new_state uint32[S], digest uint32[2]) where digest[0] is the
+    state digest and digest[1] the read digest. Ops with code >= OP_NOP are
+    padding and contribute nothing.
+
+    Reads observe the *pre-batch* state; writes are commutative wrap-adds —
+    both choices make the batch order-independent, hence deterministic
+    across any tiling.
+    """
+    state = state.astype(U32)
+    ops = ops.astype(U32)
+    n_slots = state.shape[0]
+
+    c = op_contrib(ops, keys, vals)
+    slots = slot_of(keys, n_slots)
+    live = ops < U32(OP_NOP)
+    wm = write_mask(ops) & live
+    rm = read_mask(ops) & live
+
+    wc = jnp.where(wm, c, U32(0))
+    new_state = state.at[slots].add(wc, mode="promise_in_bounds")
+
+    rvals = jnp.where(rm, state[slots] ^ c, U32(0))
+    rdig = jnp.sum(rvals, dtype=U32)
+
+    idx = jnp.arange(n_slots, dtype=U32)
+    z = (idx * U32(MIX1)) ^ U32(0x5A5A5A5A)
+    sdig = jnp.sum(new_state * z, dtype=U32)
+    return new_state, jnp.stack([sdig, rdig])
+
+
+def tpcc_lock_counts_ref(types, wids, n_warehouses):
+    """Oracle for pass 1: per-warehouse write-lock demand.
+
+    counts[w] = #{i : type_i is a lock-taking txn and wid_i == w}.
+    Lock-taking txns: NewOrder, Payment, Delivery.
+    """
+    types = types.astype(U32)
+    lock = (
+        (types == TXN_NEW_ORDER) | (types == TXN_PAYMENT) | (types == TXN_DELIVERY)
+    )
+    onehot = (wids.astype(U32)[:, None] == jnp.arange(n_warehouses, dtype=U32)[None, :])
+    return jnp.sum(jnp.where(lock[:, None], onehot, False).astype(jnp.float32), axis=0)
+
+
+def tpcc_cost_ref(types, wids, args, counts):
+    """Oracle for pass 2: per-txn cost + stream digest.
+
+    cost_i = BASE[type_i] * (1 + ARG_COEF * args_i/16)
+             + LOCK_COEF * max(counts[wid_i] - 1, 0)   [lock txns only]
+    digest = wrap-sum of op_contrib(type, wid-as-key, args).
+    """
+    types_u = types.astype(U32)
+    live = types_u < U32(TXN_NOP)
+    base = jnp.array(TPCC_BASE_COST + (0.0,), dtype=jnp.float32)
+    t_idx = jnp.minimum(types_u, U32(len(TPCC_BASE_COST))).astype(jnp.int32)
+    b = base[t_idx]
+    argf = args.astype(jnp.float32) / 16.0
+    lock = (
+        (types_u == TXN_NEW_ORDER)
+        | (types_u == TXN_PAYMENT)
+        | (types_u == TXN_DELIVERY)
+    )
+    contention = jnp.maximum(counts[wids.astype(jnp.int32)] - 1.0, 0.0)
+    cost = b * (1.0 + TPCC_ARG_COEF * argf) + jnp.where(
+        lock, TPCC_LOCK_COEF * contention, 0.0
+    )
+    cost = jnp.where(live, cost, 0.0)
+
+    c = op_contrib(types_u, wids, args)
+    dig = jnp.sum(jnp.where(live, c, U32(0)), dtype=U32)
+    return cost, dig

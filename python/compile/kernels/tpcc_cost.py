@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: TPC-C batch cost model + stream digest.
+
+Two passes, both tiled along the txn-batch axis:
+
+  pass 1 (`_counts_kernel`)  — per-warehouse write-lock demand. The
+      block-local one-hot reduction `(wids == iota(W))` is the
+      [BLOCK, W]-shaped VPU/MXU-friendly formulation of a segment count;
+      partials wrap-accumulate across grid steps.
+  pass 2 (`_cost_kernel`)    — per-txn cost (base work * argument factor +
+      lock-contention term from pass 1) and the uint32 stream digest.
+
+Both match `ref.tpcc_lock_counts_ref` / `ref.tpcc_cost_ref` exactly (costs
+are f32 but computed in the same op order; digests are uint32 modular).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import (
+    TPCC_ARG_COEF,
+    TPCC_BASE_COST,
+    TPCC_LOCK_COEF,
+    TXN_DELIVERY,
+    TXN_NEW_ORDER,
+    TXN_NOP,
+    TXN_PAYMENT,
+)
+from .ref import op_contrib
+
+U32 = jnp.uint32
+F32 = jnp.float32
+
+
+def _lock_mask(types):
+    return (
+        (types == TXN_NEW_ORDER) | (types == TXN_PAYMENT) | (types == TXN_DELIVERY)
+    )
+
+
+def _counts_kernel(types_ref, wids_ref, counts_ref):
+    step = pl.program_id(0)
+    types = types_ref[...]
+    wids = wids_ref[...]
+    n_wh = counts_ref.shape[0]
+
+    lock = _lock_mask(types)
+    onehot = wids[:, None] == jnp.arange(n_wh, dtype=U32)[None, :]
+    partial = jnp.sum(
+        jnp.where(lock[:, None], onehot, False).astype(F32), axis=0
+    )
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        counts_ref[...] = counts_ref[...] + partial
+
+
+def _cost_kernel(types_ref, wids_ref, args_ref, counts_ref, cost_ref, dig_ref):
+    types = types_ref[...]
+    wids = wids_ref[...]
+    args = args_ref[...]
+    counts = counts_ref[...]
+
+    live = types < U32(TXN_NOP)
+    # Base-cost table as a where-chain (a captured constant array would be
+    # rejected by pallas_call; a 5-way select is also the VPU-friendly form).
+    b = jnp.zeros(types.shape, F32)
+    for code, base_cost in enumerate(TPCC_BASE_COST):
+        b = jnp.where(types == U32(code), F32(base_cost), b)
+    argf = args.astype(F32) / 16.0
+    lock = _lock_mask(types)
+    contention = jnp.maximum(counts[wids.astype(jnp.int32)] - 1.0, 0.0)
+    cost = b * (1.0 + TPCC_ARG_COEF * argf) + jnp.where(
+        lock, TPCC_LOCK_COEF * contention, 0.0
+    )
+    cost_ref[...] = jnp.where(live, cost, 0.0)
+
+    c = op_contrib(types, wids, args)
+    dig_ref[...] = jnp.sum(jnp.where(live, c, U32(0)), dtype=U32).reshape(
+        dig_ref.shape
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n_warehouses"))
+def tpcc_cost_pallas(types, wids, args, *, block=256, n_warehouses=64):
+    """Tiled Pallas implementation of the TPC-C cost model.
+
+    types/wids/args: uint32[B] with B % block == 0, wids < n_warehouses.
+    Returns (counts f32[W], costs f32[B], digest uint32[]).
+    """
+    batch = types.shape[0]
+    assert batch % block == 0, (batch, block)
+    grid = batch // block
+
+    counts = pl.pallas_call(
+        _counts_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_warehouses,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_warehouses,), F32),
+        interpret=True,
+    )(types, wids)
+
+    costs, digs = pl.pallas_call(
+        _cost_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n_warehouses,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), F32),
+            jax.ShapeDtypeStruct((grid,), U32),
+        ],
+        interpret=True,
+    )(types, wids, args, counts)
+
+    return counts, costs, jnp.sum(digs, dtype=U32)

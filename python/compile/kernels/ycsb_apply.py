@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: tiled YCSB batch apply + digest.
+
+The op batch is tiled into BLOCK-sized chunks along the batch axis (the
+HBM→VMEM schedule a TPU would use); the state vector (S uint32 = 32 KiB)
+lives whole in VMEM for every grid step. Because all state arithmetic is
+uint32 modular (associative + commutative), per-block scatter-adds can be
+accumulated across grid steps in any order and still match the oracle
+bit-for-bit.
+
+`interpret=True` is mandatory in this environment: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The BlockSpec
+structure is still the TPU-shaped one; see DESIGN.md §Hardware-Adaptation
+and EXPERIMENTS.md §Perf for the VMEM/VPU utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import MIX1, OP_NOP
+from .ref import op_contrib, read_mask, slot_of, write_mask
+
+U32 = jnp.uint32
+
+
+def _apply_kernel(state_ref, ops_ref, keys_ref, vals_ref, delta_ref, rdig_ref):
+    """One grid step: scatter this block's write contributions into the
+    state-delta accumulator and emit the block's read-digest partial."""
+    step = pl.program_id(0)
+    n_slots = state_ref.shape[0]
+
+    ops = ops_ref[...]
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+
+    c = op_contrib(ops, keys, vals)
+    slots = slot_of(keys, n_slots)
+    live = ops < U32(OP_NOP)
+    wm = write_mask(ops) & live
+    rm = read_mask(ops) & live
+
+    wc = jnp.where(wm, c, U32(0))
+    block_delta = jnp.zeros((n_slots,), U32).at[slots].add(
+        wc, mode="promise_in_bounds"
+    )
+
+    # Reads observe the pre-batch state (state_ref is the unmodified input).
+    rvals = jnp.where(rm, state_ref[...][slots] ^ c, U32(0))
+    rdig_ref[...] = jnp.sum(rvals, dtype=U32).reshape(rdig_ref.shape)
+
+    @pl.when(step == 0)
+    def _init():
+        delta_ref[...] = block_delta
+
+    @pl.when(step != 0)
+    def _acc():
+        delta_ref[...] = delta_ref[...] + block_delta
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ycsb_apply_pallas(state, ops, keys, vals, *, block=512):
+    """Tiled Pallas implementation of `ref.ycsb_apply_ref`.
+
+    state: uint32[S] (S a power of two); ops/keys/vals: uint32[B] with
+    B % block == 0. Returns (new_state uint32[S], digest uint32[2]).
+    """
+    n_slots = state.shape[0]
+    batch = ops.shape[0]
+    assert batch % block == 0, (batch, block)
+    grid = batch // block
+
+    delta, rdigs = pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_slots,), lambda i: (0,)),  # full state every step
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_slots,), lambda i: (0,)),  # accumulated delta
+            pl.BlockSpec((1,), lambda i: (i,)),  # per-block read digest
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots,), U32),
+            jax.ShapeDtypeStruct((grid,), U32),
+        ],
+        interpret=True,
+    )(state, ops, keys, vals)
+
+    new_state = state + delta  # uint32 wrap-add
+    rdig = jnp.sum(rdigs, dtype=U32)
+
+    idx = jnp.arange(n_slots, dtype=U32)
+    z = (idx * U32(MIX1)) ^ U32(0x5A5A5A5A)
+    sdig = jnp.sum(new_state * z, dtype=U32)
+    return new_state, jnp.stack([sdig, rdig])

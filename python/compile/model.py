@@ -1,0 +1,143 @@
+"""Layer-2 JAX compute graphs (build-time only; never on the request path).
+
+Three graphs are AOT-lowered to HLO text by `aot.py` and executed from the
+Rust coordinator via PJRT:
+
+  ycsb_step      — the follower's YCSB state-machine apply (calls the L1
+                   `ycsb_apply` Pallas kernel) producing the new replica
+                   state + digest used for the replica-convergence check.
+  tpcc_step      — the follower's TPC-C batch cost model + stream digest
+                   (calls the L1 `tpcc_cost` Pallas kernels).
+  weight_scheme  — Cabinet's Eq. 4 solver: given (n, t) find the geometric
+                   ratio r, the padded weight vector w_k = r^(n-k), and the
+                   consensus threshold CT = Σw/2. The Rust coordinator
+                   cross-checks this artifact against its native f64 solver
+                   at startup (L3↔L2 consistency test).
+
+All graphs use static shapes (the artifact contract shared with Rust lives
+in `kernels/__init__.py`).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # weight solver runs in f64
+
+import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
+
+from .kernels import (  # noqa: E402
+    MAX_NODES,
+    STATE_SLOTS,
+    TPCC_BATCH,
+    TPCC_BLOCK,
+    TPCC_WAREHOUSES,
+    YCSB_BATCH,
+    YCSB_BLOCK,
+    tpcc_cost_pallas,
+    ycsb_apply_pallas,
+)
+
+# Bisection trip count for the Eq. 4 ratio solver. 80 halvings of an
+# interval of width 1 ⇒ |r − r*| < 2⁻⁸⁰: bit-exact convergence in f64
+# (mirrored by rust consensus::weights::BISECT_ITERS).
+BISECT_ITERS = 80
+
+# Fraction of the feasible (r_lower, r_upper) span to step down from the
+# upper boundary when choosing r (mirrored by rust consensus::weights).
+# Reproduces Fig. 4's r for t=2,3,4 at n=10 to ±0.01; the paper's t=1 row
+# picked near the *lower* edge instead — see DESIGN.md §5 (Fig. 4 entry).
+RATIO_MARGIN = 0.05
+
+
+def ycsb_step(state, ops, keys, vals):
+    """Follower apply for one committed YCSB batch. See kernels/ref.py."""
+    return ycsb_apply_pallas(state, ops, keys, vals, block=YCSB_BLOCK)
+
+
+def tpcc_step(types, wids, args):
+    """Follower cost model + digest for one committed TPC-C batch."""
+    return tpcc_cost_pallas(
+        types, wids, args, block=TPCC_BLOCK, n_warehouses=TPCC_WAREHOUSES
+    )
+
+
+def _powr(r, k):
+    """r**k for traced f64 r and f64 k (k ≥ 0)."""
+    return jnp.exp(k * jnp.log(r))
+
+
+def _half_sum(r, n):
+    """CT numerator form from Eq. 4: (r^n + 1) / 2."""
+    return (_powr(r, n) + 1.0) / 2.0
+
+
+def _bisect(f, lo, hi, iters):
+    """Bisection for the root of f on [lo, hi] assuming f(lo) ≤ 0 ≤ f(hi).
+
+    If f(lo) > 0 the whole interval is already feasible and lo is returned
+    (this happens for the lower boundary when t + 1 ≥ n/2).
+    """
+
+    def body(_, ab):
+        a, b = ab
+        m = 0.5 * (a + b)
+        fm = f(m)
+        a2 = jnp.where(fm <= 0.0, m, a)
+        b2 = jnp.where(fm <= 0.0, b, m)
+        return (a2, b2)
+
+    a, b = lax.fori_loop(0, iters, body, (lo, hi))
+    root = 0.5 * (a + b)
+    return jnp.where(f(lo) > 0.0, lo, root)
+
+
+def ratio_bounds(n, t):
+    """Feasible (r_lower, r_upper) for Eq. 4: r^(n-t-1) < (r^n+1)/2 < r^(n-t).
+
+    n, t: i32 scalars (t in [1, (n-1)/2]). Returns f64 scalars.
+    """
+    nf = n.astype(jnp.float64)
+    tf = t.astype(jnp.float64)
+    lo = jnp.float64(1.0 + 1e-9)
+    hi = jnp.float64(2.0)
+
+    def l_fn(r):  # want > 0: lower-boundary function (I1)
+        return _half_sum(r, nf) - _powr(r, nf - tf - 1.0)
+
+    def u_fn(r):  # want < 0: upper-boundary function (I2)
+        return _half_sum(r, nf) - _powr(r, nf - tf)
+
+    r_lower = _bisect(l_fn, lo, hi, BISECT_ITERS)
+    r_upper = _bisect(u_fn, lo, hi, BISECT_ITERS)
+    return r_lower, r_upper
+
+
+def weight_scheme(n, t):
+    """Cabinet weight scheme for (n, t): returns (r, weights[MAX_NODES], ct).
+
+    weights[k] = r^(n-1-k) for k < n (descending; node 0 = leader = w₁),
+    zero-padded to MAX_NODES. ct = Σ weights / 2 in closed form.
+    """
+    r_lower, r_upper = ratio_bounds(n, t)
+    r = r_upper - RATIO_MARGIN * (r_upper - r_lower)
+
+    nf = n.astype(jnp.float64)
+    k = jnp.arange(MAX_NODES, dtype=jnp.float64)
+    w = jnp.where(k < nf, _powr(r, nf - 1.0 - k), 0.0)
+    ct = (_powr(r, nf) - 1.0) / (2.0 * (r - 1.0))
+    return r, w, ct
+
+
+def lower_all():
+    """Lower the three artifact graphs; returns {name: jax.stages.Lowered}."""
+    u32 = jnp.uint32
+    i32 = jnp.int32
+    state = jax.ShapeDtypeStruct((STATE_SLOTS,), u32)
+    yb = jax.ShapeDtypeStruct((YCSB_BATCH,), u32)
+    tb = jax.ShapeDtypeStruct((TPCC_BATCH,), u32)
+    scalar = jax.ShapeDtypeStruct((), i32)
+    return {
+        "ycsb_apply": jax.jit(ycsb_step).lower(state, yb, yb, yb),
+        "tpcc_cost": jax.jit(tpcc_step).lower(tb, tb, tb),
+        "weight_scheme": jax.jit(weight_scheme).lower(scalar, scalar),
+    }

@@ -1,0 +1,63 @@
+"""AOT path: the lowered HLO text is well-formed and matches the manifest
+contract the Rust runtime validates at load time."""
+
+import json
+import os
+
+from compile import aot, model
+from compile.kernels import (
+    MAX_NODES,
+    STATE_SLOTS,
+    TPCC_BATCH,
+    YCSB_BATCH,
+)
+
+
+def test_lower_all_produces_hlo_text():
+    lowered = model.lower_all()
+    assert set(lowered) == {"ycsb_apply", "tpcc_cost", "weight_scheme"}
+    for name, low in lowered.items():
+        text = aot.to_hlo_text(low)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_ycsb_artifact_signature():
+    text = aot.to_hlo_text(model.lower_all()["ycsb_apply"])
+    # parameters: state u32[S], ops/keys/vals u32[B]
+    assert f"u32[{STATE_SLOTS}]" in text
+    assert f"u32[{YCSB_BATCH}]" in text
+    # output tuple: (new_state u32[S], digest u32[2])
+    assert "u32[2]" in text
+
+
+def test_tpcc_artifact_signature():
+    text = aot.to_hlo_text(model.lower_all()["tpcc_cost"])
+    assert f"u32[{TPCC_BATCH}]" in text
+    assert f"f32[{TPCC_BATCH}]" in text
+
+
+def test_weight_scheme_artifact_signature():
+    text = aot.to_hlo_text(model.lower_all()["weight_scheme"])
+    assert f"f64[{MAX_NODES}]" in text  # padded weight vector
+    assert "f64[]" in text  # r and ct scalars
+
+
+def test_artifacts_on_disk_match_if_built():
+    """If `make artifacts` has run, the manifest must match the compiled-in
+    constants (this is what the Rust runtime asserts too)."""
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(adir, "manifest.json")
+    if not os.path.exists(mpath):
+        return  # artifacts not built yet — covered by the Makefile flow
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["state_slots"] == STATE_SLOTS
+    assert manifest["ycsb_batch"] == YCSB_BATCH
+    assert manifest["tpcc_batch"] == TPCC_BATCH
+    assert manifest["max_nodes"] == MAX_NODES
+    for name in manifest["artifacts"]:
+        apath = os.path.join(adir, f"{name}.hlo.txt")
+        assert os.path.exists(apath), name
+        with open(apath) as f:
+            assert f.read(9) == "HloModule"

@@ -1,0 +1,164 @@
+"""YCSB Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Everything is uint32 modular arithmetic, so equality is bit-exact (no
+allclose tolerance). Hypothesis sweeps shapes (state sizes, batch sizes,
+block sizes) and adversarial value ranges.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    OP_INSERT,
+    OP_NOP,
+    OP_READ,
+    OP_RMW,
+    OP_SCAN,
+    OP_UPDATE,
+    STATE_SLOTS,
+    YCSB_BATCH,
+    YCSB_BLOCK,
+    ref,
+    ycsb_apply_pallas,
+)
+
+U32 = np.uint32
+
+
+def _rand(rng, n, hi=2**32):
+    return jnp.array(rng.integers(0, hi, n, dtype=U32))
+
+
+def _run_both(state, ops, keys, vals, block):
+    ns_r, d_r = ref.ycsb_apply_ref(state, ops, keys, vals)
+    ns_p, d_p = ycsb_apply_pallas(state, ops, keys, vals, block=block)
+    return ns_r, d_r, ns_p, d_p
+
+
+def test_artifact_shape_bit_exact():
+    """The exact (S, B, block) configuration the AOT artifact uses."""
+    rng = np.random.default_rng(7)
+    state = _rand(rng, STATE_SLOTS)
+    ops = _rand(rng, YCSB_BATCH, hi=OP_NOP + 2)
+    keys = _rand(rng, YCSB_BATCH)
+    vals = _rand(rng, YCSB_BATCH)
+    ns_r, d_r, ns_p, d_p = _run_both(state, ops, keys, vals, YCSB_BLOCK)
+    np.testing.assert_array_equal(np.array(ns_r), np.array(ns_p))
+    np.testing.assert_array_equal(np.array(d_r), np.array(d_p))
+
+
+def test_all_nop_batch_is_identity():
+    rng = np.random.default_rng(8)
+    state = _rand(rng, 1024)
+    ops = jnp.full((512,), OP_NOP, U32)
+    keys = _rand(rng, 512)
+    vals = _rand(rng, 512)
+    ns, dig = ycsb_apply_pallas(state, ops, keys, vals, block=128)
+    np.testing.assert_array_equal(np.array(ns), np.array(state))
+    assert int(dig[1]) == 0  # no reads → zero read digest
+
+
+def test_reads_do_not_mutate_state():
+    rng = np.random.default_rng(9)
+    state = _rand(rng, 1024)
+    ops = jnp.array(rng.choice([OP_READ, OP_SCAN], 512).astype(U32))
+    ns, dig = ycsb_apply_pallas(state, ops, _rand(rng, 512), _rand(rng, 512), block=128)
+    np.testing.assert_array_equal(np.array(ns), np.array(state))
+    assert int(dig[1]) != 0
+
+
+def test_writes_commute_batch_order_invariant():
+    """Permuting the batch must not change the result (commutative apply)."""
+    rng = np.random.default_rng(10)
+    state = _rand(rng, 512)
+    ops = _rand(rng, 256, hi=OP_NOP)
+    keys = _rand(rng, 256, hi=64)  # force slot collisions
+    vals = _rand(rng, 256)
+    perm = rng.permutation(256)
+    ns1, d1 = ycsb_apply_pallas(state, ops, keys, vals, block=64)
+    ns2, d2 = ycsb_apply_pallas(
+        state, ops[perm], keys[perm], vals[perm], block=64
+    )
+    np.testing.assert_array_equal(np.array(ns1), np.array(ns2))
+    np.testing.assert_array_equal(np.array(d1), np.array(d2))
+
+
+def test_block_size_invariance():
+    """Different tilings of the same batch are bit-identical."""
+    rng = np.random.default_rng(11)
+    state = _rand(rng, 2048)
+    ops = _rand(rng, 1024, hi=OP_NOP + 1)
+    keys = _rand(rng, 1024)
+    vals = _rand(rng, 1024)
+    results = [
+        ycsb_apply_pallas(state, ops, keys, vals, block=b)
+        for b in (128, 256, 512, 1024)
+    ]
+    for ns, dig in results[1:]:
+        np.testing.assert_array_equal(np.array(results[0][0]), np.array(ns))
+        np.testing.assert_array_equal(np.array(results[0][1]), np.array(dig))
+
+
+def test_single_op_types():
+    """Each op code in isolation mutates (or not) per spec and matches ref."""
+    state = jnp.zeros((256,), U32)
+    for op, mutates in [
+        (OP_READ, False),
+        (OP_UPDATE, True),
+        (OP_SCAN, False),
+        (OP_INSERT, True),
+        (OP_RMW, True),
+        (OP_NOP, False),
+    ]:
+        ops = jnp.full((8,), OP_NOP, U32).at[0].set(U32(op))
+        keys = jnp.zeros((8,), U32).at[0].set(U32(42))
+        vals = jnp.zeros((8,), U32).at[0].set(U32(7))
+        ns, dig = ycsb_apply_pallas(state, ops, keys, vals, block=8)
+        changed = bool((np.array(ns) != 0).any())
+        assert changed == mutates, f"op={op}"
+        ns_r, dig_r = ref.ycsb_apply_ref(state, ops, keys, vals)
+        np.testing.assert_array_equal(np.array(ns), np.array(ns_r))
+        np.testing.assert_array_equal(np.array(dig), np.array(dig_r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_slots=st.integers(6, 13),
+    blocks=st.integers(1, 8),
+    block=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    extreme=st.booleans(),
+)
+def test_hypothesis_shape_sweep(log_slots, blocks, block, seed, extreme):
+    """Property: Pallas == oracle for arbitrary shapes and value ranges."""
+    rng = np.random.default_rng(seed)
+    n_slots = 1 << log_slots
+    batch = blocks * block
+    state = _rand(rng, n_slots)
+    if extreme:
+        # adversarial values: all-max keys/vals, op codes far out of range
+        ops = jnp.array(rng.choice([0, 4, 5, 2**32 - 1], batch).astype(U32))
+        keys = jnp.full((batch,), 2**32 - 1, U32)
+        vals = jnp.full((batch,), 2**32 - 1, U32)
+    else:
+        ops = _rand(rng, batch, hi=OP_NOP + 3)
+        keys = _rand(rng, batch)
+        vals = _rand(rng, batch)
+    ns_r, d_r, ns_p, d_p = _run_both(state, ops, keys, vals, block)
+    np.testing.assert_array_equal(np.array(ns_r), np.array(ns_p))
+    np.testing.assert_array_equal(np.array(d_r), np.array(d_p))
+
+
+def test_digest_sensitivity():
+    """Flipping one op value flips the digest."""
+    rng = np.random.default_rng(12)
+    state = _rand(rng, 512)
+    ops = _rand(rng, 128, hi=OP_NOP)
+    keys = _rand(rng, 128)
+    vals = _rand(rng, 128)
+    _, d1 = ycsb_apply_pallas(state, ops, keys, vals, block=64)
+    vals2 = np.array(vals)
+    vals2[17] ^= 1
+    _, d2 = ycsb_apply_pallas(state, ops, keys, jnp.array(vals2), block=64)
+    assert not np.array_equal(np.array(d1), np.array(d2))

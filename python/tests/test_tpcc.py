@@ -1,0 +1,114 @@
+"""TPC-C cost-model Pallas kernels vs oracle (counts, costs, digest)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    TPCC_BASE_COST,
+    TPCC_BATCH,
+    TPCC_BLOCK,
+    TPCC_LOCK_COEF,
+    TPCC_WAREHOUSES,
+    TXN_DELIVERY,
+    TXN_NEW_ORDER,
+    TXN_NOP,
+    TXN_ORDER_STATUS,
+    TXN_PAYMENT,
+    TXN_STOCK_LEVEL,
+    ref,
+    tpcc_cost_pallas,
+)
+
+U32 = np.uint32
+
+
+def _run_both(types, wids, args, block, n_wh):
+    cnt_r = ref.tpcc_lock_counts_ref(types, wids, n_wh)
+    cost_r, dig_r = ref.tpcc_cost_ref(types, wids, args, cnt_r)
+    cnt_p, cost_p, dig_p = tpcc_cost_pallas(
+        types, wids, args, block=block, n_warehouses=n_wh
+    )
+    return (cnt_r, cost_r, dig_r), (cnt_p, cost_p, dig_p)
+
+
+def test_artifact_shape_exact():
+    rng = np.random.default_rng(3)
+    types = jnp.array(rng.integers(0, TXN_NOP + 1, TPCC_BATCH, dtype=U32))
+    wids = jnp.array(rng.integers(0, TPCC_WAREHOUSES, TPCC_BATCH, dtype=U32))
+    args = jnp.array(rng.integers(0, 16, TPCC_BATCH, dtype=U32))
+    (cnt_r, cost_r, dig_r), (cnt_p, cost_p, dig_p) = _run_both(
+        types, wids, args, TPCC_BLOCK, TPCC_WAREHOUSES
+    )
+    np.testing.assert_array_equal(np.array(cnt_r), np.array(cnt_p))
+    np.testing.assert_allclose(np.array(cost_r), np.array(cost_p), rtol=1e-6)
+    assert int(dig_r) == int(dig_p)
+
+
+def test_lock_counts_only_write_txns():
+    """OrderStatus / StockLevel take no warehouse lock."""
+    types = jnp.array(
+        [TXN_ORDER_STATUS, TXN_STOCK_LEVEL, TXN_NEW_ORDER, TXN_PAYMENT] * 16,
+        U32,
+    )
+    wids = jnp.zeros((64,), U32)
+    counts = ref.tpcc_lock_counts_ref(types, wids, 8)
+    assert float(counts[0]) == 32.0  # only NewOrder + Payment
+    cnt_p, _, _ = tpcc_cost_pallas(
+        types, wids, jnp.zeros((64,), U32), block=32, n_warehouses=8
+    )
+    np.testing.assert_array_equal(np.array(counts), np.array(cnt_p))
+
+
+def test_contention_raises_cost():
+    """Two NewOrders on one warehouse cost more than on two warehouses."""
+    types = jnp.full((32,), TXN_NOP, U32).at[0].set(TXN_NEW_ORDER).at[1].set(
+        TXN_NEW_ORDER
+    )
+    args = jnp.zeros((32,), U32)
+    same = jnp.zeros((32,), U32)
+    diff = jnp.zeros((32,), U32).at[1].set(1)
+    _, cost_same, _ = tpcc_cost_pallas(types, same, args, block=32, n_warehouses=4)
+    _, cost_diff, _ = tpcc_cost_pallas(types, diff, args, block=32, n_warehouses=4)
+    assert float(cost_same[0]) == TPCC_BASE_COST[0] + TPCC_LOCK_COEF
+    assert float(cost_diff[0]) == TPCC_BASE_COST[0]
+
+
+def test_nop_txns_cost_zero():
+    types = jnp.full((32,), TXN_NOP, U32)
+    _, costs, dig = tpcc_cost_pallas(
+        types, jnp.zeros((32,), U32), jnp.zeros((32,), U32), block=32, n_warehouses=4
+    )
+    assert float(np.abs(np.array(costs)).sum()) == 0.0
+    assert int(dig) == 0
+
+
+def test_base_costs_per_type():
+    """Each txn type alone (no contention, zero args) costs its base."""
+    for code, base in enumerate(TPCC_BASE_COST):
+        types = jnp.full((16,), TXN_NOP, U32).at[0].set(U32(code))
+        _, costs, _ = tpcc_cost_pallas(
+            types, jnp.zeros((16,), U32), jnp.zeros((16,), U32), block=16, n_warehouses=4
+        )
+        assert float(costs[0]) == base, f"type={code}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 6),
+    block=st.sampled_from([32, 64, 128, 256]),
+    n_wh=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(blocks, block, n_wh, seed):
+    rng = np.random.default_rng(seed)
+    batch = blocks * block
+    types = jnp.array(rng.integers(0, TXN_NOP + 2, batch, dtype=U32))
+    wids = jnp.array(rng.integers(0, n_wh, batch, dtype=U32))
+    args = jnp.array(rng.integers(0, 64, batch, dtype=U32))
+    (cnt_r, cost_r, dig_r), (cnt_p, cost_p, dig_p) = _run_both(
+        types, wids, args, block, n_wh
+    )
+    np.testing.assert_array_equal(np.array(cnt_r), np.array(cnt_p))
+    np.testing.assert_allclose(np.array(cost_r), np.array(cost_p), rtol=1e-6)
+    assert int(dig_r) == int(dig_p)

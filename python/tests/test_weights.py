@@ -1,0 +1,93 @@
+"""Weight-scheme solver (L2 graph): Eq. 4 invariants + Fig. 3/4 goldens."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import MAX_NODES
+
+I32 = jnp.int32
+
+
+def _scheme(n, t):
+    r, w, ct = model.weight_scheme(I32(n), I32(t))
+    return float(r), np.array(w), float(ct)
+
+
+def _check_invariants(n, t, w, ct):
+    """I1: Σ top t+1 weights > CT;  I2: Σ top t weights < CT."""
+    ws = np.sort(w[:n])[::-1]
+    assert ws[: t + 1].sum() > ct, f"I1 violated n={n} t={t}"
+    assert ws[:t].sum() < ct, f"I2 violated n={n} t={t}"
+    # CT really is half the total weight
+    np.testing.assert_allclose(ct, w[:n].sum() / 2.0, rtol=1e-9)
+    # padding stays zero
+    assert (w[n:] == 0).all()
+
+
+def test_fig4_paper_ratios_are_feasible():
+    """The paper's Fig. 4 r values satisfy Eq. 4 for n=10 (our validator)."""
+    for t, r_paper in [(1, 1.40), (2, 1.38), (3, 1.19), (4, 1.08)]:
+        lo, hi = model.ratio_bounds(I32(10), I32(t))
+        assert float(lo) < r_paper < float(hi), (t, r_paper, float(lo), float(hi))
+
+
+def test_fig4_our_ratios_match_paper_upper_edge_rows():
+    """Our r matches the paper's published r to ±0.01 for t=2,3,4 (the
+    paper's t=1 row picked near the lower feasible edge; see DESIGN.md)."""
+    for t, r_paper in [(2, 1.38), (3, 1.19), (4, 1.08)]:
+        r, _, _ = _scheme(10, t)
+        assert abs(r - r_paper) < 0.011, (t, r, r_paper)
+
+
+def test_fig4_weight_table_t1_shape():
+    """Fig. 4 t=1 row: w_i = r^(n-i), descending, w_n = 1."""
+    r, w, ct = _scheme(10, 1)
+    np.testing.assert_allclose(w[9], 1.0, rtol=1e-9)
+    assert (np.diff(w[:10]) < 0).all()
+    np.testing.assert_allclose(w[:10], r ** np.arange(9, -1, -1.0), rtol=1e-9)
+    _check_invariants(10, 1, w, ct)
+
+
+def test_invariants_all_small_n():
+    for n in range(3, 26):
+        for t in range(1, (n - 1) // 2 + 1):
+            r, w, ct = _scheme(n, t)
+            assert 1.0 < r < 2.0, (n, t, r)
+            _check_invariants(n, t, w, ct)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(3, MAX_NODES))
+def test_invariants_hypothesis(n):
+    t_max = (n - 1) // 2
+    for t in {1, max(1, t_max // 2), t_max}:
+        _, w, ct = _scheme(n, t)
+        _check_invariants(n, t, w, ct)
+
+
+def test_paper_eval_thresholds():
+    """The evaluation's t = 10..40% of n for n = 10,20,50,100 (§5.1)."""
+    for n in (10, 20, 50, 100):
+        for pct in (10, 20, 30, 40):
+            t = max(1, n * pct // 100)
+            if t > (n - 1) // 2:
+                continue
+            _, w, ct = _scheme(n, t)
+            _check_invariants(n, t, w, ct)
+
+
+def test_fast_agreement_lemma31():
+    """Lemma 3.1: non-cabinet members' total weight < CT."""
+    for n, t in [(7, 2), (10, 3), (50, 5), (100, 10)]:
+        _, w, ct = _scheme(n, t)
+        assert w[t + 1 : n].sum() < ct
+
+
+def test_fault_tolerance_lemma32():
+    """Lemma 3.2: any n−t nodes' total weight > CT (check worst combo)."""
+    for n, t in [(7, 2), (10, 3), (50, 5), (100, 10)]:
+        _, w, ct = _scheme(n, t)
+        worst = np.sort(w[:n])[: n - t]  # the n−t lightest nodes
+        assert worst.sum() > ct

@@ -1,0 +1,124 @@
+//! Criterion-style micro-bench harness (offline substitute — the vendored
+//! crate set has no criterion). Used by the `benches/*.rs` targets with
+//! `harness = false`: warmup, timed samples, mean/σ/min/max report in a
+//! criterion-like output format so `cargo bench` output stays familiar.
+
+use std::time::{Duration, Instant};
+
+/// One bench runner with a shared configuration.
+pub struct Bencher {
+    /// Minimum sample count.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+    /// Target total measurement time; sampling stops after whichever of
+    /// (samples, target) is satisfied last… practically: run `samples`
+    /// iterations but keep going until `min_time` has elapsed.
+    pub min_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { samples: 10, warmup: 2, min_time: Duration::from_millis(200) }
+    }
+}
+
+/// Result of one bench.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { samples: 5, warmup: 1, min_time: Duration::from_millis(50) }
+    }
+
+    /// Measure `f`, printing a criterion-style line. Returns the stats so
+    /// callers (and EXPERIMENTS.md scripts) can post-process.
+    pub fn iter<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        let start = Instant::now();
+        while times.len() < self.samples || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if times.len() >= self.samples * 50 {
+                break; // enough
+            }
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let stats = BenchStats {
+            samples: times.len(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(times.iter().cloned().fold(f64::MAX, f64::min)),
+            max: Duration::from_secs_f64(times.iter().cloned().fold(f64::MIN, f64::max)),
+        };
+        println!(
+            "{name:<48} time: [{} {} {}]  ({} samples)",
+            fmt_dur(stats.min),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.max),
+            stats.samples
+        );
+        stats
+    }
+}
+
+/// Human-readable duration (criterion-style units).
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let stats = b.iter("noop", || 1 + 1);
+        assert!(stats.samples >= 5);
+        assert!(stats.mean <= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn mean_between_min_max() {
+        let b = Bencher::quick();
+        let stats = b.iter("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7.000 µs");
+        assert_eq!(fmt_dur(Duration::from_nanos(42)), "42.0 ns");
+    }
+}

@@ -1,0 +1,179 @@
+//! Metrics utilities for the benchmark framework (Fig. 7): summaries,
+//! percentiles, and fixed-width table rendering for figure output.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, stddev: 0.0 };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        Summary {
+            n: xs.len(),
+            mean,
+            min: sorted[0],
+            max: sorted[sorted.len() - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile over a pre-sorted sample (nearest-rank).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// A figure's tabular report: title + header + rows, with aligned rendering.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) {
+        debug_assert_eq!(cols.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cols);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cols: &[String], widths: &[usize]| -> String {
+            cols.iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Column index by header name (for shape assertions in tests).
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Numeric value at (row, header-name), if parseable.
+    pub fn num(&self, row: usize, name: &str) -> Option<f64> {
+        let c = self.col(name)?;
+        self.rows.get(row)?.get(c)?.replace(',', "").parse().ok()
+    }
+
+    /// Find the first row whose first column equals `key`.
+    pub fn find_row(&self, key: &str) -> Option<usize> {
+        self.rows.iter().position(|r| r[0] == key)
+    }
+}
+
+/// Format ops/s with thousands separators (paper-style "27,999 TPS").
+pub fn fmt_tps(x: f64) -> String {
+    let v = x.round() as i64;
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 100.0);
+        assert!((percentile_sorted(&sorted, 0.5) - 50.0).abs() <= 1.0);
+        assert!((percentile_sorted(&sorted, 0.99) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn table_render_and_lookup() {
+        let mut t = Table::new("Fig X", &["algo", "tput", "lat"]);
+        t.row(vec!["raft".into(), "10136".into(), "495.0".into()]);
+        t.row(vec!["cab f10%".into(), "27999".into(), "178.5".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("cab f10%"));
+        assert_eq!(t.num(0, "tput"), Some(10136.0));
+        assert_eq!(t.find_row("cab f10%"), Some(1));
+    }
+
+    #[test]
+    fn tps_formatting() {
+        assert_eq!(fmt_tps(27999.4), "27,999");
+        assert_eq!(fmt_tps(999.0), "999");
+        assert_eq!(fmt_tps(1_234_567.0), "1,234,567");
+    }
+}

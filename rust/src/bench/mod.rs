@@ -1,0 +1,11 @@
+//! The Cabinet benchmark framework (Fig. 7): metrics, the in-crate bench
+//! harness (criterion substitute), and one experiment harness per paper
+//! figure.
+
+pub mod figures;
+pub mod harness;
+pub mod metrics;
+
+pub use figures::{all_figures, lineup, Scale};
+pub use harness::{Bencher, BenchStats};
+pub use metrics::{fmt_tps, Summary, Table};

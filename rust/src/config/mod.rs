@@ -1,0 +1,220 @@
+//! Experiment configuration: a TOML-subset file format plus conversion to
+//! `sim::SimConfig`, used by the `cabinet sim --config` CLI path.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::delay::DelayModel;
+use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
+use crate::net::topology::ZoneAlloc;
+use crate::sim::{DigestMode, Protocol, ReconfigSpec, SimConfig, WorkloadSpec};
+use crate::workload::Workload;
+
+/// Build a `SimConfig` from a TOML-subset experiment file. Layout:
+///
+/// ```toml
+/// protocol = "cabinet"   # raft | cabinet | hqc
+/// t = 5                  # cabinet only
+/// sizes = [3, 3, 5]      # hqc only
+/// n = 50
+/// heterogeneous = true
+/// rounds = 100
+/// seed = 42
+///
+/// [workload]
+/// kind = "ycsb"          # ycsb | tpcc
+/// workload = "A"         # ycsb only
+/// batch = 5000
+///
+/// [delay]
+/// model = "d0"           # d0 | d1 | d2 | d3 | d4
+/// mean_ms = 100          # d1 only
+/// spread_ms = 20         # d1 only
+/// period_rounds = 10     # d3 only
+///
+/// [faults]
+/// kill_round = 20
+/// kill_count = 2
+/// kill_strategy = "strong"   # strong | weak | random
+/// contention_round = 20
+/// contention_slowdown = 2.5
+/// ```
+pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
+    let doc = toml::parse(text)?;
+    let root = doc.get("").context("missing root table")?;
+
+    let n = root.get("n").and_then(|v| v.as_int()).unwrap_or(11) as usize;
+    let het = root.get("heterogeneous").and_then(|v| v.as_bool()).unwrap_or(true);
+    let protocol = match root.get("protocol").and_then(|v| v.as_str()).unwrap_or("cabinet") {
+        "raft" => Protocol::Raft,
+        "cabinet" => {
+            let t = root.get("t").and_then(|v| v.as_int()).unwrap_or(1) as usize;
+            Protocol::Cabinet { t }
+        }
+        "hqc" => {
+            let sizes: Vec<usize> = root
+                .get("sizes")
+                .and_then(|v| v.as_array())
+                .map(|a| a.iter().filter_map(|v| v.as_int()).map(|i| i as usize).collect())
+                .unwrap_or_else(|| vec![n / 3, n / 3, n - 2 * (n / 3)]);
+            Protocol::Hqc { sizes }
+        }
+        other => bail!("unknown protocol {other}"),
+    };
+
+    let mut config = SimConfig::new(protocol, n, het);
+    config.rounds = root.get("rounds").and_then(|v| v.as_int()).unwrap_or(20) as u64;
+    config.seed = root.get("seed").and_then(|v| v.as_int()).unwrap_or(42) as u64;
+    let _ = ZoneAlloc::heterogeneous(n); // n validated by construction
+
+    if let Some(w) = doc.get("workload") {
+        let batch = w.get("batch").and_then(|v| v.as_int()).unwrap_or(5000) as usize;
+        match w.get("kind").and_then(|v| v.as_str()).unwrap_or("ycsb") {
+            "ycsb" => {
+                let name = w.get("workload").and_then(|v| v.as_str()).unwrap_or("A");
+                let wl = Workload::from_name(name)
+                    .with_context(|| format!("unknown YCSB workload {name}"))?;
+                config.workload = WorkloadSpec::ycsb(wl, batch);
+            }
+            "tpcc" => {
+                let wh = w.get("warehouses").and_then(|v| v.as_int()).unwrap_or(10) as u32;
+                config.workload = WorkloadSpec::Tpcc { batch, warehouses: wh };
+            }
+            other => bail!("unknown workload kind {other}"),
+        }
+    }
+
+    if let Some(d) = doc.get("delay") {
+        config.delay = match d.get("model").and_then(|v| v.as_str()).unwrap_or("d0") {
+            "d0" => DelayModel::None,
+            "d1" => DelayModel::Uniform {
+                mean_ms: d.get("mean_ms").and_then(|v| v.as_float()).unwrap_or(100.0),
+                spread_ms: d.get("spread_ms").and_then(|v| v.as_float()).unwrap_or(20.0),
+            },
+            "d2" => DelayModel::Skew,
+            "d3" => DelayModel::Rotating {
+                period_rounds: d.get("period_rounds").and_then(|v| v.as_int()).unwrap_or(10)
+                    as u64,
+            },
+            "d4" => DelayModel::Bursting,
+            other => bail!("unknown delay model {other}"),
+        };
+    }
+
+    if let Some(f) = doc.get("faults") {
+        if let Some(round) = f.get("kill_round").and_then(|v| v.as_int()) {
+            let count = f.get("kill_count").and_then(|v| v.as_int()).unwrap_or(1) as usize;
+            let strategy = match f
+                .get("kill_strategy")
+                .and_then(|v| v.as_str())
+                .unwrap_or("random")
+            {
+                "strong" => KillStrategy::Strong,
+                "weak" => KillStrategy::Weak,
+                "random" => KillStrategy::Random,
+                other => bail!("unknown kill strategy {other}"),
+            };
+            config.kills.push(KillSpec::new(round as u64, count, strategy));
+        }
+        if let Some(round) = f.get("contention_round").and_then(|v| v.as_int()) {
+            let slow =
+                f.get("contention_slowdown").and_then(|v| v.as_float()).unwrap_or(2.5);
+            config.contention = Some(ContentionSpec::new(round as u64, slow));
+        }
+    }
+
+    if let Some(r) = doc.get("reconfig") {
+        let rounds = r.get("rounds").and_then(|v| v.as_array());
+        let ts = r.get("thresholds").and_then(|v| v.as_array());
+        if let (Some(rounds), Some(ts)) = (rounds, ts) {
+            for (round, t) in rounds.iter().zip(ts) {
+                if let (Some(round), Some(t)) = (round.as_int(), t.as_int()) {
+                    config
+                        .reconfigs
+                        .push(ReconfigSpec { round: round as u64, new_t: t as usize });
+                }
+            }
+        }
+    }
+
+    if root.get("digests").and_then(|v| v.as_bool()).unwrap_or(false) {
+        config.digest_mode = DigestMode::Sample;
+    }
+    Ok(config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_roundtrip() {
+        let cfg = sim_config_from_toml(
+            r#"
+protocol = "cabinet"
+t = 5
+n = 50
+heterogeneous = true
+rounds = 30
+seed = 7
+digests = true
+
+[workload]
+kind = "ycsb"
+workload = "B"
+batch = 2000
+
+[delay]
+model = "d1"
+mean_ms = 200
+spread_ms = 40
+
+[faults]
+kill_round = 10
+kill_count = 2
+kill_strategy = "strong"
+contention_round = 15
+contention_slowdown = 2.0
+
+[reconfig]
+rounds = [20, 25]
+thresholds = [3, 1]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.n(), 50);
+        assert_eq!(cfg.rounds, 30);
+        assert_eq!(cfg.seed, 7);
+        assert!(matches!(cfg.protocol, Protocol::Cabinet { t: 5 }));
+        assert!(matches!(cfg.delay, DelayModel::Uniform { .. }));
+        assert_eq!(cfg.kills.len(), 1);
+        assert!(cfg.contention.is_some());
+        assert_eq!(cfg.reconfigs.len(), 2);
+        assert_eq!(cfg.digest_mode, DigestMode::Sample);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = sim_config_from_toml("protocol = \"raft\"\n").unwrap();
+        assert!(matches!(cfg.protocol, Protocol::Raft));
+        assert_eq!(cfg.n(), 11);
+    }
+
+    #[test]
+    fn hqc_sizes() {
+        let cfg =
+            sim_config_from_toml("protocol = \"hqc\"\nn = 11\nsizes = [3, 3, 5]\n").unwrap();
+        match cfg.protocol {
+            Protocol::Hqc { sizes } => assert_eq!(sizes, vec![3, 3, 5]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_unknowns() {
+        assert!(sim_config_from_toml("protocol = \"paxos\"\n").is_err());
+        assert!(sim_config_from_toml("[delay]\nmodel = \"d9\"\n").is_err());
+        assert!(sim_config_from_toml("[workload]\nkind = \"tatp\"\n").is_err());
+    }
+}

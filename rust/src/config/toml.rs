@@ -1,0 +1,213 @@
+//! Minimal TOML-subset parser (offline substitute for the `toml` crate):
+//! `[section]` headers, `key = value` with integers, floats, booleans,
+//! quoted strings and flat arrays of those. Sufficient for experiment
+//! config files; rejects what it doesn't understand instead of guessing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or flat-array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// section name → (key → value); keys before any `[section]` land in "".
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc: Document = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value for {key}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe: only strip # outside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split on commas that are not inside quotes (flat arrays only).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+# top comment
+n = 50
+t = 5
+het = true
+name = "cab f10%"
+
+[delay]
+model = "D2"
+mean_ms = 100.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["n"], Value::Int(50));
+        assert_eq!(doc[""]["het"], Value::Bool(true));
+        assert_eq!(doc[""]["name"].as_str(), Some("cab f10%"));
+        assert_eq!(doc["delay"]["model"].as_str(), Some("D2"));
+        assert_eq!(doc["delay"]["mean_ms"].as_float(), Some(100.5));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("sizes = [3, 3, 5]\nmix = [0.5, 0.5]\n").unwrap();
+        let sizes: Vec<i64> =
+            doc[""]["sizes"].as_array().unwrap().iter().map(|v| v.as_int().unwrap()).collect();
+        assert_eq!(sizes, vec![3, 3, 5]);
+        assert_eq!(doc[""]["mix"].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = parse("s = \"a # b\"\n").unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("novalue =\n").is_err());
+        assert!(parse("x = what\n").is_err());
+        assert!(parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("a = []\n").unwrap();
+        assert_eq!(doc[""]["a"].as_array().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,291 @@
+//! Hierarchical Quorum Consensus (HQC) baseline — the comparison system in
+//! Fig. 17 (Kumar '91; also the Zookeeper "hierarchical quorums" option).
+//!
+//! The cluster is partitioned into groups (Fig. 17 uses 3-3-5 for n = 11).
+//! A round commits in two levels: each group leader replicates to its group
+//! and reports once a majority of its group acks; the root commits once a
+//! majority of *groups* has decided. The two message-passing levels are
+//! exactly the latency amplifier the paper calls out under delay spikes
+//! (§5.3: 4.3× Cabinet's latency in round 18 of Fig. 17a).
+//!
+//! Replication-only (static root), like the paper's HQC baseline runs.
+
+use crate::consensus::message::NodeId;
+
+/// HQC wire messages.
+#[derive(Clone, Debug)]
+pub enum HqcMsg {
+    /// root → group leader: replicate round `round`.
+    Propose { round: u64 },
+    /// group leader → group member.
+    GroupAppend { round: u64 },
+    /// member → group leader.
+    GroupAck { round: u64, from: NodeId },
+    /// group leader → root: this group has a majority.
+    GroupDecide { round: u64, group: usize },
+}
+
+/// Outputs from an HQC node step.
+#[derive(Clone, Debug)]
+pub enum HqcOutput {
+    Send(NodeId, HqcMsg),
+    /// Root only: the round reached a majority of groups.
+    Committed { round: u64 },
+}
+
+/// Static group topology.
+#[derive(Clone, Debug)]
+pub struct HqcTopology {
+    /// Node ids per group; `groups[g][0]` is group g's leader.
+    pub groups: Vec<Vec<NodeId>>,
+    /// The coordinating root node (a group leader).
+    pub root: NodeId,
+}
+
+impl HqcTopology {
+    /// Split `n` nodes into the given group sizes (e.g. `[3, 3, 5]`).
+    pub fn split(n: usize, sizes: &[usize]) -> Self {
+        assert_eq!(sizes.iter().sum::<usize>(), n, "sizes must cover n");
+        let mut groups: Vec<Vec<NodeId>> = Vec::new();
+        let mut next = 0;
+        for &s in sizes {
+            assert!(s >= 1);
+            groups.push((next..next + s).collect());
+            next += s;
+        }
+        let root = groups[0][0];
+        HqcTopology { groups, root }
+    }
+
+    pub fn n(&self) -> usize {
+        self.groups.iter().map(Vec::len).sum()
+    }
+
+    pub fn group_of(&self, node: NodeId) -> usize {
+        self.groups
+            .iter()
+            .position(|g| g.contains(&node))
+            .expect("node in topology")
+    }
+
+    pub fn leader_of(&self, group: usize) -> NodeId {
+        self.groups[group][0]
+    }
+
+    pub fn is_group_leader(&self, node: NodeId) -> bool {
+        self.groups.iter().any(|g| g[0] == node)
+    }
+
+    /// Majority of groups needed at the root.
+    pub fn group_quorum(&self) -> usize {
+        self.groups.len() / 2 + 1
+    }
+
+    /// Majority within group g (leader included).
+    pub fn member_quorum(&self, group: usize) -> usize {
+        self.groups[group].len() / 2 + 1
+    }
+}
+
+/// One HQC node (root, group leader, and member behaviors as applicable).
+#[derive(Clone, Debug)]
+pub struct HqcNode {
+    id: NodeId,
+    topo: HqcTopology,
+    /// group-leader state: acks per round (round → count incl. self).
+    acks: Vec<(u64, usize)>,
+    /// root state: groups decided per round.
+    decided: Vec<(u64, usize)>,
+    committed_rounds: u64,
+}
+
+impl HqcNode {
+    pub fn new(id: NodeId, topo: HqcTopology) -> Self {
+        HqcNode { id, topo, acks: Vec::new(), decided: Vec::new(), committed_rounds: 0 }
+    }
+
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+    pub fn topology(&self) -> &HqcTopology {
+        &self.topo
+    }
+    pub fn committed_rounds(&self) -> u64 {
+        self.committed_rounds
+    }
+
+    /// Root API: start a replication round.
+    pub fn propose(&mut self, round: u64) -> Vec<HqcOutput> {
+        assert_eq!(self.id, self.topo.root, "only the root proposes");
+        let mut out = Vec::new();
+        for g in 0..self.topo.groups.len() {
+            let leader = self.topo.leader_of(g);
+            if leader == self.id {
+                // we are our own group's leader: fan out locally
+                out.extend(self.start_group_round(round));
+            } else {
+                out.push(HqcOutput::Send(leader, HqcMsg::Propose { round }));
+            }
+        }
+        out
+    }
+
+    fn start_group_round(&mut self, round: u64) -> Vec<HqcOutput> {
+        let g = self.topo.group_of(self.id);
+        let mut out = Vec::new();
+        self.acks.push((round, 1)); // self-ack
+        for &m in &self.topo.groups[g] {
+            if m != self.id {
+                out.push(HqcOutput::Send(m, HqcMsg::GroupAppend { round }));
+            }
+        }
+        // singleton group decides immediately
+        out.extend(self.check_group_quorum(round));
+        out
+    }
+
+    fn check_group_quorum(&mut self, round: u64) -> Vec<HqcOutput> {
+        let g = self.topo.group_of(self.id);
+        let need = self.topo.member_quorum(g);
+        let have = self
+            .acks
+            .iter()
+            .find(|(r, _)| *r == round)
+            .map(|(_, c)| *c)
+            .unwrap_or(0);
+        if have == need {
+            // exactly at quorum: report once
+            if self.id == self.topo.root {
+                return self.on_group_decide(round);
+            }
+            return vec![HqcOutput::Send(
+                self.topo.root,
+                HqcMsg::GroupDecide { round, group: g },
+            )];
+        }
+        Vec::new()
+    }
+
+    fn on_group_decide(&mut self, round: u64) -> Vec<HqcOutput> {
+        let need = self.topo.group_quorum();
+        let slot = self.decided.iter_mut().find(|(r, _)| *r == round);
+        let have = match slot {
+            Some((_, c)) => {
+                *c += 1;
+                *c
+            }
+            None => {
+                self.decided.push((round, 1));
+                1
+            }
+        };
+        if have == need {
+            self.committed_rounds += 1;
+            return vec![HqcOutput::Committed { round }];
+        }
+        Vec::new()
+    }
+
+    /// Deliver a message.
+    pub fn receive(&mut self, from: NodeId, msg: HqcMsg) -> Vec<HqcOutput> {
+        match msg {
+            HqcMsg::Propose { round } => self.start_group_round(round),
+            HqcMsg::GroupAppend { round } => {
+                vec![HqcOutput::Send(from, HqcMsg::GroupAck { round, from: self.id })]
+            }
+            HqcMsg::GroupAck { round, .. } => {
+                match self.acks.iter_mut().find(|(r, _)| *r == round) {
+                    Some((_, c)) => *c += 1,
+                    None => self.acks.push((round, 1)),
+                }
+                self.check_group_quorum(round)
+            }
+            HqcMsg::GroupDecide { round, .. } => {
+                assert_eq!(self.id, self.topo.root);
+                self.on_group_decide(round)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pump(nodes: &mut [HqcNode], outs: Vec<(NodeId, HqcOutput)>) -> Vec<u64> {
+        let mut committed = Vec::new();
+        let mut queue: Vec<(NodeId, NodeId, HqcMsg)> = Vec::new();
+        let absorb = |src: NodeId,
+                      o: HqcOutput,
+                      q: &mut Vec<(NodeId, NodeId, HqcMsg)>,
+                      c: &mut Vec<u64>| match o {
+            HqcOutput::Send(dst, m) => q.push((src, dst, m)),
+            HqcOutput::Committed { round } => c.push(round),
+        };
+        for (src, o) in outs {
+            absorb(src, o, &mut queue, &mut committed);
+        }
+        while let Some((src, dst, m)) = queue.pop() {
+            for o in nodes[dst].receive(src, m) {
+                absorb(dst, o, &mut queue, &mut committed);
+            }
+        }
+        committed
+    }
+
+    fn cluster(sizes: &[usize]) -> Vec<HqcNode> {
+        let n = sizes.iter().sum();
+        let topo = HqcTopology::split(n, sizes);
+        (0..n).map(|i| HqcNode::new(i, topo.clone())).collect()
+    }
+
+    #[test]
+    fn topology_3_3_5() {
+        let topo = HqcTopology::split(11, &[3, 3, 5]);
+        assert_eq!(topo.n(), 11);
+        assert_eq!(topo.group_of(0), 0);
+        assert_eq!(topo.group_of(4), 1);
+        assert_eq!(topo.group_of(10), 2);
+        assert_eq!(topo.leader_of(2), 6);
+        assert_eq!(topo.group_quorum(), 2);
+        assert_eq!(topo.member_quorum(2), 3);
+        assert!(topo.is_group_leader(0));
+        assert!(topo.is_group_leader(3));
+        assert!(!topo.is_group_leader(1));
+    }
+
+    #[test]
+    fn commits_a_round_3_3_5() {
+        let mut nodes = cluster(&[3, 3, 5]);
+        let outs: Vec<_> =
+            nodes[0].propose(1).into_iter().map(|o| (0usize, o)).collect();
+        let committed = pump(&mut nodes, outs);
+        assert_eq!(committed, vec![1]);
+        assert_eq!(nodes[0].committed_rounds(), 1);
+    }
+
+    #[test]
+    fn commits_many_rounds() {
+        let mut nodes = cluster(&[3, 3, 5]);
+        for round in 1..=10 {
+            let outs: Vec<_> =
+                nodes[0].propose(round).into_iter().map(|o| (0usize, o)).collect();
+            assert_eq!(pump(&mut nodes, outs), vec![round]);
+        }
+        assert_eq!(nodes[0].committed_rounds(), 10);
+    }
+
+    #[test]
+    fn singleton_groups_work() {
+        let mut nodes = cluster(&[1, 1, 1]);
+        let outs: Vec<_> =
+            nodes[0].propose(7).into_iter().map(|o| (0usize, o)).collect();
+        assert_eq!(pump(&mut nodes, outs), vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sizes must cover n")]
+    fn split_checks_sizes() {
+        HqcTopology::split(10, &[3, 3, 5]);
+    }
+}

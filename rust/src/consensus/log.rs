@@ -1,0 +1,219 @@
+//! The replicated log — stock Raft semantics (1-based indices, term-tagged
+//! entries, conflict truncation), plus Cabinet's per-entry stored weight
+//! (§4.1 "Write and read": each node stores the weight it held for the
+//! instance that committed the entry, so clients can form weighted read
+//! quorums).
+
+use crate::consensus::message::{Entry, LogIndex, Term};
+
+/// A node's replicated log.
+#[derive(Clone, Debug, Default)]
+pub struct Log {
+    entries: Vec<Entry>,
+    /// `stored_weight[i]` = this node's weight during the round that
+    /// replicated `entries[i]` (1.0 in Raft mode).
+    stored_weights: Vec<f64>,
+}
+
+impl Log {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Index of the last entry (0 when empty).
+    pub fn last_index(&self) -> LogIndex {
+        self.entries.len() as LogIndex
+    }
+
+    /// Term of the last entry (0 when empty).
+    pub fn last_term(&self) -> Term {
+        self.entries.last().map_or(0, |e| e.term)
+    }
+
+    /// Term of the entry at `index` (0 for index 0; None if out of range).
+    pub fn term_at(&self, index: LogIndex) -> Option<Term> {
+        if index == 0 {
+            Some(0)
+        } else {
+            self.entries.get(index as usize - 1).map(|e| e.term)
+        }
+    }
+
+    pub fn get(&self, index: LogIndex) -> Option<&Entry> {
+        if index == 0 {
+            None
+        } else {
+            self.entries.get(index as usize - 1)
+        }
+    }
+
+    /// This node's stored weight for the entry at `index`.
+    pub fn stored_weight(&self, index: LogIndex) -> Option<f64> {
+        if index == 0 {
+            None
+        } else {
+            self.stored_weights.get(index as usize - 1).copied()
+        }
+    }
+
+    /// Append a fresh entry at the tail (leader path). Returns its index.
+    pub fn append(&mut self, mut entry: Entry, weight: f64) -> LogIndex {
+        entry.index = self.last_index() + 1;
+        let idx = entry.index;
+        self.entries.push(entry);
+        self.stored_weights.push(weight);
+        idx
+    }
+
+    /// Raft log-matching: does `(prev_index, prev_term)` match our log?
+    pub fn matches(&self, prev_index: LogIndex, prev_term: Term) -> bool {
+        self.term_at(prev_index) == Some(prev_term)
+    }
+
+    /// Follower path: append `entries` after `prev_index`, truncating any
+    /// conflicting suffix first (Raft §5.3). `weight` is this node's weight
+    /// for the shipping round. Returns the new last index.
+    pub fn splice(&mut self, prev_index: LogIndex, entries: &[Entry], weight: f64) -> LogIndex {
+        debug_assert!(prev_index <= self.last_index());
+        let mut insert_at = prev_index as usize; // 0-based slot for first new entry
+        for e in entries {
+            if let Some(existing) = self.entries.get(insert_at) {
+                if existing.term == e.term {
+                    // already have it — skip (idempotent retransmission)
+                    insert_at += 1;
+                    continue;
+                }
+                // conflict: truncate from here
+                self.entries.truncate(insert_at);
+                self.stored_weights.truncate(insert_at);
+            }
+            let mut e = e.clone();
+            e.index = insert_at as LogIndex + 1;
+            self.entries.push(e);
+            self.stored_weights.push(weight);
+            insert_at += 1;
+        }
+        self.last_index()
+    }
+
+    /// Entries in `(from, to]` for shipping to a follower.
+    pub fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Vec<Entry> {
+        let lo = from_exclusive as usize;
+        let hi = (to_inclusive as usize).min(self.entries.len());
+        self.entries[lo..hi].to_vec()
+    }
+
+    /// Raft §5.4.1 up-to-date check: is (their_term, their_index) at least
+    /// as up-to-date as our last entry?
+    pub fn candidate_up_to_date(&self, their_index: LogIndex, their_term: Term) -> bool {
+        let (lt, li) = (self.last_term(), self.last_index());
+        their_term > lt || (their_term == lt && their_index >= li)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::message::Payload;
+
+    fn e(term: Term) -> Entry {
+        Entry { term, index: 0, payload: Payload::Noop, wclock: 0 }
+    }
+
+    #[test]
+    fn empty_log_basics() {
+        let log = Log::new();
+        assert_eq!(log.last_index(), 0);
+        assert_eq!(log.last_term(), 0);
+        assert_eq!(log.term_at(0), Some(0));
+        assert_eq!(log.term_at(1), None);
+        assert!(log.matches(0, 0));
+        assert!(!log.matches(1, 1));
+    }
+
+    #[test]
+    fn append_assigns_indices() {
+        let mut log = Log::new();
+        assert_eq!(log.append(e(1), 1.0), 1);
+        assert_eq!(log.append(e(1), 2.0), 2);
+        assert_eq!(log.append(e(2), 3.0), 3);
+        assert_eq!(log.last_index(), 3);
+        assert_eq!(log.last_term(), 2);
+        assert_eq!(log.stored_weight(2), Some(2.0));
+    }
+
+    #[test]
+    fn splice_appends_at_tail() {
+        let mut log = Log::new();
+        log.append(e(1), 1.0);
+        let last = log.splice(1, &[e(2), e(2)], 5.0);
+        assert_eq!(last, 3);
+        assert_eq!(log.term_at(2), Some(2));
+        assert_eq!(log.stored_weight(3), Some(5.0));
+    }
+
+    #[test]
+    fn splice_truncates_conflicts() {
+        let mut log = Log::new();
+        log.append(e(1), 1.0);
+        log.append(e(2), 1.0);
+        log.append(e(2), 1.0);
+        // new leader in term 3 overwrites from index 2
+        let last = log.splice(1, &[e(3)], 2.0);
+        assert_eq!(last, 2);
+        assert_eq!(log.term_at(2), Some(3));
+        assert_eq!(log.term_at(3), None);
+    }
+
+    #[test]
+    fn splice_is_idempotent_for_retransmits() {
+        let mut log = Log::new();
+        log.append(e(1), 1.0);
+        log.splice(1, &[e(2), e(2)], 1.0);
+        let before: Vec<Term> = log.iter().map(|x| x.term).collect();
+        log.splice(1, &[e(2), e(2)], 1.0); // duplicate delivery
+        let after: Vec<Term> = log.iter().map(|x| x.term).collect();
+        assert_eq!(before, after);
+        assert_eq!(log.last_index(), 3);
+    }
+
+    #[test]
+    fn slice_ranges() {
+        let mut log = Log::new();
+        for _ in 0..5 {
+            log.append(e(1), 1.0);
+        }
+        assert_eq!(log.slice(0, 5).len(), 5);
+        assert_eq!(log.slice(2, 4).len(), 2);
+        assert_eq!(log.slice(2, 4)[0].index, 3);
+        assert_eq!(log.slice(5, 5).len(), 0);
+        assert_eq!(log.slice(2, 99).len(), 3);
+    }
+
+    #[test]
+    fn up_to_date_check() {
+        let mut log = Log::new();
+        log.append(e(1), 1.0);
+        log.append(e(3), 1.0);
+        // higher last term wins
+        assert!(log.candidate_up_to_date(1, 4));
+        // same term, longer log wins
+        assert!(log.candidate_up_to_date(2, 3));
+        assert!(log.candidate_up_to_date(3, 3));
+        // shorter same-term log loses
+        assert!(!log.candidate_up_to_date(1, 3));
+        // lower term loses regardless of length
+        assert!(!log.candidate_up_to_date(99, 2));
+    }
+}

@@ -1,0 +1,192 @@
+//! RPC message types for Raft and Cabinet.
+//!
+//! Cabinet adds exactly two parameters to Raft's AppendEntries RPC —
+//! `wclock` (the weight clock) and `weight` (the receiver's weight for this
+//! clock) — per Algorithm 1, Lines 2–3. Everything else is stock Raft.
+
+use std::sync::Arc;
+
+use crate::workload::{TpccBatch, YcsbBatch};
+
+/// Node identifier (dense 0..n).
+pub type NodeId = usize;
+/// Raft term.
+pub type Term = u64;
+/// 1-based log index; 0 = "nothing".
+pub type LogIndex = u64;
+/// Cabinet weight clock (Algorithm 1).
+pub type WClock = u64;
+
+/// Entry payload — what the replicated state machine applies on commit.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Leader no-op barrier (committed at the start of a term).
+    Noop,
+    /// A batched YCSB workload round (applied via the `ycsb_apply` artifact
+    /// on the live path, via the native mirror in the simulator).
+    Ycsb(Arc<YcsbBatch>),
+    /// A batched TPC-C workload round.
+    Tpcc(Arc<TpccBatch>),
+    /// Failure-threshold reconfiguration (§4.1.4): switch to `t`.
+    Reconfig { new_t: usize },
+    /// Opaque client bytes (quickstart / live KV example).
+    Bytes(Arc<Vec<u8>>),
+}
+
+impl Payload {
+    /// Nominal op count (for throughput accounting).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Payload::Ycsb(b) => b.live_ops(),
+            Payload::Tpcc(b) => b.live_txns(),
+            Payload::Bytes(_) => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// A replicated log entry. Per §4.1 ("Write and read"), each node stores the
+/// weight it held for the consensus instance alongside the result; clients
+/// later accumulate those stored weights to read.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub term: Term,
+    pub index: LogIndex,
+    pub payload: Payload,
+    /// Weight clock of the replication round that shipped this entry.
+    pub wclock: WClock,
+}
+
+/// The RPC set. `AppendEntries` carries Cabinet's two extra fields; in Raft
+/// mode they are fixed (wclock = 0, weight = 1).
+#[derive(Clone, Debug)]
+pub enum Message {
+    AppendEntries {
+        term: Term,
+        leader: NodeId,
+        prev_log_index: LogIndex,
+        prev_log_term: Term,
+        entries: Vec<Entry>,
+        leader_commit: LogIndex,
+        /// Cabinet: weight clock for this round (Algorithm 1, Line 2).
+        wclock: WClock,
+        /// Cabinet: the receiver's weight under `wclock` (Line 3).
+        weight: f64,
+    },
+    AppendEntriesReply {
+        term: Term,
+        from: NodeId,
+        /// Log-consistency check passed and entries were appended.
+        success: bool,
+        /// Highest index known replicated on `from` (valid when success).
+        match_index: LogIndex,
+        /// Echo of the round's weight clock (orders replies into wQ).
+        wclock: WClock,
+    },
+    RequestVote {
+        term: Term,
+        candidate: NodeId,
+        last_log_index: LogIndex,
+        last_log_term: Term,
+    },
+    RequestVoteReply {
+        term: Term,
+        from: NodeId,
+        granted: bool,
+    },
+}
+
+impl Message {
+    pub fn term(&self) -> Term {
+        match self {
+            Message::AppendEntries { term, .. }
+            | Message::AppendEntriesReply { term, .. }
+            | Message::RequestVote { term, .. }
+            | Message::RequestVoteReply { term, .. } => *term,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::AppendEntries { .. } => "AppendEntries",
+            Message::AppendEntriesReply { .. } => "AppendEntriesReply",
+            Message::RequestVote { .. } => "RequestVote",
+            Message::RequestVoteReply { .. } => "RequestVoteReply",
+        }
+    }
+
+    /// Approximate wire size in bytes (used by the delay models to scale
+    /// transfer time with batch size).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Message::AppendEntries { entries, .. } => {
+                64 + entries
+                    .iter()
+                    .map(|e| match &e.payload {
+                        Payload::Ycsb(b) => 12 * b.len() + 16,
+                        Payload::Tpcc(b) => 12 * b.len() + 16,
+                        Payload::Bytes(b) => b.len() + 16,
+                        _ => 16,
+                    })
+                    .sum::<usize>()
+            }
+            _ => 48,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn term_accessor_covers_all_variants() {
+        let msgs = [
+            Message::AppendEntries {
+                term: 3,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: vec![],
+                leader_commit: 0,
+                wclock: 1,
+                weight: 1.0,
+            },
+            Message::AppendEntriesReply {
+                term: 4,
+                from: 1,
+                success: true,
+                match_index: 2,
+                wclock: 1,
+            },
+            Message::RequestVote { term: 5, candidate: 2, last_log_index: 0, last_log_term: 0 },
+            Message::RequestVoteReply { term: 6, from: 3, granted: false },
+        ];
+        assert_eq!(msgs.iter().map(Message::term).collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn wire_size_scales_with_batch() {
+        use crate::workload::{Workload, YcsbGen};
+        let small = Arc::new(YcsbGen::new(Workload::A, 100, 1).batch(10));
+        let large = Arc::new(YcsbGen::new(Workload::A, 100, 1).batch(1000));
+        let mk = |b: Arc<YcsbBatch>| Message::AppendEntries {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: vec![Entry { term: 1, index: 1, payload: Payload::Ycsb(b), wclock: 1 }],
+            leader_commit: 0,
+            wclock: 1,
+            weight: 1.0,
+        };
+        assert!(mk(large).wire_size() > 50 * mk(small).wire_size() / 2);
+    }
+
+    #[test]
+    fn payload_op_counts() {
+        assert_eq!(Payload::Noop.op_count(), 0);
+        assert_eq!(Payload::Reconfig { new_t: 3 }.op_count(), 0);
+        assert_eq!(Payload::Bytes(Arc::new(vec![1, 2, 3])).op_count(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's Layer-3 contribution: Raft, Cabinet weighted consensus
+//! (Algorithm 1), and the HQC baseline — all as sans-io state machines
+//! driven by either the deterministic simulator (`sim::`) or the live
+//! std-thread runtime (`live::`).
+
+pub mod hqc;
+pub mod log;
+pub mod message;
+pub mod node;
+pub mod weights;
+
+pub use message::{Entry, LogIndex, Message, NodeId, Payload, Term, WClock};
+pub use node::{Input, Mode, Node, Output, Role};
+pub use weights::{ratio_bounds, threshold_pct, WeightScheme};

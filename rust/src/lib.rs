@@ -1,0 +1,17 @@
+//! Cabinet: dynamically weighted consensus made fast.
+//!
+//! Full-system reproduction of "Cabinet: Dynamically Weighted Consensus Made
+//! Fast" (Zhang et al., 2025). Layer-3 Rust coordinator implementing Raft,
+//! Cabinet weighted consensus, and an HQC baseline over both a deterministic
+//! discrete-event simulator and a live tokio runtime; Layer-2/1 JAX + Pallas
+//! state-machine kernels AOT-compiled to HLO and executed via PJRT.
+
+pub mod config;
+pub mod consensus;
+pub mod net;
+pub mod sim;
+pub mod live;
+pub mod storage;
+pub mod workload;
+pub mod bench;
+pub mod runtime;

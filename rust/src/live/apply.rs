@@ -1,0 +1,190 @@
+//! The apply service: a dedicated thread owning the PJRT engine.
+//!
+//! PJRT handles are raw pointers (`!Send`), so the engine lives inside one
+//! service thread (like a database process); node threads submit batches
+//! over a channel and block on the digest reply. When artifacts are absent
+//! the service falls back to the bit-identical native mirror
+//! (`storage::digest`) — same results, same code path shape.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::runtime::{artifacts_available, Engine};
+use crate::storage::digest::{DigestState, STATE_SLOTS, YCSB_BATCH};
+use crate::workload::ycsb::OP_NOP;
+use crate::workload::YcsbBatch;
+
+/// One apply request: fold `batch` into `state`, reply with the new state
+/// and the `[state_digest, read_digest]` pair.
+pub struct ApplyReq {
+    pub state: Vec<u32>,
+    pub batch: YcsbBatch,
+    pub resp: Sender<(Vec<u32>, [u32; 2])>,
+}
+
+/// Which backend the service ended up using.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts executed via PJRT.
+    Pjrt,
+    /// Native u32 mirror (artifacts unavailable).
+    Native,
+}
+
+/// Handle to the running apply service.
+pub struct ApplyService {
+    tx: Sender<ApplyReq>,
+    backend_rx: Option<Receiver<Backend>>,
+    backend: Option<Backend>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ApplyService {
+    /// Spawn the service; looks for artifacts in `dir`.
+    pub fn spawn(dir: PathBuf) -> ApplyService {
+        let (tx, rx) = channel::<ApplyReq>();
+        let (btx, brx) = channel::<Backend>();
+        let handle = std::thread::Builder::new()
+            .name("apply-service".into())
+            .spawn(move || service_loop(dir, rx, btx))
+            .expect("spawn apply service");
+        ApplyService { tx, backend_rx: Some(brx), backend: None, handle: Some(handle) }
+    }
+
+    /// The backend the service selected (blocks until it has started).
+    pub fn backend(&mut self) -> Backend {
+        if self.backend.is_none() {
+            let rx = self.backend_rx.take().expect("backend already taken");
+            self.backend = Some(rx.recv().expect("apply service died"));
+        }
+        self.backend.unwrap()
+    }
+
+    /// A cloneable submitter for node threads.
+    pub fn submitter(&self) -> Sender<ApplyReq> {
+        self.tx.clone()
+    }
+
+    /// Synchronous apply (blocks until the service replies).
+    pub fn apply(&self, state: Vec<u32>, batch: YcsbBatch) -> (Vec<u32>, [u32; 2]) {
+        let (resp, rx) = channel();
+        self.tx.send(ApplyReq { state, batch, resp }).expect("apply service gone");
+        rx.recv().expect("apply service dropped request")
+    }
+}
+
+impl Drop for ApplyService {
+    fn drop(&mut self) {
+        // Close our side of the channel; the loop exits once every node's
+        // cloned submitter is gone too. Do NOT join here: node threads may
+        // still hold submitters (e.g. during a panicking test), and joining
+        // would deadlock the unwind.
+        let (tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, tx);
+        if let Some(h) = self.handle.take() {
+            drop(h); // detach
+        }
+    }
+}
+
+fn service_loop(dir: PathBuf, rx: Receiver<ApplyReq>, btx: Sender<Backend>) {
+    let engine = if artifacts_available(&dir) {
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("apply-service: PJRT load failed ({err:#}); using native mirror");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let _ = btx.send(if engine.is_some() { Backend::Pjrt } else { Backend::Native });
+
+    while let Ok(req) = rx.recv() {
+        let padded = req.batch.padded_to(YCSB_BATCH);
+        let result = match &engine {
+            Some(e) => {
+                match e.ycsb_apply(&req.state, &padded.ops, &padded.keys, &padded.vals) {
+                    Ok(r) => r,
+                    Err(err) => {
+                        eprintln!("apply-service: PJRT execute failed ({err:#})");
+                        native_apply(&req.state, &padded)
+                    }
+                }
+            }
+            None => native_apply(&req.state, &padded),
+        };
+        let _ = req.resp.send(result);
+    }
+}
+
+fn native_apply(state: &[u32], batch: &YcsbBatch) -> (Vec<u32>, [u32; 2]) {
+    let mut st = DigestState::from_state(state.to_vec());
+    let digest = st.apply_ycsb(&batch.ops, &batch.keys, &batch.vals);
+    (st.slots().to_vec(), digest)
+}
+
+/// Fresh empty state in artifact shape.
+pub fn empty_state() -> Vec<u32> {
+    vec![0; STATE_SLOTS]
+}
+
+/// Pad helper shared by tests (live ops preserved, NOPs appended).
+pub fn assert_padded(batch: &YcsbBatch) -> bool {
+    batch.len() == YCSB_BATCH && batch.ops.iter().skip(batch.live_ops()).all(|&o| o >= OP_NOP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Workload, YcsbGen};
+
+    #[test]
+    fn native_fallback_applies() {
+        // point at a dir with no artifacts → native backend
+        let mut svc = ApplyService::spawn(PathBuf::from("/nonexistent"));
+        assert_eq!(svc.backend(), Backend::Native);
+        let mut gen = YcsbGen::new(Workload::A, 1000, 1);
+        let batch = gen.batch(500);
+        let (state, digest) = svc.apply(empty_state(), batch.clone());
+        // must equal the direct native mirror on the padded batch
+        let padded = batch.padded_to(YCSB_BATCH);
+        let mut st = DigestState::from_state(empty_state());
+        let expect = st.apply_ycsb(&padded.ops, &padded.keys, &padded.vals);
+        assert_eq!(digest, expect);
+        assert_eq!(state, st.slots());
+    }
+
+    #[test]
+    fn sequential_applies_chain_state() {
+        let svc = ApplyService::spawn(PathBuf::from("/nonexistent"));
+        let mut gen = YcsbGen::new(Workload::A, 1000, 2);
+        let b1 = gen.batch(100);
+        let b2 = gen.batch(100);
+        let (s1, d1) = svc.apply(empty_state(), b1);
+        let (_s2, d2) = svc.apply(s1, b2);
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn pjrt_backend_when_artifacts_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut svc = ApplyService::spawn(dir);
+        assert_eq!(svc.backend(), Backend::Pjrt);
+        let mut gen = YcsbGen::new(Workload::A, 1000, 3);
+        let batch = gen.batch(700);
+        let (state_hlo, digest_hlo) = svc.apply(empty_state(), batch.clone());
+        // PJRT result must be bit-identical to the native mirror
+        let padded = batch.padded_to(YCSB_BATCH);
+        let mut st = DigestState::from_state(empty_state());
+        let expect = st.apply_ycsb(&padded.ops, &padded.keys, &padded.vals);
+        assert_eq!(digest_hlo, expect, "HLO and native digests diverge");
+        assert_eq!(state_hlo, st.slots(), "HLO and native state diverge");
+    }
+}

@@ -1,0 +1,423 @@
+//! Live cluster: one OS thread per consensus node, real message passing
+//! over channels, real wall-clock timers — the same sans-io `Node` state
+//! machines the simulator drives, now with Python-free PJRT apply on every
+//! commit. This is the runtime behind `examples/quickstart.rs` and
+//! `examples/e2e_live.rs`.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::consensus::message::{Entry, LogIndex, Message, NodeId, Payload};
+use crate::consensus::node::{Input, Mode, Node, Output, Role};
+use crate::live::apply::{empty_state, ApplyReq};
+use crate::net::rng::Rng;
+use crate::workload::YcsbBatch;
+
+/// Per-replica applier: a thread owning this node's replica state, applying
+/// committed batches in commit order through the apply service. Keeping the
+/// apply off the consensus thread is essential — a blocking apply starves
+/// heartbeats and triggers spurious elections (found the hard way; see
+/// rust/tests/live_e2e.rs).
+struct Applier {
+    tx: Sender<Arc<YcsbBatch>>,
+    handle: JoinHandle<(usize, Option<[u32; 2]>)>,
+}
+
+impl Applier {
+    fn spawn(node: NodeId, service: Sender<ApplyReq>) -> Applier {
+        let (tx, rx) = channel::<Arc<YcsbBatch>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("applier-{node}"))
+            .spawn(move || {
+                let mut state = empty_state();
+                let mut applies = 0usize;
+                let mut last_digest = None;
+                while let Ok(batch) = rx.recv() {
+                    let (resp, resp_rx) = channel();
+                    let req = ApplyReq {
+                        state: std::mem::take(&mut state),
+                        batch: (*batch).clone(),
+                        resp,
+                    };
+                    if service.send(req).is_err() {
+                        break;
+                    }
+                    match resp_rx.recv() {
+                        Ok((ns, d)) => {
+                            state = ns;
+                            applies += 1;
+                            last_digest = Some(d);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                (applies, last_digest)
+            })
+            .expect("spawn applier");
+        Applier { tx, handle }
+    }
+}
+
+/// Inputs to a node thread.
+pub enum LiveIn {
+    Rpc(NodeId, Message),
+    Propose(Payload),
+    /// Fire the election timer immediately (bootstrap).
+    ForceElection,
+    Stop,
+}
+
+/// Events surfaced to the harness/client.
+#[derive(Clone, Debug)]
+pub enum LiveEvent {
+    Committed { node: NodeId, index: LogIndex, digest: Option<[u32; 2]> },
+    BecameLeader { node: NodeId, term: u64 },
+    RoundCommitted { node: NodeId, index: LogIndex, repliers: usize },
+}
+
+/// Timer configuration for live nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveTimers {
+    pub election_lo: Duration,
+    pub election_hi: Duration,
+    pub heartbeat: Duration,
+}
+
+impl Default for LiveTimers {
+    fn default() -> Self {
+        LiveTimers {
+            election_lo: Duration::from_millis(150),
+            election_hi: Duration::from_millis(300),
+            heartbeat: Duration::from_millis(40),
+        }
+    }
+}
+
+/// A running cluster. Dropping it (including during a panic unwind) stops
+/// all node threads.
+pub struct LiveCluster {
+    inboxes: Vec<Sender<LiveIn>>,
+    pub events: Receiver<LiveEvent>,
+    handles: Vec<JoinHandle<NodeReport>>,
+    n: usize,
+}
+
+/// Final per-node report returned at shutdown.
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    pub id: NodeId,
+    pub commit_index: LogIndex,
+    pub final_digest: Option<[u32; 2]>,
+    pub committed_entries: usize,
+    pub applies: usize,
+}
+
+impl LiveCluster {
+    /// Start `n` node threads in the given mode. `apply_tx`: submit side of
+    /// a running [`crate::live::ApplyService`] (or None to skip apply).
+    pub fn start(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+    ) -> LiveCluster {
+        let (event_tx, event_rx) = channel::<LiveEvent>();
+        let mut inbox_txs = Vec::with_capacity(n);
+        let mut inbox_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<LiveIn>();
+            inbox_txs.push(tx);
+            inbox_rxs.push(rx);
+        }
+        let peers: Arc<Vec<Sender<LiveIn>>> = Arc::new(inbox_txs.clone());
+        let mut handles = Vec::with_capacity(n);
+        for (id, rx) in inbox_rxs.into_iter().enumerate() {
+            let peers = Arc::clone(&peers);
+            let event_tx = event_tx.clone();
+            let apply_tx = apply_tx.clone();
+            let mode = mode.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("node-{id}"))
+                .spawn(move || {
+                    node_loop(id, n, mode, timers, rx, peers, event_tx, apply_tx, seed)
+                })
+                .expect("spawn node");
+            handles.push(handle);
+        }
+        LiveCluster { inboxes: inbox_txs, events: event_rx, handles, n }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bootstrap: make `node` start an election now.
+    pub fn force_election(&self, node: NodeId) {
+        let _ = self.inboxes[node].send(LiveIn::ForceElection);
+    }
+
+    /// Submit a proposal to `node` (should be the leader).
+    pub fn propose(&self, node: NodeId, payload: Payload) {
+        let _ = self.inboxes[node].send(LiveIn::Propose(payload));
+    }
+
+    /// Wait until some node reports leadership; returns its id.
+    pub fn wait_for_leader(&self, timeout: Duration) -> Option<NodeId> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::BecameLeader { node, .. }) => return Some(node),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Wait until the leader commits `index` (RoundCommitted); returns the
+    /// elapsed time.
+    pub fn wait_for_round(&self, index: LogIndex, timeout: Duration) -> Option<Duration> {
+        let t0 = Instant::now();
+        let deadline = t0 + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::RoundCommitted { index: i, .. }) if i >= index => {
+                    return Some(t0.elapsed())
+                }
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Crash a single node (its thread exits; peers stop hearing from it).
+    pub fn stop_node(&self, node: NodeId) {
+        let _ = self.inboxes[node].send(LiveIn::Stop);
+    }
+
+    /// Stop all nodes and collect their final reports.
+    pub fn shutdown(mut self) -> Vec<NodeReport> {
+        for tx in &self.inboxes {
+            let _ = tx.send(LiveIn::Stop);
+        }
+        self.handles.drain(..).map(|h| h.join().expect("node panicked")).collect()
+    }
+}
+
+impl Drop for LiveCluster {
+    fn drop(&mut self) {
+        // stop node threads even on the panic path (they hold each other's
+        // senders via the peers Arc, so channel disconnection alone would
+        // never terminate them)
+        for tx in &self.inboxes {
+            let _ = tx.send(LiveIn::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_loop(
+    id: NodeId,
+    n: usize,
+    mode: Mode,
+    timers: LiveTimers,
+    rx: Receiver<LiveIn>,
+    peers: Arc<Vec<Sender<LiveIn>>>,
+    events: Sender<LiveEvent>,
+    apply_tx: Option<Sender<ApplyReq>>,
+    seed: u64,
+) -> NodeReport {
+    let mut node = Node::new(id, n, mode);
+    let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
+    let rand_election = |rng: &mut Rng| {
+        let lo = timers.election_lo.as_secs_f64();
+        let hi = timers.election_hi.as_secs_f64();
+        Duration::from_secs_f64(rng.range_f64(lo, hi))
+    };
+
+    let mut election_deadline = Instant::now() + rand_election(&mut rng);
+    let mut heartbeat_deadline: Option<Instant> = None;
+
+    // committed batches are applied off-thread, in commit order
+    let applier = apply_tx.map(|service| Applier::spawn(id, service));
+    let mut committed = 0usize;
+
+    let handle_outputs = |outs: Vec<Output>,
+                              applier: &Option<Applier>,
+                              committed: &mut usize,
+                              election_deadline: &mut Instant,
+                              heartbeat_deadline: &mut Option<Instant>,
+                              rng: &mut Rng| {
+        for o in outs {
+            match o {
+                Output::Send(to, msg) => {
+                    let _ = peers[to].send(LiveIn::Rpc(id, msg));
+                }
+                Output::ResetElectionTimer => {
+                    *election_deadline = Instant::now() + rand_election(rng);
+                }
+                Output::StartHeartbeat => {
+                    *heartbeat_deadline = Some(Instant::now() + timers.heartbeat);
+                }
+                Output::StopHeartbeat => {
+                    *heartbeat_deadline = None;
+                }
+                Output::BecameLeader => {
+                    let _ = events.send(LiveEvent::BecameLeader { node: id, term: 0 });
+                }
+                Output::RoundCommitted { index, repliers, .. } => {
+                    let _ = events.send(LiveEvent::RoundCommitted { node: id, index, repliers });
+                }
+                Output::Commit(Entry { index, payload, .. }) => {
+                    *committed += 1;
+                    if let (Payload::Ycsb(batch), Some(a)) = (&payload, applier) {
+                        let _ = a.tx.send(Arc::clone(batch));
+                    }
+                    let _ = events.send(LiveEvent::Committed { node: id, index, digest: None });
+                }
+                Output::SteppedDown | Output::ProposalRejected(_) => {}
+            }
+        }
+    };
+
+    loop {
+        // next wakeup: the earlier of election / heartbeat deadline
+        let now = Instant::now();
+        let mut next = election_deadline;
+        if let Some(hb) = heartbeat_deadline {
+            if hb < next {
+                next = hb;
+            }
+        }
+        let wait = next.saturating_duration_since(now);
+        match rx.recv_timeout(wait) {
+            Ok(LiveIn::Stop) => break,
+            Ok(LiveIn::Rpc(from, msg)) => {
+                let outs = node.step(Input::Receive(from, msg));
+                handle_outputs(
+                    outs, &applier, &mut committed,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                );
+            }
+            Ok(LiveIn::Propose(payload)) => {
+                let outs = node.step(Input::Propose(payload));
+                handle_outputs(
+                    outs, &applier, &mut committed,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                );
+            }
+            Ok(LiveIn::ForceElection) => {
+                let outs = node.step(Input::ElectionTimeout);
+                handle_outputs(
+                    outs, &applier, &mut committed,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                );
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let now = Instant::now();
+                if let Some(hb) = heartbeat_deadline {
+                    if now >= hb {
+                        heartbeat_deadline = Some(now + timers.heartbeat);
+                        let outs = node.step(Input::HeartbeatTimeout);
+                        handle_outputs(
+                            outs, &applier, &mut committed,
+                            &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                        );
+                    }
+                }
+                if now >= election_deadline && node.role() != Role::Leader {
+                    election_deadline = now + rand_election(&mut rng);
+                    let outs = node.step(Input::ElectionTimeout);
+                    handle_outputs(
+                        outs, &applier, &mut committed,
+                        &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    );
+                } else if now >= election_deadline {
+                    // leaders don't run election timers; push it out
+                    election_deadline = now + rand_election(&mut rng);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+
+    // drain the applier: close its queue and collect the final digest
+    let (applies, final_digest) = match applier {
+        Some(Applier { tx, handle }) => {
+            drop(tx);
+            handle.join().unwrap_or((0, None))
+        }
+        None => (0, None),
+    };
+    NodeReport {
+        id,
+        commit_index: node.commit_index(),
+        final_digest,
+        committed_entries: committed,
+        applies,
+    }
+}
+
+/// Convenience: map of per-node final digests (for convergence assertions).
+pub fn digest_map(reports: &[NodeReport]) -> HashMap<NodeId, Option<[u32; 2]>> {
+    reports.iter().map(|r| (r.id, r.final_digest)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Workload, YcsbGen};
+    use std::path::PathBuf;
+
+    #[test]
+    fn live_cluster_elects_and_commits() {
+        let cluster =
+            LiveCluster::start(3, Mode::Raft, LiveTimers::default(), None, 7);
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![1, 2, 3])));
+        assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
+        let reports = cluster.shutdown();
+        assert!(reports.iter().any(|r| r.commit_index >= 2));
+    }
+
+    #[test]
+    fn live_cabinet_applies_batches_and_converges() {
+        let svc = crate::live::apply::ApplyService::spawn(PathBuf::from("/nonexistent"));
+        let cluster = LiveCluster::start(
+            5,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            Some(svc.submitter()),
+            11,
+        );
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        let mut gen = YcsbGen::new(Workload::A, 1000, 5);
+        for _ in 0..3 {
+            cluster.propose(leader, Payload::Ycsb(Arc::new(gen.batch(200))));
+        }
+        // noop(1) + 3 batches → index 4
+        assert!(cluster.wait_for_round(4, Duration::from_secs(10)).is_some());
+        // give followers a couple heartbeats to learn the commit index
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        let digests: Vec<_> = reports
+            .iter()
+            .filter_map(|r| r.final_digest)
+            .collect();
+        assert!(digests.len() >= 2, "at least leader+1 follower applied");
+        assert!(
+            digests.windows(2).all(|w| w[0] == w[1]),
+            "replica digests diverge: {digests:?}"
+        );
+    }
+}

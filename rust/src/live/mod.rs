@@ -1,0 +1,11 @@
+//! Live runtime: OS-thread nodes + channel transport + wall-clock timers +
+//! the PJRT apply service. (The environment's vendored crate set has no
+//! async runtime, so this is std-threads rather than tokio — the
+//! architecture is identical: an event loop per node, a dedicated
+//! apply-service thread owning the PJRT engine.)
+
+pub mod apply;
+pub mod cluster;
+
+pub use apply::{ApplyService, Backend};
+pub use cluster::{digest_map, LiveCluster, LiveEvent, LiveTimers, NodeReport};

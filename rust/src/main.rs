@@ -1,0 +1,289 @@
+//! `cabinet` CLI — the launcher for the reproduction:
+//!
+//! ```text
+//! cabinet figures [figN|all] [--paper]     regenerate paper figures
+//! cabinet sim --config exp.toml            run one experiment from a file
+//! cabinet sim [--n N] [--t T] [...]        run one experiment from flags
+//! cabinet weights --n N --t T              print a weight scheme
+//! cabinet live [--n N] [--t T] [--rounds R]  run the live cluster demo
+//! cabinet check-artifacts                  validate AOT artifacts via PJRT
+//! ```
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use cabinet::bench::{figures, Scale};
+use cabinet::config::sim_config_from_toml;
+use cabinet::consensus::weights::{ratio_bounds, WeightScheme};
+use cabinet::consensus::{Mode, Payload};
+use cabinet::live::{ApplyService, Backend, LiveCluster, LiveTimers};
+use cabinet::runtime::{artifacts_available, default_artifact_dir, Engine};
+use cabinet::sim::{run, DigestMode, Protocol, SimConfig};
+use cabinet::workload::{Workload, YcsbGen};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut args: VecDeque<String> = std::env::args().skip(1).collect();
+    let cmd = args.pop_front().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "figures" => cmd_figures(args),
+        "sim" => cmd_sim(args),
+        "weights" => cmd_weights(args),
+        "live" => cmd_live(args),
+        "check-artifacts" => cmd_check_artifacts(),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `cabinet help`"),
+    }
+}
+
+const HELP: &str = "cabinet — dynamically weighted consensus (paper reproduction)
+
+USAGE:
+  cabinet figures [fig3|fig4|fig8|...|all] [--paper]
+  cabinet sim --config exp.toml
+  cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
+              [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
+              [--seed S]
+  cabinet weights --n N --t T
+  cabinet live [--n N] [--t T] [--rounds R] [--batch B]
+  cabinet check-artifacts";
+
+fn flag(args: &mut VecDeque<String>, name: &str) -> Option<String> {
+    let pos = args.iter().position(|a| a == name)?;
+    let v = args.get(pos + 1).cloned();
+    args.remove(pos + 1);
+    args.remove(pos);
+    v
+}
+
+fn has_flag(args: &mut VecDeque<String>, name: &str) -> bool {
+    if let Some(pos) = args.iter().position(|a| a == name) {
+        args.remove(pos);
+        true
+    } else {
+        false
+    }
+}
+
+fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
+    let paper = has_flag(&mut args, "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Quick };
+    let which = args.pop_front().unwrap_or_else(|| "all".into());
+    let tables = match which.as_str() {
+        "all" => figures::all_figures(scale),
+        "fig3" => vec![figures::fig3()],
+        "fig4" => vec![figures::fig4()],
+        "fig8" => vec![figures::fig8(scale)],
+        "fig9" => vec![figures::fig9(scale)],
+        "fig10" => vec![figures::fig10(scale)],
+        "fig11" => vec![figures::fig11(scale)],
+        "fig12" => vec![figures::fig12(scale)],
+        "fig13" => vec![figures::fig13()],
+        "fig14" => vec![figures::fig14(scale)],
+        "fig15" => vec![figures::fig15(scale)],
+        "fig16" => vec![figures::fig16(scale)],
+        "fig17" => vec![figures::fig17(scale), figures::fig17_series(scale)],
+        "fig18" => vec![figures::fig18(scale)],
+        "fig19" => vec![figures::fig19(scale)],
+        other => bail!("unknown figure {other}"),
+    };
+    for t in tables {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
+    let config = if let Some(path) = flag(&mut args, "--config") {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        sim_config_from_toml(&text)?
+    } else {
+        let n: usize = flag(&mut args, "--n").map(|v| v.parse()).transpose()?.unwrap_or(11);
+        let het = !has_flag(&mut args, "--hom") || has_flag(&mut args, "--het");
+        let proto = match flag(&mut args, "--proto").as_deref().unwrap_or("cabinet") {
+            "raft" => Protocol::Raft,
+            "cabinet" => {
+                let t: usize =
+                    flag(&mut args, "--t").map(|v| v.parse()).transpose()?.unwrap_or(1);
+                Protocol::Cabinet { t }
+            }
+            "hqc" => Protocol::Hqc { sizes: vec![n / 3, n / 3, n - 2 * (n / 3)] },
+            other => bail!("unknown proto {other}"),
+        };
+        let mut c = SimConfig::new(proto, n, het);
+        if let Some(r) = flag(&mut args, "--rounds") {
+            c.rounds = r.parse()?;
+        }
+        if let Some(s) = flag(&mut args, "--seed") {
+            c.seed = s.parse()?;
+        }
+        if let Some(w) = flag(&mut args, "--workload") {
+            if w.eq_ignore_ascii_case("tpcc") {
+                c.workload = cabinet::sim::WorkloadSpec::tpcc2k();
+            } else {
+                let wl = Workload::from_name(&w).context("unknown workload")?;
+                c.workload = cabinet::sim::WorkloadSpec::ycsb(wl, 5000);
+            }
+        }
+        if let Some(d) = flag(&mut args, "--delay") {
+            use cabinet::net::delay::DelayModel;
+            c.delay = match d.as_str() {
+                "d0" => DelayModel::None,
+                "d1" => DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 },
+                "d2" => DelayModel::Skew,
+                "d3" => DelayModel::Rotating { period_rounds: 10 },
+                "d4" => DelayModel::Bursting,
+                other => bail!("unknown delay {other}"),
+            };
+        }
+        c.digest_mode = DigestMode::Sample;
+        c
+    };
+    let r = run(&config);
+    println!("experiment: {}", r.label);
+    println!("rounds:     {}", r.rounds.len());
+    println!("throughput: {} ops/s", cabinet::bench::fmt_tps(r.tput_ops_s));
+    println!(
+        "latency:    mean {:.1} ms   p50 {:.1} ms   p99 {:.1} ms",
+        r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms
+    );
+    println!("elections:  {}", r.elections);
+    if let Some(ok) = r.digests_match {
+        println!("replica digests match: {ok}");
+    }
+    Ok(())
+}
+
+fn cmd_weights(mut args: VecDeque<String>) -> Result<()> {
+    let n: usize = flag(&mut args, "--n").context("--n required")?.parse()?;
+    let t: usize = flag(&mut args, "--t").context("--t required")?.parse()?;
+    let ws = WeightScheme::geometric(n, t)?;
+    let (lo, hi) = ratio_bounds(n, t);
+    println!("{ws}");
+    println!("feasible ratio interval: ({lo:.6}, {hi:.6})");
+    println!("cabinet size: {} (t+1)", ws.cabinet_size());
+    println!("election quorum: {} (n-t)", n - t);
+    // cross-check against the AOT artifact when available
+    let dir = default_artifact_dir();
+    if artifacts_available(&dir) {
+        let engine = Engine::load(&dir)?;
+        let (r_hlo, w_hlo, ct_hlo) = engine.weight_scheme(n as i32, t as i32)?;
+        let dr = (r_hlo - ws.ratio()).abs();
+        let dct = (ct_hlo - ws.ct()).abs() / ws.ct();
+        let dw = ws
+            .weights()
+            .iter()
+            .zip(&w_hlo)
+            .map(|(a, b)| (a - b).abs() / a)
+            .fold(0.0f64, f64::max);
+        println!("AOT artifact cross-check: |Δr|={dr:.2e} relΔct={dct:.2e} max relΔw={dw:.2e}");
+    }
+    Ok(())
+}
+
+fn cmd_live(mut args: VecDeque<String>) -> Result<()> {
+    let n: usize = flag(&mut args, "--n").map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let t: usize = flag(&mut args, "--t").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let rounds: usize =
+        flag(&mut args, "--rounds").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let batch: usize =
+        flag(&mut args, "--batch").map(|v| v.parse()).transpose()?.unwrap_or(2000);
+
+    let mut svc = ApplyService::spawn(default_artifact_dir());
+    let backend = svc.backend();
+    println!("apply backend: {backend:?}");
+    if backend == Backend::Native {
+        println!("(run `make artifacts` to exercise the PJRT path)");
+    }
+    let cluster =
+        LiveCluster::start(n, Mode::cabinet(n, t), LiveTimers::default(), Some(svc.submitter()), 1);
+    cluster.force_election(0);
+    let leader =
+        cluster.wait_for_leader(Duration::from_secs(5)).context("no leader elected")?;
+    println!("leader: node {leader} (cabinet mode, n={n}, t={t})");
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 7);
+    let t0 = std::time::Instant::now();
+    for i in 0..rounds {
+        let b = gen.batch(batch);
+        cluster.propose(leader, Payload::Ycsb(std::sync::Arc::new(b)));
+        cluster
+            .wait_for_round((i + 2) as u64, Duration::from_secs(10))
+            .context("round timed out")?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{rounds} rounds × {batch} ops in {:.2}s → {} ops/s",
+        dt.as_secs_f64(),
+        cabinet::bench::fmt_tps(rounds as f64 * batch as f64 / dt.as_secs_f64())
+    );
+    std::thread::sleep(Duration::from_millis(200));
+    let reports = cluster.shutdown();
+    let digests: Vec<_> = reports.iter().filter_map(|r| r.final_digest).collect();
+    let all_eq = digests.windows(2).all(|w| w[0] == w[1]);
+    println!("replicas with applied state: {} / {n}; digests match: {all_eq}", digests.len());
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        bail!("artifacts not found in {} — run `make artifacts`", dir.display());
+    }
+    let engine = Engine::load(&dir)?;
+    println!("manifest: {:?}", engine.manifest);
+
+    // YCSB artifact vs native mirror (bit-exact)
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 3);
+    let batch = gen.batch(5000).padded_to(cabinet::storage::digest::YCSB_BATCH);
+    let state = vec![0u32; cabinet::storage::digest::STATE_SLOTS];
+    let (hlo_state, hlo_digest) =
+        engine.ycsb_apply(&state, &batch.ops, &batch.keys, &batch.vals)?;
+    let mut native = cabinet::storage::digest::DigestState::default();
+    let native_digest = native.apply_ycsb(&batch.ops, &batch.keys, &batch.vals);
+    anyhow::ensure!(hlo_digest == native_digest, "ycsb digest mismatch");
+    anyhow::ensure!(hlo_state == native.slots(), "ycsb state mismatch");
+    println!("ycsb_apply: HLO == native mirror (digest {hlo_digest:?})");
+
+    // TPC-C artifact vs native mirror
+    let mut tgen = cabinet::workload::TpccGen::new(64, 4);
+    let tb = tgen.batch(2000).padded_to(cabinet::storage::digest::TPCC_BATCH);
+    let (counts, costs, dig) = engine.tpcc_cost(&tb.types, &tb.wids, &tb.args)?;
+    let (ncounts, ncosts, ndig) =
+        cabinet::storage::digest::tpcc_costs(&tb.types, &tb.wids, &tb.args, 64);
+    anyhow::ensure!(dig == ndig, "tpcc digest mismatch");
+    anyhow::ensure!(counts == ncounts, "tpcc counts mismatch");
+    let max_err = costs
+        .iter()
+        .zip(&ncosts)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-3, "tpcc cost mismatch {max_err}");
+    println!("tpcc_cost: HLO == native mirror (digest {dig:#010x})");
+
+    // weight-scheme artifact vs native solver
+    for (n, t) in [(10i32, 3i32), (50, 5), (100, 40)] {
+        let (r_hlo, _w, ct_hlo) = engine.weight_scheme(n, t)?;
+        let ws = WeightScheme::geometric(n as usize, t as usize)?;
+        anyhow::ensure!(
+            (r_hlo - ws.ratio()).abs() < 1e-6,
+            "ratio mismatch n={n} t={t}: {r_hlo} vs {}",
+            ws.ratio()
+        );
+        anyhow::ensure!((ct_hlo - ws.ct()).abs() / ws.ct() < 1e-9, "ct mismatch");
+    }
+    println!("weight_scheme: HLO solver == native solver (n=10/50/100)");
+    println!("all artifacts OK");
+    Ok(())
+}

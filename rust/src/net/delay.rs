@@ -1,0 +1,220 @@
+//! Emulated network-delay models D1–D4 (§5.3, Fig. 13) — the netem stand-in.
+//!
+//! Each model answers "what extra one-way delay does a message on link
+//! (leader ↔ node i) experience at virtual time `now`?". The baseline LAN
+//! (d = 0) keeps the paper's testbed profile: raw latency < 1 ms at
+//! ≈ 400 MB/s.
+
+use crate::net::rng::Rng;
+
+/// Bandwidth of the emulated testbed NIC (§5: ≈400 MB/s).
+pub const BANDWIDTH_BYTES_PER_MS: f64 = 400_000.0;
+/// Raw LAN latency mean (paper: < 1 ms).
+pub const LAN_BASE_MS: f64 = 0.35;
+pub const LAN_JITTER_MS: f64 = 0.10;
+
+/// D4 burst schedule (§5.3): 10 s of no extra delay, then a 5 s spike
+/// window (2:1 ratio), spikes of 1000 ± 100 ms.
+pub const BURST_QUIET_MS: f64 = 10_000.0;
+pub const BURST_ACTIVE_MS: f64 = 5_000.0;
+pub const BURST_SPIKE_MS: f64 = 1_000.0;
+pub const BURST_SPIKE_JITTER_MS: f64 = 100.0;
+
+/// The §5.3 delay taxonomy.
+#[derive(Clone, Debug)]
+pub enum DelayModel {
+    /// d = 0: base LAN only.
+    None,
+    /// D1 — uniformly distributed delays across all nodes: `mean ± spread`
+    /// (the paper's sets: 100±20, 200±40, 500±100, 1000±200 ms).
+    Uniform { mean_ms: f64, spread_ms: f64 },
+    /// D2 — skew delays: declining from 1000±200 ms on the first nodes to
+    /// 100±20 ms on the last (Fig. 13).
+    Skew,
+    /// D3 — the D2 ramp rotated across nodes every `period_rounds` rounds
+    /// so every zone experiences the full delay range.
+    Rotating { period_rounds: u64 },
+    /// D4 — bursting delays: intermittent 1000±100 ms spikes on all nodes
+    /// (5 s burst / 10 s quiet).
+    Bursting,
+}
+
+impl DelayModel {
+    pub fn name(&self) -> String {
+        match self {
+            DelayModel::None => "d0".into(),
+            DelayModel::Uniform { mean_ms, .. } => format!("D1-{mean_ms:.0}ms"),
+            DelayModel::Skew => "D2-skew".into(),
+            DelayModel::Rotating { .. } => "D3-rotating".into(),
+            DelayModel::Bursting => "D4-bursting".into(),
+        }
+    }
+
+    /// The paper's four D1 presets.
+    pub fn d1_presets() -> [DelayModel; 4] {
+        [
+            DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 },
+            DelayModel::Uniform { mean_ms: 200.0, spread_ms: 40.0 },
+            DelayModel::Uniform { mean_ms: 500.0, spread_ms: 100.0 },
+            DelayModel::Uniform { mean_ms: 1000.0, spread_ms: 200.0 },
+        ]
+    }
+
+    /// D2 ramp for node i of n: interpolate mean from 1000 down to 100 ms,
+    /// spread = 20% of mean (matching the paper's ±20% at both ends).
+    fn skew_mean(node: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return 100.0;
+        }
+        let frac = node as f64 / (n - 1) as f64;
+        1000.0 - 900.0 * frac
+    }
+
+    /// Extra one-way delay (ms) for a message on link (leader ↔ `node`) at
+    /// virtual time `now_ms`; `round` indexes replication rounds (D3).
+    pub fn sample(
+        &self,
+        node: usize,
+        n: usize,
+        now_ms: f64,
+        round: u64,
+        rng: &mut Rng,
+    ) -> f64 {
+        match self {
+            DelayModel::None => 0.0,
+            DelayModel::Uniform { mean_ms, spread_ms } => {
+                rng.range_f64(mean_ms - spread_ms, mean_ms + spread_ms).max(0.0)
+            }
+            DelayModel::Skew => {
+                let mean = Self::skew_mean(node, n);
+                rng.range_f64(0.8 * mean, 1.2 * mean)
+            }
+            DelayModel::Rotating { period_rounds } => {
+                let shift = ((round / (*period_rounds).max(1)) as usize) % n;
+                let pos = (node + shift) % n;
+                let mean = Self::skew_mean(pos, n);
+                rng.range_f64(0.8 * mean, 1.2 * mean)
+            }
+            DelayModel::Bursting => {
+                let cycle = BURST_QUIET_MS + BURST_ACTIVE_MS;
+                let phase = now_ms.rem_euclid(cycle);
+                if phase >= BURST_QUIET_MS {
+                    rng.range_f64(
+                        BURST_SPIKE_MS - BURST_SPIKE_JITTER_MS,
+                        BURST_SPIKE_MS + BURST_SPIKE_JITTER_MS,
+                    )
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Full one-way link latency: LAN base + transfer time + model delay.
+    pub fn link_latency(
+        &self,
+        node: usize,
+        n: usize,
+        now_ms: f64,
+        round: u64,
+        wire_bytes: usize,
+        rng: &mut Rng,
+    ) -> f64 {
+        let base = rng.normal_pos(LAN_BASE_MS, LAN_JITTER_MS);
+        let transfer = wire_bytes as f64 / BANDWIDTH_BYTES_PER_MS;
+        base + transfer + self.sample(node, n, now_ms, round, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(xs: &[f64]) -> (f64, f64, f64) {
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+        (mean, min, max)
+    }
+
+    #[test]
+    fn d0_adds_nothing() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(DelayModel::None.sample(3, 50, 0.0, 0, &mut rng), 0.0);
+        }
+    }
+
+    #[test]
+    fn d1_within_bounds() {
+        let m = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..5000).map(|i| m.sample(i % 50, 50, 0.0, 0, &mut rng)).collect();
+        let (mean, min, max) = stats(&xs);
+        assert!(min >= 80.0 && max <= 120.0, "({min},{max})");
+        assert!((mean - 100.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn d2_declines_across_nodes() {
+        let mut rng = Rng::new(3);
+        let mut mean_of = |node: usize| {
+            let xs: Vec<f64> =
+                (0..2000).map(|_| DelayModel::Skew.sample(node, 50, 0.0, 0, &mut rng)).collect();
+            stats(&xs).0
+        };
+        let first = mean_of(0);
+        let mid = mean_of(25);
+        let last = mean_of(49);
+        assert!(first > 900.0 && first < 1100.0, "{first}");
+        assert!(last > 90.0 && last < 110.0, "{last}");
+        assert!(first > mid && mid > last);
+    }
+
+    #[test]
+    fn d3_rotates_with_rounds() {
+        let m = DelayModel::Rotating { period_rounds: 10 };
+        let mut rng = Rng::new(4);
+        // node 49 starts fast (~100 ms) and later inherits the slow slot
+        let early: f64 = (0..500).map(|_| m.sample(49, 50, 0.0, 0, &mut rng)).sum::<f64>() / 500.0;
+        let later: f64 =
+            (0..500).map(|_| m.sample(49, 50, 0.0, 10, &mut rng)).sum::<f64>() / 500.0;
+        assert!(early < 150.0, "{early}");
+        assert!(later > early, "{later} vs {early}");
+    }
+
+    #[test]
+    fn d3_full_rotation_returns() {
+        let m = DelayModel::Rotating { period_rounds: 1 };
+        let mut rng = Rng::new(5);
+        let a: f64 = (0..500).map(|_| m.sample(3, 10, 0.0, 0, &mut rng)).sum::<f64>() / 500.0;
+        let b: f64 = (0..500).map(|_| m.sample(3, 10, 0.0, 10, &mut rng)).sum::<f64>() / 500.0;
+        assert!((a - b).abs() < 40.0, "{a} vs {b}");
+    }
+
+    #[test]
+    fn d4_burst_schedule() {
+        let m = DelayModel::Bursting;
+        let mut rng = Rng::new(6);
+        // quiet window
+        assert_eq!(m.sample(0, 11, 500.0, 0, &mut rng), 0.0);
+        assert_eq!(m.sample(0, 11, 9_999.0, 0, &mut rng), 0.0);
+        // burst window
+        let x = m.sample(0, 11, 12_000.0, 0, &mut rng);
+        assert!((900.0..=1100.0).contains(&x), "{x}");
+        // next cycle quiet again
+        assert_eq!(m.sample(0, 11, 15_100.0, 0, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn link_latency_includes_transfer() {
+        let mut rng = Rng::new(7);
+        // 4 MB at 400 MB/s ⇒ ≈10 ms transfer
+        let lat =
+            DelayModel::None.link_latency(1, 5, 0.0, 0, 4_000_000, &mut rng);
+        assert!(lat > 9.0 && lat < 12.5, "{lat}");
+        // small control message ⇒ sub-ms
+        let lat2 = DelayModel::None.link_latency(1, 5, 0.0, 0, 48, &mut rng);
+        assert!(lat2 < 1.5, "{lat2}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Fault injection (§5.4): targeted crash strategies and CPU-contention
+//! ("dummy task") injection.
+//!
+//! * **Strong kills** crash the x nodes holding the top-x weights.
+//! * **Weak kills** crash the x nodes holding the bottom-x weights.
+//! * **Random kills** crash x nodes regardless of weight.
+//!
+//! The simulator consults [`KillSpec::victims`] at the configured round with
+//! the leader's *current* weight assignment — matching the paper, where
+//! e.g. "in f=20% under strong kills we crashed the nodes with the top 2
+//! weights at Round 20".
+
+use crate::net::rng::Rng;
+
+/// Crash strategy (§5.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillStrategy {
+    Strong,
+    Weak,
+    Random,
+}
+
+impl KillStrategy {
+    pub const ALL: [KillStrategy; 3] =
+        [KillStrategy::Strong, KillStrategy::Weak, KillStrategy::Random];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KillStrategy::Strong => "strong",
+            KillStrategy::Weak => "weak",
+            KillStrategy::Random => "random",
+        }
+    }
+}
+
+/// A scheduled crash event.
+#[derive(Clone, Debug)]
+pub struct KillSpec {
+    /// Replication round at which the crash fires (paper: round 20).
+    pub round: u64,
+    /// Number of nodes to crash.
+    pub count: usize,
+    pub strategy: KillStrategy,
+}
+
+impl KillSpec {
+    pub fn new(round: u64, count: usize, strategy: KillStrategy) -> Self {
+        KillSpec { round, count, strategy }
+    }
+
+    /// Choose victims given the current weights. The leader (`leader`) is
+    /// never killed — the paper's crash experiments keep the leader alive
+    /// and measure replication throughput through the fault.
+    pub fn victims(
+        &self,
+        weights: &[f64],
+        leader: usize,
+        alive: &[bool],
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut candidates: Vec<usize> = (0..weights.len())
+            .filter(|&i| i != leader && alive[i])
+            .collect();
+        match self.strategy {
+            KillStrategy::Strong => {
+                candidates.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+            }
+            KillStrategy::Weak => {
+                candidates.sort_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap());
+            }
+            KillStrategy::Random => rng.shuffle(&mut candidates),
+        }
+        candidates.truncate(self.count);
+        candidates
+    }
+}
+
+/// CPU-contention injection (§5.3 "Resource contention"): from
+/// `start_round`, a hash-computing dummy task pinned to every vCPU inflates
+/// each node's service time by `slowdown`.
+#[derive(Clone, Debug)]
+pub struct ContentionSpec {
+    pub start_round: u64,
+    /// Service-time multiplier while the dummy task runs (≥ 1).
+    pub slowdown: f64,
+}
+
+impl ContentionSpec {
+    pub fn new(start_round: u64, slowdown: f64) -> Self {
+        assert!(slowdown >= 1.0);
+        ContentionSpec { start_round, slowdown }
+    }
+
+    /// Effective service multiplier at the given round.
+    pub fn factor(&self, round: u64) -> f64 {
+        if round >= self.start_round {
+            self.slowdown
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights() -> Vec<f64> {
+        // node 0 = leader (highest), descending by id
+        vec![12.0, 10.0, 8.0, 6.0, 4.0, 3.0, 2.0]
+    }
+
+    #[test]
+    fn strong_kills_take_top_weights() {
+        let mut rng = Rng::new(1);
+        let alive = vec![true; 7];
+        let spec = KillSpec::new(20, 2, KillStrategy::Strong);
+        let v = spec.victims(&weights(), 0, &alive, &mut rng);
+        assert_eq!(v, vec![1, 2]); // top non-leader weights
+    }
+
+    #[test]
+    fn weak_kills_take_bottom_weights() {
+        let mut rng = Rng::new(2);
+        let alive = vec![true; 7];
+        let spec = KillSpec::new(20, 2, KillStrategy::Weak);
+        let v = spec.victims(&weights(), 0, &alive, &mut rng);
+        assert_eq!(v, vec![6, 5]);
+    }
+
+    #[test]
+    fn random_kills_respect_count_and_leader() {
+        let mut rng = Rng::new(3);
+        let alive = vec![true; 7];
+        let spec = KillSpec::new(20, 3, KillStrategy::Random);
+        let v = spec.victims(&weights(), 0, &alive, &mut rng);
+        assert_eq!(v.len(), 3);
+        assert!(!v.contains(&0));
+        let mut sorted = v.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3);
+    }
+
+    #[test]
+    fn dead_nodes_not_rekilled() {
+        let mut rng = Rng::new(4);
+        let mut alive = vec![true; 7];
+        alive[1] = false;
+        let spec = KillSpec::new(20, 2, KillStrategy::Strong);
+        let v = spec.victims(&weights(), 0, &alive, &mut rng);
+        assert_eq!(v, vec![2, 3]);
+    }
+
+    #[test]
+    fn contention_applies_from_round() {
+        let c = ContentionSpec::new(20, 2.5);
+        assert_eq!(c.factor(19), 1.0);
+        assert_eq!(c.factor(20), 2.5);
+        assert_eq!(c.factor(99), 2.5);
+    }
+}

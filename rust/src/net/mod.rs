@@ -1,0 +1,13 @@
+//! Network + heterogeneity substrates: seeded RNG, the paper's delay
+//! models D1–D4 (§5.3 / Fig. 13), zone topology Z1–Z5 (§5), and fault
+//! injection (strong/weak/random kills + CPU contention, §5.4).
+
+pub mod delay;
+pub mod fault;
+pub mod rng;
+pub mod topology;
+
+pub use delay::DelayModel;
+pub use fault::{ContentionSpec, KillSpec, KillStrategy};
+pub use rng::{Rng, Zipfian};
+pub use topology::{Zone, ZoneAlloc};

@@ -1,0 +1,191 @@
+//! Cluster heterogeneity model: the paper's five VM zones Z1–Z5 (§5) and
+//! their per-scale allocations.
+//!
+//! Heterogeneity across zones is "#x vCPU, #y GB RAM, #z GB disk"; what the
+//! consensus layer observes is *response-time dispersion*, which we model as
+//! a per-zone service-speed factor relative to Z3 (the homogeneous-cluster
+//! configuration): CPU-bound apply work scales ≈ (vCPUs/4)^0.8 with
+//! diminishing returns, floored/capped to keep the spread realistic for the
+//! paper's 1–16 vCPU range.
+
+/// One of the paper's five VM configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Zone {
+    Z1,
+    Z2,
+    Z3,
+    Z4,
+    Z5,
+}
+
+impl Zone {
+    pub const ALL: [Zone; 5] = [Zone::Z1, Zone::Z2, Zone::Z3, Zone::Z4, Zone::Z5];
+
+    /// (vCPUs, RAM GiB, disk GiB) per the §5 zone table.
+    pub fn config(self) -> (u32, f64, u32) {
+        match self {
+            Zone::Z1 => (1, 7.5, 56),
+            Zone::Z2 => (2, 15.0, 92),
+            Zone::Z3 => (4, 15.0, 164),
+            Zone::Z4 => (8, 30.0, 308),
+            Zone::Z5 => (16, 60.0, 596),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Zone::Z1 => "Z1",
+            Zone::Z2 => "Z2",
+            Zone::Z3 => "Z3",
+            Zone::Z4 => "Z4",
+            Zone::Z5 => "Z5",
+        }
+    }
+
+    /// Service-speed factor relative to Z3 (higher = faster).
+    pub fn speed(self) -> f64 {
+        let (vcpus, _, _) = self.config();
+        let raw = (vcpus as f64 / 4.0).powf(0.8);
+        raw.clamp(0.30, 3.1)
+    }
+}
+
+/// Zone assignment for a cluster of n nodes.
+#[derive(Clone, Debug)]
+pub struct ZoneAlloc {
+    zones: Vec<Zone>,
+    heterogeneous: bool,
+}
+
+impl ZoneAlloc {
+    /// The paper's per-scale heterogeneous allocations (§5 table); evenly
+    /// distributed for scales outside the table. Node 0 (the initial
+    /// leader) is pinned to Z3 so leader speed is identical across the
+    /// hom/het comparison.
+    pub fn heterogeneous(n: usize) -> Self {
+        let counts: [usize; 5] = match n {
+            3 => [1, 0, 1, 0, 1],
+            5 => [1, 1, 1, 1, 1],
+            7 => [2, 1, 1, 1, 2],
+            11 => [2, 2, 2, 2, 3],
+            20 => [4, 4, 4, 4, 4],
+            50 => [10, 10, 10, 10, 10],
+            100 => [20, 20, 20, 20, 20],
+            _ => {
+                let base = n / 5;
+                let mut c = [base; 5];
+                for z in 0..n % 5 {
+                    c[z] += 1;
+                }
+                c
+            }
+        };
+        // interleave zones (Z1, Z2, …) so heterogeneity is spread across
+        // node ids, then rotate a Z3 to the front for node 0
+        let mut pool: Vec<Zone> = Vec::with_capacity(n);
+        let mut remaining = counts;
+        while pool.len() < n {
+            for (zi, z) in Zone::ALL.iter().enumerate() {
+                if remaining[zi] > 0 {
+                    remaining[zi] -= 1;
+                    pool.push(*z);
+                }
+            }
+        }
+        if let Some(pos) = pool.iter().position(|&z| z == Zone::Z3) {
+            pool.swap(0, pos);
+        }
+        ZoneAlloc { zones: pool, heterogeneous: true }
+    }
+
+    /// Homogeneous cluster: all VMs are Z3 (§5).
+    pub fn homogeneous(n: usize) -> Self {
+        ZoneAlloc { zones: vec![Zone::Z3; n], heterogeneous: false }
+    }
+
+    pub fn n(&self) -> usize {
+        self.zones.len()
+    }
+    pub fn zone(&self, node: usize) -> Zone {
+        self.zones[node]
+    }
+    pub fn speed(&self, node: usize) -> f64 {
+        self.zones[node].speed()
+    }
+    pub fn is_heterogeneous(&self) -> bool {
+        self.heterogeneous
+    }
+    pub fn zones(&self) -> &[Zone] {
+        &self.zones
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_configs_match_paper_table() {
+        assert_eq!(Zone::Z1.config(), (1, 7.5, 56));
+        assert_eq!(Zone::Z2.config(), (2, 15.0, 92));
+        assert_eq!(Zone::Z3.config(), (4, 15.0, 164));
+        assert_eq!(Zone::Z4.config(), (8, 30.0, 308));
+        assert_eq!(Zone::Z5.config(), (16, 60.0, 596));
+    }
+
+    #[test]
+    fn speed_monotone_in_vcpus() {
+        let speeds: Vec<f64> = Zone::ALL.iter().map(|z| z.speed()).collect();
+        for w in speeds.windows(2) {
+            assert!(w[0] < w[1], "{speeds:?}");
+        }
+        assert!((Zone::Z3.speed() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_scale_allocations() {
+        for (n, expect) in [
+            (3usize, [1usize, 0, 1, 0, 1]),
+            (5, [1, 1, 1, 1, 1]),
+            (7, [2, 1, 1, 1, 2]),
+            (11, [2, 2, 2, 2, 3]),
+            (20, [4, 4, 4, 4, 4]),
+            (50, [10, 10, 10, 10, 10]),
+            (100, [20, 20, 20, 20, 20]),
+        ] {
+            let alloc = ZoneAlloc::heterogeneous(n);
+            assert_eq!(alloc.n(), n);
+            let mut counts = [0usize; 5];
+            for z in alloc.zones() {
+                counts[Zone::ALL.iter().position(|a| a == z).unwrap()] += 1;
+            }
+            assert_eq!(counts, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn leader_is_z3_in_both_settings() {
+        for n in [5, 7, 11, 20, 50, 100] {
+            assert_eq!(ZoneAlloc::heterogeneous(n).zone(0), Zone::Z3, "n={n}");
+            assert_eq!(ZoneAlloc::homogeneous(n).zone(0), Zone::Z3);
+        }
+    }
+
+    #[test]
+    fn homogeneous_is_all_z3() {
+        let a = ZoneAlloc::homogeneous(20);
+        assert!(a.zones().iter().all(|&z| z == Zone::Z3));
+        assert!(!a.is_heterogeneous());
+    }
+
+    #[test]
+    fn odd_scales_distribute_evenly() {
+        let a = ZoneAlloc::heterogeneous(13);
+        assert_eq!(a.n(), 13);
+        let mut counts = [0usize; 5];
+        for z in a.zones() {
+            counts[Zone::ALL.iter().position(|x| x == z).unwrap()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2 || c == 3), "{counts:?}");
+    }
+}

@@ -1,0 +1,858 @@
+//! The simulated cluster: drives n sans-io consensus nodes (or the HQC
+//! baseline) over the deterministic event queue, reproducing the paper's
+//! benchmark-round pipeline (Fig. 7): the leader batches a workload round,
+//! ships it via AppendEntries, followers *execute the transmitted workload*
+//! and reply, and the round commits at the quorum rule's threshold.
+//!
+//! Virtual-time calibration (DESIGN.md §6): follower response time =
+//! link delay (DelayModel) + RPC processing + batch apply cost / zone speed
+//! (× contention). Batch apply cost comes from the same cost model as the
+//! AOT kernels (`storage::doc` / `storage::rel`).
+
+use std::sync::Arc;
+
+use crate::consensus::hqc::{HqcMsg, HqcNode, HqcOutput, HqcTopology};
+use crate::consensus::message::{Message, NodeId, Payload};
+use crate::consensus::node::{Input, Mode, Node, Output, Role};
+use crate::net::delay::DelayModel;
+use crate::net::fault::{ContentionSpec, KillSpec};
+use crate::net::rng::Rng;
+use crate::net::topology::ZoneAlloc;
+use crate::sim::event::EventQueue;
+use crate::storage::{DocStore, RelStore};
+use crate::workload::{TpccGen, Workload, YcsbGen};
+
+/// Which consensus protocol the cluster runs.
+#[derive(Clone, Debug)]
+pub enum Protocol {
+    Raft,
+    /// Cabinet with failure threshold t.
+    Cabinet { t: usize },
+    /// HQC baseline with the given group sizes (replication-only).
+    Hqc { sizes: Vec<usize> },
+}
+
+impl Protocol {
+    pub fn label(&self) -> String {
+        match self {
+            Protocol::Raft => "raft".into(),
+            Protocol::Cabinet { t } => format!("cab-t{t}"),
+            Protocol::Hqc { sizes } => format!(
+                "hqc-{}",
+                sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("-")
+            ),
+        }
+    }
+}
+
+/// Which workload the rounds carry.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    Ycsb { workload: Workload, batch: usize, records: u64 },
+    Tpcc { batch: usize, warehouses: u32 },
+}
+
+impl WorkloadSpec {
+    pub fn ycsb_a5k() -> Self {
+        WorkloadSpec::Ycsb { workload: Workload::A, batch: 5000, records: 100_000 }
+    }
+    pub fn ycsb(workload: Workload, batch: usize) -> Self {
+        WorkloadSpec::Ycsb { workload, batch, records: 100_000 }
+    }
+    pub fn tpcc2k() -> Self {
+        WorkloadSpec::Tpcc { batch: 2000, warehouses: 10 }
+    }
+}
+
+/// Replica digest tracking intensity (full tracking is O(nodes × ops)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DigestMode {
+    /// No state-machine application (pure consensus timing) — benches.
+    Off,
+    /// Two replicas tracked and compared — cheap convergence check.
+    Sample,
+    /// Every replica tracked — integration tests.
+    All,
+}
+
+/// A scheduled failure-threshold reconfiguration (Fig. 12).
+#[derive(Clone, Copy, Debug)]
+pub struct ReconfigSpec {
+    pub round: u64,
+    pub new_t: usize,
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub protocol: Protocol,
+    pub zones: ZoneAlloc,
+    pub delay: DelayModel,
+    pub workload: WorkloadSpec,
+    pub rounds: u64,
+    pub seed: u64,
+    pub kills: Vec<KillSpec>,
+    pub kill_leader_at_round: Option<u64>,
+    pub contention: Option<ContentionSpec>,
+    pub reconfigs: Vec<ReconfigSpec>,
+    pub digest_mode: DigestMode,
+    /// Election timeout range (ms) — randomized per arm.
+    pub election_timeout_ms: (f64, f64),
+    /// Leader heartbeat interval (ms).
+    pub heartbeat_ms: f64,
+    /// Fixed per-RPC processing cost (ms) at Z3 speed.
+    pub rpc_proc_ms: f64,
+    /// P2 ablation: freeze the initial weight assignment (no re-dealing).
+    pub static_weights: bool,
+}
+
+impl SimConfig {
+    /// Paper-style defaults for a YCSB-A run.
+    pub fn new(protocol: Protocol, n: usize, heterogeneous: bool) -> Self {
+        SimConfig {
+            protocol,
+            zones: if heterogeneous {
+                ZoneAlloc::heterogeneous(n)
+            } else {
+                ZoneAlloc::homogeneous(n)
+            },
+            delay: DelayModel::None,
+            workload: WorkloadSpec::ycsb_a5k(),
+            rounds: 20,
+            seed: 42,
+            kills: Vec::new(),
+            kill_leader_at_round: None,
+            contention: None,
+            reconfigs: Vec::new(),
+            digest_mode: DigestMode::Off,
+            election_timeout_ms: (2500.0, 4000.0),
+            heartbeat_ms: 400.0,
+            rpc_proc_ms: 0.15,
+            static_weights: false,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.zones.n()
+    }
+}
+
+/// Per-round measurement (one line of the paper's real-time series).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStat {
+    pub round: u64,
+    /// Virtual time the round was proposed (ms).
+    pub start_ms: f64,
+    /// Commit latency for the round (ms).
+    pub latency_ms: f64,
+    /// Throughput implied by this round (ops/s).
+    pub tput_ops_s: f64,
+    /// Live ops in the batch.
+    pub ops: usize,
+    /// Repliers counted into the quorum when it closed.
+    pub repliers: usize,
+}
+
+/// Aggregated run result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub label: String,
+    pub rounds: Vec<RoundStat>,
+    /// Overall throughput: total ops / total virtual time (ops/s).
+    pub tput_ops_s: f64,
+    /// Mean / p50 / p99 round-commit latency (ms).
+    pub mean_latency_ms: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Replica digest convergence (None when DigestMode::Off).
+    pub digests_match: Option<bool>,
+    /// Leader elections observed (≥ 1: the bootstrap election).
+    pub elections: u64,
+}
+
+impl SimResult {
+    fn from_rounds(label: String, rounds: Vec<RoundStat>, digests: Option<bool>, elections: u64) -> Self {
+        let total_ops: usize = rounds.iter().map(|r| r.ops).sum();
+        let total_ms: f64 = rounds.iter().map(|r| r.latency_ms).sum();
+        let mut lats: Vec<f64> = rounds.iter().map(|r| r.latency_ms).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lats.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
+            lats[idx]
+        };
+        SimResult {
+            label,
+            tput_ops_s: if total_ms > 0.0 { total_ops as f64 / (total_ms / 1000.0) } else { 0.0 },
+            mean_latency_ms: if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 },
+            p50_latency_ms: pct(0.50),
+            p99_latency_ms: pct(0.99),
+            rounds,
+            digests_match: digests,
+            elections,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raft / Cabinet simulation
+// ---------------------------------------------------------------------------
+
+enum Ev {
+    Deliver { to: NodeId, from: NodeId, msg: Message },
+    ElectionTimer { node: NodeId, generation: u64 },
+    HeartbeatTimer { node: NodeId, generation: u64 },
+    /// Harness: try to propose the next round at the current leader.
+    ProposeNext,
+}
+
+enum Batch {
+    Ycsb(Arc<crate::workload::YcsbBatch>),
+    Tpcc(Arc<crate::workload::TpccBatch>),
+}
+
+struct WorkloadDriver {
+    ycsb: Option<YcsbGen>,
+    tpcc: Option<TpccGen>,
+    batch_size: usize,
+    warehouses: u32,
+}
+
+impl WorkloadDriver {
+    fn new(spec: &WorkloadSpec, seed: u64) -> Self {
+        match spec {
+            WorkloadSpec::Ycsb { workload, batch, records } => WorkloadDriver {
+                ycsb: Some(YcsbGen::new(*workload, *records, seed)),
+                tpcc: None,
+                batch_size: *batch,
+                warehouses: 0,
+            },
+            WorkloadSpec::Tpcc { batch, warehouses } => WorkloadDriver {
+                ycsb: None,
+                tpcc: Some(TpccGen::new(*warehouses, seed)),
+                batch_size: *batch,
+                warehouses: *warehouses,
+            },
+        }
+    }
+
+    /// Generate the next round's batch; returns (payload, base apply cost in
+    /// ms at unit speed, live op count).
+    fn next_batch(&mut self) -> (Payload, Batch, f64, usize) {
+        if let Some(gen) = self.ycsb.as_mut() {
+            let b = Arc::new(gen.batch(self.batch_size));
+            let cost = DocStore::estimate_cost_ms(&b);
+            let ops = b.live_ops();
+            (Payload::Ycsb(b.clone()), Batch::Ycsb(b), cost, ops)
+        } else {
+            let gen = self.tpcc.as_mut().unwrap();
+            let b = Arc::new(gen.batch(self.batch_size));
+            let cost = RelStore::estimate_cost_ms(&b, self.warehouses as usize);
+            let ops = b.live_txns();
+            (Payload::Tpcc(b.clone()), Batch::Tpcc(b), cost, ops)
+        }
+    }
+}
+
+/// Run one experiment; deterministic in (config, seed).
+pub fn run(config: &SimConfig) -> SimResult {
+    match &config.protocol {
+        Protocol::Hqc { sizes } => run_hqc(config, sizes.clone()),
+        Protocol::Raft | Protocol::Cabinet { .. } => run_quorum(config),
+    }
+}
+
+#[allow(clippy::too_many_lines)]
+fn run_quorum(config: &SimConfig) -> SimResult {
+    let n = config.n();
+    let mode = match &config.protocol {
+        Protocol::Raft => Mode::Raft,
+        Protocol::Cabinet { t } => Mode::cabinet(n, *t),
+        Protocol::Hqc { .. } => unreachable!(),
+    };
+    let mut root_rng = Rng::new(config.seed);
+    let mut net_rng = root_rng.fork(1);
+    let mut timer_rng = root_rng.fork(2);
+    let mut kill_rng = root_rng.fork(3);
+    let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
+
+    let mut nodes: Vec<Node> = (0..n)
+        .map(|i| {
+            let mut node = Node::new(i, n, mode.clone());
+            node.set_static_weights(config.static_weights);
+            node
+        })
+        .collect();
+    let mut alive = vec![true; n];
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    // timer generations (stale-timer cancellation)
+    let mut el_gen = vec![0u64; n];
+    let mut hb_gen = vec![0u64; n];
+
+    // digest-tracked replica stores
+    let tracked: Vec<usize> = match config.digest_mode {
+        DigestMode::Off => vec![],
+        DigestMode::Sample => vec![0, n - 1],
+        DigestMode::All => (0..n).collect(),
+    };
+    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
+    let mut rel_stores: Vec<RelStore> =
+        tracked.iter().map(|_| RelStore::new(driver.warehouses.max(1) as usize)).collect();
+    let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
+
+    // round bookkeeping
+    let mut round: u64 = 0; // completed rounds
+    let mut stats: Vec<RoundStat> = Vec::with_capacity(config.rounds as usize);
+    let mut current_leader: Option<NodeId> = None;
+    let mut elections: u64 = 0;
+    let mut pending: Option<(u64, f64, usize, f64, Batch)> = None; // (round, start, ops, leader_apply_done, batch)
+    let mut pending_entry_index: u64 = 0;
+    let mut reconfig_queue: Vec<ReconfigSpec> = config.reconfigs.clone();
+    reconfig_queue.sort_by_key(|r| r.round);
+    let mut kills = config.kills.clone();
+    kills.sort_by_key(|k| k.round);
+    let mut kill_leader_at = config.kill_leader_at_round; // one-shot
+
+    // bootstrap: node 0 starts the first election immediately; everyone else
+    // arms a randomized election timer
+    for node in 0..n {
+        let delay = if node == 0 {
+            0.0
+        } else {
+            timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1)
+        };
+        el_gen[node] += 1;
+        q.push_after(delay, Ev::ElectionTimer { node, generation: el_gen[node] });
+    }
+    q.push_after(1.0, Ev::ProposeNext);
+
+    // batch cost of the in-flight round, for follower service times
+    let mut inflight_cost_ms: f64 = 0.0;
+
+    // hard stop: virtual-time budget per run keeps pathological configs finite
+    let max_virtual_ms = 1e9;
+
+    while round < config.rounds {
+        let Some((now, ev)) = q.pop() else { break };
+        if now > max_virtual_ms {
+            break;
+        }
+        match ev {
+            Ev::ElectionTimer { node, generation } => {
+                if !alive[node] || generation != el_gen[node] {
+                    continue;
+                }
+                let outs = nodes[node].step(Input::ElectionTimeout);
+                handle_outputs(
+                    node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
+                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, pending_entry_index, &mut stats, &mut round,
+                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::HeartbeatTimer { node, generation } => {
+                if !alive[node] || generation != hb_gen[node] {
+                    continue;
+                }
+                let outs = nodes[node].step(Input::HeartbeatTimeout);
+                handle_outputs(
+                    node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
+                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, pending_entry_index, &mut stats, &mut round,
+                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::Deliver { to, from, msg } => {
+                if !alive[to] {
+                    continue;
+                }
+                // follower service time: RPC processing + batch apply,
+                // scaled by zone speed and contention
+                let service = service_ms(config, to, &msg, round, inflight_cost_ms);
+                if service > 0.0 {
+                    // re-deliver after the service time so the reply
+                    // reflects the node's processing speed
+                    // (modeled by delaying the node's outputs)
+                }
+                let outs = nodes[to].step(Input::Receive(from, msg));
+                // outputs (replies) leave after the service time
+                handle_outputs_delayed(
+                    to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, pending_entry_index, &mut stats, &mut round,
+                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::ProposeNext => {
+                if pending.is_some() {
+                    continue; // a round is already in flight
+                }
+                let Some(leader) = current_leader.filter(|&l| alive[l]) else {
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                };
+                if nodes[leader].role() != Role::Leader {
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                }
+                let next_round = round + 1;
+
+                // scheduled kills fire at the start of their round
+                while let Some(k) = kills.first() {
+                    if k.round != next_round {
+                        break;
+                    }
+                    let weights = nodes[leader].weight_assignment().to_vec();
+                    for v in k.victims(&weights, leader, &alive, &mut kill_rng) {
+                        alive[v] = false;
+                    }
+                    kills.remove(0);
+                }
+                if kill_leader_at == Some(next_round) {
+                    kill_leader_at = None; // fire exactly once
+                    alive[leader] = false;
+                    current_leader = None;
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                }
+                // scheduled reconfiguration (not counted as a round)
+                if let Some(rc) = reconfig_queue.first().copied() {
+                    if rc.round == next_round {
+                        reconfig_queue.remove(0);
+                        let outs =
+                            nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
+                        handle_outputs(
+                            leader, outs, config, &mut q, &mut net_rng, &mut timer_rng,
+                            &alive, &mut el_gen, &mut hb_gen, &mut current_leader,
+                            &mut elections, &mut pending, pending_entry_index, &mut stats,
+                            &mut round, inflight_cost_ms, &tracked, &mut doc_stores,
+                            &mut rel_stores, is_tpcc,
+                        );
+                        q.push_after(1.0, Ev::ProposeNext);
+                        continue;
+                    }
+                }
+
+                let (payload, batch, cost_ms, ops) = driver.next_batch();
+                inflight_cost_ms = cost_ms;
+                // Fig. 7: the leader batches + coordinates; *followers*
+                // execute the workload. Leader-side work is the batching /
+                // RPC-issue overhead only.
+                let leader_speed = effective_speed(config, leader, next_round);
+                let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
+                let outs = nodes[leader].step(Input::Propose(payload));
+                pending = Some((next_round, now, ops, leader_apply_done, batch));
+                pending_entry_index = nodes[leader].log().last_index();
+                handle_outputs(
+                    leader, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
+                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, pending_entry_index, &mut stats, &mut round,
+                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                );
+            }
+        }
+    }
+
+    // convergence check across tracked replicas
+    let digests = if tracked.is_empty() {
+        None
+    } else if is_tpcc {
+        let d0 = rel_stores[0].stream_digest();
+        Some(rel_stores.iter().all(|s| s.stream_digest() == d0))
+    } else {
+        let d0 = doc_stores[0].state_digest();
+        Some(doc_stores.iter().all(|s| s.state_digest() == d0))
+    };
+
+    SimResult::from_rounds(config.protocol.label(), stats, digests, elections)
+}
+
+/// Service time charged on a node for processing a message (ms).
+fn service_ms(config: &SimConfig, node: NodeId, msg: &Message, round: u64, batch_cost_ms: f64) -> f64 {
+    match msg {
+        Message::AppendEntries { entries, .. } if !entries.is_empty() => {
+            let speed = effective_speed(config, node, round);
+            let has_batch = entries
+                .iter()
+                .any(|e| matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_)));
+            let apply = if has_batch { batch_cost_ms } else { 0.0 };
+            (config.rpc_proc_ms + apply) / speed
+        }
+        _ => config.rpc_proc_ms / effective_speed(config, node, round),
+    }
+}
+
+/// Zone speed × contention factor at the given round.
+fn effective_speed(config: &SimConfig, node: NodeId, round: u64) -> f64 {
+    let mut speed = config.zones.speed(node);
+    if let Some(c) = &config.contention {
+        speed /= c.factor(round);
+    }
+    speed
+}
+
+/// Route one node's outputs into the event queue (no extra send delay).
+#[allow(clippy::too_many_arguments)]
+fn handle_outputs(
+    node: NodeId,
+    outs: Vec<Output>,
+    config: &SimConfig,
+    q: &mut EventQueue<Ev>,
+    net_rng: &mut Rng,
+    timer_rng: &mut Rng,
+    alive: &[bool],
+    el_gen: &mut [u64],
+    hb_gen: &mut [u64],
+    current_leader: &mut Option<NodeId>,
+    elections: &mut u64,
+    pending: &mut Option<(u64, f64, usize, f64, Batch)>,
+    pending_entry_index: u64,
+    stats: &mut Vec<RoundStat>,
+    round: &mut u64,
+    inflight_cost_ms: f64,
+    tracked: &[usize],
+    doc_stores: &mut [DocStore],
+    rel_stores: &mut [RelStore],
+    is_tpcc: bool,
+) {
+    handle_outputs_delayed(
+        node, outs, 0.0, config, q, net_rng, timer_rng, alive, el_gen, hb_gen,
+        current_leader, elections, pending, pending_entry_index, stats, round,
+        inflight_cost_ms, tracked, doc_stores, rel_stores, is_tpcc,
+    )
+}
+
+/// Route outputs; sends leave `extra_delay` ms after now (service time).
+#[allow(clippy::too_many_arguments)]
+fn handle_outputs_delayed(
+    node: NodeId,
+    outs: Vec<Output>,
+    extra_delay: f64,
+    config: &SimConfig,
+    q: &mut EventQueue<Ev>,
+    net_rng: &mut Rng,
+    timer_rng: &mut Rng,
+    alive: &[bool],
+    el_gen: &mut [u64],
+    hb_gen: &mut [u64],
+    current_leader: &mut Option<NodeId>,
+    elections: &mut u64,
+    pending: &mut Option<(u64, f64, usize, f64, Batch)>,
+    pending_entry_index: u64,
+    stats: &mut Vec<RoundStat>,
+    round: &mut u64,
+    inflight_cost_ms: f64,
+    tracked: &[usize],
+    doc_stores: &mut [DocStore],
+    rel_stores: &mut [RelStore],
+    is_tpcc: bool,
+) {
+    let n = config.n();
+    let now = q.now();
+    for o in outs {
+        match o {
+            Output::Send(to, msg) => {
+                if !alive[to] {
+                    continue;
+                }
+                // link delay is sampled on the non-leader endpoint (the
+                // paper's netem delays are installed on follower nodes)
+                let shaped_end = if node == current_leader.unwrap_or(usize::MAX) { to } else { node };
+                let lat = config.delay.link_latency(
+                    shaped_end,
+                    n,
+                    now,
+                    *round,
+                    msg.wire_size(),
+                    net_rng,
+                );
+                q.push_after(extra_delay + lat, Ev::Deliver { to, from: node, msg });
+            }
+            Output::ResetElectionTimer => {
+                el_gen[node] += 1;
+                let d = timer_rng
+                    .range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
+                q.push_after(d, Ev::ElectionTimer { node, generation: el_gen[node] });
+            }
+            Output::StartHeartbeat => {
+                hb_gen[node] += 1;
+                q.push_after(
+                    config.heartbeat_ms,
+                    Ev::HeartbeatTimer { node, generation: hb_gen[node] },
+                );
+            }
+            Output::StopHeartbeat => {
+                hb_gen[node] += 1;
+            }
+            Output::BecameLeader => {
+                *current_leader = Some(node);
+                *elections += 1;
+            }
+            Output::SteppedDown => {
+                if *current_leader == Some(node) {
+                    *current_leader = None;
+                }
+            }
+            Output::RoundCommitted { index, repliers, .. } => {
+                // only the harness round (pending batch) counts
+                if let Some((rnd, start, ops, leader_apply_done, _)) = pending.as_ref() {
+                    if index >= pending_entry_index && Some(node) == *current_leader {
+                        let commit_time = now.max(*leader_apply_done);
+                        let latency = commit_time - start;
+                        stats.push(RoundStat {
+                            round: *rnd,
+                            start_ms: *start,
+                            latency_ms: latency,
+                            tput_ops_s: *ops as f64 / (latency / 1000.0),
+                            ops: *ops,
+                            repliers,
+                        });
+                        *round = *rnd;
+                        // apply to tracked replicas (replica convergence)
+                        if let Some((_, _, _, _, batch)) = pending.take() {
+                            apply_tracked(&batch, tracked, doc_stores, rel_stores, is_tpcc);
+                        }
+                        q.push_after(0.2, Ev::ProposeNext); // client turnaround
+                    }
+                }
+            }
+            Output::Commit(_) | Output::ProposalRejected(_) => {}
+        }
+    }
+    let _ = inflight_cost_ms;
+}
+
+fn apply_tracked(
+    batch: &Batch,
+    tracked: &[usize],
+    doc_stores: &mut [DocStore],
+    rel_stores: &mut [RelStore],
+    is_tpcc: bool,
+) {
+    if tracked.is_empty() {
+        return;
+    }
+    match batch {
+        Batch::Ycsb(b) => {
+            for store in doc_stores.iter_mut() {
+                store.apply(b);
+            }
+        }
+        Batch::Tpcc(b) => {
+            if is_tpcc {
+                for store in rel_stores.iter_mut() {
+                    store.apply(b);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HQC simulation (replication-only baseline, Fig. 17)
+// ---------------------------------------------------------------------------
+
+enum HqcEv {
+    Deliver { to: NodeId, from: NodeId, msg: HqcMsg },
+}
+
+fn run_hqc(config: &SimConfig, sizes: Vec<usize>) -> SimResult {
+    let n = config.n();
+    let topo = HqcTopology::split(n, &sizes);
+    let mut nodes: Vec<HqcNode> = (0..n).map(|i| HqcNode::new(i, topo.clone())).collect();
+    let mut root_rng = Rng::new(config.seed);
+    let mut net_rng = root_rng.fork(1);
+    let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
+    let mut q: EventQueue<HqcEv> = EventQueue::new();
+    let mut stats = Vec::new();
+
+    for round in 1..=config.rounds {
+        let (_payload, _batch, cost_ms, ops) = driver.next_batch();
+        let start = q.now();
+        let outs = nodes[topo.root].propose(round);
+        let mut committed_at: Option<f64> = None;
+        let root = topo.root;
+        let inject = |src: NodeId, outs: Vec<HqcOutput>, q: &mut EventQueue<HqcEv>, net_rng: &mut Rng, now: f64| {
+            let mut done = None;
+            for o in outs {
+                match o {
+                    HqcOutput::Send(to, msg) => {
+                        let shaped = if src == root { to } else { src };
+                        // every HQC hop carries the batch (root→leaders and
+                        // leaders→members both ship workload data)
+                        let wire = 12 * driver.batch_size + 64;
+                        let lat = config.delay.link_latency(shaped, n, now, round, wire, net_rng);
+                        q.push_after(lat, HqcEv::Deliver { to, from: src, msg });
+                    }
+                    HqcOutput::Committed { .. } => done = Some(now),
+                }
+            }
+            done
+        };
+        let now0 = q.now();
+        if let Some(t) = inject(topo.root, outs, &mut q, &mut net_rng, now0) {
+            committed_at = Some(t);
+        }
+        while committed_at.is_none() {
+            let Some((now, HqcEv::Deliver { to, from, msg })) = q.pop() else { break };
+            // members execute the batch before acking
+            let service = match msg {
+                HqcMsg::GroupAppend { .. } | HqcMsg::Propose { .. } => {
+                    let speed = effective_speed(config, to, round);
+                    (config.rpc_proc_ms + cost_ms) / speed
+                }
+                _ => config.rpc_proc_ms / effective_speed(config, to, round),
+            };
+            let outs = nodes[to].receive(from, msg);
+            // outputs leave after the service time
+            let depart = now + service;
+            let mut q2: Vec<(NodeId, HqcOutput)> = outs.into_iter().map(|o| (to, o)).collect();
+            for (src, o) in q2.drain(..) {
+                match o {
+                    HqcOutput::Send(dst, m) => {
+                        let shaped = if src == root { dst } else { src };
+                        let wire = 12 * driver.batch_size + 64;
+                        let lat =
+                            config.delay.link_latency(shaped, n, depart, round, wire, &mut net_rng);
+                        q.push_at(depart + lat, HqcEv::Deliver { to: dst, from: src, msg: m });
+                    }
+                    HqcOutput::Committed { .. } => committed_at = Some(depart),
+                }
+            }
+        }
+        let end = committed_at.unwrap_or(q.now());
+        // the root coordinates only (Fig. 7) — batching overhead
+        let root_done = start + config.rpc_proc_ms / effective_speed(config, root, round);
+        let latency = (end.max(root_done) - start).max(0.01);
+        stats.push(RoundStat {
+            round,
+            start_ms: start,
+            latency_ms: latency,
+            tput_ops_s: ops as f64 / (latency / 1000.0),
+            ops,
+            repliers: 0,
+        });
+    }
+
+    SimResult::from_rounds(config.protocol.label(), stats, None, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(protocol: Protocol, n: usize, het: bool, rounds: u64) -> SimResult {
+        let mut c = SimConfig::new(protocol, n, het);
+        c.rounds = rounds;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        run(&c)
+    }
+
+    #[test]
+    fn raft_completes_rounds() {
+        let r = quick(Protocol::Raft, 5, false, 10);
+        assert_eq!(r.rounds.len(), 10);
+        assert!(r.tput_ops_s > 0.0);
+        assert_eq!(r.elections, 1);
+    }
+
+    #[test]
+    fn cabinet_completes_rounds() {
+        let r = quick(Protocol::Cabinet { t: 2 }, 7, true, 10);
+        assert_eq!(r.rounds.len(), 10);
+        assert!(r.tput_ops_s > 0.0);
+    }
+
+    #[test]
+    fn hqc_completes_rounds() {
+        let mut c = SimConfig::new(Protocol::Hqc { sizes: vec![3, 3, 5] }, 11, false, );
+        c.rounds = 5;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = quick(Protocol::Cabinet { t: 1 }, 5, true, 5);
+        let b = quick(Protocol::Cabinet { t: 1 }, 5, true, 5);
+        let la: Vec<f64> = a.rounds.iter().map(|r| r.latency_ms).collect();
+        let lb: Vec<f64> = b.rounds.iter().map(|r| r.latency_ms).collect();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn cabinet_beats_raft_heterogeneous() {
+        let raft = quick(Protocol::Raft, 20, true, 10);
+        let cab = quick(Protocol::Cabinet { t: 2 }, 20, true, 10);
+        assert!(
+            cab.tput_ops_s > raft.tput_ops_s,
+            "cab={} raft={}",
+            cab.tput_ops_s,
+            raft.tput_ops_s
+        );
+    }
+
+    #[test]
+    fn replica_digests_converge() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true, );
+        c.rounds = 8;
+        c.digest_mode = DigestMode::All;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.digests_match, Some(true));
+    }
+
+    #[test]
+    fn weak_kills_do_not_hurt() {
+        use crate::net::fault::{KillSpec, KillStrategy};
+        let mut base = SimConfig::new(Protocol::Cabinet { t: 2 }, 11, true, );
+        base.rounds = 12;
+        base.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        let clean = run(&base);
+        let mut killed = base.clone();
+        killed.kills = vec![KillSpec::new(5, 2, KillStrategy::Weak)];
+        let kr = run(&killed);
+        assert_eq!(kr.rounds.len(), 12);
+        // weak kills leave throughput within noise of the clean run
+        assert!(kr.tput_ops_s > 0.8 * clean.tput_ops_s);
+    }
+
+    #[test]
+    fn survives_leader_kill() {
+        let mut c = SimConfig::new(Protocol::Raft, 5, false, );
+        c.rounds = 8;
+        c.kill_leader_at_round = Some(4);
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 8, "rounds must continue after failover");
+        assert!(r.elections >= 2, "a second election must have happened");
+    }
+
+    #[test]
+    fn tpcc_rounds_work() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true, );
+        c.rounds = 5;
+        c.workload = WorkloadSpec::Tpcc { batch: 200, warehouses: 10 };
+        c.digest_mode = DigestMode::Sample;
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 5);
+        assert_eq!(r.digests_match, Some(true));
+    }
+
+    #[test]
+    fn reconfig_changes_throughput() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 5 }, 11, true, );
+        c.rounds = 20;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        c.reconfigs = vec![ReconfigSpec { round: 11, new_t: 1 }];
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 20);
+        let first: f64 = r.rounds[2..10].iter().map(|x| x.latency_ms).sum::<f64>() / 8.0;
+        let second: f64 = r.rounds[12..20].iter().map(|x| x.latency_ms).sum::<f64>() / 8.0;
+        assert!(second < first, "t=1 rounds should be faster: {second} vs {first}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Deterministic discrete-event queue with a virtual millisecond clock.
+//!
+//! Ties are broken by insertion sequence, so a run is a pure function of
+//! (config, seed) — every figure in EXPERIMENTS.md is exactly re-runnable.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in milliseconds.
+pub type SimTime = f64;
+
+struct Item<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Item<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Item<E> {}
+
+impl<E> Ord for Item<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Item<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Item<E>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    pub fn push_at(&mut self, at: SimTime, event: E) {
+        let time = if at < self.now { self.now } else { at };
+        self.seq += 1;
+        self.heap.push(Item { time, seq: self.seq, event });
+    }
+
+    /// Schedule `event` after `delay` ms.
+    pub fn push_after(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        let now = self.now;
+        self.push_at(now + delay.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|item| {
+            debug_assert!(item.time >= self.now);
+            self.now = item.time;
+            (item.time, item.event)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(5.0, "c");
+        q.push_at(1.0, "a");
+        q.push_at(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut q = EventQueue::new();
+        q.push_at(1.0, 1);
+        q.push_at(1.0, 2);
+        q.push_at(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push_at(2.0, ());
+        q.push_at(7.0, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(q.now(), t1);
+        q.push_after(1.0, ());
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 3.0);
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 7.0);
+    }
+
+    #[test]
+    fn past_events_clamped_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(5.0, "later");
+        q.pop();
+        q.push_at(1.0, "past");
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(e, "past");
+        assert_eq!(t, 5.0);
+    }
+}

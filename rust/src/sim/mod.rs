@@ -1,0 +1,11 @@
+//! Deterministic discrete-event simulation of the full benchmark pipeline
+//! (virtual time, seeded): the environment in which every paper figure is
+//! regenerated. See DESIGN.md §6 for the calibration model.
+
+pub mod cluster;
+pub mod event;
+
+pub use cluster::{
+    run, DigestMode, Protocol, ReconfigSpec, RoundStat, SimConfig, SimResult, WorkloadSpec,
+};
+pub use event::{EventQueue, SimTime};

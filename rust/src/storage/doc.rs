@@ -1,0 +1,198 @@
+//! Document store — the MongoDB stand-in followers run (§5.1
+//! "YCSB+MongoDB").
+//!
+//! Real CRUD semantics over documents plus the slot-state digest
+//! (`DigestState`) used for the cross-replica convergence check. The op cost
+//! table is calibrated so Raft at n = 50 (hom, WL-A, b = 5k) lands at the
+//! paper's ≈10 k TPS scale (see DESIGN.md §6 — comparisons are relative,
+//! absolute numbers are testbed-specific).
+
+use std::collections::HashMap;
+
+use crate::storage::digest::DigestState;
+use crate::workload::ycsb::{
+    YcsbBatch, OP_INSERT, OP_NOP, OP_READ, OP_RMW, OP_SCAN, OP_UPDATE,
+};
+
+/// Per-op apply cost in microseconds at Z3 (4 vCPU) speed.
+pub const COST_READ_US: f64 = 80.0;
+pub const COST_UPDATE_US: f64 = 110.0;
+pub const COST_SCAN_US: f64 = 300.0;
+pub const COST_INSERT_US: f64 = 120.0;
+pub const COST_RMW_US: f64 = 180.0;
+
+/// Cost (µs at unit speed) of one op.
+#[inline]
+pub fn op_cost_us(op: u32) -> f64 {
+    match op {
+        OP_READ => COST_READ_US,
+        OP_UPDATE => COST_UPDATE_US,
+        OP_SCAN => COST_SCAN_US,
+        OP_INSERT => COST_INSERT_US,
+        OP_RMW => COST_RMW_US,
+        _ => 0.0,
+    }
+}
+
+/// Result of applying a batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ApplyResult {
+    /// `[state_digest, read_digest]` — must match across replicas.
+    pub digest: [u32; 2],
+    /// Apply cost in ms at unit (Z3) speed.
+    pub cost_ms: f64,
+    /// Ops actually applied.
+    pub ops_applied: usize,
+}
+
+/// The follower's document store.
+#[derive(Clone, Debug, Default)]
+pub struct DocStore {
+    docs: HashMap<u32, Vec<u32>>,
+    digest: DigestState,
+    applied_batches: u64,
+}
+
+impl DocStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply a committed YCSB batch: mutate documents, fold the digest.
+    pub fn apply(&mut self, batch: &YcsbBatch) -> ApplyResult {
+        let mut cost_us = 0.0;
+        let mut applied = 0;
+        for ((&op, &key), &val) in batch.ops.iter().zip(&batch.keys).zip(&batch.vals) {
+            if op >= OP_NOP {
+                continue;
+            }
+            applied += 1;
+            cost_us += op_cost_us(op);
+            match op {
+                OP_UPDATE | OP_RMW => {
+                    self.docs.entry(key).or_insert_with(|| vec![0; 4])[0] = val;
+                }
+                OP_INSERT => {
+                    self.docs.insert(key, vec![val, 0, 0, 0]);
+                }
+                _ => { /* READ / SCAN leave documents untouched */ }
+            }
+        }
+        let digest = self.digest.apply_ycsb(&batch.ops, &batch.keys, &batch.vals);
+        self.applied_batches += 1;
+        ApplyResult { digest, cost_ms: cost_us / 1000.0, ops_applied: applied }
+    }
+
+    /// Estimated apply cost (ms at unit speed) without mutating — the
+    /// simulator's service-time model.
+    pub fn estimate_cost_ms(batch: &YcsbBatch) -> f64 {
+        batch.ops.iter().map(|&o| op_cost_us(o)).sum::<f64>() / 1000.0
+    }
+
+    pub fn get(&self, key: u32) -> Option<&[u32]> {
+        self.docs.get(&key).map(|v| v.as_slice())
+    }
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+    pub fn state_digest(&self) -> u32 {
+        self.digest.state_digest()
+    }
+    pub fn digest_state(&self) -> &DigestState {
+        &self.digest
+    }
+    pub fn applied_batches(&self) -> u64 {
+        self.applied_batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Workload, YcsbGen};
+
+    #[test]
+    fn replicas_converge() {
+        let mut gen = YcsbGen::new(Workload::A, 10_000, 1);
+        let batches: Vec<YcsbBatch> = (0..5).map(|_| gen.batch(1000)).collect();
+        let mut a = DocStore::new();
+        let mut b = DocStore::new();
+        for batch in &batches {
+            let ra = a.apply(batch);
+            let rb = b.apply(batch);
+            assert_eq!(ra.digest, rb.digest);
+        }
+        assert_eq!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn divergent_batches_detected() {
+        let mut gen = YcsbGen::new(Workload::A, 10_000, 2);
+        let batch = gen.batch(100);
+        let mut other = batch.clone();
+        other.vals[0] ^= 1;
+        let mut a = DocStore::new();
+        let mut b = DocStore::new();
+        a.apply(&batch);
+        b.apply(&other);
+        assert_ne!(a.state_digest(), b.state_digest());
+    }
+
+    #[test]
+    fn inserts_and_updates_visible() {
+        let mut s = DocStore::new();
+        let batch = YcsbBatch {
+            workload: Workload::A,
+            ops: vec![OP_INSERT, OP_UPDATE, OP_READ],
+            keys: vec![1, 1, 1],
+            vals: vec![10, 20, 0],
+        };
+        let r = s.apply(&batch);
+        assert_eq!(r.ops_applied, 3);
+        assert_eq!(s.get(1).unwrap()[0], 20);
+    }
+
+    #[test]
+    fn cost_scales_with_mix() {
+        let read_batch = YcsbBatch {
+            workload: Workload::C,
+            ops: vec![OP_READ; 1000],
+            keys: vec![0; 1000],
+            vals: vec![0; 1000],
+        };
+        let scan_batch = YcsbBatch {
+            workload: Workload::E,
+            ops: vec![OP_SCAN; 1000],
+            keys: vec![0; 1000],
+            vals: vec![0; 1000],
+        };
+        assert!(DocStore::estimate_cost_ms(&scan_batch) > 3.0 * DocStore::estimate_cost_ms(&read_batch));
+    }
+
+    #[test]
+    fn nops_cost_nothing() {
+        let batch = YcsbBatch {
+            workload: Workload::A,
+            ops: vec![OP_NOP; 100],
+            keys: vec![0; 100],
+            vals: vec![0; 100],
+        };
+        assert_eq!(DocStore::estimate_cost_ms(&batch), 0.0);
+        let mut s = DocStore::new();
+        let r = s.apply(&batch);
+        assert_eq!(r.ops_applied, 0);
+        assert_eq!(r.cost_ms, 0.0);
+    }
+
+    #[test]
+    fn estimate_matches_apply_cost() {
+        let mut gen = YcsbGen::new(Workload::B, 1000, 3);
+        let batch = gen.batch(500);
+        let mut s = DocStore::new();
+        let r = s.apply(&batch);
+        assert!((r.cost_ms - DocStore::estimate_cost_ms(&batch)).abs() < 1e-9);
+    }
+}

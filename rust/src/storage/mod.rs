@@ -1,0 +1,11 @@
+//! Follower state machines: the document store (MongoDB stand-in), the
+//! relational store (PostgreSQL stand-in), and the shared digest spec that
+//! ties the native mirrors to the AOT Pallas kernels bit-for-bit.
+
+pub mod digest;
+pub mod doc;
+pub mod rel;
+
+pub use digest::DigestState;
+pub use doc::{ApplyResult, DocStore};
+pub use rel::{RelStore, TpccApplyResult};

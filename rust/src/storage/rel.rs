@@ -1,0 +1,250 @@
+//! Relational store — the PostgreSQL stand-in followers run (§5.1
+//! "TPC-C+PostgreSQL"): warehouses → districts → orders/stock with
+//! per-warehouse write locks.
+//!
+//! TPC-C's consensus-visible behaviour is lock-bound apply cost: NewOrder /
+//! Payment / Delivery serialize on their home warehouse. The apply loop
+//! mutates real tables; the cost model (base work × argument factor +
+//! lock-contention term) is the same one the `tpcc_cost` AOT kernel
+//! computes, and the stream digest ties replicas together.
+
+use crate::storage::digest::{self, tpcc_costs};
+use crate::workload::tpcc::{
+    TpccBatch, TXN_DELIVERY, TXN_NEW_ORDER, TXN_NOP, TXN_ORDER_STATUS, TXN_PAYMENT,
+    TXN_STOCK_LEVEL,
+};
+
+/// µs of follower CPU per cost-model work unit at Z3 speed (calibration —
+/// see DESIGN.md §6).
+pub const COST_UNIT_US: f64 = 3.0;
+
+/// One district's mutable state.
+#[derive(Clone, Debug)]
+pub struct District {
+    pub next_order_id: u32,
+    pub ytd: u64,
+}
+
+/// One warehouse: 10 districts (TPC-C spec) + stock + ytd.
+#[derive(Clone, Debug)]
+pub struct Warehouse {
+    pub districts: Vec<District>,
+    pub stock: Vec<u32>,
+    pub ytd: u64,
+    pub delivered_orders: u32,
+}
+
+impl Warehouse {
+    fn new(items: usize) -> Self {
+        Warehouse {
+            districts: (0..10).map(|_| District { next_order_id: 1, ytd: 0 }).collect(),
+            stock: vec![100; items],
+            ytd: 0,
+            delivered_orders: 0,
+        }
+    }
+}
+
+/// Result of applying a TPC-C batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TpccApplyResult {
+    /// Stream digest — must match across replicas.
+    pub digest: u32,
+    /// Apply cost in ms at unit (Z3) speed, contention included.
+    pub cost_ms: f64,
+    pub txns_applied: usize,
+}
+
+/// The follower's relational store.
+#[derive(Clone, Debug)]
+pub struct RelStore {
+    warehouses: Vec<Warehouse>,
+    items_per_warehouse: usize,
+    applied_batches: u64,
+    stream_digest: u32,
+}
+
+impl RelStore {
+    /// §5.1 config: 10 warehouses per follower; 100 stocked items each is
+    /// plenty for the cost paths exercised here.
+    pub fn new(warehouses: usize) -> Self {
+        RelStore {
+            warehouses: (0..warehouses).map(|_| Warehouse::new(100)).collect(),
+            items_per_warehouse: 100,
+            applied_batches: 0,
+            stream_digest: 0,
+        }
+    }
+
+    /// Apply a committed batch: execute each txn against the tables and
+    /// account the cost-model work (the same model as the AOT kernel).
+    pub fn apply(&mut self, batch: &TpccBatch) -> TpccApplyResult {
+        let nw = self.warehouses.len();
+        let (_counts, costs, dig) =
+            tpcc_costs(&batch.types, &batch.wids, &batch.args, nw.max(1));
+        let mut applied = 0;
+        for ((&t, &w), &a) in batch.types.iter().zip(&batch.wids).zip(&batch.args) {
+            if t >= TXN_NOP {
+                continue;
+            }
+            applied += 1;
+            let wh = &mut self.warehouses[w as usize % nw];
+            match t {
+                TXN_NEW_ORDER => {
+                    let d = (a as usize) % 10;
+                    wh.districts[d].next_order_id += 1;
+                    // consume stock for `a` order lines
+                    for line in 0..a as usize {
+                        let item = (a as usize * 31 + line) % wh.stock.len();
+                        wh.stock[item] = wh.stock[item].saturating_sub(1).max(10);
+                    }
+                }
+                TXN_PAYMENT => {
+                    let d = (a as usize) % 10;
+                    wh.ytd += a as u64;
+                    wh.districts[d].ytd += a as u64;
+                }
+                TXN_DELIVERY => {
+                    wh.delivered_orders += a;
+                }
+                TXN_ORDER_STATUS | TXN_STOCK_LEVEL => { /* read-only */ }
+                _ => unreachable!(),
+            }
+        }
+        let cost_units: f64 = costs.iter().map(|&c| c as f64).sum();
+        self.stream_digest = self.stream_digest.wrapping_add(dig);
+        self.applied_batches += 1;
+        TpccApplyResult {
+            digest: self.stream_digest,
+            cost_ms: cost_units * COST_UNIT_US / 1000.0,
+            txns_applied: applied,
+        }
+    }
+
+    /// Simulator service-time model: cost (ms at unit speed) of a batch
+    /// without mutating state.
+    pub fn estimate_cost_ms(batch: &TpccBatch, warehouses: usize) -> f64 {
+        let (_c, costs, _d) =
+            tpcc_costs(&batch.types, &batch.wids, &batch.args, warehouses.max(1));
+        costs.iter().map(|&c| c as f64).sum::<f64>() * COST_UNIT_US / 1000.0
+    }
+
+    /// Per-txn-type cost breakdown (work units) — the Fig. 10/11 series.
+    pub fn cost_breakdown(batch: &TpccBatch, warehouses: usize) -> [f64; 5] {
+        let (_c, costs, _d) =
+            tpcc_costs(&batch.types, &batch.wids, &batch.args, warehouses.max(1));
+        let mut by_type = [0f64; 5];
+        for (&t, &c) in batch.types.iter().zip(&costs) {
+            if t < TXN_NOP {
+                by_type[t as usize] += c as f64;
+            }
+        }
+        by_type
+    }
+
+    pub fn warehouses(&self) -> usize {
+        self.warehouses.len()
+    }
+    pub fn warehouse(&self, w: usize) -> &Warehouse {
+        &self.warehouses[w]
+    }
+    pub fn stream_digest(&self) -> u32 {
+        self.stream_digest
+    }
+    pub fn applied_batches(&self) -> u64 {
+        self.applied_batches
+    }
+    pub fn items_per_warehouse(&self) -> usize {
+        self.items_per_warehouse
+    }
+}
+
+/// Convenience re-export for cost-model constants.
+pub use digest::{TPCC_ARG_COEF, TPCC_BASE_COST, TPCC_LOCK_COEF};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TpccGen;
+
+    #[test]
+    fn replicas_converge() {
+        let mut gen = TpccGen::new(10, 1);
+        let batches: Vec<TpccBatch> = (0..4).map(|_| gen.batch(500)).collect();
+        let mut a = RelStore::new(10);
+        let mut b = RelStore::new(10);
+        for batch in &batches {
+            let ra = a.apply(batch);
+            let rb = b.apply(batch);
+            assert_eq!(ra.digest, rb.digest);
+            assert_eq!(ra.cost_ms, rb.cost_ms);
+        }
+    }
+
+    #[test]
+    fn new_order_advances_district() {
+        let mut s = RelStore::new(4);
+        let batch = TpccBatch { types: vec![TXN_NEW_ORDER], wids: vec![2], args: vec![7] };
+        s.apply(&batch);
+        assert_eq!(s.warehouse(2).districts[7].next_order_id, 2);
+    }
+
+    #[test]
+    fn payment_accumulates_ytd() {
+        let mut s = RelStore::new(4);
+        let batch = TpccBatch {
+            types: vec![TXN_PAYMENT, TXN_PAYMENT],
+            wids: vec![1, 1],
+            args: vec![5, 3],
+        };
+        s.apply(&batch);
+        assert_eq!(s.warehouse(1).ytd, 8);
+    }
+
+    #[test]
+    fn read_only_txns_leave_tables_unchanged() {
+        let mut s = RelStore::new(4);
+        let before_d: Vec<u32> =
+            s.warehouse(0).districts.iter().map(|d| d.next_order_id).collect();
+        let batch = TpccBatch {
+            types: vec![TXN_ORDER_STATUS, TXN_STOCK_LEVEL],
+            wids: vec![0, 0],
+            args: vec![1, 1],
+        };
+        let r = s.apply(&batch);
+        assert_eq!(r.txns_applied, 2);
+        let after_d: Vec<u32> =
+            s.warehouse(0).districts.iter().map(|d| d.next_order_id).collect();
+        assert_eq!(before_d, after_d);
+    }
+
+    #[test]
+    fn contention_raises_batch_cost() {
+        // all NewOrders on one warehouse vs spread over 10
+        let n = 100;
+        let hot = TpccBatch {
+            types: vec![TXN_NEW_ORDER; n],
+            wids: vec![0; n],
+            args: vec![10; n],
+        };
+        let spread = TpccBatch {
+            types: vec![TXN_NEW_ORDER; n],
+            wids: (0..n as u32).map(|i| i % 10).collect(),
+            args: vec![10; n],
+        };
+        assert!(
+            RelStore::estimate_cost_ms(&hot, 10)
+                > 1.5 * RelStore::estimate_cost_ms(&spread, 10)
+        );
+    }
+
+    #[test]
+    fn breakdown_covers_all_types() {
+        let mut gen = TpccGen::new(10, 2);
+        let batch = gen.batch(5000);
+        let b = RelStore::cost_breakdown(&batch, 10);
+        assert!(b.iter().all(|&x| x > 0.0), "{b:?}");
+        // NewOrder dominates total work (45% mix at highest base cost)
+        assert!(b[0] > b[2] && b[0] > b[4]);
+    }
+}

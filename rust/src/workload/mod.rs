@@ -1,0 +1,7 @@
+//! Workload generators: YCSB core workloads A–F and TPC-C (§5.1).
+
+pub mod tpcc;
+pub mod ycsb;
+
+pub use tpcc::{TpccBatch, TpccGen};
+pub use ycsb::{Workload, YcsbBatch, YcsbGen};

@@ -1,0 +1,184 @@
+//! TPC-C transaction workload (TPC Benchmark C), as used in §5 with
+//! PostgreSQL followers.
+//!
+//! The standard mix: NewOrder 45%, Payment 43%, OrderStatus 4%, Delivery 4%,
+//! StockLevel 4% — NewOrder and Payment are the throughput-reported txns.
+//! Batches are flat u32 arrays in the layout the AOT `tpcc_cost` artifact
+//! consumes (types / warehouse-ids / args).
+
+use crate::net::rng::Rng;
+
+/// Txn codes — shared spec with the Pallas kernel (`kernels.TXN_*`).
+pub const TXN_NEW_ORDER: u32 = 0;
+pub const TXN_PAYMENT: u32 = 1;
+pub const TXN_ORDER_STATUS: u32 = 2;
+pub const TXN_DELIVERY: u32 = 3;
+pub const TXN_STOCK_LEVEL: u32 = 4;
+pub const TXN_NOP: u32 = 5;
+
+/// Standard TPC-C transaction mix (§5.1 "predefined ratio").
+pub const MIX: [(u32, f64); 5] = [
+    (TXN_NEW_ORDER, 0.45),
+    (TXN_PAYMENT, 0.43),
+    (TXN_ORDER_STATUS, 0.04),
+    (TXN_DELIVERY, 0.04),
+    (TXN_STOCK_LEVEL, 0.04),
+];
+
+pub const TXN_NAMES: [&str; 5] =
+    ["NewOrder", "Payment", "OrderStatus", "Delivery", "StockLevel"];
+
+/// One generated txn batch in kernel layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TpccBatch {
+    pub types: Vec<u32>,
+    /// Home warehouse of each txn.
+    pub wids: Vec<u32>,
+    /// Per-txn argument (order-line count for NewOrder, district for
+    /// Payment, …) — feeds the cost model's argument factor.
+    pub args: Vec<u32>,
+}
+
+impl TpccBatch {
+    pub fn len(&self) -> usize {
+        self.types.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.types.is_empty()
+    }
+
+    pub fn live_txns(&self) -> usize {
+        self.types.iter().filter(|&&t| t < TXN_NOP).count()
+    }
+
+    /// Count per txn type (the Fig. 10/11 breakdown).
+    pub fn type_counts(&self) -> [usize; 5] {
+        let mut counts = [0usize; 5];
+        for &t in &self.types {
+            if t < TXN_NOP {
+                counts[t as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Pad (with NOPs) or truncate to the fixed artifact batch shape.
+    pub fn padded_to(&self, n: usize) -> TpccBatch {
+        let mut b = self.clone();
+        b.types.resize(n, TXN_NOP);
+        b.wids.resize(n, 0);
+        b.args.resize(n, 0);
+        b
+    }
+}
+
+/// TPC-C batch generator over `warehouses` warehouses.
+#[derive(Clone, Debug)]
+pub struct TpccGen {
+    rng: Rng,
+    warehouses: u32,
+}
+
+impl TpccGen {
+    /// §5.1 config: 10 warehouses per follower instance.
+    pub fn new(warehouses: u32, seed: u64) -> Self {
+        assert!(warehouses > 0);
+        TpccGen { rng: Rng::new(seed), warehouses }
+    }
+
+    fn next_type(&mut self) -> u32 {
+        let x = self.rng.f64();
+        let mut acc = 0.0;
+        for (code, share) in MIX {
+            acc += share;
+            if x < acc {
+                return code;
+            }
+        }
+        TXN_NEW_ORDER
+    }
+
+    /// Generate a batch of exactly `size` live txns.
+    pub fn batch(&mut self, size: usize) -> TpccBatch {
+        let mut types = Vec::with_capacity(size);
+        let mut wids = Vec::with_capacity(size);
+        let mut args = Vec::with_capacity(size);
+        for _ in 0..size {
+            let t = self.next_type();
+            let arg = match t {
+                // NewOrder: 5–15 order lines (TPC-C spec).
+                TXN_NEW_ORDER => self.rng.range_u64(5, 15) as u32,
+                // Payment: district 1–10.
+                TXN_PAYMENT => self.rng.range_u64(1, 10) as u32,
+                // Delivery: 10 districts processed.
+                TXN_DELIVERY => 10,
+                // OrderStatus / StockLevel: single lookup.
+                _ => 1,
+            };
+            types.push(t);
+            wids.push(self.rng.below(self.warehouses as u64) as u32);
+            args.push(arg);
+        }
+        TpccBatch { types, wids, args }
+    }
+
+    pub fn warehouses(&self) -> u32 {
+        self.warehouses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_sums_to_one() {
+        let s: f64 = MIX.iter().map(|(_, p)| p).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_mix_matches_spec() {
+        let mut g = TpccGen::new(10, 1);
+        let b = g.batch(50_000);
+        let counts = b.type_counts();
+        let share = |c: usize| c as f64 / b.len() as f64;
+        assert!((share(counts[0]) - 0.45).abs() < 0.01, "{counts:?}");
+        assert!((share(counts[1]) - 0.43).abs() < 0.01, "{counts:?}");
+        assert!((share(counts[2]) - 0.04).abs() < 0.005);
+        assert!((share(counts[3]) - 0.04).abs() < 0.005);
+        assert!((share(counts[4]) - 0.04).abs() < 0.005);
+    }
+
+    #[test]
+    fn warehouse_ids_in_range() {
+        let mut g = TpccGen::new(10, 2);
+        let b = g.batch(10_000);
+        assert!(b.wids.iter().all(|&w| w < 10));
+    }
+
+    #[test]
+    fn new_order_lines_in_spec_range() {
+        let mut g = TpccGen::new(10, 3);
+        let b = g.batch(10_000);
+        for (t, a) in b.types.iter().zip(&b.args) {
+            if *t == TXN_NEW_ORDER {
+                assert!((5..=15).contains(a));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(TpccGen::new(10, 4).batch(100), TpccGen::new(10, 4).batch(100));
+    }
+
+    #[test]
+    fn padding_and_counts() {
+        let mut g = TpccGen::new(10, 5);
+        let b = g.batch(100).padded_to(256);
+        assert_eq!(b.len(), 256);
+        assert_eq!(b.live_txns(), 100);
+        assert_eq!(b.type_counts().iter().sum::<usize>(), 100);
+    }
+}

@@ -1,0 +1,283 @@
+//! YCSB core workloads A–F (Cooper et al., SoCC'10), as used in §5.
+//!
+//! Each workload is a distribution over four op types (READ / UPDATE / SCAN
+//! / INSERT, plus READ-MODIFY-WRITE for F) with zipfian (θ = 0.99) or latest
+//! key popularity. Batches are generated as flat u32 arrays — exactly the
+//! layout the AOT `ycsb_apply` artifact consumes (see
+//! `python/compile/kernels/__init__.py` for the shared spec).
+
+use crate::net::rng::{Rng, Zipfian};
+
+/// Op codes — shared spec with the Pallas kernel (`kernels.OP_*`).
+pub const OP_READ: u32 = 0;
+pub const OP_UPDATE: u32 = 1;
+pub const OP_SCAN: u32 = 2;
+pub const OP_INSERT: u32 = 3;
+pub const OP_RMW: u32 = 4;
+pub const OP_NOP: u32 = 5;
+
+/// The six standard YCSB workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// A — update heavy: 50% read, 50% update, zipfian.
+    A,
+    /// B — read mostly: 95% read, 5% update, zipfian.
+    B,
+    /// C — read only: 100% read, zipfian.
+    C,
+    /// D — read latest: 95% read, 5% insert, latest distribution.
+    D,
+    /// E — short ranges: 95% scan, 5% insert, zipfian.
+    E,
+    /// F — read-modify-write: 50% read, 50% RMW, zipfian.
+    F,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 6] =
+        [Workload::A, Workload::B, Workload::C, Workload::D, Workload::E, Workload::F];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::A => "A",
+            Workload::B => "B",
+            Workload::C => "C",
+            Workload::D => "D",
+            Workload::E => "E",
+            Workload::F => "F",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Workload> {
+        Self::ALL.iter().copied().find(|w| w.name().eq_ignore_ascii_case(s))
+    }
+
+    /// (read, update, scan, insert, rmw) proportions per the YCSB spec.
+    pub fn mix(self) -> [f64; 5] {
+        match self {
+            Workload::A => [0.50, 0.50, 0.0, 0.0, 0.0],
+            Workload::B => [0.95, 0.05, 0.0, 0.0, 0.0],
+            Workload::C => [1.00, 0.0, 0.0, 0.0, 0.0],
+            Workload::D => [0.95, 0.0, 0.0, 0.05, 0.0],
+            Workload::E => [0.0, 0.0, 0.95, 0.05, 0.0],
+            Workload::F => [0.50, 0.0, 0.0, 0.0, 0.50],
+        }
+    }
+
+    /// Write fraction (ops that mutate replica state).
+    pub fn write_fraction(self) -> f64 {
+        let m = self.mix();
+        m[1] + m[3] + m[4]
+    }
+}
+
+/// One generated op batch in kernel layout (struct-of-arrays).
+#[derive(Clone, Debug, PartialEq)]
+pub struct YcsbBatch {
+    pub workload: Workload,
+    pub ops: Vec<u32>,
+    pub keys: Vec<u32>,
+    pub vals: Vec<u32>,
+}
+
+impl YcsbBatch {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Count of live (non-NOP) ops.
+    pub fn live_ops(&self) -> usize {
+        self.ops.iter().filter(|&&o| o < OP_NOP).count()
+    }
+
+    /// Pad (with NOPs) or truncate to exactly `n` ops — the fixed batch
+    /// shape the AOT artifact expects.
+    pub fn padded_to(&self, n: usize) -> YcsbBatch {
+        let mut b = self.clone();
+        b.ops.resize(n, OP_NOP);
+        b.keys.resize(n, 0);
+        b.vals.resize(n, 0);
+        b
+    }
+}
+
+/// YCSB batch generator: zipfian (or latest) keys over a keyspace.
+#[derive(Clone, Debug)]
+pub struct YcsbGen {
+    workload: Workload,
+    zipf: Zipfian,
+    rng: Rng,
+    record_count: u64,
+    insert_seq: u64,
+}
+
+impl YcsbGen {
+    /// YCSB defaults: θ = 0.99 over `record_count` keys.
+    pub fn new(workload: Workload, record_count: u64, seed: u64) -> Self {
+        YcsbGen {
+            workload,
+            zipf: Zipfian::new(record_count, 0.99),
+            rng: Rng::new(seed),
+            record_count,
+            insert_seq: record_count,
+        }
+    }
+
+    fn next_key(&mut self) -> u32 {
+        match self.workload {
+            // D: "latest" — skewed towards recently inserted records.
+            Workload::D => {
+                let back = self.zipf.sample(&mut self.rng);
+                (self.insert_seq.saturating_sub(1 + back)) as u32
+            }
+            _ => self.zipf.sample(&mut self.rng) as u32,
+        }
+    }
+
+    fn next_op(&mut self) -> u32 {
+        let m = self.workload.mix();
+        let x = self.rng.f64();
+        let mut acc = 0.0;
+        for (code, share) in [OP_READ, OP_UPDATE, OP_SCAN, OP_INSERT, OP_RMW]
+            .into_iter()
+            .zip(m)
+        {
+            acc += share;
+            if x < acc {
+                return code;
+            }
+        }
+        OP_READ
+    }
+
+    /// Generate a batch of exactly `size` live ops.
+    pub fn batch(&mut self, size: usize) -> YcsbBatch {
+        let mut ops = Vec::with_capacity(size);
+        let mut keys = Vec::with_capacity(size);
+        let mut vals = Vec::with_capacity(size);
+        for _ in 0..size {
+            let op = self.next_op();
+            let key = if op == OP_INSERT {
+                let k = self.insert_seq as u32;
+                self.insert_seq += 1;
+                k
+            } else {
+                self.next_key()
+            };
+            ops.push(op);
+            keys.push(key);
+            vals.push(self.rng.next_u32());
+        }
+        YcsbBatch { workload: self.workload, ops, keys, vals }
+    }
+
+    pub fn record_count(&self) -> u64 {
+        self.record_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op_shares(b: &YcsbBatch) -> [f64; 5] {
+        let mut counts = [0usize; 5];
+        for &o in &b.ops {
+            counts[o as usize] += 1;
+        }
+        counts.map(|c| c as f64 / b.len() as f64)
+    }
+
+    #[test]
+    fn mixes_sum_to_one() {
+        for w in Workload::ALL {
+            let s: f64 = w.mix().iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn workload_a_is_half_updates() {
+        let mut g = YcsbGen::new(Workload::A, 100_000, 1);
+        let b = g.batch(20_000);
+        let s = op_shares(&b);
+        assert!((s[OP_READ as usize] - 0.5).abs() < 0.02);
+        assert!((s[OP_UPDATE as usize] - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn workload_c_is_read_only() {
+        let mut g = YcsbGen::new(Workload::C, 1000, 2);
+        let b = g.batch(5000);
+        assert!(b.ops.iter().all(|&o| o == OP_READ));
+    }
+
+    #[test]
+    fn workload_e_is_scan_heavy() {
+        let mut g = YcsbGen::new(Workload::E, 1000, 3);
+        let b = g.batch(20_000);
+        let s = op_shares(&b);
+        assert!((s[OP_SCAN as usize] - 0.95).abs() < 0.02);
+        assert!((s[OP_INSERT as usize] - 0.05).abs() < 0.02);
+    }
+
+    #[test]
+    fn workload_f_has_rmw() {
+        let mut g = YcsbGen::new(Workload::F, 1000, 4);
+        let b = g.batch(20_000);
+        let s = op_shares(&b);
+        assert!((s[OP_RMW as usize] - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn inserts_use_fresh_keys() {
+        let mut g = YcsbGen::new(Workload::D, 1000, 5);
+        let b = g.batch(10_000);
+        let inserted: Vec<u32> = b
+            .ops
+            .iter()
+            .zip(&b.keys)
+            .filter(|(o, _)| **o == OP_INSERT)
+            .map(|(_, k)| *k)
+            .collect();
+        let mut sorted = inserted.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), inserted.len(), "insert keys must be unique");
+        assert!(inserted.iter().all(|&k| k >= 1000));
+    }
+
+    #[test]
+    fn zipfian_keys_are_skewed() {
+        let mut g = YcsbGen::new(Workload::A, 10_000, 6);
+        let b = g.batch(50_000);
+        let hot = b.keys.iter().filter(|&&k| k < 100).count();
+        assert!(hot as f64 > 0.3 * b.len() as f64, "hot={hot}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let b1 = YcsbGen::new(Workload::A, 1000, 7).batch(100);
+        let b2 = YcsbGen::new(Workload::A, 1000, 7).batch(100);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn padding_adds_nops() {
+        let mut g = YcsbGen::new(Workload::B, 1000, 8);
+        let b = g.batch(100).padded_to(256);
+        assert_eq!(b.len(), 256);
+        assert_eq!(b.live_ops(), 100);
+        assert!(b.ops[100..].iter().all(|&o| o == OP_NOP));
+    }
+
+    #[test]
+    fn padding_truncates_too() {
+        let mut g = YcsbGen::new(Workload::B, 1000, 9);
+        let b = g.batch(300).padded_to(256);
+        assert_eq!(b.len(), 256);
+    }
+}

@@ -1,0 +1,119 @@
+//! L3 ↔ L2/L1 equivalence: the AOT HLO artifacts executed via PJRT must be
+//! bit-identical (u32 paths) / numerically identical (f32/f64 paths) to the
+//! native Rust mirrors. Skips cleanly when `make artifacts` hasn't run.
+
+use cabinet::consensus::weights::WeightScheme;
+use cabinet::net::rng::Rng;
+use cabinet::runtime::{artifacts_available, default_artifact_dir, Engine};
+use cabinet::storage::digest::{
+    tpcc_costs, DigestState, STATE_SLOTS, TPCC_BATCH, TPCC_WAREHOUSES, YCSB_BATCH,
+};
+use cabinet::workload::{TpccGen, Workload, YcsbGen};
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+#[test]
+fn ycsb_apply_bit_exact_random_batches() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    for seed in 0..5u64 {
+        // random pre-state + random workload batch
+        let state: Vec<u32> = (0..STATE_SLOTS).map(|_| rng.next_u32()).collect();
+        let wl = [Workload::A, Workload::B, Workload::E, Workload::F][seed as usize % 4];
+        let batch = YcsbGen::new(wl, 50_000, seed).batch(4000 + seed as usize * 200);
+        let padded = batch.padded_to(YCSB_BATCH);
+
+        let (hlo_state, hlo_digest) = engine
+            .ycsb_apply(&state, &padded.ops, &padded.keys, &padded.vals)
+            .expect("hlo exec");
+        let mut native = DigestState::from_state(state.clone());
+        let native_digest = native.apply_ycsb(&padded.ops, &padded.keys, &padded.vals);
+        assert_eq!(hlo_digest, native_digest, "seed {seed}: digest mismatch");
+        assert_eq!(hlo_state, native.slots(), "seed {seed}: state mismatch");
+    }
+}
+
+#[test]
+fn ycsb_apply_chained_rounds_stay_identical() {
+    let Some(engine) = engine() else { return };
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 42);
+    let mut hlo_state = vec![0u32; STATE_SLOTS];
+    let mut native = DigestState::default();
+    for round in 0..4 {
+        let padded = gen.batch(5000).padded_to(YCSB_BATCH);
+        let (ns, hd) = engine
+            .ycsb_apply(&hlo_state, &padded.ops, &padded.keys, &padded.vals)
+            .expect("exec");
+        hlo_state = ns;
+        let nd = native.apply_ycsb(&padded.ops, &padded.keys, &padded.vals);
+        assert_eq!(hd, nd, "round {round} digests diverged");
+        assert_eq!(hlo_state, native.slots(), "round {round} state diverged");
+    }
+}
+
+#[test]
+fn tpcc_cost_matches_native() {
+    let Some(engine) = engine() else { return };
+    for seed in 0..4u64 {
+        let batch =
+            TpccGen::new(TPCC_WAREHOUSES as u32, seed).batch(1500).padded_to(TPCC_BATCH);
+        let (counts, costs, dig) =
+            engine.tpcc_cost(&batch.types, &batch.wids, &batch.args).expect("exec");
+        let (ncounts, ncosts, ndig) =
+            tpcc_costs(&batch.types, &batch.wids, &batch.args, TPCC_WAREHOUSES);
+        assert_eq!(dig, ndig, "seed {seed}: stream digest mismatch");
+        assert_eq!(counts, ncounts, "seed {seed}: lock counts mismatch");
+        for (i, (a, b)) in costs.iter().zip(&ncosts).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "seed {seed} txn {i}: cost {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn weight_scheme_solver_cross_layer() {
+    let Some(engine) = engine() else { return };
+    for n in [3usize, 7, 10, 11, 20, 50, 100, 128] {
+        for t in [1, (n - 1) / 4, (n - 1) / 2] {
+            let t = t.max(1);
+            let (r_hlo, w_hlo, ct_hlo) =
+                engine.weight_scheme(n as i32, t as i32).expect("exec");
+            let ws = WeightScheme::geometric(n, t).expect("native scheme");
+            assert!(
+                (r_hlo - ws.ratio()).abs() < 1e-6,
+                "n={n} t={t}: r {r_hlo} vs {}",
+                ws.ratio()
+            );
+            assert!(
+                (ct_hlo - ws.ct()).abs() / ws.ct() < 1e-9,
+                "n={n} t={t}: ct {ct_hlo} vs {}",
+                ws.ct()
+            );
+            for (k, (a, b)) in w_hlo.iter().zip(ws.weights()).enumerate() {
+                assert!(
+                    (a - b).abs() / b < 1e-9,
+                    "n={n} t={t} w[{k}]: {a} vs {b}"
+                );
+            }
+            // padding beyond n must be zero
+            assert!(w_hlo[n..].iter().all(|&w| w == 0.0));
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_compiled_constants() {
+    let Some(engine) = engine() else { return };
+    assert_eq!(engine.manifest.state_slots, STATE_SLOTS);
+    assert_eq!(engine.manifest.ycsb_batch, YCSB_BATCH);
+    assert_eq!(engine.manifest.tpcc_batch, TPCC_BATCH);
+}

@@ -1,0 +1,311 @@
+//! Adversarial property tests over the sans-io consensus state machines:
+//! random schedules with message drops, duplication and reordering, random
+//! timer fires and leader changes — asserting Raft/Cabinet safety
+//! (Theorem 4.2) and the weight-scheme invariants throughout.
+//!
+//! (The vendored crate set has no proptest; this is a seeded-chaos harness
+//! with explicit seeds, which doubles as a regression corpus: any failing
+//! seed is a one-line reproduction.)
+
+use std::sync::Arc;
+
+use cabinet::consensus::message::{Message, NodeId, Payload};
+use cabinet::consensus::node::{Input, Mode, Node, Output, Role};
+use cabinet::consensus::weights::WeightScheme;
+use cabinet::net::rng::Rng;
+
+/// A chaos network: pending messages get dropped, duplicated, delayed and
+/// reordered under RNG control.
+struct Chaos {
+    nodes: Vec<Node>,
+    queue: Vec<(NodeId, NodeId, Message)>,
+    commits: Vec<Vec<(u64, u64)>>, // per node: (index, term) in commit order
+    rng: Rng,
+    drop_p: f64,
+    dup_p: f64,
+}
+
+impl Chaos {
+    fn new(n: usize, mode: impl Fn(usize) -> Mode, seed: u64, drop_p: f64, dup_p: f64) -> Self {
+        Chaos {
+            nodes: (0..n).map(|i| Node::new(i, n, mode(i))).collect(),
+            queue: Vec::new(),
+            commits: vec![Vec::new(); n],
+            rng: Rng::new(seed),
+            drop_p,
+            dup_p,
+        }
+    }
+
+    fn absorb(&mut self, src: NodeId, outs: Vec<Output>) {
+        for o in outs {
+            match o {
+                Output::Send(dst, msg) => self.queue.push((src, dst, msg)),
+                Output::Commit(e) => self.commits[src].push((e.index, e.term)),
+                _ => {}
+            }
+        }
+    }
+
+    /// One chaos step: either deliver a random queued message (maybe
+    /// dropping/duplicating it) or fire a random timer.
+    fn step(&mut self) {
+        let n = self.nodes.len();
+        let fire_timer = self.queue.is_empty() || self.rng.chance(0.08);
+        if fire_timer {
+            let node = self.rng.below(n as u64) as usize;
+            let input = if self.rng.chance(0.5) && self.nodes[node].role() == Role::Leader {
+                Input::HeartbeatTimeout
+            } else {
+                Input::ElectionTimeout
+            };
+            let outs = self.nodes[node].step(input);
+            self.absorb(node, outs);
+            return;
+        }
+        let pick = self.rng.below(self.queue.len() as u64) as usize;
+        let (src, dst, msg) = self.queue.swap_remove(pick); // reorders
+        if self.rng.chance(self.drop_p) {
+            return; // dropped
+        }
+        if self.rng.chance(self.dup_p) {
+            self.queue.push((src, dst, msg.clone())); // duplicated
+        }
+        let outs = self.nodes[dst].step(Input::Receive(src, msg));
+        self.absorb(dst, outs);
+    }
+
+    /// Propose at whichever node is currently a leader (if any).
+    fn try_propose(&mut self, k: u8) {
+        if let Some(leader) =
+            (0..self.nodes.len()).find(|&i| self.nodes[i].role() == Role::Leader)
+        {
+            let outs =
+                self.nodes[leader].step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+            self.absorb(leader, outs);
+        }
+    }
+
+    /// Deliver everything remaining without faults (quiescence).
+    fn settle(&mut self) {
+        for _ in 0..50_000 {
+            if self.queue.is_empty() {
+                break;
+            }
+            let (src, dst, msg) = self.queue.remove(0);
+            let outs = self.nodes[dst].step(Input::Receive(src, msg));
+            self.absorb(dst, outs);
+        }
+    }
+
+    /// SAFETY: committed sequences must agree on (index → term) — no two
+    /// nodes decide differently at any index (Theorem 4.2).
+    fn assert_safety(&self, seed: u64) {
+        for a in 0..self.nodes.len() {
+            for b in (a + 1)..self.nodes.len() {
+                let ca = &self.commits[a];
+                let cb = &self.commits[b];
+                for (ia, ta) in ca {
+                    for (ib, tb) in cb {
+                        if ia == ib {
+                            assert_eq!(
+                                ta, tb,
+                                "seed {seed}: nodes {a} and {b} committed different \
+                                 terms at index {ia}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // commit order is by increasing index on every node
+        for (i, c) in self.commits.iter().enumerate() {
+            for w in c.windows(2) {
+                assert!(w[0].0 < w[1].0, "node {i} committed out of order: {c:?}");
+            }
+        }
+    }
+
+    /// Cabinet leaders always hold a weight assignment that is exactly the
+    /// scheme's multiset (weights are re-dealt, never invented).
+    fn assert_weight_permutation(&self) {
+        for node in &self.nodes {
+            if node.role() != Role::Leader {
+                continue;
+            }
+            if let Mode::Cabinet { scheme } = node.mode() {
+                let mut got: Vec<f64> = node.weight_assignment().to_vec();
+                got.sort_by(|x, y| y.partial_cmp(x).unwrap());
+                for (g, w) in got.iter().zip(scheme.weights()) {
+                    assert!((g - w).abs() < 1e-9, "weights not a permutation");
+                }
+            }
+        }
+    }
+}
+
+fn chaos_run(n: usize, mode: impl Fn(usize) -> Mode + Copy, seed: u64, steps: usize) {
+    let mut c = Chaos::new(n, mode, seed, 0.10, 0.10);
+    // bootstrap one election
+    let outs = c.nodes[0].step(Input::ElectionTimeout);
+    c.absorb(0, outs);
+    for i in 0..steps {
+        c.step();
+        if i % 37 == 0 {
+            c.try_propose((i % 251) as u8);
+        }
+        if i % 101 == 0 {
+            c.assert_weight_permutation();
+        }
+    }
+    c.settle();
+    c.assert_safety(seed);
+}
+
+#[test]
+fn raft_safety_under_chaos() {
+    for seed in 0..30 {
+        chaos_run(5, |_| Mode::Raft, seed, 4000);
+    }
+}
+
+#[test]
+fn cabinet_safety_under_chaos() {
+    for seed in 0..30 {
+        chaos_run(5, |_| Mode::cabinet(5, 1), seed, 4000);
+        chaos_run(7, |_| Mode::cabinet(7, 2), seed + 1000, 4000);
+    }
+}
+
+#[test]
+fn cabinet_safety_larger_cluster() {
+    for seed in 0..8 {
+        chaos_run(11, |_| Mode::cabinet(11, 4), seed + 77, 8000);
+    }
+}
+
+#[test]
+fn at_most_one_leader_per_term() {
+    for seed in 0..20 {
+        let mut c = Chaos::new(7, |_| Mode::cabinet(7, 3), seed, 0.15, 0.05);
+        let outs = c.nodes[0].step(Input::ElectionTimeout);
+        c.absorb(0, outs);
+        let mut leaders_by_term: Vec<(u64, NodeId)> = Vec::new();
+        for _ in 0..6000 {
+            c.step();
+            for (i, node) in c.nodes.iter().enumerate() {
+                if node.role() == Role::Leader {
+                    let term = node.term();
+                    match leaders_by_term.iter().find(|(t, _)| *t == term) {
+                        Some((_, id)) => assert_eq!(
+                            *id, i,
+                            "seed {seed}: two leaders in term {term}"
+                        ),
+                        None => leaders_by_term.push((term, i)),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn committed_entries_survive_leader_changes() {
+    // force repeated elections; whatever was committed must never be lost
+    for seed in 0..15 {
+        let mut c = Chaos::new(5, |_| Mode::cabinet(5, 2), seed, 0.0, 0.0);
+        let outs = c.nodes[0].step(Input::ElectionTimeout);
+        c.absorb(0, outs);
+        c.settle();
+        c.try_propose(1);
+        c.settle();
+        let committed_before: Vec<_> = c.commits[0].clone();
+        assert!(!committed_before.is_empty(), "seed {seed}: nothing committed");
+        // new election at a different node
+        let mut rng = Rng::new(seed);
+        for _ in 0..3 {
+            let cand = 1 + rng.below(4) as usize;
+            let outs = c.nodes[cand].step(Input::ElectionTimeout);
+            c.absorb(cand, outs);
+            c.settle();
+            c.try_propose(9);
+            c.settle();
+        }
+        c.assert_safety(seed);
+        // every index committed before is still committed with same term
+        for (idx, term) in &committed_before {
+            for node_commits in &c.commits {
+                if let Some((_, t2)) = node_commits.iter().find(|(i2, _)| i2 == idx) {
+                    assert_eq!(t2, term, "seed {seed}: committed entry rewritten");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_scheme_invariants_random_nt() {
+    // randomized (n, t) sweep — the property-based check for Eq. 2
+    let mut rng = Rng::new(2024);
+    for _ in 0..300 {
+        let n = 3 + rng.below(126) as usize;
+        let t_max = (n - 1) / 2;
+        let t = 1 + rng.below(t_max as u64) as usize;
+        let ws = WeightScheme::geometric(n, t)
+            .unwrap_or_else(|e| panic!("n={n} t={t}: {e}"));
+        ws.validate().unwrap();
+        assert!(ws.non_cabinet_weight() < ws.ct(), "L3.1 n={n} t={t}");
+        assert!(ws.lightest_survivor_weight() > ws.ct(), "L3.2 n={n} t={t}");
+        // strictly descending and positive
+        for w in ws.weights().windows(2) {
+            assert!(w[0] > w[1] && w[1] > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fifo_reassignment_tracks_any_reply_permutation() {
+    // For arbitrary reply orders, next-round ranks must follow FIFO order.
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let n = 5 + rng.below(8) as usize % 8; // 5..12
+        let t = 1 + rng.below(((n - 1) / 2) as u64) as usize;
+        let mut leader = Node::new(0, n, Mode::cabinet(n, t));
+        let _ = leader.step(Input::ElectionTimeout);
+        for p in 1..n {
+            let _ = leader.step(Input::Receive(
+                p,
+                Message::RequestVoteReply { term: 1, from: p, granted: true },
+            ));
+        }
+        assert_eq!(leader.role(), Role::Leader);
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        let wc = leader.wclock();
+        let last = leader.log().last_index();
+        let mut order: Vec<usize> = (1..n).collect();
+        rng.shuffle(&mut order);
+        for &p in &order {
+            let _ = leader.step(Input::Receive(
+                p,
+                Message::AppendEntriesReply {
+                    term: 1,
+                    from: p,
+                    success: true,
+                    match_index: last,
+                    wclock: wc,
+                },
+            ));
+        }
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        let scheme = WeightScheme::geometric(n, t).unwrap();
+        let w = leader.weight_assignment();
+        assert!((w[0] - scheme.weight_of_rank(0)).abs() < 1e-12);
+        for (rank, &p) in order.iter().enumerate() {
+            assert!(
+                (w[p] - scheme.weight_of_rank(rank + 1)).abs() < 1e-12,
+                "n={n} t={t}: reply rank {rank} node {p} got weight {}",
+                w[p]
+            );
+        }
+    }
+}

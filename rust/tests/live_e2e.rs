@@ -1,0 +1,91 @@
+//! Live-runtime integration: real threads, real timers, PJRT apply when
+//! artifacts are present, leader failover by killing the leader's thread.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cabinet::consensus::{Mode, Payload};
+use cabinet::live::{ApplyService, LiveCluster, LiveEvent, LiveTimers};
+use cabinet::runtime::default_artifact_dir;
+use cabinet::workload::{Workload, YcsbGen};
+
+fn timers() -> LiveTimers {
+    LiveTimers::default()
+}
+
+#[test]
+fn raft_live_round_trip() {
+    let cluster = LiveCluster::start(3, Mode::Raft, timers(), None, 1);
+    cluster.force_election(0);
+    let leader = cluster.wait_for_leader(Duration::from_secs(5)).unwrap();
+    for i in 0..5u8 {
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![i])));
+    }
+    assert!(cluster.wait_for_round(6, Duration::from_secs(5)).is_some());
+    let reports = cluster.shutdown();
+    assert!(reports.iter().any(|r| r.commit_index >= 6));
+}
+
+#[test]
+fn cabinet_live_with_apply_service_converges() {
+    let svc = ApplyService::spawn(default_artifact_dir());
+    let cluster =
+        LiveCluster::start(7, Mode::cabinet(7, 2), timers(), Some(svc.submitter()), 2);
+    cluster.force_election(0);
+    let leader = cluster.wait_for_leader(Duration::from_secs(5)).unwrap();
+    let mut gen = YcsbGen::new(Workload::A, 10_000, 3);
+    for _ in 0..5 {
+        cluster.propose(leader, Payload::Ycsb(Arc::new(gen.batch(500))));
+    }
+    assert!(cluster.wait_for_round(6, Duration::from_secs(20)).is_some());
+    std::thread::sleep(Duration::from_millis(400));
+    let reports = cluster.shutdown();
+    let digests: Vec<_> = reports.iter().filter_map(|r| r.final_digest).collect();
+    assert!(digests.len() >= 5, "most replicas applied: {}", digests.len());
+    assert!(digests.windows(2).all(|w| w[0] == w[1]), "divergence: {digests:?}");
+}
+
+#[test]
+fn live_leader_failover() {
+    let cluster = LiveCluster::start(5, Mode::cabinet(5, 1), timers(), None, 3);
+    cluster.force_election(0);
+    let leader = cluster.wait_for_leader(Duration::from_secs(5)).unwrap();
+    cluster.propose(leader, Payload::Bytes(Arc::new(vec![1])));
+    assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
+
+    // crash the leader; a follower must take over within election timeout
+    cluster.stop_node(leader);
+    let new_leader = cluster
+        .wait_for_leader(Duration::from_secs(10))
+        .expect("no failover election");
+    assert_ne!(new_leader, leader);
+
+    // and the new leader can commit
+    cluster.propose(new_leader, Payload::Bytes(Arc::new(vec![2])));
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut committed = false;
+    while std::time::Instant::now() < deadline {
+        match cluster.events.recv_timeout(Duration::from_millis(250)) {
+            Ok(LiveEvent::RoundCommitted { node, .. }) if node == new_leader => {
+                committed = true;
+                break;
+            }
+            Ok(_) => {}
+            Err(_) => {}
+        }
+    }
+    assert!(committed, "new leader failed to commit");
+    cluster.shutdown();
+}
+
+#[test]
+fn reconfig_live() {
+    let cluster = LiveCluster::start(7, Mode::cabinet(7, 3), timers(), None, 4);
+    cluster.force_election(0);
+    let leader = cluster.wait_for_leader(Duration::from_secs(5)).unwrap();
+    cluster.propose(leader, Payload::Reconfig { new_t: 1 });
+    assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
+    cluster.propose(leader, Payload::Bytes(Arc::new(vec![9])));
+    assert!(cluster.wait_for_round(3, Duration::from_secs(5)).is_some());
+    cluster.shutdown();
+}

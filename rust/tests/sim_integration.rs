@@ -1,0 +1,167 @@
+//! Simulator integration tests: determinism, elections under faults,
+//! reconfiguration, HQC, and config-file round trips.
+
+use cabinet::config::sim_config_from_toml;
+use cabinet::net::delay::DelayModel;
+use cabinet::net::fault::{KillSpec, KillStrategy};
+use cabinet::sim::{run, DigestMode, Protocol, ReconfigSpec, SimConfig, WorkloadSpec};
+use cabinet::workload::Workload;
+
+fn base(proto: Protocol, n: usize) -> SimConfig {
+    let mut c = SimConfig::new(proto, n, true);
+    c.rounds = 10;
+    c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+    c
+}
+
+#[test]
+fn identical_seeds_identical_runs() {
+    for proto in [Protocol::Raft, Protocol::Cabinet { t: 2 }, Protocol::Hqc { sizes: vec![3, 3, 5] }] {
+        let c = base(proto, 11);
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(
+            a.rounds.iter().map(|r| r.latency_ms.to_bits()).collect::<Vec<_>>(),
+            b.rounds.iter().map(|r| r.latency_ms.to_bits()).collect::<Vec<_>>(),
+            "{} not deterministic",
+            a.label
+        );
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut c1 = base(Protocol::Cabinet { t: 2 }, 11);
+    let mut c2 = c1.clone();
+    c1.seed = 1;
+    c2.seed = 2;
+    let a = run(&c1);
+    let b = run(&c2);
+    assert_ne!(
+        a.rounds.iter().map(|r| r.latency_ms.to_bits()).collect::<Vec<_>>(),
+        b.rounds.iter().map(|r| r.latency_ms.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn leader_failover_mid_run() {
+    for proto in [Protocol::Raft, Protocol::Cabinet { t: 2 }] {
+        let mut c = base(proto, 7);
+        c.kill_leader_at_round = Some(5);
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 10, "{}: rounds incomplete", r.label);
+        assert!(r.elections >= 2, "{}: no re-election", r.label);
+        // post-failover rounds exist and have sane latencies
+        assert!(r.rounds.iter().all(|s| s.latency_ms > 0.0));
+    }
+}
+
+#[test]
+fn cabinet_survives_t_strong_kills_raft_equivalent_load() {
+    // worst case (Theorem 3.2): killing exactly t top-weight nodes
+    let mut c = base(Protocol::Cabinet { t: 3 }, 11);
+    c.rounds = 12;
+    c.kills = vec![KillSpec::new(5, 3, KillStrategy::Strong)];
+    let r = run(&c);
+    assert_eq!(r.rounds.len(), 12);
+}
+
+#[test]
+fn reconfig_full_ladder() {
+    // Fig. 12's ladder 24→20→15→10→5 at n=50 compresses to 5→4→3→2→1 at n=11
+    let mut c = base(Protocol::Cabinet { t: 5 }, 11);
+    c.rounds = 25;
+    c.reconfigs = (1..=4)
+        .map(|i| ReconfigSpec { round: i * 5 + 1, new_t: (5 - i) as usize })
+        .collect();
+    c.digest_mode = DigestMode::Sample;
+    let r = run(&c);
+    assert_eq!(r.rounds.len(), 25);
+    assert_eq!(r.digests_match, Some(true));
+    // mean latency of the last segment beats the first segment
+    let first: f64 = r.rounds[1..5].iter().map(|s| s.latency_ms).sum::<f64>() / 4.0;
+    let last: f64 = r.rounds[21..25].iter().map(|s| s.latency_ms).sum::<f64>() / 4.0;
+    assert!(last < first, "t ladder should speed rounds: {first} → {last}");
+}
+
+#[test]
+fn all_delay_models_complete() {
+    for delay in [
+        DelayModel::None,
+        DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 },
+        DelayModel::Skew,
+        DelayModel::Rotating { period_rounds: 3 },
+        DelayModel::Bursting,
+    ] {
+        let mut c = base(Protocol::Cabinet { t: 2 }, 11);
+        c.delay = delay.clone();
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 10, "{}", delay.name());
+    }
+}
+
+#[test]
+fn hqc_latency_exceeds_flat_protocols_with_delays() {
+    let mut hqc = base(Protocol::Hqc { sizes: vec![3, 3, 5] }, 11);
+    hqc.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+    let mut raft = base(Protocol::Raft, 11);
+    raft.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+    let h = run(&hqc);
+    let r = run(&raft);
+    // two levels of message passing ⇒ roughly double the delay exposure
+    assert!(
+        h.mean_latency_ms > 1.4 * r.mean_latency_ms,
+        "hqc {} vs raft {}",
+        h.mean_latency_ms,
+        r.mean_latency_ms
+    );
+}
+
+#[test]
+fn tpcc_and_ycsb_digest_convergence() {
+    for (kind, spec) in [
+        ("ycsb", WorkloadSpec::Ycsb { workload: Workload::F, batch: 400, records: 5000 }),
+        ("tpcc", WorkloadSpec::Tpcc { batch: 300, warehouses: 10 }),
+    ] {
+        let mut c = base(Protocol::Cabinet { t: 2 }, 7);
+        c.workload = spec;
+        c.digest_mode = DigestMode::All;
+        let r = run(&c);
+        assert_eq!(r.digests_match, Some(true), "{kind} replicas diverged");
+    }
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let cfg = sim_config_from_toml(
+        r#"
+protocol = "cabinet"
+t = 2
+n = 11
+rounds = 8
+digests = true
+
+[workload]
+kind = "ycsb"
+workload = "B"
+batch = 400
+
+[delay]
+model = "d4"
+"#,
+    )
+    .unwrap();
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 8);
+    assert_eq!(r.digests_match, Some(true));
+}
+
+#[test]
+fn throughput_accounting_consistent() {
+    let c = base(Protocol::Cabinet { t: 2 }, 7);
+    let r = run(&c);
+    let total_ops: usize = r.rounds.iter().map(|s| s.ops).sum();
+    let total_s: f64 = r.rounds.iter().map(|s| s.latency_ms).sum::<f64>() / 1000.0;
+    let expect = total_ops as f64 / total_s;
+    assert!((r.tput_ops_s - expect).abs() / expect < 1e-9);
+}
