@@ -1,0 +1,18 @@
+//! `cargo bench` target regenerating Fig 20 — the pipelined-replication
+//! depth sweep (quick scale; run `cargo run --release --example figures --
+//! fig20 --paper` for the full 100-round version). Depth 1 is the lock-step
+//! driver the rest of the figure suite uses; depths 2/4/8 exercise the
+//! pipelined engine under the Fig. 14 delay model.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig20_pipeline_depth", || {
+        last = Some(figures::fig20_pipeline_depth(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -34,8 +34,9 @@ fn main() {
         "fig17" => vec![figures::fig17(scale), figures::fig17_series(scale)],
         "fig18" => vec![figures::fig18(scale)],
         "fig19" => vec![figures::fig19(scale)],
+        "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         other => {
-            eprintln!("unknown figure {other}; use fig3..fig19 or all");
+            eprintln!("unknown figure {other}; use fig3..fig20 or all");
             std::process::exit(1);
         }
     };

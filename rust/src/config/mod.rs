@@ -21,6 +21,7 @@ use crate::workload::Workload;
 /// heterogeneous = true
 /// rounds = 100
 /// seed = 42
+/// pipeline = 4           # in-flight replication rounds (default 1 = lock-step)
 ///
 /// [workload]
 /// kind = "ycsb"          # ycsb | tpcc
@@ -66,6 +67,12 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let mut config = SimConfig::new(protocol, n, het);
     config.rounds = root.get("rounds").and_then(|v| v.as_int()).unwrap_or(20) as u64;
     config.seed = root.get("seed").and_then(|v| v.as_int()).unwrap_or(42) as u64;
+    if let Some(depth) = root.get("pipeline").and_then(|v| v.as_int()) {
+        if depth < 1 {
+            bail!("pipeline depth must be >= 1, got {depth}");
+        }
+        config.pipeline = depth as usize;
+    }
     let _ = ZoneAlloc::heterogeneous(n); // n validated by construction
 
     if let Some(w) = doc.get("workload") {
@@ -158,6 +165,7 @@ n = 50
 heterogeneous = true
 rounds = 30
 seed = 7
+pipeline = 4
 digests = true
 
 [workload]
@@ -186,6 +194,7 @@ thresholds = [3, 1]
         assert_eq!(cfg.n(), 50);
         assert_eq!(cfg.rounds, 30);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.pipeline, 4);
         assert!(matches!(cfg.protocol, Protocol::Cabinet { t: 5 }));
         assert!(matches!(cfg.delay, DelayModel::Uniform { .. }));
         assert_eq!(cfg.kills.len(), 1);
@@ -199,6 +208,15 @@ thresholds = [3, 1]
         let cfg = sim_config_from_toml("protocol = \"raft\"\n").unwrap();
         assert!(matches!(cfg.protocol, Protocol::Raft));
         assert_eq!(cfg.n(), 11);
+        assert_eq!(cfg.pipeline, 1, "default must stay lock-step");
+    }
+
+    #[test]
+    fn pipeline_depth_validated() {
+        let cfg = sim_config_from_toml("pipeline = 8\n").unwrap();
+        assert_eq!(cfg.pipeline, 8);
+        assert!(sim_config_from_toml("pipeline = 0\n").is_err());
+        assert!(sim_config_from_toml("pipeline = -3\n").is_err());
     }
 
     #[test]

@@ -114,6 +114,20 @@ impl Log {
         self.entries.iter()
     }
 
+    /// FNV-1a fingerprint over the `(index, term, wclock)` triples of the
+    /// first `upto` entries. Used by the safety harness to assert the log
+    /// matching property cheaply: if two nodes hold the same `(index, term)`
+    /// entry, their prefix digests up to that index must coincide.
+    pub fn prefix_digest(&self, upto: LogIndex) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        for e in self.entries.iter().take(upto as usize) {
+            h.write_u64(e.index);
+            h.write_u64(e.term);
+            h.write_u64(e.wclock);
+        }
+        h.finish()
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -199,6 +213,24 @@ mod tests {
         assert_eq!(log.slice(2, 4)[0].index, 3);
         assert_eq!(log.slice(5, 5).len(), 0);
         assert_eq!(log.slice(2, 99).len(), 3);
+    }
+
+    #[test]
+    fn prefix_digest_tracks_content() {
+        let mut a = Log::new();
+        let mut b = Log::new();
+        for t in [1, 1, 2] {
+            a.append(e(t), 1.0);
+            b.append(e(t), 1.0);
+        }
+        assert_eq!(a.prefix_digest(3), b.prefix_digest(3));
+        assert_eq!(a.prefix_digest(2), b.prefix_digest(2));
+        // diverge at index 3
+        b.splice(2, &[e(5)], 1.0);
+        assert_eq!(a.prefix_digest(2), b.prefix_digest(2));
+        assert_ne!(a.prefix_digest(3), b.prefix_digest(3));
+        // digest over more entries than exist == digest of the whole log
+        assert_eq!(a.prefix_digest(99), a.prefix_digest(3));
     }
 
     #[test]

@@ -18,6 +18,8 @@
 //!   * elections need `n − t` votes instead of a majority (§4.1.3);
 //!   * the failure threshold can be reconfigured at runtime (§4.1.4).
 
+use std::collections::VecDeque;
+
 use crate::consensus::log::Log;
 use crate::consensus::message::{Entry, LogIndex, Message, NodeId, Payload, Term, WClock};
 use crate::consensus::weights::WeightScheme;
@@ -91,6 +93,26 @@ pub enum Output {
     ProposalRejected(Payload),
 }
 
+/// Leader-side bookkeeping for one in-flight replication round (pipelined
+/// replication): the weight every node held when the round's entry was
+/// proposed, who has acknowledged it, and the accumulated weight against the
+/// round's own threshold. Snapshotting weights and CT at propose time keeps
+/// each round's quorum rule stable even when weights are re-dealt — or the
+/// scheme reconfigured — while the round is still in flight.
+#[derive(Clone, Debug)]
+struct InflightRound {
+    index: LogIndex,
+    wclock: WClock,
+    /// Propose-time weight assignment (all-ones in Raft mode).
+    weights: Vec<f64>,
+    /// Commit threshold captured at propose time.
+    ct: f64,
+    /// Per-node ack flags, leader pre-acked.
+    acked: Vec<bool>,
+    /// Accumulated weight of ackers (leader included).
+    acc_weight: f64,
+}
+
 /// The consensus node.
 #[derive(Clone, Debug)]
 pub struct Node {
@@ -120,6 +142,11 @@ pub struct Node {
     /// FIFO reply queue (wQ) for the current round: node ids in arrival order.
     reply_order: Vec<NodeId>,
     replied: Vec<bool>,
+    /// In-flight replication rounds in ascending index order (pipelining):
+    /// every entry this leader proposed in its current term that has not
+    /// committed yet. Per-round weight/CT snapshots make commit advancement
+    /// tolerant of out-of-order quorum formation across the window.
+    inflight: VecDeque<InflightRound>,
     /// Reconfiguration in flight (§4.1.4): the C′ entry's log index. The
     /// leader already operates under the new scheme (the paper requires the
     /// C′ round to reach consensus under the *new* WS); this marker only
@@ -152,6 +179,7 @@ impl Node {
             weight_assign,
             reply_order: Vec::with_capacity(n),
             replied: vec![false; n],
+            inflight: VecDeque::new(),
             pending_reconfig: None,
             static_weights: false,
         }
@@ -224,6 +252,18 @@ impl Node {
             Mode::Raft => self.n as f64 / 2.0,
             Mode::Cabinet { scheme } => scheme.ct(),
         }
+    }
+
+    /// Number of replication rounds this leader currently has in flight
+    /// (proposed but not yet committed). 0 on followers.
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Is a §4.1.4 reconfiguration transition still uncommitted? While true
+    /// the leader rejects new proposals.
+    pub fn reconfig_pending(&self) -> bool {
+        self.pending_reconfig.is_some()
     }
 
     // ---- the step function ----------------------------------------------
@@ -305,11 +345,29 @@ impl Node {
         let my_w = self.weight_assign[self.id];
         let idx = self.log.append(entry, my_w);
         self.match_index[self.id] = idx;
+        self.register_inflight(idx);
         if reconfig {
             // no replication during the transition (§4.1.4)
             self.pending_reconfig = Some(idx);
         }
         self.broadcast_append(out);
+    }
+
+    /// Open per-index ack bookkeeping for a freshly proposed entry,
+    /// snapshotting this round's weight assignment and commit threshold.
+    fn register_inflight(&mut self, index: LogIndex) {
+        let weights = self.weight_assign.clone();
+        let mut acked = vec![false; self.n];
+        acked[self.id] = true;
+        let acc_weight = weights[self.id];
+        self.inflight.push_back(InflightRound {
+            index,
+            wclock: self.wclock,
+            ct: self.ct(),
+            weights,
+            acked,
+            acc_weight,
+        });
     }
 
     /// Begin a new weight-clock round: re-deal the weight multiset FIFO by
@@ -526,32 +584,50 @@ impl Node {
             self.reply_order.push(from);
         }
 
+        // Per-index ack accounting: a follower matching index m has the
+        // whole prefix (log matching), so it acks every in-flight round at
+        // or below m — each under that round's own weight snapshot.
+        let matched = self.match_index[from];
+        for rec in self.inflight.iter_mut() {
+            if rec.index <= matched && !rec.acked[from] {
+                rec.acked[from] = true;
+                rec.acc_weight += rec.weights[from];
+            }
+        }
+
         self.try_advance_leader_commit(out);
     }
 
-    /// Weighted (or majority) commit rule. An index N commits when the
-    /// accumulated weight of nodes with match_index ≥ N — leader included —
-    /// exceeds CT, and log[N].term == currentTerm (Raft §5.4.2 guard).
+    /// Weighted (or majority) commit rule over the in-flight window. An
+    /// index N commits when the accumulated propose-time weight of its
+    /// ackers — leader included — exceeds the round's own CT snapshot; the
+    /// records all belong to the current term, preserving the Raft §5.4.2
+    /// guard. Scanning from the window tail down makes advancement tolerant
+    /// of out-of-order quorum formation: if a later round clears its
+    /// threshold first, every earlier round commits with it (its ackers
+    /// hold the whole prefix).
     fn try_advance_leader_commit(&mut self, out: &mut Vec<Output>) {
-        // quorum_weight(n) is monotone non-increasing in n (match_index ≥ n
-        // is stricter for larger n), so scan from the log tail down and
-        // commit at the first index that clears CT — O(gap) instead of
-        // O(gap × n) per reply (§Perf iteration 2).
         let mut target = self.commit_index;
-        for n in ((self.commit_index + 1)..=self.log.last_index()).rev() {
-            if self.log.term_at(n) != Some(self.term) {
+        let mut quorum_weight = 0.0;
+        let mut wclock = self.wclock;
+        let mut repliers = 0;
+        for rec in self.inflight.iter().rev() {
+            if rec.index <= self.commit_index {
                 continue;
             }
-            if self.quorum_weight(n) > self.ct() {
-                target = n;
+            if rec.acc_weight > rec.ct {
+                target = rec.index;
+                quorum_weight = rec.acc_weight;
+                wclock = rec.wclock;
+                // followers whose acks closed this round's quorum (the
+                // leader's own pre-ack excluded)
+                repliers = rec.acked.iter().filter(|&&a| a).count() - 1;
                 break;
             }
         }
         if target > self.commit_index {
-            let repliers = self.reply_order.len();
-            let qw = self.quorum_weight(target);
-            let wclock = self.wclock;
             self.advance_commit_to(target, out);
+            self.inflight.retain(|rec| rec.index > target);
             if let Some(idx) = self.pending_reconfig {
                 if self.commit_index >= idx {
                     // transition committed: accept proposals again
@@ -562,28 +638,8 @@ impl Node {
                 wclock,
                 index: target,
                 repliers,
-                quorum_weight: qw,
+                quorum_weight,
             });
-        }
-    }
-
-    /// Total current weight of nodes whose match_index ≥ n (leader incl.).
-    fn quorum_weight(&self, n: LogIndex) -> f64 {
-        match &self.mode {
-            Mode::Raft => {
-                self.match_index
-                    .iter()
-                    .enumerate()
-                    .filter(|&(i, &m)| i == self.id || m >= n)
-                    .count() as f64
-            }
-            Mode::Cabinet { .. } => self
-                .match_index
-                .iter()
-                .enumerate()
-                .filter(|&(i, &m)| i == self.id || m >= n)
-                .map(|(i, _)| self.weight_assign[i])
-                .sum(),
         }
     }
 
@@ -657,6 +713,7 @@ impl Node {
         self.weight_assign = initial_assignment(self.id, self.n, &self.mode);
         self.reply_order.clear();
         self.replied = vec![false; self.n];
+        self.inflight.clear();
         self.pending_reconfig = None;
         out.push(Output::BecameLeader);
         out.push(Output::StartHeartbeat);
@@ -668,6 +725,7 @@ impl Node {
             my_w,
         );
         self.match_index[self.id] = idx;
+        self.register_inflight(idx);
         self.broadcast_append(out);
     }
 
@@ -678,6 +736,8 @@ impl Node {
         }
         self.term = term;
         self.role = Role::Follower;
+        // retreat-on-conflict: any in-flight rounds die with the leadership
+        self.inflight.clear();
         if was_leader {
             out.push(Output::StopHeartbeat);
             out.push(Output::SteppedDown);
@@ -713,6 +773,7 @@ fn initial_assignment(id: NodeId, n: usize, mode: &Mode) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     /// Drive a full in-memory cluster synchronously: deliver all outputs
     /// until quiescent. Returns commits per node.
@@ -1115,6 +1176,194 @@ mod tests {
             },
         ));
         assert!(outs.iter().any(|o| matches!(o, Output::Commit(_))));
+    }
+
+    /// Build an n-node leader with all votes collected, replies pending.
+    fn solo_leader(n: usize, mode: Mode) -> Node {
+        let mut leader = Node::new(0, n, mode);
+        let _ = leader.step(Input::ElectionTimeout);
+        for p in 1..n {
+            let _ = leader.step(Input::Receive(
+                p,
+                Message::RequestVoteReply { term: 1, from: p, granted: true },
+            ));
+            if leader.role() == Role::Leader {
+                break;
+            }
+        }
+        assert_eq!(leader.role(), Role::Leader);
+        leader
+    }
+
+    fn ack(leader: &mut Node, from: NodeId, match_index: u64, wclock: u64) -> Vec<Output> {
+        leader.step(Input::Receive(
+            from,
+            Message::AppendEntriesReply { term: 1, from, success: true, match_index, wclock },
+        ))
+    }
+
+    #[test]
+    fn pipelined_proposals_track_inflight_window() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 1));
+        // commit the noop barrier first
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        assert_eq!(leader.commit_index(), noop);
+        assert_eq!(leader.inflight_len(), 0);
+        // keep 4 rounds in flight without waiting for any ack
+        for k in 0..4u8 {
+            let _ = leader.step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+        }
+        assert_eq!(leader.inflight_len(), 4);
+        assert_eq!(leader.log().last_index(), noop + 4);
+        // one follower acking the whole suffix commits all four at once
+        let wc = leader.wclock();
+        let outs = ack(&mut leader, 1, noop + 4, wc);
+        let outs2 = ack(&mut leader, 2, noop + 4, wc);
+        let committed: Vec<u64> = outs
+            .iter()
+            .chain(outs2.iter())
+            .filter_map(|o| match o {
+                Output::Commit(e) => Some(e.index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(committed, vec![noop + 1, noop + 2, noop + 3, noop + 4]);
+        assert_eq!(leader.inflight_len(), 0);
+    }
+
+    #[test]
+    fn later_round_quorum_commits_earlier_rounds() {
+        // Out-of-order ack tolerance: acks that name only the latest index
+        // still commit the whole prefix (the ackers hold it by log matching).
+        let mut leader = solo_leader(7, Mode::cabinet(7, 2));
+        let noop = leader.log().last_index();
+        for k in 0..3u8 {
+            let _ = leader.step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+        }
+        let last = leader.log().last_index();
+        assert_eq!(last, noop + 3);
+        let wc = leader.wclock();
+        // two cabinet members ack straight at the tail — never the
+        // intermediate indices — and everything through `last` commits
+        let o1 = ack(&mut leader, 1, last, wc);
+        assert!(o1.iter().all(|o| !matches!(o, Output::RoundCommitted { .. })));
+        let o2 = ack(&mut leader, 2, last, wc);
+        assert!(
+            o2.iter().any(
+                |o| matches!(o, Output::RoundCommitted { index, .. } if *index == last)
+            ),
+            "tail quorum must commit the full prefix"
+        );
+        assert_eq!(leader.commit_index(), last);
+    }
+
+    #[test]
+    fn inflight_snapshots_survive_mid_pipeline_reweighting() {
+        // Round k's quorum is judged under round k's weight deal even after
+        // later proposals re-deal the weights.
+        let n = 7;
+        let mut leader = solo_leader(n, Mode::cabinet(n, 2));
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        assert_eq!(leader.commit_index(), noop);
+        // round A: nodes 1 and 2 replied fastest last round, so they hold
+        // the top follower weights in A's deal
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        let wc_a = leader.wclock();
+        let idx_a = leader.log().last_index();
+        // round B proposed before any round-A ack: re-deals weights again
+        // (same FIFO order — 1, 2 — but a fresh snapshot is taken)
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        // cabinet members 1+2 acking round A under its own snapshot commit it
+        ack(&mut leader, 1, idx_a, wc_a);
+        let outs = ack(&mut leader, 2, idx_a, wc_a);
+        assert!(
+            outs.iter().any(
+                |o| matches!(o, Output::RoundCommitted { index, .. } if *index == idx_a)
+            ),
+            "round A must commit under its propose-time weights"
+        );
+        assert_eq!(leader.commit_index(), idx_a);
+        assert_eq!(leader.inflight_len(), 1, "round B still in flight");
+    }
+
+    #[test]
+    fn raft_pipeline_still_needs_majority_per_index() {
+        let mut leader = solo_leader(5, Mode::Raft);
+        let noop = leader.log().last_index();
+        for k in 0..2u8 {
+            let _ = leader.step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+        }
+        let last = leader.log().last_index();
+        assert_eq!(last, noop + 2);
+        // one follower at the tail: 2/5 — not a majority
+        let outs = ack(&mut leader, 1, last, 0);
+        assert!(outs.iter().all(|o| !matches!(o, Output::Commit(_))));
+        assert_eq!(leader.commit_index(), 0);
+        // second follower: 3/5 majority commits the whole window
+        let outs = ack(&mut leader, 2, last, 0);
+        assert!(outs.iter().any(|o| matches!(o, Output::Commit(_))));
+        assert_eq!(leader.commit_index(), last);
+    }
+
+    #[test]
+    fn stepping_down_clears_inflight_window() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 2));
+        for _ in 0..3 {
+            let _ = leader.step(Input::Propose(Payload::Noop));
+        }
+        assert!(leader.inflight_len() >= 3);
+        let _ = leader.step(Input::Receive(
+            1,
+            Message::RequestVote { term: 99, candidate: 1, last_log_index: 50, last_log_term: 98 },
+        ));
+        assert_eq!(leader.role(), Role::Follower);
+        assert_eq!(leader.inflight_len(), 0, "retreat must drop the window");
+    }
+
+    #[test]
+    fn reconfig_mid_pipeline_keeps_old_round_thresholds() {
+        // Rounds in flight when a reconfig is proposed commit under the CT
+        // they were proposed with; the reconfig round itself uses the new
+        // scheme (§4.1.4). The ack patterns are chosen to discriminate the
+        // two snapshots: each quorum clears exactly one scheme's CT.
+        let n = 11;
+        let mut leader = solo_leader(n, Mode::cabinet(n, 4));
+        let noop = leader.log().last_index();
+        // commit the barrier (top-5 under t=4 clears its CT by I1)
+        for p in 1..=4 {
+            ack(&mut leader, p, noop, leader.wclock());
+        }
+        assert_eq!(leader.commit_index(), noop);
+        // a normal round under t=4, then a reconfig to t=2 mid-pipeline
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        let idx_old = leader.log().last_index();
+        let wc_old = leader.wclock();
+        let _ = leader.step(Input::Propose(Payload::Reconfig { new_t: 2 }));
+        assert!(leader.reconfig_pending());
+        let idx_rc = leader.log().last_index();
+        // leader + 4 acks at idx_old: clears the OLD round's t=4 CT (top-5,
+        // I1) and commits it — while the reconfig round, unacked, stays put
+        for p in 1..=4usize {
+            ack(&mut leader, p, idx_old, wc_old);
+        }
+        assert_eq!(leader.commit_index(), idx_old, "old round commits under old CT");
+        assert!(leader.reconfig_pending(), "reconfig round must still be in flight");
+        // leader + 2 acks at idx_rc: clears the NEW t=2 CT (top-3, I1) but
+        // would NOT clear the old t=4 CT (top-3 < CT by I2) — committing
+        // here proves the reconfig round is judged under its own snapshot
+        for p in 1..=2usize {
+            ack(&mut leader, p, idx_rc, wc_old + 1);
+        }
+        assert_eq!(leader.commit_index(), idx_rc, "t+1 of the new scheme commits");
+        assert!(!leader.reconfig_pending());
+        match leader.mode() {
+            Mode::Cabinet { scheme } => assert_eq!(scheme.t(), 2),
+            _ => panic!("not cabinet"),
+        }
     }
 
     #[test]

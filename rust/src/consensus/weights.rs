@@ -20,15 +20,30 @@ pub const BISECT_ITERS: usize = 80;
 pub const RATIO_MARGIN: f64 = 0.05;
 
 /// Errors from weight-scheme construction/validation.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WeightError {
-    #[error("cluster size {0} too small (need n >= 3)")]
     ClusterTooSmall(usize),
-    #[error("failure threshold t={t} out of range [1, (n-1)/2]={max} for n={n}")]
     ThresholdOutOfRange { n: usize, t: usize, max: usize },
-    #[error("weight scheme violates invariant {0}")]
     InvariantViolated(&'static str),
 }
+
+impl fmt::Display for WeightError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WeightError::ClusterTooSmall(n) => {
+                write!(f, "cluster size {n} too small (need n >= 3)")
+            }
+            WeightError::ThresholdOutOfRange { n, t, max } => {
+                write!(f, "failure threshold t={t} out of range [1, (n-1)/2]={max} for n={n}")
+            }
+            WeightError::InvariantViolated(inv) => {
+                write!(f, "weight scheme violates invariant {inv}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WeightError {}
 
 /// A validated weight scheme: descending weights + consensus threshold.
 #[derive(Clone, Debug, PartialEq)]

@@ -3,11 +3,21 @@
 //! Full-system reproduction of "Cabinet: Dynamically Weighted Consensus Made
 //! Fast" (Zhang et al., 2025). Layer-3 Rust coordinator implementing Raft,
 //! Cabinet weighted consensus, and an HQC baseline over both a deterministic
-//! discrete-event simulator and a live tokio runtime; Layer-2/1 JAX + Pallas
-//! state-machine kernels AOT-compiled to HLO and executed via PJRT.
+//! discrete-event simulator and a live threaded runtime; Layer-2/1 JAX +
+//! Pallas state-machine kernels AOT-compiled to HLO and executed via PJRT.
+//!
+//! Replication is pipelined: the leader keeps up to `SimConfig::pipeline`
+//! rounds of AppendEntries in flight, with per-index weighted-ack
+//! bookkeeping and out-of-order-ack-tolerant commit advancement under both
+//! the Raft majority rule and the Cabinet weighted rule (weight re-deals
+//! and §4.1.4 reconfigurations may land mid-window — every round is judged
+//! by its propose-time snapshot). Depth 1 is the paper's lock-step
+//! benchmark pipeline, reproduced bit-for-bit; see README "Pipelined
+//! replication" and `bench::figures::fig20_pipeline_depth`.
 
 pub mod config;
 pub mod consensus;
+pub(crate) mod util;
 pub mod net;
 pub mod sim;
 pub mod live;

@@ -390,6 +390,29 @@ mod tests {
     }
 
     #[test]
+    fn live_pipelined_burst_commits_everything() {
+        // The same per-index ack engine drives the live path: a client that
+        // never waits between proposals keeps a deep window in flight, and
+        // every round must still commit, in order.
+        let cluster =
+            LiveCluster::start(5, Mode::cabinet(5, 1), LiveTimers::default(), None, 23);
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        for i in 0..8u8 {
+            cluster.propose(leader, Payload::Bytes(Arc::new(vec![i])));
+        }
+        // noop barrier (1) + 8 batches → index 9
+        assert!(
+            cluster.wait_for_round(9, Duration::from_secs(10)).is_some(),
+            "burst of 8 in-flight proposals must all commit"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        let caught_up = reports.iter().filter(|r| r.commit_index >= 9).count();
+        assert!(caught_up >= 3, "quorum must hold the full window: {reports:?}");
+    }
+
+    #[test]
     fn live_cabinet_applies_batches_and_converges() {
         let svc = crate::live::apply::ApplyService::spawn(PathBuf::from("/nonexistent"));
         let cluster = LiveCluster::start(

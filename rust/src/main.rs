@@ -54,7 +54,7 @@ USAGE:
   cabinet sim --config exp.toml
   cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
               [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
-              [--seed S]
+              [--seed S] [--pipeline D]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts";
@@ -96,6 +96,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig17" => vec![figures::fig17(scale), figures::fig17_series(scale)],
         "fig18" => vec![figures::fig18(scale)],
         "fig19" => vec![figures::fig19(scale)],
+        "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -129,6 +130,12 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         if let Some(s) = flag(&mut args, "--seed") {
             c.seed = s.parse()?;
         }
+        if let Some(p) = flag(&mut args, "--pipeline") {
+            c.pipeline = p.parse()?;
+            if c.pipeline < 1 {
+                bail!("--pipeline must be >= 1");
+            }
+        }
         if let Some(w) = flag(&mut args, "--workload") {
             if w.eq_ignore_ascii_case("tpcc") {
                 c.workload = cabinet::sim::WorkloadSpec::tpcc2k();
@@ -151,9 +158,14 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         c.digest_mode = DigestMode::Sample;
         c
     };
+    let pipeline = config.pipeline;
     let r = run(&config);
     println!("experiment: {}", r.label);
     println!("rounds:     {}", r.rounds.len());
+    if pipeline > 1 {
+        println!("pipeline:   depth {pipeline}");
+        println!("wall tput:  {} ops/s", cabinet::bench::fmt_tps(r.wall_tput_ops_s()));
+    }
     println!("throughput: {} ops/s", cabinet::bench::fmt_tps(r.tput_ops_s));
     println!(
         "latency:    mean {:.1} ms   p50 {:.1} ms   p99 {:.1} ms",

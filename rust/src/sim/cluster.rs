@@ -9,6 +9,7 @@
 //! (× contention). Batch apply cost comes from the same cost model as the
 //! AOT kernels (`storage::doc` / `storage::rel`).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::consensus::hqc::{HqcMsg, HqcNode, HqcOutput, HqcTopology};
@@ -20,6 +21,7 @@ use crate::net::rng::Rng;
 use crate::net::topology::ZoneAlloc;
 use crate::sim::event::EventQueue;
 use crate::storage::{DocStore, RelStore};
+use crate::util::Fnv64;
 use crate::workload::{TpccGen, Workload, YcsbGen};
 
 /// Which consensus protocol the cluster runs.
@@ -104,6 +106,10 @@ pub struct SimConfig {
     pub rpc_proc_ms: f64,
     /// P2 ablation: freeze the initial weight assignment (no re-dealing).
     pub static_weights: bool,
+    /// Max replication rounds the leader keeps in flight. 1 = the paper's
+    /// lock-step benchmark pipeline (Fig. 7); >1 enables the pipelined
+    /// driver, which overlaps replication of consecutive batches.
+    pub pipeline: usize,
 }
 
 impl SimConfig {
@@ -129,6 +135,7 @@ impl SimConfig {
             heartbeat_ms: 400.0,
             rpc_proc_ms: 0.15,
             static_weights: false,
+            pipeline: 1,
         }
     }
 
@@ -141,6 +148,8 @@ impl SimConfig {
 #[derive(Clone, Copy, Debug)]
 pub struct RoundStat {
     pub round: u64,
+    /// Log index of the entry that carried this round's batch.
+    pub entry_index: u64,
     /// Virtual time the round was proposed (ms).
     pub start_ms: f64,
     /// Commit latency for the round (ms).
@@ -193,6 +202,62 @@ impl SimResult {
             digests_match: digests,
             elections,
         }
+    }
+
+    /// Committed throughput over the run's wall-clock span (ops/s): total
+    /// live ops divided by (last commit time − first propose time). Unlike
+    /// `tput_ops_s` (which sums per-round latencies, the right measure for
+    /// the lock-step pipeline), this credits the overlap a pipelined run
+    /// achieves, so it is the comparison metric for the Fig. 20 depth sweep.
+    pub fn wall_tput_ops_s(&self) -> f64 {
+        let Some(first) = self.rounds.iter().map(|r| r.start_ms).reduce(f64::min) else {
+            return 0.0;
+        };
+        let end = self
+            .rounds
+            .iter()
+            .map(|r| r.start_ms + r.latency_ms)
+            .fold(first, f64::max);
+        let span_ms = end - first;
+        if span_ms <= 0.0 {
+            return 0.0;
+        }
+        let ops: usize = self.rounds.iter().map(|r| r.ops).sum();
+        ops as f64 / (span_ms / 1000.0)
+    }
+
+    /// Bit-exact digest of the commit sequence (round numbers and the log
+    /// indices they committed at, in commit order) — the deterministic-replay
+    /// regression tests compare these across runs of the same seed.
+    pub fn commit_sequence_digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for r in &self.rounds {
+            h.write_u64(r.round);
+            h.write_u64(r.entry_index);
+            h.write_u64(r.ops as u64);
+        }
+        h.finish()
+    }
+
+    /// Bit-exact digest over every per-round metric (virtual times included)
+    /// plus the aggregates — two runs agree on this iff they took the exact
+    /// same virtual-time trajectory.
+    pub fn metrics_digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for r in &self.rounds {
+            h.write_u64(r.round);
+            h.write_u64(r.entry_index);
+            h.write_u64(r.start_ms.to_bits());
+            h.write_u64(r.latency_ms.to_bits());
+            h.write_u64(r.tput_ops_s.to_bits());
+            h.write_u64(r.ops as u64);
+            h.write_u64(r.repliers as u64);
+        }
+        h.write_u64(self.tput_ops_s.to_bits());
+        h.write_u64(self.mean_latency_ms.to_bits());
+        h.write_u64(self.p99_latency_ms.to_bits());
+        h.write_u64(self.elections);
+        h.finish()
     }
 }
 
@@ -257,10 +322,21 @@ impl WorkloadDriver {
 }
 
 /// Run one experiment; deterministic in (config, seed).
+///
+/// `pipeline = 1` runs the paper's lock-step round driver (bit-for-bit the
+/// historical behavior, so every existing figure stays valid); `pipeline > 1`
+/// runs the pipelined driver, which keeps up to that many replication rounds
+/// in flight at the leader.
 pub fn run(config: &SimConfig) -> SimResult {
     match &config.protocol {
         Protocol::Hqc { sizes } => run_hqc(config, sizes.clone()),
-        Protocol::Raft | Protocol::Cabinet { .. } => run_quorum(config),
+        Protocol::Raft | Protocol::Cabinet { .. } => {
+            if config.pipeline > 1 {
+                run_quorum_pipelined(config)
+            } else {
+                run_quorum(config)
+            }
+        }
     }
 }
 
@@ -470,6 +546,415 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     SimResult::from_rounds(config.protocol.label(), stats, digests, elections)
 }
 
+// ---------------------------------------------------------------------------
+// Pipelined Raft / Cabinet simulation (pipeline depth > 1)
+// ---------------------------------------------------------------------------
+
+/// One workload round the pipelined harness has proposed but whose commit it
+/// has not yet observed.
+struct PendingRound {
+    round: u64,
+    entry_index: u64,
+    /// Term of the entry at propose time — (index, term) is exact entry
+    /// identity (Raft log matching), so a leader change can tell surviving
+    /// rounds from overwritten ones.
+    term: u64,
+    start_ms: f64,
+    ops: usize,
+    leader_apply_done: f64,
+    batch: Batch,
+}
+
+/// The pipelined round driver: the leader keeps up to `config.pipeline`
+/// replication rounds in flight. Proposals are issued back-to-back until the
+/// window fills; every `RoundCommitted` from the current leader retires the
+/// committed prefix of the window (the consensus layer advances the commit
+/// index out-of-order-ack-tolerantly, see `consensus::node`) and immediately
+/// refills it. Virtual-time apply costs overlap: a follower is charged each
+/// batch's apply cost exactly once — on the AppendEntries that first ships
+/// it — so a window of overlapping retransmissions does not re-execute work.
+#[allow(clippy::too_many_lines)]
+fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
+    let n = config.n();
+    let depth = config.pipeline.max(1);
+    let mode = match &config.protocol {
+        Protocol::Raft => Mode::Raft,
+        Protocol::Cabinet { t } => Mode::cabinet(n, *t),
+        Protocol::Hqc { .. } => unreachable!(),
+    };
+    let mut root_rng = Rng::new(config.seed);
+    let mut net_rng = root_rng.fork(1);
+    let mut timer_rng = root_rng.fork(2);
+    let mut kill_rng = root_rng.fork(3);
+    let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
+
+    let mut nodes: Vec<Node> = (0..n)
+        .map(|i| {
+            let mut node = Node::new(i, n, mode.clone());
+            node.set_static_weights(config.static_weights);
+            node
+        })
+        .collect();
+    let mut alive = vec![true; n];
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut el_gen = vec![0u64; n];
+    let mut hb_gen = vec![0u64; n];
+
+    let tracked: Vec<usize> = match config.digest_mode {
+        DigestMode::Off => vec![],
+        DigestMode::Sample => vec![0, n - 1],
+        DigestMode::All => (0..n).collect(),
+    };
+    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
+    let mut rel_stores: Vec<RelStore> =
+        tracked.iter().map(|_| RelStore::new(driver.warehouses.max(1) as usize)).collect();
+    let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
+
+    let mut round: u64 = 0; // completed rounds
+    let mut proposed: u64 = 0; // rounds handed to the leader
+    let mut stats: Vec<RoundStat> = Vec::with_capacity(config.rounds as usize);
+    let mut current_leader: Option<NodeId> = None;
+    let mut elections: u64 = 0;
+    let mut pending: Vec<PendingRound> = Vec::with_capacity(depth);
+    // entry index → batch apply cost at unit speed (for follower service
+    // times); retained for the whole run so retransmits resolve too
+    let mut batch_costs: HashMap<u64, f64> = HashMap::new();
+    let mut reconfig_queue: Vec<ReconfigSpec> = config.reconfigs.clone();
+    reconfig_queue.sort_by_key(|r| r.round);
+    let mut kills = config.kills.clone();
+    kills.sort_by_key(|k| k.round);
+    let mut kill_leader_at = config.kill_leader_at_round; // one-shot
+
+    for node in 0..n {
+        let delay = if node == 0 {
+            0.0
+        } else {
+            timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1)
+        };
+        el_gen[node] += 1;
+        q.push_after(delay, Ev::ElectionTimer { node, generation: el_gen[node] });
+    }
+    q.push_after(1.0, Ev::ProposeNext);
+
+    let max_virtual_ms = 1e9;
+    // leadership epoch tracking: when a new leader takes over, pending
+    // rounds whose entries did not survive into its log are void
+    let mut known_leader: Option<NodeId> = None;
+
+    while round < config.rounds {
+        match q.next_time() {
+            Some(t) if t <= max_virtual_ms => {}
+            _ => break, // queue drained or virtual-time budget exhausted
+        }
+        let Some((now, ev)) = q.pop() else { break };
+        match ev {
+            Ev::ElectionTimer { node, generation } => {
+                if !alive[node] || generation != el_gen[node] {
+                    continue;
+                }
+                let outs = nodes[node].step(Input::ElectionTimeout);
+                handle_outputs_pipelined(
+                    node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
+                    &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::HeartbeatTimer { node, generation } => {
+                if !alive[node] || generation != hb_gen[node] {
+                    continue;
+                }
+                let outs = nodes[node].step(Input::HeartbeatTimeout);
+                handle_outputs_pipelined(
+                    node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
+                    &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::Deliver { to, from, msg } => {
+                if !alive[to] {
+                    continue;
+                }
+                let service =
+                    service_ms_pipelined(config, &nodes[to], to, &msg, round, &batch_costs);
+                let outs = nodes[to].step(Input::Receive(from, msg));
+                handle_outputs_pipelined(
+                    to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
+                    &mut rel_stores, is_tpcc,
+                );
+            }
+            Ev::ProposeNext => {
+                if pending.len() >= depth || proposed >= config.rounds {
+                    continue; // window full (a commit re-arms the proposer)
+                }
+                let Some(leader) = current_leader.filter(|&l| alive[l]) else {
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                };
+                if nodes[leader].role() != Role::Leader {
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                }
+                if nodes[leader].reconfig_pending() {
+                    // §4.1.4: the pipeline drains across a reconfiguration
+                    q.push_after(5.0, Ev::ProposeNext);
+                    continue;
+                }
+                let next_round = proposed + 1;
+
+                // scheduled kills fire at the start of their round
+                while let Some(k) = kills.first() {
+                    if k.round != next_round {
+                        break;
+                    }
+                    let weights = nodes[leader].weight_assignment().to_vec();
+                    for v in k.victims(&weights, leader, &alive, &mut kill_rng) {
+                        alive[v] = false;
+                    }
+                    kills.remove(0);
+                }
+                if kill_leader_at == Some(next_round) {
+                    kill_leader_at = None; // fire exactly once
+                    alive[leader] = false;
+                    current_leader = None;
+                    // rounds that died in the old leader's window get
+                    // regenerated (fresh batches) under the next leader
+                    proposed = proposed.saturating_sub(pending.len() as u64);
+                    pending.clear();
+                    q.push_after(50.0, Ev::ProposeNext);
+                    continue;
+                }
+                // scheduled reconfiguration (not counted as a round) — may
+                // land while earlier rounds are still in flight; their
+                // propose-time weight/CT snapshots keep them correct
+                if let Some(rc) = reconfig_queue.first().copied() {
+                    if rc.round == next_round {
+                        reconfig_queue.remove(0);
+                        let outs = nodes[leader]
+                            .step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
+                        handle_outputs_pipelined(
+                            leader, outs, 0.0, config, &mut q, &mut net_rng,
+                            &mut timer_rng, &alive, &mut el_gen, &mut hb_gen,
+                            &mut current_leader, &mut elections, &mut pending,
+                            &mut stats, &mut round, &tracked, &mut doc_stores,
+                            &mut rel_stores, is_tpcc,
+                        );
+                        q.push_after(1.0, Ev::ProposeNext);
+                        continue;
+                    }
+                }
+
+                let (payload, batch, cost_ms, ops) = driver.next_batch();
+                let leader_speed = effective_speed(config, leader, next_round);
+                let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
+                let outs = nodes[leader].step(Input::Propose(payload));
+                let entry_index = nodes[leader].log().last_index();
+                batch_costs.insert(entry_index, cost_ms);
+                proposed = next_round;
+                pending.push(PendingRound {
+                    round: next_round,
+                    entry_index,
+                    term: nodes[leader].term(),
+                    start_ms: now,
+                    ops,
+                    leader_apply_done,
+                    batch,
+                });
+                handle_outputs_pipelined(
+                    leader, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
+                    &mut rel_stores, is_tpcc,
+                );
+                if pending.len() < depth && proposed < config.rounds {
+                    // back-to-back proposal to fill the window
+                    q.push_after(0.2, Ev::ProposeNext);
+                }
+            }
+        }
+        // A leadership change voids every pending round whose entry did not
+        // survive into the new leader's log — (index, term) is exact entry
+        // identity by Raft log matching. The winner overwrites dead slots,
+        // so retiring them on its commits would misattribute fresh entries
+        // to old batches. Dropped rounds are regenerated with fresh batches.
+        // This runs before any RoundCommitted from the new leader can be
+        // processed (its quorum needs at least one more network round trip).
+        if current_leader != known_leader {
+            if let Some(x) = current_leader {
+                pending.retain(|p| {
+                    let survived =
+                        nodes[x].log().term_at(p.entry_index) == Some(p.term);
+                    if !survived {
+                        proposed -= 1;
+                    }
+                    survived
+                });
+            }
+            known_leader = current_leader;
+        }
+    }
+
+    let digests = if tracked.is_empty() {
+        None
+    } else if is_tpcc {
+        let d0 = rel_stores[0].stream_digest();
+        Some(rel_stores.iter().all(|s| s.stream_digest() == d0))
+    } else {
+        let d0 = doc_stores[0].state_digest();
+        Some(doc_stores.iter().all(|s| s.state_digest() == d0))
+    };
+
+    SimResult::from_rounds(config.protocol.label(), stats, digests, elections)
+}
+
+/// Pipelined-driver service time: apply cost accrues per batch entry the
+/// node will actually append — the message must pass the term and
+/// log-consistency checks, and each entry is charged at its own round's
+/// cost only the first time it ships. Overlapping retransmissions inside
+/// the window and rejected appends (stale term / log mismatch after a
+/// failover) never re-charge an executed batch.
+fn service_ms_pipelined(
+    config: &SimConfig,
+    receiver: &Node,
+    node: NodeId,
+    msg: &Message,
+    round: u64,
+    batch_costs: &HashMap<u64, f64>,
+) -> f64 {
+    match msg {
+        Message::AppendEntries { term, prev_log_index, prev_log_term, entries, .. }
+            if !entries.is_empty() =>
+        {
+            let speed = effective_speed(config, node, round);
+            let accepted = *term >= receiver.term()
+                && receiver.log().matches(*prev_log_index, *prev_log_term);
+            let apply: f64 = if accepted {
+                let last = receiver.log().last_index();
+                entries
+                    .iter()
+                    .filter(|e| {
+                        e.index > last
+                            && matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_))
+                    })
+                    .map(|e| batch_costs.get(&e.index).copied().unwrap_or(0.0))
+                    .sum()
+            } else {
+                0.0
+            };
+            (config.rpc_proc_ms + apply) / speed
+        }
+        _ => config.rpc_proc_ms / effective_speed(config, node, round),
+    }
+}
+
+/// Route one node's outputs for the pipelined driver; sends leave
+/// `extra_delay` ms after now (the node's service time).
+///
+/// Deliberately a separate copy of the lock-step `handle_outputs_delayed`
+/// (only the `RoundCommitted` arm differs): the lock-step handler is frozen
+/// so `pipeline = 1` keeps reproducing the historical figures bit-for-bit,
+/// and sharing the routing scaffold would couple every future pipelined
+/// change to that guarantee.
+#[allow(clippy::too_many_arguments)]
+fn handle_outputs_pipelined(
+    node: NodeId,
+    outs: Vec<Output>,
+    extra_delay: f64,
+    config: &SimConfig,
+    q: &mut EventQueue<Ev>,
+    net_rng: &mut Rng,
+    timer_rng: &mut Rng,
+    alive: &[bool],
+    el_gen: &mut [u64],
+    hb_gen: &mut [u64],
+    current_leader: &mut Option<NodeId>,
+    elections: &mut u64,
+    pending: &mut Vec<PendingRound>,
+    stats: &mut Vec<RoundStat>,
+    round: &mut u64,
+    tracked: &[usize],
+    doc_stores: &mut [DocStore],
+    rel_stores: &mut [RelStore],
+    is_tpcc: bool,
+) {
+    let n = config.n();
+    let now = q.now();
+    for o in outs {
+        match o {
+            Output::Send(to, msg) => {
+                if !alive[to] {
+                    continue;
+                }
+                let shaped_end =
+                    if node == current_leader.unwrap_or(usize::MAX) { to } else { node };
+                let lat = config.delay.link_latency(
+                    shaped_end,
+                    n,
+                    now,
+                    *round,
+                    msg.wire_size(),
+                    net_rng,
+                );
+                q.push_after(extra_delay + lat, Ev::Deliver { to, from: node, msg });
+            }
+            Output::ResetElectionTimer => {
+                el_gen[node] += 1;
+                let d = timer_rng
+                    .range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
+                q.push_after(d, Ev::ElectionTimer { node, generation: el_gen[node] });
+            }
+            Output::StartHeartbeat => {
+                hb_gen[node] += 1;
+                q.push_after(
+                    config.heartbeat_ms,
+                    Ev::HeartbeatTimer { node, generation: hb_gen[node] },
+                );
+            }
+            Output::StopHeartbeat => {
+                hb_gen[node] += 1;
+            }
+            Output::BecameLeader => {
+                *current_leader = Some(node);
+                *elections += 1;
+            }
+            Output::SteppedDown => {
+                if *current_leader == Some(node) {
+                    *current_leader = None;
+                }
+            }
+            Output::RoundCommitted { index, repliers, .. } => {
+                if Some(node) != *current_leader {
+                    continue;
+                }
+                // retire the committed prefix of the window, in order
+                while pending.first().map_or(false, |p| p.entry_index <= index) {
+                    let p = pending.remove(0);
+                    let commit_time = now.max(p.leader_apply_done);
+                    let latency = commit_time - p.start_ms;
+                    stats.push(RoundStat {
+                        round: p.round,
+                        entry_index: p.entry_index,
+                        start_ms: p.start_ms,
+                        latency_ms: latency,
+                        tput_ops_s: p.ops as f64 / (latency / 1000.0),
+                        ops: p.ops,
+                        repliers,
+                    });
+                    if p.round > *round {
+                        *round = p.round;
+                    }
+                    apply_tracked(&p.batch, tracked, doc_stores, rel_stores, is_tpcc);
+                }
+                q.push_after(0.2, Ev::ProposeNext); // client turnaround
+            }
+            Output::Commit(_) | Output::ProposalRejected(_) => {}
+        }
+    }
+}
+
 /// Service time charged on a node for processing a message (ms).
 fn service_ms(config: &SimConfig, node: NodeId, msg: &Message, round: u64, batch_cost_ms: f64) -> f64 {
     match msg {
@@ -604,6 +1089,7 @@ fn handle_outputs_delayed(
                         let latency = commit_time - start;
                         stats.push(RoundStat {
                             round: *rnd,
+                            entry_index: pending_entry_index,
                             start_ms: *start,
                             latency_ms: latency,
                             tput_ops_s: *ops as f64 / (latency / 1000.0),
@@ -729,6 +1215,7 @@ fn run_hqc(config: &SimConfig, sizes: Vec<usize>) -> SimResult {
         let latency = (end.max(root_done) - start).max(0.01);
         stats.push(RoundStat {
             round,
+            entry_index: round,
             start_ms: start,
             latency_ms: latency,
             tput_ops_s: ops as f64 / (latency / 1000.0),
@@ -841,6 +1328,90 @@ mod tests {
         let r = run(&c);
         assert_eq!(r.rounds.len(), 5);
         assert_eq!(r.digests_match, Some(true));
+    }
+
+    fn quick_depth(protocol: Protocol, n: usize, depth: usize, rounds: u64) -> SimResult {
+        let mut c = SimConfig::new(protocol, n, true);
+        c.rounds = rounds;
+        c.pipeline = depth;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        run(&c)
+    }
+
+    #[test]
+    fn pipelined_completes_all_rounds_in_order() {
+        for depth in [2usize, 4, 8] {
+            let r = quick_depth(Protocol::Cabinet { t: 2 }, 7, depth, 12);
+            assert_eq!(r.rounds.len(), 12, "depth {depth}");
+            for w in r.rounds.windows(2) {
+                assert!(w[0].round < w[1].round, "depth {depth}: out-of-order retirement");
+                assert!(w[0].entry_index < w[1].entry_index, "depth {depth}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_deterministic_given_seed() {
+        for depth in [2usize, 4] {
+            let a = quick_depth(Protocol::Cabinet { t: 1 }, 5, depth, 8);
+            let b = quick_depth(Protocol::Cabinet { t: 1 }, 5, depth, 8);
+            assert_eq!(a.metrics_digest(), b.metrics_digest(), "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn pipelining_overlaps_rounds_under_delay() {
+        // Under the Fig. 14 delay model the lock-step driver spends most of
+        // each round waiting on the network; a depth-4 window must overlap
+        // that wait and raise committed wall-clock throughput.
+        let mk = |depth: usize| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 11, true);
+            c.rounds = 12;
+            c.pipeline = depth;
+            c.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+            run(&c)
+        };
+        let lock_step = mk(1);
+        let deep = mk(4);
+        assert_eq!(lock_step.rounds.len(), 12);
+        assert_eq!(deep.rounds.len(), 12);
+        let gain = deep.wall_tput_ops_s() / lock_step.wall_tput_ops_s();
+        assert!(gain > 1.5, "depth-4 wall tput gain {gain:.2} (expected > 1.5x)");
+    }
+
+    #[test]
+    fn pipelined_replica_digests_converge() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+        c.rounds = 8;
+        c.pipeline = 4;
+        c.digest_mode = DigestMode::All;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 8);
+        assert_eq!(r.digests_match, Some(true));
+    }
+
+    #[test]
+    fn pipelined_survives_kills_and_leader_failover() {
+        use crate::net::fault::{KillSpec, KillStrategy};
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 11, true);
+        c.rounds = 12;
+        c.pipeline = 4;
+        c.kills = vec![KillSpec::new(5, 2, KillStrategy::Weak)];
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 12, "weak kills must not stall the pipeline");
+
+        let mut c = SimConfig::new(Protocol::Raft, 5, false);
+        c.rounds = 8;
+        c.pipeline = 4;
+        c.kill_leader_at_round = Some(4);
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 10_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 8, "rounds must continue after failover");
+        assert!(r.elections >= 2, "a second election must have happened");
     }
 
     #[test]

@@ -75,6 +75,13 @@ impl<E> EventQueue<E> {
         self.push_at(now + delay.max(0.0), event);
     }
 
+    /// Time of the earliest scheduled event without popping it — drivers use
+    /// this to stop cleanly at a virtual-time horizon instead of popping an
+    /// event they will discard.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|item| item.time)
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         self.heap.pop().map(|item| {
@@ -128,6 +135,19 @@ mod tests {
         assert_eq!(t2, 3.0);
         let (t3, _) = q.pop().unwrap();
         assert_eq!(t3, 7.0);
+    }
+
+    #[test]
+    fn next_time_peeks_without_advancing() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.next_time(), None);
+        q.push_at(4.0, "b");
+        q.push_at(2.0, "a");
+        assert_eq!(q.next_time(), Some(2.0));
+        assert_eq!(q.now(), 0.0);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (2.0, "a"));
+        assert_eq!(q.next_time(), Some(4.0));
     }
 
     #[test]

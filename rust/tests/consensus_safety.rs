@@ -15,11 +15,14 @@ use cabinet::consensus::weights::WeightScheme;
 use cabinet::net::rng::Rng;
 
 /// A chaos network: pending messages get dropped, duplicated, delayed and
-/// reordered under RNG control.
+/// reordered under RNG control; nodes can be crash-killed mid-schedule.
 struct Chaos {
     nodes: Vec<Node>,
+    alive: Vec<bool>,
     queue: Vec<(NodeId, NodeId, Message)>,
     commits: Vec<Vec<(u64, u64)>>, // per node: (index, term) in commit order
+    /// Leader-side quorum closures: (leader, wclock, index, quorum weight).
+    round_commits: Vec<(NodeId, u64, u64, f64)>,
     rng: Rng,
     drop_p: f64,
     dup_p: f64,
@@ -29,8 +32,10 @@ impl Chaos {
     fn new(n: usize, mode: impl Fn(usize) -> Mode, seed: u64, drop_p: f64, dup_p: f64) -> Self {
         Chaos {
             nodes: (0..n).map(|i| Node::new(i, n, mode(i))).collect(),
+            alive: vec![true; n],
             queue: Vec::new(),
             commits: vec![Vec::new(); n],
+            round_commits: Vec::new(),
             rng: Rng::new(seed),
             drop_p,
             dup_p,
@@ -42,9 +47,17 @@ impl Chaos {
             match o {
                 Output::Send(dst, msg) => self.queue.push((src, dst, msg)),
                 Output::Commit(e) => self.commits[src].push((e.index, e.term)),
+                Output::RoundCommitted { wclock, index, quorum_weight, .. } => {
+                    self.round_commits.push((src, wclock, index, quorum_weight));
+                }
                 _ => {}
             }
         }
+    }
+
+    /// Crash a node: it stops stepping and every message to it is dropped.
+    fn kill(&mut self, node: NodeId) {
+        self.alive[node] = false;
     }
 
     /// One chaos step: either deliver a random queued message (maybe
@@ -54,6 +67,9 @@ impl Chaos {
         let fire_timer = self.queue.is_empty() || self.rng.chance(0.08);
         if fire_timer {
             let node = self.rng.below(n as u64) as usize;
+            if !self.alive[node] {
+                return;
+            }
             let input = if self.rng.chance(0.5) && self.nodes[node].role() == Role::Leader {
                 Input::HeartbeatTimeout
             } else {
@@ -65,8 +81,8 @@ impl Chaos {
         }
         let pick = self.rng.below(self.queue.len() as u64) as usize;
         let (src, dst, msg) = self.queue.swap_remove(pick); // reorders
-        if self.rng.chance(self.drop_p) {
-            return; // dropped
+        if !self.alive[dst] || self.rng.chance(self.drop_p) {
+            return; // dropped (dead receiver or lossy link)
         }
         if self.rng.chance(self.dup_p) {
             self.queue.push((src, dst, msg.clone())); // duplicated
@@ -75,14 +91,29 @@ impl Chaos {
         self.absorb(dst, outs);
     }
 
+    fn leader(&self) -> Option<NodeId> {
+        (0..self.nodes.len())
+            .find(|&i| self.alive[i] && self.nodes[i].role() == Role::Leader)
+    }
+
     /// Propose at whichever node is currently a leader (if any).
     fn try_propose(&mut self, k: u8) {
-        if let Some(leader) =
-            (0..self.nodes.len()).find(|&i| self.nodes[i].role() == Role::Leader)
-        {
+        if let Some(leader) = self.leader() {
             let outs =
                 self.nodes[leader].step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
             self.absorb(leader, outs);
+        }
+    }
+
+    /// Burst-propose `depth` rounds back-to-back at the current leader — the
+    /// pipelined client pattern: no waiting for acks between proposals.
+    fn try_propose_burst(&mut self, depth: usize, tag: u8) {
+        if let Some(leader) = self.leader() {
+            for j in 0..depth {
+                let outs = self.nodes[leader]
+                    .step(Input::Propose(Payload::Bytes(Arc::new(vec![tag, j as u8]))));
+                self.absorb(leader, outs);
+            }
         }
     }
 
@@ -93,6 +124,9 @@ impl Chaos {
                 break;
             }
             let (src, dst, msg) = self.queue.remove(0);
+            if !self.alive[dst] {
+                continue;
+            }
             let outs = self.nodes[dst].step(Input::Receive(src, msg));
             self.absorb(dst, outs);
         }
@@ -138,6 +172,77 @@ impl Chaos {
                 got.sort_by(|x, y| y.partial_cmp(x).unwrap());
                 for (g, w) in got.iter().zip(scheme.weights()) {
                     assert!((g - w).abs() < 1e-9, "weights not a permutation");
+                }
+            }
+        }
+    }
+
+    /// Log matching (Raft §5.3 / Theorem 4.2): whenever two nodes hold the
+    /// same `(index, term)` entry, their logs agree on the entire prefix.
+    fn assert_log_matching(&self, seed: u64) {
+        let n = self.nodes.len();
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let (la, lb) = (self.nodes[a].log(), self.nodes[b].log());
+                let common = la.last_index().min(lb.last_index());
+                // highest index where the two logs carry the same term
+                let agree = (1..=common)
+                    .rev()
+                    .find(|&i| la.term_at(i).is_some() && la.term_at(i) == lb.term_at(i));
+                if let Some(i) = agree {
+                    assert_eq!(
+                        la.prefix_digest(i),
+                        lb.prefix_digest(i),
+                        "seed {seed}: nodes {a} and {b} agree at index {i} but \
+                         diverge below it"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Weighted-commit rule: every quorum a leader closed accumulated
+    /// strictly more weight than the scheme's consensus threshold, and a
+    /// node's (wclock, commit index) pairs advance monotonically.
+    fn assert_weighted_commits(&self, ct: f64, seed: u64) {
+        for &(node, _, _, qw) in &self.round_commits {
+            assert!(
+                qw > ct - 1e-9,
+                "seed {seed}: node {node} closed a quorum at weight {qw} <= CT {ct}"
+            );
+        }
+        let n = self.nodes.len();
+        for node in 0..n {
+            let mine: Vec<(u64, u64)> = self
+                .round_commits
+                .iter()
+                .filter(|(who, ..)| *who == node)
+                .map(|&(_, wc, idx, _)| (wc, idx))
+                .collect();
+            for w in mine.windows(2) {
+                assert!(
+                    w[0].0 <= w[1].0,
+                    "seed {seed}: node {node} weight clock went backwards: {mine:?}"
+                );
+                assert!(
+                    w[0].1 < w[1].1,
+                    "seed {seed}: node {node} commit index not monotone: {mine:?}"
+                );
+            }
+        }
+    }
+
+    /// No committed entry is ever lost or rewritten: everything committed at
+    /// `before` must appear, with the same term, in any node's later
+    /// committed sequence that reaches that index.
+    fn assert_commits_preserved(&self, before: &[(u64, u64)], seed: u64) {
+        for (idx, term) in before {
+            for node_commits in &self.commits {
+                if let Some((_, t2)) = node_commits.iter().find(|(i2, _)| i2 == idx) {
+                    assert_eq!(
+                        t2, term,
+                        "seed {seed}: committed entry at index {idx} was rewritten"
+                    );
                 }
             }
         }
@@ -240,6 +345,116 @@ fn committed_entries_survive_leader_changes() {
                 }
             }
         }
+    }
+}
+
+/// Randomized-schedule safety sweep: 128 seeded chaos schedules mixing
+/// drop/duplication rates (adversarial reordering doubles as unbounded delay
+/// skew), mid-schedule crash kills, and pipelined proposal bursts at depth
+/// 1–8. Asserts election safety, log matching, the weighted-commit rule +
+/// monotonicity, and no committed-entry loss — at every depth.
+#[test]
+fn randomized_schedule_safety_sweep() {
+    for seed in 0..128u64 {
+        let depth = 1 + (seed % 8) as usize;
+        let n = [5usize, 7, 9][(seed % 3) as usize];
+        let cabinet_t = 1 + (seed % 2) as usize;
+        let raft = seed % 4 == 0;
+        let mode = move |_i: usize| {
+            if raft {
+                Mode::Raft
+            } else {
+                Mode::cabinet(n, cabinet_t)
+            }
+        };
+        let ct = if raft {
+            n as f64 / 2.0
+        } else {
+            WeightScheme::geometric(n, cabinet_t).unwrap().ct()
+        };
+        let drop_p = 0.02 + (seed % 5) as f64 * 0.03;
+        let dup_p = 0.02 + (seed % 3) as f64 * 0.04;
+        let mut c = Chaos::new(n, mode, seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1, drop_p, dup_p);
+        let outs = c.nodes[0].step(Input::ElectionTimeout);
+        c.absorb(0, outs);
+        let mut sched = Rng::new(seed ^ 0x00C0_FFEE);
+        let mut committed_snapshot: Vec<(u64, u64)> = Vec::new();
+        for i in 0..2000usize {
+            c.step();
+            if i % 37 == 0 {
+                c.try_propose_burst(depth, (i % 251) as u8);
+            }
+            if i == 900 {
+                // snapshot what's committed so far, then crash two
+                // non-leader nodes on two thirds of the schedules
+                committed_snapshot = c.commits.iter().flatten().copied().collect();
+                if seed % 3 != 2 {
+                    let leader = c.leader();
+                    let mut victims = 0;
+                    while victims < 2 {
+                        let v = sched.below(n as u64) as usize;
+                        if Some(v) != leader && c.alive[v] {
+                            c.kill(v);
+                            victims += 1;
+                        }
+                    }
+                }
+            }
+            if i % 97 == 0 {
+                c.assert_weight_permutation();
+            }
+        }
+        c.settle();
+        c.assert_safety(seed);
+        c.assert_log_matching(seed);
+        c.assert_weighted_commits(ct, seed);
+        c.assert_commits_preserved(&committed_snapshot, seed);
+    }
+}
+
+/// Full-stack randomized sims over the event-driven harness: random delay
+/// models, kills, contention, and pipeline depth 1–8. Every configuration
+/// completes its rounds, replicas converge, and each run is a pure function
+/// of its seed (bit-identical replay of both commit sequence and metrics).
+#[test]
+fn randomized_sim_configs_safe_and_deterministic() {
+    use cabinet::net::delay::DelayModel;
+    use cabinet::net::fault::{ContentionSpec, KillSpec, KillStrategy};
+    use cabinet::sim::{run, DigestMode, Protocol, SimConfig, WorkloadSpec};
+    use cabinet::workload::Workload;
+
+    for seed in 0..24u64 {
+        let depth = [1usize, 2, 4, 8][(seed % 4) as usize];
+        let n = [5usize, 7, 11][(seed % 3) as usize];
+        let t = 1 + (seed % 2) as usize;
+        let mut c = SimConfig::new(Protocol::Cabinet { t }, n, true);
+        c.rounds = 6;
+        c.pipeline = depth;
+        c.seed = 1000 + seed;
+        c.digest_mode = DigestMode::All;
+        c.workload =
+            WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 5_000 };
+        c.delay = match seed % 3 {
+            0 => DelayModel::None,
+            1 => DelayModel::Uniform { mean_ms: 60.0, spread_ms: 15.0 },
+            _ => DelayModel::Skew,
+        };
+        if seed % 4 == 1 {
+            c.kills = vec![KillSpec::new(3, 1, KillStrategy::Weak)];
+        }
+        if seed % 4 == 2 {
+            c.contention = Some(ContentionSpec::new(3, 2.0));
+        }
+        let a = run(&c);
+        assert_eq!(a.rounds.len(), 6, "seed {seed} depth {depth}: rounds incomplete");
+        assert_eq!(a.digests_match, Some(true), "seed {seed}: replicas diverged");
+        let b = run(&c);
+        assert_eq!(a.metrics_digest(), b.metrics_digest(), "seed {seed}: replay diverged");
+        assert_eq!(
+            a.commit_sequence_digest(),
+            b.commit_sequence_digest(),
+            "seed {seed}: commit sequence diverged"
+        );
     }
 }
 
