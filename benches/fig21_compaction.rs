@@ -1,0 +1,20 @@
+//! `cargo bench` target regenerating Fig 21 — the snapshot/compaction
+//! interval sweep (quick scale; run `cargo run --release --example figures
+//! -- fig21 --paper` for the full version). Each row runs the pipelined
+//! driver under the D2 slow-follower skew profile with a mid-run follower
+//! kill + restart: compaction must bound the in-memory log without moving
+//! committed throughput, and the restarted follower catches up from an
+//! InstallSnapshot instead of full log replay.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig21_compaction", || {
+        last = Some(figures::fig21_compaction(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -35,8 +35,9 @@ fn main() {
         "fig18" => vec![figures::fig18(scale)],
         "fig19" => vec![figures::fig19(scale)],
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
+        "fig21" => vec![figures::fig21_compaction(scale)],
         other => {
-            eprintln!("unknown figure {other}; use fig3..fig20 or all");
+            eprintln!("unknown figure {other}; use fig3..fig21 or all");
             std::process::exit(1);
         }
     };

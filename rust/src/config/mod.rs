@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
 use crate::net::topology::ZoneAlloc;
-use crate::sim::{DigestMode, Protocol, ReconfigSpec, SimConfig, WorkloadSpec};
+use crate::sim::{DigestMode, Protocol, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec};
 use crate::workload::Workload;
 
 /// Build a `SimConfig` from a TOML-subset experiment file. Layout:
@@ -22,6 +22,7 @@ use crate::workload::Workload;
 /// rounds = 100
 /// seed = 42
 /// pipeline = 4           # in-flight replication rounds (default 1 = lock-step)
+/// snapshot_every = 64    # snapshot + compact every N committed entries (0 = off)
 ///
 /// [workload]
 /// kind = "ycsb"          # ycsb | tpcc
@@ -40,6 +41,8 @@ use crate::workload::Workload;
 /// kill_strategy = "strong"   # strong | weak | random
 /// contention_round = 20
 /// contention_slowdown = 2.5
+/// restart_kill_round = 10    # kill one follower ...
+/// restart_round = 30         # ... and restart it fresh (both or neither)
 /// ```
 pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let doc = toml::parse(text)?;
@@ -72,6 +75,14 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
             bail!("pipeline depth must be >= 1, got {depth}");
         }
         config.pipeline = depth as usize;
+    }
+    if let Some(every) = root.get("snapshot_every").and_then(|v| v.as_int()) {
+        if every < 0 {
+            bail!("snapshot_every must be >= 0, got {every}");
+        }
+        if every > 0 {
+            config.snapshot_every = Some(every as u64);
+        }
     }
     let _ = ZoneAlloc::heterogeneous(n); // n validated by construction
 
@@ -129,6 +140,19 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 f.get("contention_slowdown").and_then(|v| v.as_float()).unwrap_or(2.5);
             config.contention = Some(ContentionSpec::new(round as u64, slow));
         }
+        let rk = f.get("restart_kill_round").and_then(|v| v.as_int());
+        let rr = f.get("restart_round").and_then(|v| v.as_int());
+        match (rk, rr) {
+            (Some(k), Some(r)) => {
+                if r <= k {
+                    bail!("restart_round ({r}) must come after restart_kill_round ({k})");
+                }
+                config.restart =
+                    Some(RestartSpec { kill_round: k as u64, restart_round: r as u64 });
+            }
+            (None, None) => {}
+            _ => bail!("restart_kill_round and restart_round must be set together"),
+        }
     }
 
     if let Some(r) = doc.get("reconfig") {
@@ -166,6 +190,7 @@ heterogeneous = true
 rounds = 30
 seed = 7
 pipeline = 4
+snapshot_every = 16
 digests = true
 
 [workload]
@@ -184,6 +209,8 @@ kill_count = 2
 kill_strategy = "strong"
 contention_round = 15
 contention_slowdown = 2.0
+restart_kill_round = 12
+restart_round = 22
 
 [reconfig]
 rounds = [20, 25]
@@ -195,6 +222,9 @@ thresholds = [3, 1]
         assert_eq!(cfg.rounds, 30);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.pipeline, 4);
+        assert_eq!(cfg.snapshot_every, Some(16));
+        let rs = cfg.restart.expect("restart spec parsed");
+        assert_eq!((rs.kill_round, rs.restart_round), (12, 22));
         assert!(matches!(cfg.protocol, Protocol::Cabinet { t: 5 }));
         assert!(matches!(cfg.delay, DelayModel::Uniform { .. }));
         assert_eq!(cfg.kills.len(), 1);
@@ -217,6 +247,25 @@ thresholds = [3, 1]
         assert_eq!(cfg.pipeline, 8);
         assert!(sim_config_from_toml("pipeline = 0\n").is_err());
         assert!(sim_config_from_toml("pipeline = -3\n").is_err());
+    }
+
+    #[test]
+    fn snapshot_every_validated() {
+        assert_eq!(sim_config_from_toml("snapshot_every = 64\n").unwrap().snapshot_every, Some(64));
+        // 0 = off (the default), negatives rejected
+        assert_eq!(sim_config_from_toml("snapshot_every = 0\n").unwrap().snapshot_every, None);
+        assert_eq!(sim_config_from_toml("rounds = 5\n").unwrap().snapshot_every, None);
+        assert!(sim_config_from_toml("snapshot_every = -1\n").is_err());
+    }
+
+    #[test]
+    fn restart_spec_requires_both_rounds_in_order() {
+        assert!(sim_config_from_toml("[faults]\nrestart_kill_round = 5\n").is_err());
+        assert!(sim_config_from_toml("[faults]\nrestart_round = 5\n").is_err());
+        assert!(sim_config_from_toml(
+            "[faults]\nrestart_kill_round = 9\nrestart_round = 4\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -2,17 +2,50 @@
 //! entries, conflict truncation), plus Cabinet's per-entry stored weight
 //! (§4.1 "Write and read": each node stores the weight it held for the
 //! instance that committed the entry, so clients can form weighted read
-//! quorums).
+//! quorums), plus snapshot compaction: the committed prefix can be
+//! discarded, surviving only as `(last_compacted_index, last_compacted_term,
+//! digest)` metadata.
+//!
+//! Compaction invariants:
+//!   * only committed entries are ever compacted (the caller — `node.rs` —
+//!     never compacts past its commit index), so the discarded prefix is
+//!     immutable and `matches()` can trust any prefix point below the cut;
+//!   * `prefix_digest` is chained: the FNV fold over the compacted prefix is
+//!     retained as a running state and resumed over retained entries, so the
+//!     fingerprint of any reachable prefix is bit-identical whether or not
+//!     (and wherever) the log was compacted — replay determinism and the
+//!     safety harness's log-matching checks survive compaction.
 
 use crate::consensus::message::{Entry, LogIndex, Term};
+use crate::util::Fnv64;
 
 /// A node's replicated log.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Log {
+    /// Retained entries: `entries[i]` holds index `compacted_index + i + 1`.
     entries: Vec<Entry>,
-    /// `stored_weight[i]` = this node's weight during the round that
+    /// `stored_weights[i]` = this node's weight during the round that
     /// replicated `entries[i]` (1.0 in Raft mode).
     stored_weights: Vec<f64>,
+    /// Index of the last compacted (discarded) entry; 0 = nothing compacted.
+    compacted_index: LogIndex,
+    /// Term of the entry at `compacted_index` (0 when nothing compacted).
+    compacted_term: Term,
+    /// Running FNV state over entries `1..=compacted_index` — the digest
+    /// chain that keeps `prefix_digest` identical across compaction.
+    compacted_digest: u64,
+}
+
+impl Default for Log {
+    fn default() -> Self {
+        Log {
+            entries: Vec::new(),
+            stored_weights: Vec::new(),
+            compacted_index: 0,
+            compacted_term: 0,
+            compacted_digest: Fnv64::new().finish(),
+        }
+    }
 }
 
 impl Log {
@@ -20,40 +53,63 @@ impl Log {
         Self::default()
     }
 
-    /// Index of the last entry (0 when empty).
+    /// Retained slot (0-based) for `index`, if it is retained.
+    fn pos(&self, index: LogIndex) -> Option<usize> {
+        if index <= self.compacted_index {
+            None
+        } else {
+            let p = (index - self.compacted_index - 1) as usize;
+            (p < self.entries.len()).then_some(p)
+        }
+    }
+
+    /// Index of the last entry (0 when empty), compacted prefix included.
     pub fn last_index(&self) -> LogIndex {
-        self.entries.len() as LogIndex
+        self.compacted_index + self.entries.len() as LogIndex
     }
 
     /// Term of the last entry (0 when empty).
     pub fn last_term(&self) -> Term {
-        self.entries.last().map_or(0, |e| e.term)
+        self.entries.last().map_or(self.compacted_term, |e| e.term)
     }
 
-    /// Term of the entry at `index` (0 for index 0; None if out of range).
+    /// Index of the last compacted entry (0 = nothing compacted).
+    pub fn last_compacted_index(&self) -> LogIndex {
+        self.compacted_index
+    }
+
+    /// Term of the last compacted entry (0 = nothing compacted).
+    pub fn last_compacted_term(&self) -> Term {
+        self.compacted_term
+    }
+
+    /// Chained `prefix_digest` state through `last_compacted_index` — what a
+    /// snapshot records so the chain survives the discarded prefix.
+    pub fn compacted_digest(&self) -> u64 {
+        self.compacted_digest
+    }
+
+    /// Term of the entry at `index`. `Some(0)` for index 0; `Some` of the
+    /// compaction-point term at exactly `last_compacted_index`; `None` for
+    /// indices strictly inside the discarded prefix or past the tail.
     pub fn term_at(&self, index: LogIndex) -> Option<Term> {
-        if index == 0 {
-            Some(0)
-        } else {
-            self.entries.get(index as usize - 1).map(|e| e.term)
-        }
-    }
-
-    pub fn get(&self, index: LogIndex) -> Option<&Entry> {
-        if index == 0 {
+        if index == self.compacted_index {
+            Some(self.compacted_term)
+        } else if index < self.compacted_index {
             None
         } else {
-            self.entries.get(index as usize - 1)
+            self.pos(index).map(|p| self.entries[p].term)
         }
+    }
+
+    /// The entry at `index` (None when out of range or compacted away).
+    pub fn get(&self, index: LogIndex) -> Option<&Entry> {
+        self.pos(index).map(|p| &self.entries[p])
     }
 
     /// This node's stored weight for the entry at `index`.
     pub fn stored_weight(&self, index: LogIndex) -> Option<f64> {
-        if index == 0 {
-            None
-        } else {
-            self.stored_weights.get(index as usize - 1).copied()
-        }
+        self.pos(index).map(|p| self.stored_weights[p])
     }
 
     /// Append a fresh entry at the tail (leader path). Returns its index.
@@ -66,17 +122,28 @@ impl Log {
     }
 
     /// Raft log-matching: does `(prev_index, prev_term)` match our log?
+    /// Points strictly below the compaction cut always match: only committed
+    /// entries are compacted, and committed prefixes are immutable, so any
+    /// legitimate sender agrees with whatever we discarded.
     pub fn matches(&self, prev_index: LogIndex, prev_term: Term) -> bool {
+        if prev_index < self.compacted_index {
+            return true;
+        }
         self.term_at(prev_index) == Some(prev_term)
     }
 
     /// Follower path: append `entries` after `prev_index`, truncating any
     /// conflicting suffix first (Raft §5.3). `weight` is this node's weight
-    /// for the shipping round. Returns the new last index.
+    /// for the shipping round. Entries at or below the compaction point are
+    /// skipped — they are committed state already covered by the snapshot (a
+    /// retransmission can race a just-installed snapshot). Returns the new
+    /// last index.
     pub fn splice(&mut self, prev_index: LogIndex, entries: &[Entry], weight: f64) -> LogIndex {
         debug_assert!(prev_index <= self.last_index());
-        let mut insert_at = prev_index as usize; // 0-based slot for first new entry
-        for e in entries {
+        let skip = (self.compacted_index.saturating_sub(prev_index) as usize).min(entries.len());
+        let mut insert_at =
+            (prev_index.max(self.compacted_index) - self.compacted_index) as usize;
+        for e in &entries[skip..] {
             if let Some(existing) = self.entries.get(insert_at) {
                 if existing.term == e.term {
                     // already have it — skip (idempotent retransmission)
@@ -88,7 +155,7 @@ impl Log {
                 self.stored_weights.truncate(insert_at);
             }
             let mut e = e.clone();
-            e.index = insert_at as LogIndex + 1;
+            e.index = self.compacted_index + insert_at as LogIndex + 1;
             self.entries.push(e);
             self.stored_weights.push(weight);
             insert_at += 1;
@@ -96,10 +163,14 @@ impl Log {
         self.last_index()
     }
 
-    /// Entries in `(from, to]` for shipping to a follower.
+    /// Entries in `(from, to]` for shipping to a follower. The caller must
+    /// not request below the compaction point (`node.rs` ships a snapshot
+    /// instead); out-of-range bounds are clamped defensively.
     pub fn slice(&self, from_exclusive: LogIndex, to_inclusive: LogIndex) -> Vec<Entry> {
-        let lo = from_exclusive as usize;
-        let hi = (to_inclusive as usize).min(self.entries.len());
+        let hi = (to_inclusive.saturating_sub(self.compacted_index) as usize)
+            .min(self.entries.len());
+        let lo = ((from_exclusive.max(self.compacted_index) - self.compacted_index) as usize)
+            .min(hi);
         self.entries[lo..hi].to_vec()
     }
 
@@ -110,17 +181,22 @@ impl Log {
         their_term > lt || (their_term == lt && their_index >= li)
     }
 
+    /// Iterate the retained entries (the compacted prefix is gone).
     pub fn iter(&self) -> impl Iterator<Item = &Entry> {
         self.entries.iter()
     }
 
     /// FNV-1a fingerprint over the `(index, term, wclock)` triples of the
-    /// first `upto` entries. Used by the safety harness to assert the log
-    /// matching property cheaply: if two nodes hold the same `(index, term)`
-    /// entry, their prefix digests up to that index must coincide.
+    /// first `upto` entries, resumed from the compacted prefix's chained
+    /// state. Used by the safety harness to assert the log matching property
+    /// cheaply: if two nodes hold the same `(index, term)` entry, their
+    /// prefix digests up to that index must coincide — regardless of where
+    /// (or whether) either log was compacted. Only meaningful for
+    /// `upto >= last_compacted_index` (callers gate on `term_at`).
     pub fn prefix_digest(&self, upto: LogIndex) -> u64 {
-        let mut h = crate::util::Fnv64::new();
-        for e in self.entries.iter().take(upto as usize) {
+        let mut h = Fnv64::from_state(self.compacted_digest);
+        let take = upto.saturating_sub(self.compacted_index) as usize;
+        for e in self.entries.iter().take(take) {
             h.write_u64(e.index);
             h.write_u64(e.term);
             h.write_u64(e.wclock);
@@ -128,6 +204,54 @@ impl Log {
         h.finish()
     }
 
+    /// Discard the prefix through `index` (clamped to the tail), folding it
+    /// into the digest chain. The caller guarantees `index` is committed.
+    /// Returns the number of entries dropped.
+    pub fn compact_to(&mut self, index: LogIndex) -> usize {
+        let index = index.min(self.last_index());
+        if index <= self.compacted_index {
+            return 0;
+        }
+        let dropped = (index - self.compacted_index) as usize;
+        let mut h = Fnv64::from_state(self.compacted_digest);
+        for e in &self.entries[..dropped] {
+            h.write_u64(e.index);
+            h.write_u64(e.term);
+            h.write_u64(e.wclock);
+        }
+        self.compacted_digest = h.finish();
+        self.compacted_term = self.entries[dropped - 1].term;
+        self.compacted_index = index;
+        self.entries.drain(..dropped);
+        self.stored_weights.drain(..dropped);
+        dropped
+    }
+
+    /// Adopt a leader snapshot at `(last_index, last_term)` with chained
+    /// digest `digest` (Raft InstallSnapshot rule): if we already hold the
+    /// snapshot's last entry with the same term, only the covered prefix is
+    /// discarded and the matching suffix is retained; otherwise the whole
+    /// log is replaced by the snapshot metadata.
+    pub fn install_snapshot(&mut self, last_index: LogIndex, last_term: Term, digest: u64) {
+        if last_index <= self.compacted_index {
+            return; // stale — we already compacted past it
+        }
+        if self.term_at(last_index) == Some(last_term) {
+            self.compact_to(last_index);
+            // identical by the log matching property; adopt the leader's
+            // value so divergence would surface in digest asserts
+            self.compacted_digest = digest;
+        } else {
+            self.entries.clear();
+            self.stored_weights.clear();
+            self.compacted_index = last_index;
+            self.compacted_term = last_term;
+            self.compacted_digest = digest;
+        }
+    }
+
+    /// Number of *retained* (in-memory) entries — after compaction this is
+    /// `last_index - last_compacted_index`, the quantity snapshotting bounds.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -247,5 +371,101 @@ mod tests {
         assert!(!log.candidate_up_to_date(1, 3));
         // lower term loses regardless of length
         assert!(!log.candidate_up_to_date(99, 2));
+    }
+
+    // ---- compaction ------------------------------------------------------
+
+    #[test]
+    fn compaction_offsets_every_accessor() {
+        let mut log = Log::new();
+        for t in [1, 1, 2, 2, 3] {
+            log.append(e(t), t as f64);
+        }
+        assert_eq!(log.compact_to(3), 3);
+        assert_eq!(log.last_compacted_index(), 3);
+        assert_eq!(log.last_compacted_term(), 2);
+        assert_eq!(log.len(), 2, "only retained entries count");
+        assert_eq!(log.last_index(), 5);
+        assert_eq!(log.last_term(), 3);
+        assert_eq!(log.term_at(2), None, "inside the discarded prefix");
+        assert_eq!(log.term_at(3), Some(2), "the cut point keeps its term");
+        assert_eq!(log.term_at(4), Some(2));
+        assert!(log.get(3).is_none());
+        assert_eq!(log.get(4).unwrap().index, 4);
+        assert_eq!(log.stored_weight(4), Some(2.0));
+        assert_eq!(log.stored_weight(2), None);
+        // idempotent / backwards compaction is a no-op
+        assert_eq!(log.compact_to(2), 0);
+        assert_eq!(log.compact_to(3), 0);
+        // appending continues from the true tail
+        assert_eq!(log.append(e(3), 1.0), 6);
+    }
+
+    #[test]
+    fn prefix_digest_chains_across_compaction() {
+        let mut whole = Log::new();
+        let mut cut = Log::new();
+        for t in [1u64, 1, 2, 2, 3, 3] {
+            whole.append(e(t), 1.0);
+            cut.append(e(t), 1.0);
+        }
+        cut.compact_to(2);
+        assert_eq!(cut.prefix_digest(2), whole.prefix_digest(2));
+        assert_eq!(cut.prefix_digest(4), whole.prefix_digest(4));
+        assert_eq!(cut.prefix_digest(6), whole.prefix_digest(6));
+        // compacting further never changes any still-reachable digest
+        cut.compact_to(5);
+        assert_eq!(cut.prefix_digest(5), whole.prefix_digest(5));
+        assert_eq!(cut.prefix_digest(6), whole.prefix_digest(6));
+    }
+
+    #[test]
+    fn matches_and_splice_below_the_cut() {
+        let mut log = Log::new();
+        for t in [1, 1, 2, 2] {
+            log.append(e(t), 1.0);
+        }
+        log.compact_to(3);
+        // any point strictly below the cut is trusted (committed prefix)
+        assert!(log.matches(1, 1));
+        assert!(log.matches(2, 99));
+        assert!(log.matches(3, 2), "cut point matches its recorded term");
+        assert!(!log.matches(3, 7));
+        // a retransmission spanning the cut only splices the live suffix
+        let last = log.splice(2, &[e(2), e(2), e(3)], 1.0);
+        assert_eq!(last, 5);
+        assert_eq!(log.term_at(4), Some(2), "retained entry untouched");
+        assert_eq!(log.term_at(5), Some(3));
+        assert_eq!(log.len(), 2);
+    }
+
+    #[test]
+    fn install_snapshot_replaces_or_retains() {
+        // divergent log: replaced wholesale
+        let mut log = Log::new();
+        for t in [1, 1, 1] {
+            log.append(e(t), 1.0);
+        }
+        log.install_snapshot(5, 3, 0xBEEF);
+        assert_eq!(log.last_index(), 5);
+        assert_eq!(log.last_term(), 3);
+        assert_eq!(log.len(), 0);
+        assert_eq!(log.compacted_digest(), 0xBEEF);
+        assert_eq!(log.prefix_digest(5), 0xBEEF);
+        // stale snapshot: no-op
+        log.install_snapshot(4, 2, 0xDEAD);
+        assert_eq!(log.last_compacted_index(), 5);
+        assert_eq!(log.compacted_digest(), 0xBEEF);
+
+        // matching log: the suffix beyond the snapshot survives
+        let mut log = Log::new();
+        for t in [1, 1, 2, 2] {
+            log.append(e(t), 1.0);
+        }
+        let digest_at_3 = log.prefix_digest(3);
+        log.install_snapshot(3, 2, digest_at_3);
+        assert_eq!(log.last_compacted_index(), 3);
+        assert_eq!(log.last_index(), 4, "matching suffix retained");
+        assert_eq!(log.term_at(4), Some(2));
     }
 }

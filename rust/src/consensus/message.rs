@@ -57,6 +57,58 @@ pub struct Entry {
     pub wclock: WClock,
 }
 
+/// Opaque replica-state payload carried by a snapshot: whatever the driving
+/// runtime needs to rebuild its state machine at `SnapshotBlob::last_index`
+/// without replaying the compacted log prefix.
+#[derive(Clone, Debug)]
+pub enum AppState {
+    /// Consensus-only snapshot — replica state is tracked outside the node
+    /// (the simulator's harness-level stores, unit tests).
+    None,
+    /// Serialized document store (`storage::DocStore::to_snapshot_bytes`).
+    Ycsb(Arc<Vec<u8>>),
+    /// Serialized relational store (`storage::RelStore::to_snapshot_bytes`).
+    Tpcc(Arc<Vec<u8>>),
+    /// Live-runtime digest-slot state (the applier thread's replica state).
+    Slots(Arc<Vec<u32>>),
+}
+
+impl AppState {
+    /// Approximate serialized size in bytes (for the wire-size model).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            AppState::None => 0,
+            AppState::Ycsb(b) | AppState::Tpcc(b) => b.len(),
+            AppState::Slots(s) => 4 * s.len(),
+        }
+    }
+}
+
+/// A state snapshot: everything a lagging or restarted follower needs to
+/// resume from `last_index` without the compacted log prefix. Only committed
+/// entries are ever snapshotted, so a blob never conflicts with any node's
+/// committed state.
+#[derive(Clone, Debug)]
+pub struct SnapshotBlob {
+    /// Last log index covered by the snapshot (== the taker's commit index
+    /// at capture time).
+    pub last_index: LogIndex,
+    /// Term of the entry at `last_index`.
+    pub last_term: Term,
+    /// Chained `Log::prefix_digest` state through `last_index` — installing
+    /// it keeps replay fingerprints bit-identical across the cut.
+    pub prefix_digest: u64,
+    /// Highest weight clock folded into the snapshot (Cabinet wclocks are
+    /// monotone, Theorem 4.2).
+    pub wclock: WClock,
+    /// Cabinet failure threshold in force at the snapshot point, so a
+    /// §4.1.4 reconfiguration compacted into the prefix still reaches the
+    /// installer. `None` in Raft mode.
+    pub cabinet_t: Option<usize>,
+    /// Serialized replica state.
+    pub app: AppState,
+}
+
 /// The RPC set. `AppendEntries` carries Cabinet's two extra fields; in Raft
 /// mode they are fixed (wclock = 0, weight = 1).
 #[derive(Clone, Debug)]
@@ -94,6 +146,22 @@ pub enum Message {
         from: NodeId,
         granted: bool,
     },
+    /// Leader → lagging follower: the follower's next entry was compacted
+    /// away, so it catches up from a state snapshot instead of log replay.
+    InstallSnapshot {
+        term: Term,
+        leader: NodeId,
+        snapshot: SnapshotBlob,
+    },
+    /// Follower → leader: snapshot processed. `match_index` is the highest
+    /// index the follower now has *committed* — safe for leader match
+    /// tracking by leader completeness (every committed entry is in the
+    /// current leader's log with the same term).
+    InstallSnapshotReply {
+        term: Term,
+        from: NodeId,
+        match_index: LogIndex,
+    },
 }
 
 impl Message {
@@ -102,7 +170,9 @@ impl Message {
             Message::AppendEntries { term, .. }
             | Message::AppendEntriesReply { term, .. }
             | Message::RequestVote { term, .. }
-            | Message::RequestVoteReply { term, .. } => *term,
+            | Message::RequestVoteReply { term, .. }
+            | Message::InstallSnapshot { term, .. }
+            | Message::InstallSnapshotReply { term, .. } => *term,
         }
     }
 
@@ -112,6 +182,8 @@ impl Message {
             Message::AppendEntriesReply { .. } => "AppendEntriesReply",
             Message::RequestVote { .. } => "RequestVote",
             Message::RequestVoteReply { .. } => "RequestVoteReply",
+            Message::InstallSnapshot { .. } => "InstallSnapshot",
+            Message::InstallSnapshotReply { .. } => "InstallSnapshotReply",
         }
     }
 
@@ -130,6 +202,7 @@ impl Message {
                     })
                     .sum::<usize>()
             }
+            Message::InstallSnapshot { snapshot, .. } => 96 + snapshot.app.wire_size(),
             _ => 48,
         }
     }
@@ -161,8 +234,45 @@ mod tests {
             },
             Message::RequestVote { term: 5, candidate: 2, last_log_index: 0, last_log_term: 0 },
             Message::RequestVoteReply { term: 6, from: 3, granted: false },
+            Message::InstallSnapshot {
+                term: 7,
+                leader: 0,
+                snapshot: SnapshotBlob {
+                    last_index: 9,
+                    last_term: 2,
+                    prefix_digest: 0,
+                    wclock: 4,
+                    cabinet_t: None,
+                    app: AppState::None,
+                },
+            },
+            Message::InstallSnapshotReply { term: 8, from: 1, match_index: 9 },
         ];
-        assert_eq!(msgs.iter().map(Message::term).collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert_eq!(
+            msgs.iter().map(Message::term).collect::<Vec<_>>(),
+            vec![3, 4, 5, 6, 7, 8]
+        );
+    }
+
+    #[test]
+    fn snapshot_wire_size_scales_with_app_state() {
+        let blob = |app: AppState| Message::InstallSnapshot {
+            term: 1,
+            leader: 0,
+            snapshot: SnapshotBlob {
+                last_index: 10,
+                last_term: 1,
+                prefix_digest: 0,
+                wclock: 1,
+                cabinet_t: Some(2),
+                app,
+            },
+        };
+        let empty = blob(AppState::None).wire_size();
+        let full = blob(AppState::Slots(Arc::new(vec![0u32; 1024]))).wire_size();
+        assert!(full >= empty + 4096);
+        let bytes = blob(AppState::Ycsb(Arc::new(vec![0u8; 999]))).wire_size();
+        assert_eq!(bytes, empty + 999);
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod message;
 pub mod node;
 pub mod weights;
 
-pub use message::{Entry, LogIndex, Message, NodeId, Payload, Term, WClock};
-pub use node::{Input, Mode, Node, Output, Role};
+pub use message::{AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock};
+pub use node::{Input, Mode, Node, Output, Role, SnapshotCapture};
 pub use weights::{ratio_bounds, threshold_pct, WeightScheme};

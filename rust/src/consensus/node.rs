@@ -21,7 +21,9 @@
 use std::collections::VecDeque;
 
 use crate::consensus::log::Log;
-use crate::consensus::message::{Entry, LogIndex, Message, NodeId, Payload, Term, WClock};
+use crate::consensus::message::{
+    AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock,
+};
 use crate::consensus::weights::WeightScheme;
 
 /// Raft role.
@@ -91,6 +93,25 @@ pub enum Output {
     SteppedDown,
     /// A proposal was rejected (not leader / reconfig in flight).
     ProposalRejected(Payload),
+    /// Driver-capture handshake (`SnapshotCapture::Driver`): the snapshot
+    /// threshold was crossed — capture replica state through `through` and
+    /// answer with [`Node::complete_snapshot`].
+    SnapshotRequest { through: LogIndex },
+    /// A leader snapshot was installed over the local log; the driver must
+    /// restore the carried replica state before applying later commits.
+    SnapshotInstalled(SnapshotBlob),
+}
+
+/// How a node obtains the replica-state payload when it takes a snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotCapture {
+    /// Compact immediately with `AppState::None` — for drivers that track
+    /// replica state outside the node (the simulator, unit tests).
+    Inline,
+    /// Emit [`Output::SnapshotRequest`] and wait for the driver to call
+    /// [`Node::complete_snapshot`] with captured state (the live runtime's
+    /// applier thread — capture must not stall the consensus thread).
+    Driver,
 }
 
 /// Leader-side bookkeeping for one in-flight replication round (pipelined
@@ -155,6 +176,21 @@ pub struct Node {
     /// Ablation switch (Property P2): when true, weights stay at their
     /// initial assignment instead of being re-dealt by responsiveness.
     static_weights: bool,
+
+    // ---- snapshot / compaction state -------------------------------------
+    /// Take a snapshot (and compact the log prefix) every this many
+    /// committed entries. None = never compact (unbounded log).
+    snapshot_every: Option<u64>,
+    /// How snapshot state is captured (inline vs by the driving runtime).
+    snapshot_capture: SnapshotCapture,
+    /// Driver-mode handshake: a `SnapshotRequest` is outstanding through
+    /// this index (suppresses duplicate requests while capture is pending).
+    snapshot_pending: Option<LogIndex>,
+    /// Latest completed snapshot — retained to serve `InstallSnapshot` to
+    /// followers whose next entry fell behind the compaction point.
+    snapshot: Option<SnapshotBlob>,
+    snapshots_taken: u64,
+    snapshots_installed: u64,
 }
 
 impl Node {
@@ -182,6 +218,12 @@ impl Node {
             inflight: VecDeque::new(),
             pending_reconfig: None,
             static_weights: false,
+            snapshot_every: None,
+            snapshot_capture: SnapshotCapture::Inline,
+            snapshot_pending: None,
+            snapshot: None,
+            snapshots_taken: 0,
+            snapshots_installed: 0,
         }
     }
 
@@ -189,6 +231,18 @@ impl Node {
     /// quorums with a frozen initial weight assignment).
     pub fn set_static_weights(&mut self, on: bool) {
         self.static_weights = on;
+    }
+
+    /// Enable snapshotting: compact the log prefix every `every` committed
+    /// entries (None disables compaction — the seed behavior).
+    pub fn set_snapshot_every(&mut self, every: Option<u64>) {
+        debug_assert!(every.map_or(true, |e| e >= 1));
+        self.snapshot_every = every;
+    }
+
+    /// Select how snapshot replica state is captured (default: `Inline`).
+    pub fn set_snapshot_capture(&mut self, capture: SnapshotCapture) {
+        self.snapshot_capture = capture;
     }
 
     // ---- accessors -------------------------------------------------------
@@ -264,6 +318,21 @@ impl Node {
     /// the leader rejects new proposals.
     pub fn reconfig_pending(&self) -> bool {
         self.pending_reconfig.is_some()
+    }
+
+    /// Snapshots this node has taken (threshold crossings that compacted).
+    pub fn snapshots_taken(&self) -> u64 {
+        self.snapshots_taken
+    }
+
+    /// Leader snapshots this node has installed over its own log.
+    pub fn snapshots_installed(&self) -> u64 {
+        self.snapshots_installed
+    }
+
+    /// The latest snapshot this node holds (taken or installed), if any.
+    pub fn snapshot(&self) -> Option<&SnapshotBlob> {
+        self.snapshot.as_ref()
     }
 
     // ---- the step function ----------------------------------------------
@@ -418,6 +487,25 @@ impl Node {
 
     fn send_append(&mut self, peer: NodeId, out: &mut Vec<Output>) {
         let prev = self.next_index[peer] - 1;
+        // The follower's next entry was compacted away: ship the snapshot
+        // instead (the term at `prev` is gone, so AppendEntries cannot even
+        // state its consistency check). In-flight rounds are unaffected —
+        // snapshots cover only the committed prefix, which sits strictly
+        // below every open round's index.
+        if prev < self.log.last_compacted_index() {
+            if let Some(blob) = self.snapshot.clone() {
+                out.push(Output::Send(
+                    peer,
+                    Message::InstallSnapshot { term: self.term, leader: self.id, snapshot: blob },
+                ));
+                return;
+            }
+            // unreachable via the public API (compaction always records a
+            // blob); degrade to resending from the cut
+            debug_assert!(false, "compacted log without a retained snapshot");
+            self.next_index[peer] = self.log.last_compacted_index() + 1;
+        }
+        let prev = self.next_index[peer] - 1;
         let prev_term = self.log.term_at(prev).unwrap_or(0);
         let entries = self.log.slice(prev, self.log.last_index());
         out.push(Output::Send(
@@ -471,6 +559,12 @@ impl Node {
             }
             Message::RequestVoteReply { term, from, granted } => {
                 self.on_vote_reply(term, from, granted, out)
+            }
+            Message::InstallSnapshot { term, leader, snapshot } => {
+                self.on_install_snapshot(term, leader, snapshot, out)
+            }
+            Message::InstallSnapshotReply { term, from, match_index } => {
+                self.on_install_snapshot_reply(term, from, match_index, out)
             }
         }
         let _ = from;
@@ -657,6 +751,142 @@ impl Node {
                 }
                 out.push(Output::Commit(e.clone()));
             }
+        }
+        // Commit outputs precede the snapshot request, so a driver that
+        // forwards commits to its applier in output order captures exactly
+        // the state through `commit_index`.
+        self.maybe_take_snapshot(out);
+    }
+
+    /// Cross the snapshot threshold: once `snapshot_every` entries have
+    /// committed past the last compaction point, capture replica state
+    /// (inline or via the driver handshake) and compact the log.
+    fn maybe_take_snapshot(&mut self, out: &mut Vec<Output>) {
+        let Some(every) = self.snapshot_every else { return };
+        if self.snapshot_pending.is_some() {
+            return; // a driver capture is already in flight
+        }
+        if self.commit_index < self.log.last_compacted_index() + every {
+            return;
+        }
+        match self.snapshot_capture {
+            SnapshotCapture::Inline => self.complete_snapshot(self.commit_index, AppState::None),
+            SnapshotCapture::Driver => {
+                self.snapshot_pending = Some(self.commit_index);
+                out.push(Output::SnapshotRequest { through: self.commit_index });
+            }
+        }
+    }
+
+    /// Finish a snapshot: compact the log through `through` (clamped to the
+    /// commit index — never beyond what `app` can cover) and retain the blob
+    /// for follower catch-up. Drivers call this in response to
+    /// [`Output::SnapshotRequest`]; inline capture calls it directly.
+    pub fn complete_snapshot(&mut self, through: LogIndex, app: AppState) {
+        self.snapshot_pending = None;
+        let through = through.min(self.commit_index);
+        if through <= self.log.last_compacted_index() {
+            return; // stale (an installed leader snapshot already passed it)
+        }
+        let last_term = self.log.term_at(through).expect("snapshot point must be in the log");
+        self.log.compact_to(through);
+        let cabinet_t = match &self.mode {
+            Mode::Raft => None,
+            Mode::Cabinet { scheme } => Some(scheme.t()),
+        };
+        self.snapshot = Some(SnapshotBlob {
+            last_index: through,
+            last_term,
+            prefix_digest: self.log.compacted_digest(),
+            wclock: self.wclock.max(self.my_wclock),
+            cabinet_t,
+            app,
+        });
+        self.snapshots_taken += 1;
+    }
+
+    /// Follower side of the catch-up flow: adopt a leader snapshot. The
+    /// blob covers only committed entries, so installing it can never
+    /// conflict with safety; entries it covers are *not* re-emitted as
+    /// `Output::Commit` — the carried `AppState` stands in for them.
+    fn on_install_snapshot(
+        &mut self,
+        term: Term,
+        leader: NodeId,
+        blob: SnapshotBlob,
+        out: &mut Vec<Output>,
+    ) {
+        if term < self.term {
+            out.push(Output::Send(
+                leader,
+                Message::InstallSnapshotReply {
+                    term: self.term,
+                    from: self.id,
+                    match_index: self.commit_index,
+                },
+            ));
+            return;
+        }
+        // current leader's authority, exactly like AppendEntries
+        if self.role != Role::Follower {
+            self.become_follower(term, out);
+        }
+        out.push(Output::ResetElectionTimer);
+        if blob.wclock >= self.my_wclock {
+            self.my_wclock = blob.wclock;
+        }
+        if blob.last_index > self.commit_index {
+            self.log.install_snapshot(blob.last_index, blob.last_term, blob.prefix_digest);
+            self.commit_index = blob.last_index;
+            // A §4.1.4 reconfiguration compacted into the prefix still
+            // reaches us through the blob — but only when no log suffix
+            // survived the install (Raft §7: configuration info in the log
+            // supersedes the snapshot's). A retained suffix was appended
+            // after the cut, and any reconfig in it was already adopted on
+            // append; re-adopting the blob's older threshold would regress
+            // it (a reordered/duplicated InstallSnapshot can arrive late).
+            if self.log.is_empty() {
+                if let Some(t) = blob.cabinet_t {
+                    if let Ok(scheme) = WeightScheme::geometric(self.n, t) {
+                        self.mode = Mode::Cabinet { scheme };
+                    }
+                }
+            }
+            self.snapshot_pending = None;
+            self.snapshots_installed += 1;
+            self.snapshot = Some(blob.clone());
+            out.push(Output::SnapshotInstalled(blob));
+        }
+        out.push(Output::Send(
+            leader,
+            Message::InstallSnapshotReply {
+                term: self.term,
+                from: self.id,
+                match_index: self.commit_index,
+            },
+        ));
+    }
+
+    /// Leader side: a follower finished (or skipped) a snapshot install.
+    /// `match_index` is its commit index — safe to track by leader
+    /// completeness — and cannot touch any in-flight round (a follower's
+    /// commit never exceeds the leader's, and every open round sits above
+    /// it), so no wQ or quorum bookkeeping changes here.
+    fn on_install_snapshot_reply(
+        &mut self,
+        term: Term,
+        from: NodeId,
+        match_index: LogIndex,
+        out: &mut Vec<Output>,
+    ) {
+        if self.role != Role::Leader || term < self.term {
+            return;
+        }
+        self.match_index[from] = self.match_index[from].max(match_index);
+        self.next_index[from] = self.match_index[from] + 1;
+        // ship the live suffix (the snapshot covers only the committed prefix)
+        if self.next_index[from] <= self.log.last_index() {
+            self.send_append(from, out);
         }
     }
 
@@ -1364,6 +1594,195 @@ mod tests {
             Mode::Cabinet { scheme } => assert_eq!(scheme.t(), 2),
             _ => panic!("not cabinet"),
         }
+    }
+
+    #[test]
+    fn snapshot_threshold_compacts_cluster_wide() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_snapshot_every(Some(2));
+        }
+        c.elect(0);
+        for k in 0..5 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+        }
+        c.heartbeat(0); // commit propagation → followers compact too
+        let leader_cut = c.nodes[0].log().last_compacted_index();
+        assert!(leader_cut >= 4, "leader must have compacted, cut = {leader_cut}");
+        assert!(c.nodes[0].snapshots_taken() >= 2);
+        let last = c.nodes[0].log().last_index();
+        for i in 1..5 {
+            assert!(c.nodes[i].log().last_compacted_index() >= 2, "node {i}");
+            assert!(c.nodes[i].log().len() <= 3, "node {i} retained too much");
+            // digest chain: every log fingerprints identically at the tail
+            assert_eq!(
+                c.nodes[i].log().prefix_digest(last),
+                c.nodes[0].log().prefix_digest(last),
+                "node {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn restarted_follower_catches_up_via_install_snapshot() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_snapshot_every(Some(2));
+        }
+        c.elect(0);
+        for k in 0..6 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+        }
+        // node 1 loses everything (crash + restart with a fresh disk); the
+        // leader has compacted far past node 1's needs, so log repair alone
+        // cannot recover it
+        c.nodes[1] = Node::new(1, 5, Mode::cabinet(5, 1));
+        c.propose(0, Payload::Noop);
+        c.heartbeat(0);
+        assert_eq!(c.nodes[1].snapshots_installed(), 1, "must catch up via snapshot");
+        assert_eq!(c.nodes[1].commit_index(), c.nodes[0].commit_index());
+        assert_eq!(c.nodes[1].log().last_index(), c.nodes[0].log().last_index());
+        let last = c.nodes[0].log().last_index();
+        assert_eq!(
+            c.nodes[1].log().prefix_digest(last),
+            c.nodes[0].log().prefix_digest(last),
+            "digest chain must survive snapshot install"
+        );
+    }
+
+    #[test]
+    fn driver_capture_handshake_defers_compaction() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 1));
+        leader.set_snapshot_every(Some(1));
+        leader.set_snapshot_capture(SnapshotCapture::Driver);
+        let noop = leader.log().last_index();
+        let o1 = ack(&mut leader, 1, noop, leader.wclock());
+        let o2 = ack(&mut leader, 2, noop, leader.wclock());
+        let req = o1.iter().chain(o2.iter()).find_map(|o| match o {
+            Output::SnapshotRequest { through } => Some(*through),
+            _ => None,
+        });
+        assert_eq!(req, Some(noop), "threshold crossing must request a capture");
+        // no compaction until the driver answers with captured state
+        assert_eq!(leader.log().last_compacted_index(), 0);
+        let _ = leader.step(Input::Propose(Payload::Noop));
+        leader.complete_snapshot(noop, AppState::None);
+        assert_eq!(leader.log().last_compacted_index(), noop);
+        assert_eq!(leader.snapshots_taken(), 1);
+        assert!(leader.snapshot().is_some());
+    }
+
+    #[test]
+    fn snapshot_mid_window_leaves_inflight_rounds_intact() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 1));
+        leader.set_snapshot_every(Some(1));
+        let noop = leader.log().last_index();
+        // open a 3-deep pipelined window before any ack
+        for k in 0..3u8 {
+            let _ = leader.step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+        }
+        assert_eq!(leader.inflight_len(), 3);
+        let wc = leader.wclock();
+        // committing the noop compacts to it immediately (every = 1) ...
+        ack(&mut leader, 1, noop, wc);
+        ack(&mut leader, 2, noop, wc);
+        assert_eq!(leader.commit_index(), noop);
+        assert_eq!(leader.log().last_compacted_index(), noop);
+        // ... but the open rounds and their weight/CT snapshots are intact
+        assert_eq!(leader.inflight_len(), 3);
+        let o1 = ack(&mut leader, 1, noop + 3, wc);
+        let o2 = ack(&mut leader, 2, noop + 3, wc);
+        assert!(
+            o1.iter().chain(o2.iter()).any(
+                |o| matches!(o, Output::RoundCommitted { index, .. } if *index == noop + 3)
+            ),
+            "window must commit normally across a compaction"
+        );
+        assert_eq!(leader.commit_index(), noop + 3);
+        assert_eq!(leader.log().last_compacted_index(), noop + 3);
+        assert_eq!(leader.inflight_len(), 0);
+    }
+
+    #[test]
+    fn install_snapshot_does_not_regress_newer_appended_reconfig() {
+        // Raft §7: configuration info in the log supersedes the snapshot's.
+        // A follower that already adopted a Reconfig from an appended entry
+        // above the snapshot cut must keep it when a reordered/late
+        // InstallSnapshot (cut below the reconfig, carrying the old t)
+        // arrives.
+        let n = 7;
+        let mut f = Node::new(1, n, Mode::cabinet(n, 3));
+        let entries = vec![
+            Entry { term: 1, index: 1, payload: Payload::Noop, wclock: 1 },
+            Entry { term: 1, index: 2, payload: Payload::Noop, wclock: 2 },
+            Entry { term: 1, index: 3, payload: Payload::Reconfig { new_t: 1 }, wclock: 3 },
+        ];
+        let _ = f.step(Input::Receive(
+            0,
+            Message::AppendEntries {
+                term: 1,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries,
+                leader_commit: 0,
+                wclock: 3,
+                weight: 1.0,
+            },
+        ));
+        match f.mode() {
+            Mode::Cabinet { scheme } => assert_eq!(scheme.t(), 1, "adopted on append"),
+            _ => panic!("not cabinet"),
+        }
+        let digest_at_2 = f.log().prefix_digest(2);
+        let _ = f.step(Input::Receive(
+            0,
+            Message::InstallSnapshot {
+                term: 1,
+                leader: 0,
+                snapshot: SnapshotBlob {
+                    last_index: 2,
+                    last_term: 1,
+                    prefix_digest: digest_at_2,
+                    wclock: 2,
+                    cabinet_t: Some(3), // the pre-reconfig threshold
+                    app: AppState::None,
+                },
+            },
+        ));
+        assert_eq!(f.commit_index(), 2, "snapshot still advances the commit");
+        assert_eq!(f.log().last_index(), 3, "suffix above the cut retained");
+        match f.mode() {
+            Mode::Cabinet { scheme } => {
+                assert_eq!(scheme.t(), 1, "newer log config must not regress")
+            }
+            _ => panic!("not cabinet"),
+        }
+    }
+
+    #[test]
+    fn stale_install_snapshot_is_skipped() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_snapshot_every(Some(2));
+        }
+        c.elect(0);
+        for k in 0..4 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+        }
+        c.heartbeat(0);
+        let commit = c.nodes[2].commit_index();
+        let blob = c.nodes[0].snapshot().expect("leader snapshotted").clone();
+        // a duplicate delivery must neither install nor regress anything
+        let outs = c.nodes[2].step(Input::Receive(
+            0,
+            Message::InstallSnapshot { term: c.nodes[0].term(), leader: 0, snapshot: blob },
+        ));
+        assert_eq!(c.nodes[2].commit_index(), commit);
+        assert_eq!(c.nodes[2].snapshots_installed(), 0);
+        assert!(outs
+            .iter()
+            .any(|o| matches!(o, Output::Send(0, Message::InstallSnapshotReply { .. }))));
     }
 
     #[test]

@@ -6,14 +6,57 @@
 //! discrete-event simulator and a live threaded runtime; Layer-2/1 JAX +
 //! Pallas state-machine kernels AOT-compiled to HLO and executed via PJRT.
 //!
-//! Replication is pipelined: the leader keeps up to `SimConfig::pipeline`
-//! rounds of AppendEntries in flight, with per-index weighted-ack
-//! bookkeeping and out-of-order-ack-tolerant commit advancement under both
-//! the Raft majority rule and the Cabinet weighted rule (weight re-deals
-//! and §4.1.4 reconfigurations may land mid-window — every round is judged
-//! by its propose-time snapshot). Depth 1 is the paper's lock-step
-//! benchmark pipeline, reproduced bit-for-bit; see README "Pipelined
-//! replication" and `bench::figures::fig20_pipeline_depth`.
+//! The full module map, the sans-io dataflow between [`consensus::Node`] and
+//! its drivers, and the figure → bench → module table live in
+//! `docs/ARCHITECTURE.md` at the repository root — start there when adding a
+//! subsystem.
+//!
+//! # Architecture in one paragraph
+//!
+//! [`consensus`] holds pure state machines: inputs are delivered RPCs, fired
+//! timers and client proposals; outputs are RPCs to send, timer (re)arms and
+//! committed entries. Three drivers own the I/O: [`sim`] (deterministic
+//! virtual-time event queue — every paper figure in [`bench`] is re-runnable
+//! from a seed), [`live`] (one OS thread per node, channel transport,
+//! wall-clock timers, PJRT apply service), and the adversarial-schedule
+//! harnesses in `rust/tests/`. [`workload`] generates YCSB/TPC-C batches,
+//! [`storage`] applies them (with digests that tie replicas — and the
+//! [`runtime`] AOT kernels — together bit-for-bit), and [`net`] models
+//! delays, zones and faults.
+//!
+//! Replication is pipelined (the leader keeps up to `SimConfig::pipeline`
+//! rounds in flight, each judged by its propose-time weight/CT snapshot) and
+//! the log is compactable: with `snapshot_every` set, every node snapshots
+//! its applied state and truncates the committed prefix, lagging or
+//! restarted followers catch up via `InstallSnapshot`, and digest chaining
+//! keeps replay fingerprints bit-identical across the cut.
+//!
+//! # Driving a node directly
+//!
+//! ```
+//! use cabinet::consensus::{Input, Mode, Node, Output};
+//!
+//! let mut node = Node::new(0, 3, Mode::cabinet(3, 1));
+//! // the election timer fires: the node becomes a candidate and requests votes
+//! let outs = node.step(Input::ElectionTimeout);
+//! assert!(outs.iter().any(|o| matches!(o, Output::Send(..))));
+//! ```
+//!
+//! # Running a small deterministic simulation
+//!
+//! ```
+//! use cabinet::sim::{run, Protocol, SimConfig, WorkloadSpec};
+//! use cabinet::workload::Workload;
+//!
+//! let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+//! c.rounds = 3;
+//! c.snapshot_every = Some(2); // bounded in-memory log
+//! c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 100, records: 1_000 };
+//! let r = run(&c);
+//! assert_eq!(r.rounds.len(), 3);
+//! // same config + seed ⇒ bit-identical replay
+//! assert_eq!(r.commit_sequence_digest(), run(&c).commit_sequence_digest());
+//! ```
 
 pub mod config;
 pub mod consensus;

@@ -10,48 +10,78 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::consensus::message::{Entry, LogIndex, Message, NodeId, Payload};
-use crate::consensus::node::{Input, Mode, Node, Output, Role};
+use crate::consensus::message::{AppState, Entry, LogIndex, Message, NodeId, Payload};
+use crate::consensus::node::{Input, Mode, Node, Output, Role, SnapshotCapture};
 use crate::live::apply::{empty_state, ApplyReq};
 use crate::net::rng::Rng;
 use crate::workload::YcsbBatch;
+
+/// Work items for the applier thread, processed strictly in commit order.
+enum ApplierMsg {
+    /// A committed batch to fold into the replica state.
+    Batch(Arc<YcsbBatch>),
+    /// Capture the replica state for a snapshot through `through`. The node
+    /// thread enqueues this *after* every commit the snapshot covers, so the
+    /// applier's state at dequeue time is exactly the state at `through`;
+    /// the answer goes back over the node's own inbox, so heartbeats never
+    /// wait on the capture.
+    Capture { through: LogIndex, reply: Sender<LiveIn> },
+    /// Replace the replica state with an installed leader snapshot (a
+    /// lagging follower caught up past its missing log prefix).
+    Install(Vec<u32>),
+}
 
 /// Per-replica applier: a thread owning this node's replica state, applying
 /// committed batches in commit order through the apply service. Keeping the
 /// apply off the consensus thread is essential — a blocking apply starves
 /// heartbeats and triggers spurious elections (found the hard way; see
-/// rust/tests/live_e2e.rs).
+/// rust/tests/live_e2e.rs). Snapshot capture rides the same queue for the
+/// same reason.
 struct Applier {
-    tx: Sender<Arc<YcsbBatch>>,
+    tx: Sender<ApplierMsg>,
     handle: JoinHandle<(usize, Option<[u32; 2]>)>,
 }
 
 impl Applier {
     fn spawn(node: NodeId, service: Sender<ApplyReq>) -> Applier {
-        let (tx, rx) = channel::<Arc<YcsbBatch>>();
+        let (tx, rx) = channel::<ApplierMsg>();
         let handle = std::thread::Builder::new()
             .name(format!("applier-{node}"))
             .spawn(move || {
                 let mut state = empty_state();
                 let mut applies = 0usize;
                 let mut last_digest = None;
-                while let Ok(batch) = rx.recv() {
-                    let (resp, resp_rx) = channel();
-                    let req = ApplyReq {
-                        state: std::mem::take(&mut state),
-                        batch: (*batch).clone(),
-                        resp,
-                    };
-                    if service.send(req).is_err() {
-                        break;
-                    }
-                    match resp_rx.recv() {
-                        Ok((ns, d)) => {
-                            state = ns;
-                            applies += 1;
-                            last_digest = Some(d);
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ApplierMsg::Batch(batch) => {
+                            let (resp, resp_rx) = channel();
+                            let req = ApplyReq {
+                                state: std::mem::take(&mut state),
+                                batch: (*batch).clone(),
+                                resp,
+                            };
+                            if service.send(req).is_err() {
+                                break;
+                            }
+                            match resp_rx.recv() {
+                                Ok((ns, d)) => {
+                                    state = ns;
+                                    applies += 1;
+                                    last_digest = Some(d);
+                                }
+                                Err(_) => break,
+                            }
                         }
-                        Err(_) => break,
+                        ApplierMsg::Capture { through, reply } => {
+                            let _ = reply
+                                .send(LiveIn::SnapshotReady { through, state: state.clone() });
+                        }
+                        ApplierMsg::Install(s) => {
+                            state = s;
+                            // digests resume with the next applied batch
+                            // (state_digest is a pure function of the state)
+                            last_digest = None;
+                        }
                     }
                 }
                 (applies, last_digest)
@@ -67,6 +97,9 @@ pub enum LiveIn {
     Propose(Payload),
     /// Fire the election timer immediately (bootstrap).
     ForceElection,
+    /// Applier → node: captured replica state for a pending snapshot
+    /// (completes the `Output::SnapshotRequest` handshake).
+    SnapshotReady { through: LogIndex, state: Vec<u32> },
     Stop,
 }
 
@@ -113,6 +146,8 @@ pub struct NodeReport {
     pub final_digest: Option<[u32; 2]>,
     pub committed_entries: usize,
     pub applies: usize,
+    /// Last compacted log index (> 0 iff snapshotting trimmed the log).
+    pub last_compacted: LogIndex,
 }
 
 impl LiveCluster {
@@ -124,6 +159,22 @@ impl LiveCluster {
         timers: LiveTimers,
         apply_tx: Option<Sender<ApplyReq>>,
         seed: u64,
+    ) -> LiveCluster {
+        Self::start_with_snapshots(n, mode, timers, apply_tx, seed, None)
+    }
+
+    /// Like [`LiveCluster::start`], with snapshotting enabled: every node
+    /// takes a snapshot every `snapshot_every` committed entries and
+    /// compacts its log prefix. Replica state is captured on the applier
+    /// thread (never blocking heartbeats); a follower that falls behind the
+    /// leader's compaction point catches up via `InstallSnapshot`.
+    pub fn start_with_snapshots(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+        snapshot_every: Option<u64>,
     ) -> LiveCluster {
         let (event_tx, event_rx) = channel::<LiveEvent>();
         let mut inbox_txs = Vec::with_capacity(n);
@@ -143,7 +194,10 @@ impl LiveCluster {
             let handle = std::thread::Builder::new()
                 .name(format!("node-{id}"))
                 .spawn(move || {
-                    node_loop(id, n, mode, timers, rx, peers, event_tx, apply_tx, seed)
+                    node_loop(
+                        id, n, mode, timers, rx, peers, event_tx, apply_tx, seed,
+                        snapshot_every,
+                    )
                 })
                 .expect("spawn node");
             handles.push(handle);
@@ -234,8 +288,16 @@ fn node_loop(
     events: Sender<LiveEvent>,
     apply_tx: Option<Sender<ApplyReq>>,
     seed: u64,
+    snapshot_every: Option<u64>,
 ) -> NodeReport {
     let mut node = Node::new(id, n, mode);
+    node.set_snapshot_every(snapshot_every);
+    if apply_tx.is_some() {
+        // replica state lives on the applier thread — capture goes through
+        // the SnapshotRequest / SnapshotReady handshake
+        node.set_snapshot_capture(SnapshotCapture::Driver);
+    }
+    let my_inbox = peers[id].clone();
     let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
     let rand_election = |rng: &mut Rng| {
         let lo = timers.election_lo.as_secs_f64();
@@ -279,9 +341,24 @@ fn node_loop(
                 Output::Commit(Entry { index, payload, .. }) => {
                     *committed += 1;
                     if let (Payload::Ycsb(batch), Some(a)) = (&payload, applier) {
-                        let _ = a.tx.send(Arc::clone(batch));
+                        let _ = a.tx.send(ApplierMsg::Batch(Arc::clone(batch)));
                     }
                     let _ = events.send(LiveEvent::Committed { node: id, index, digest: None });
+                }
+                Output::SnapshotRequest { through } => {
+                    // Driver capture: ride the applier queue so the state is
+                    // captured exactly after the commits the blob covers —
+                    // the consensus thread never waits.
+                    if let Some(a) = applier {
+                        let _ = a
+                            .tx
+                            .send(ApplierMsg::Capture { through, reply: my_inbox.clone() });
+                    }
+                }
+                Output::SnapshotInstalled(blob) => {
+                    if let (AppState::Slots(s), Some(a)) = (&blob.app, applier) {
+                        let _ = a.tx.send(ApplierMsg::Install(s.to_vec()));
+                    }
                 }
                 Output::SteppedDown | Output::ProposalRejected(_) => {}
             }
@@ -320,6 +397,9 @@ fn node_loop(
                     outs, &applier, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                 );
+            }
+            Ok(LiveIn::SnapshotReady { through, state }) => {
+                node.complete_snapshot(through, AppState::Slots(Arc::new(state)));
             }
             Err(RecvTimeoutError::Timeout) => {
                 let now = Instant::now();
@@ -363,6 +443,7 @@ fn node_loop(
         final_digest,
         committed_entries: committed,
         applies,
+        last_compacted: node.log().last_compacted_index(),
     }
 }
 
@@ -410,6 +491,45 @@ mod tests {
         let reports = cluster.shutdown();
         let caught_up = reports.iter().filter(|r| r.commit_index >= 9).count();
         assert!(caught_up >= 3, "quorum must hold the full window: {reports:?}");
+    }
+
+    #[test]
+    fn live_snapshot_capture_compacts_without_stalling() {
+        // Applier-thread capture: snapshots are taken while the cluster
+        // keeps committing; the consensus threads never block on capture,
+        // so no spurious elections, and replica digests still converge.
+        let svc = crate::live::apply::ApplyService::spawn(PathBuf::from("/nonexistent"));
+        let cluster = LiveCluster::start_with_snapshots(
+            5,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            Some(svc.submitter()),
+            31,
+            Some(3),
+        );
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        let mut gen = YcsbGen::new(Workload::A, 1000, 9);
+        for _ in 0..8 {
+            cluster.propose(leader, Payload::Ycsb(Arc::new(gen.batch(150))));
+        }
+        // noop barrier (1) + 8 batches → index 9
+        assert!(cluster.wait_for_round(9, Duration::from_secs(10)).is_some());
+        // give followers heartbeats to learn the commit index and the
+        // capture round-trips time to drain
+        std::thread::sleep(Duration::from_millis(400));
+        let reports = cluster.shutdown();
+        let compacted = reports.iter().filter(|r| r.last_compacted > 0).count();
+        assert!(
+            compacted >= 3,
+            "a quorum must have captured + compacted: {reports:?}"
+        );
+        let digests: Vec<_> = reports.iter().filter_map(|r| r.final_digest).collect();
+        assert!(digests.len() >= 2, "at least leader+1 follower applied");
+        assert!(
+            digests.windows(2).all(|w| w[0] == w[1]),
+            "replica digests diverge: {digests:?}"
+        );
     }
 
     #[test]

@@ -3,6 +3,17 @@
 //! async runtime, so this is std-threads rather than tokio — the
 //! architecture is identical: an event loop per node, a dedicated
 //! apply-service thread owning the PJRT engine.)
+//!
+//! Thread layout per node: the *consensus thread* runs the sans-io
+//! `consensus::Node` event loop (RPCs in, RPCs out, timer deadlines), and
+//! an optional *applier thread* owns the replica state, folding committed
+//! batches in commit order through the shared apply service. Anything slow
+//! — batch apply, and snapshot capture when `snapshot_every` is enabled via
+//! [`LiveCluster::start_with_snapshots`] — happens on the applier thread,
+//! because a stalled consensus thread misses heartbeats and triggers
+//! spurious elections. Snapshot capture rides the applier's own queue (so
+//! it sees exactly the committed prefix it covers) and answers back over
+//! the node's inbox; see `docs/ARCHITECTURE.md` §"Snapshotting".
 
 pub mod apply;
 pub mod cluster;

@@ -54,7 +54,7 @@ USAGE:
   cabinet sim --config exp.toml
   cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
               [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
-              [--seed S] [--pipeline D]
+              [--seed S] [--pipeline D] [--snapshot-every E]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts";
@@ -97,6 +97,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig18" => vec![figures::fig18(scale)],
         "fig19" => vec![figures::fig19(scale)],
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
+        "fig21" => vec![figures::fig21_compaction(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -136,6 +137,10 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
                 bail!("--pipeline must be >= 1");
             }
         }
+        if let Some(e) = flag(&mut args, "--snapshot-every") {
+            let every: u64 = e.parse()?;
+            c.snapshot_every = (every > 0).then_some(every); // 0 = off
+        }
         if let Some(w) = flag(&mut args, "--workload") {
             if w.eq_ignore_ascii_case("tpcc") {
                 c.workload = cabinet::sim::WorkloadSpec::tpcc2k();
@@ -172,6 +177,12 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms
     );
     println!("elections:  {}", r.elections);
+    if config.snapshot_every.is_some() {
+        println!(
+            "snapshots:  taken {}  installed {}  max retained log {}",
+            r.snapshots_taken, r.snapshots_installed, r.max_retained_log
+        );
+    }
     if let Some(ok) = r.digests_match {
         println!("replica digests match: {ok}");
     }

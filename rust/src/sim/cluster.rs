@@ -84,6 +84,19 @@ pub struct ReconfigSpec {
     pub new_t: usize,
 }
 
+/// Kill-and-restart schedule for a single follower (the Fig. 21 compaction
+/// catch-up scenario): the highest-id non-leader node is killed at the
+/// start of `kill_round` and comes back at the start of `restart_round`
+/// with completely fresh state (empty log, zero commit index) — as a real
+/// replica would after losing its disk. With `snapshot_every` set, the
+/// leader has compacted past the victim's log by then, so catch-up must go
+/// through `InstallSnapshot`; with compaction off it replays the full log.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartSpec {
+    pub kill_round: u64,
+    pub restart_round: u64,
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -110,6 +123,12 @@ pub struct SimConfig {
     /// lock-step benchmark pipeline (Fig. 7); >1 enables the pipelined
     /// driver, which overlaps replication of consecutive batches.
     pub pipeline: usize,
+    /// Snapshot/compaction: every node takes a snapshot (and truncates its
+    /// log prefix) every this many committed entries. None = unbounded log
+    /// (the historical behavior).
+    pub snapshot_every: Option<u64>,
+    /// Optional kill-and-restart of one follower (Fig. 21 scenario).
+    pub restart: Option<RestartSpec>,
 }
 
 impl SimConfig {
@@ -136,6 +155,8 @@ impl SimConfig {
             rpc_proc_ms: 0.15,
             static_weights: false,
             pipeline: 1,
+            snapshot_every: None,
+            restart: None,
         }
     }
 
@@ -177,6 +198,14 @@ pub struct SimResult {
     pub digests_match: Option<bool>,
     /// Leader elections observed (≥ 1: the bootstrap election).
     pub elections: u64,
+    /// Snapshots taken across all nodes (0 when compaction is off; resets
+    /// with a node on restart, so this is a lower bound under `restart`).
+    pub snapshots_taken: u64,
+    /// Leader snapshots installed by catching-up followers.
+    pub snapshots_installed: u64,
+    /// Peak retained (in-memory) log length observed on any node — the
+    /// quantity `snapshot_every` bounds, sampled once per proposal tick.
+    pub max_retained_log: u64,
 }
 
 impl SimResult {
@@ -201,6 +230,9 @@ impl SimResult {
             rounds,
             digests_match: digests,
             elections,
+            snapshots_taken: 0,
+            snapshots_installed: 0,
+            max_retained_log: 0,
         }
     }
 
@@ -321,6 +353,57 @@ impl WorkloadDriver {
     }
 }
 
+/// Fig. 21 kill/restart schedule, shared by both round drivers: kill the
+/// highest-id non-leader follower at the start of `kill_round`, bring it
+/// back with completely fresh state (empty log, zero commit) at the start
+/// of `restart_round`. The restarted node re-arms a randomized election
+/// timer; with compaction on, catch-up goes through `InstallSnapshot`.
+#[allow(clippy::too_many_arguments)]
+fn maybe_kill_restart(
+    restart_pending: &mut Option<RestartSpec>,
+    restart_victim: &mut Option<NodeId>,
+    next_round: u64,
+    leader: NodeId,
+    config: &SimConfig,
+    mode: &Mode,
+    nodes: &mut [Node],
+    alive: &mut [bool],
+    el_gen: &mut [u64],
+    timer_rng: &mut Rng,
+    q: &mut EventQueue<Ev>,
+) {
+    let Some(rs) = *restart_pending else { return };
+    let n = nodes.len();
+    if rs.kill_round == next_round && restart_victim.is_none() {
+        if let Some(v) = (0..n).rev().find(|&i| i != leader && alive[i]) {
+            alive[v] = false;
+            *restart_victim = Some(v);
+        }
+    }
+    if rs.restart_round == next_round {
+        *restart_pending = None; // one-shot
+        if let Some(v) = *restart_victim {
+            let mut fresh = Node::new(v, n, mode.clone());
+            fresh.set_static_weights(config.static_weights);
+            fresh.set_snapshot_every(config.snapshot_every);
+            nodes[v] = fresh;
+            alive[v] = true;
+            el_gen[v] += 1;
+            let d =
+                timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
+            q.push_after(d, Ev::ElectionTimer { node: v, generation: el_gen[v] });
+        }
+    }
+}
+
+/// Track the peak retained (post-compaction) log length across all nodes —
+/// the quantity `snapshot_every` bounds.
+fn sample_retained(nodes: &[Node], max_retained: &mut u64) {
+    for node in nodes {
+        *max_retained = (*max_retained).max(node.log().len() as u64);
+    }
+}
+
 /// Run one experiment; deterministic in (config, seed).
 ///
 /// `pipeline = 1` runs the paper's lock-step round driver (bit-for-bit the
@@ -358,6 +441,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
         .map(|i| {
             let mut node = Node::new(i, n, mode.clone());
             node.set_static_weights(config.static_weights);
+            node.set_snapshot_every(config.snapshot_every);
             node
         })
         .collect();
@@ -367,6 +451,11 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     // timer generations (stale-timer cancellation)
     let mut el_gen = vec![0u64; n];
     let mut hb_gen = vec![0u64; n];
+
+    // Fig. 21 restart schedule + retained-log peak tracking
+    let mut restart_pending = config.restart;
+    let mut restart_victim: Option<NodeId> = None;
+    let mut max_retained: u64 = 0;
 
     // digest-tracked replica stores
     let tracked: Vec<usize> = match config.digest_mode {
@@ -463,6 +552,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                 );
             }
             Ev::ProposeNext => {
+                sample_retained(&nodes, &mut max_retained);
                 if pending.is_some() {
                     continue; // a round is already in flight
                 }
@@ -475,6 +565,12 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     continue;
                 }
                 let next_round = round + 1;
+
+                maybe_kill_restart(
+                    &mut restart_pending, &mut restart_victim, next_round, leader,
+                    config, &mode, &mut nodes, &mut alive, &mut el_gen,
+                    &mut timer_rng, &mut q,
+                );
 
                 // scheduled kills fire at the start of their round
                 while let Some(k) = kills.first() {
@@ -543,7 +639,12 @@ fn run_quorum(config: &SimConfig) -> SimResult {
         Some(doc_stores.iter().all(|s| s.state_digest() == d0))
     };
 
-    SimResult::from_rounds(config.protocol.label(), stats, digests, elections)
+    sample_retained(&nodes, &mut max_retained);
+    let mut result = SimResult::from_rounds(config.protocol.label(), stats, digests, elections);
+    result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
+    result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
+    result.max_retained_log = max_retained;
+    result
 }
 
 // ---------------------------------------------------------------------------
@@ -592,6 +693,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
         .map(|i| {
             let mut node = Node::new(i, n, mode.clone());
             node.set_static_weights(config.static_weights);
+            node.set_snapshot_every(config.snapshot_every);
             node
         })
         .collect();
@@ -599,6 +701,11 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut el_gen = vec![0u64; n];
     let mut hb_gen = vec![0u64; n];
+
+    // Fig. 21 restart schedule + retained-log peak tracking
+    let mut restart_pending = config.restart;
+    let mut restart_victim: Option<NodeId> = None;
+    let mut max_retained: u64 = 0;
 
     let tracked: Vec<usize> = match config.digest_mode {
         DigestMode::Off => vec![],
@@ -687,6 +794,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                 );
             }
             Ev::ProposeNext => {
+                sample_retained(&nodes, &mut max_retained);
                 if pending.len() >= depth || proposed >= config.rounds {
                     continue; // window full (a commit re-arms the proposer)
                 }
@@ -704,6 +812,12 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     continue;
                 }
                 let next_round = proposed + 1;
+
+                maybe_kill_restart(
+                    &mut restart_pending, &mut restart_victim, next_round, leader,
+                    config, &mode, &mut nodes, &mut alive, &mut el_gen,
+                    &mut timer_rng, &mut q,
+                );
 
                 // scheduled kills fire at the start of their round
                 while let Some(k) = kills.first() {
@@ -807,7 +921,12 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
         Some(doc_stores.iter().all(|s| s.state_digest() == d0))
     };
 
-    SimResult::from_rounds(config.protocol.label(), stats, digests, elections)
+    sample_retained(&nodes, &mut max_retained);
+    let mut result = SimResult::from_rounds(config.protocol.label(), stats, digests, elections);
+    result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
+    result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
+    result.max_retained_log = max_retained;
+    result
 }
 
 /// Pipelined-driver service time: apply cost accrues per batch entry the
@@ -951,6 +1070,9 @@ fn handle_outputs_pipelined(
                 q.push_after(0.2, Ev::ProposeNext); // client turnaround
             }
             Output::Commit(_) | Output::ProposalRejected(_) => {}
+            // nodes snapshot inline (SnapshotCapture::Inline) — these are
+            // informational; installs are counted via node counters
+            Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
         }
     }
 }
@@ -1106,6 +1228,9 @@ fn handle_outputs_delayed(
                 }
             }
             Output::Commit(_) | Output::ProposalRejected(_) => {}
+            // nodes snapshot inline (SnapshotCapture::Inline) — these are
+            // informational; installs are counted via node counters
+            Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
         }
     }
     let _ = inflight_cost_ms;
@@ -1412,6 +1537,48 @@ mod tests {
         let r = run(&c);
         assert_eq!(r.rounds.len(), 8, "rounds must continue after failover");
         assert!(r.elections >= 2, "a second election must have happened");
+    }
+
+    #[test]
+    fn compaction_bounds_log_and_preserves_commit_sequence() {
+        let mk = |every: Option<u64>| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+            c.rounds = 30;
+            c.pipeline = 4;
+            c.snapshot_every = every;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 10_000 };
+            run(&c)
+        };
+        let on = mk(Some(4));
+        let off = mk(None);
+        assert_eq!(on.rounds.len(), 30);
+        assert_eq!(off.rounds.len(), 30);
+        // compaction must not change what commits, in which order
+        assert_eq!(on.commit_sequence_digest(), off.commit_sequence_digest());
+        assert!(on.snapshots_taken > 0, "threshold crossings must snapshot");
+        assert!(
+            on.max_retained_log <= 4 + 2 * 4 + 8,
+            "retained log {} exceeds interval + window bound",
+            on.max_retained_log
+        );
+        assert!(off.max_retained_log >= 30, "off-run must keep the whole log");
+    }
+
+    #[test]
+    fn restarted_follower_installs_snapshot() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+        c.rounds = 30;
+        c.pipeline = 2;
+        c.snapshot_every = Some(4);
+        c.restart = Some(RestartSpec { kill_round: 5, restart_round: 15 });
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 100, records: 5_000 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 30, "rounds must continue across kill + restart");
+        assert!(
+            r.snapshots_installed >= 1,
+            "the restarted follower must catch up via InstallSnapshot"
+        );
     }
 
     #[test]

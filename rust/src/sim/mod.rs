@@ -1,11 +1,22 @@
 //! Deterministic discrete-event simulation of the full benchmark pipeline
 //! (virtual time, seeded): the environment in which every paper figure is
-//! regenerated. See DESIGN.md §6 for the calibration model.
+//! regenerated. See DESIGN.md §6 for the calibration model and
+//! `docs/ARCHITECTURE.md` for how this driver relates to the sans-io core.
+//!
+//! A run is a pure function of `(SimConfig, seed)`: same inputs ⇒
+//! bit-identical commit sequence and metrics (the replay-determinism tests
+//! pin this). Two round drivers share the event queue: the lock-step driver
+//! (`pipeline = 1`, frozen so the historical figures reproduce bit-for-bit)
+//! and the pipelined driver (`pipeline > 1`, overlapping replication
+//! rounds). Both support snapshot compaction (`SimConfig::snapshot_every`),
+//! fault schedules (kills, contention, a follower kill + restart via
+//! [`RestartSpec`]), delay models D1–D4 and heterogeneous zones.
 
 pub mod cluster;
 pub mod event;
 
 pub use cluster::{
-    run, DigestMode, Protocol, ReconfigSpec, RoundStat, SimConfig, SimResult, WorkloadSpec,
+    run, DigestMode, Protocol, ReconfigSpec, RestartSpec, RoundStat, SimConfig, SimResult,
+    WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

@@ -9,3 +9,31 @@ pub mod rel;
 pub use digest::DigestState;
 pub use doc::{ApplyResult, DocStore};
 pub use rel::{RelStore, TpccApplyResult};
+
+/// Little-endian wire helpers shared by the store snapshot codecs
+/// (`DocStore::to_snapshot_bytes` / `RelStore::to_snapshot_bytes`): the
+/// serialized replica state `InstallSnapshot` ships to a catching-up
+/// follower. Readers return `None` on truncated input instead of panicking.
+pub(crate) mod wire {
+    pub fn push_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn push_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn read_u32(bytes: &[u8], at: &mut usize) -> Option<u32> {
+        let end = at.checked_add(4)?;
+        let chunk: [u8; 4] = bytes.get(*at..end)?.try_into().ok()?;
+        *at = end;
+        Some(u32::from_le_bytes(chunk))
+    }
+
+    pub fn read_u64(bytes: &[u8], at: &mut usize) -> Option<u64> {
+        let end = at.checked_add(8)?;
+        let chunk: [u8; 8] = bytes.get(*at..end)?.try_into().ok()?;
+        *at = end;
+        Some(u64::from_le_bytes(chunk))
+    }
+}

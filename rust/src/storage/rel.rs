@@ -157,6 +157,83 @@ impl RelStore {
     pub fn items_per_warehouse(&self) -> usize {
         self.items_per_warehouse
     }
+
+    /// Serialize the full replica state (every warehouse's districts,
+    /// stock, YTD counters, plus the stream digest and batch count) — the
+    /// `InstallSnapshot` payload for the TPC-C path.
+    pub fn to_snapshot_bytes(&self) -> Vec<u8> {
+        use crate::storage::wire::{push_u32, push_u64};
+        let mut out = Vec::with_capacity(32 + self.warehouses.len() * 256);
+        push_u32(&mut out, self.warehouses.len() as u32);
+        push_u32(&mut out, self.items_per_warehouse as u32);
+        push_u32(&mut out, self.stream_digest);
+        push_u64(&mut out, self.applied_batches);
+        for wh in &self.warehouses {
+            push_u32(&mut out, wh.districts.len() as u32);
+            for d in &wh.districts {
+                push_u32(&mut out, d.next_order_id);
+                push_u64(&mut out, d.ytd);
+            }
+            push_u32(&mut out, wh.stock.len() as u32);
+            for &s in &wh.stock {
+                push_u32(&mut out, s);
+            }
+            push_u64(&mut out, wh.ytd);
+            push_u32(&mut out, wh.delivered_orders);
+        }
+        out
+    }
+
+    /// Rebuild a replica from `to_snapshot_bytes` output. `None` on
+    /// malformed input — the caller falls back to full log replay. Beyond
+    /// framing, the `apply` invariants are enforced (≥ 1 warehouse, exactly
+    /// 10 districts each — the TPC-C spec `d % 10` indexing — and non-empty
+    /// stock of the declared size), so a decoded store can never panic on
+    /// the next batch.
+    pub fn from_snapshot_bytes(bytes: &[u8]) -> Option<RelStore> {
+        use crate::storage::wire::{read_u32, read_u64};
+        let mut at = 0usize;
+        let n_wh = read_u32(bytes, &mut at)? as usize;
+        let items = read_u32(bytes, &mut at)? as usize;
+        let stream_digest = read_u32(bytes, &mut at)?;
+        let applied_batches = read_u64(bytes, &mut at)?;
+        if n_wh == 0 || items == 0 {
+            return None;
+        }
+        let mut warehouses = Vec::with_capacity(n_wh.min(bytes.len() / 8 + 1));
+        for _ in 0..n_wh {
+            let n_d = read_u32(bytes, &mut at)? as usize;
+            if n_d != 10 {
+                return None; // apply indexes districts[arg % 10]
+            }
+            let mut districts = Vec::with_capacity(n_d);
+            for _ in 0..n_d {
+                let next_order_id = read_u32(bytes, &mut at)?;
+                let ytd = read_u64(bytes, &mut at)?;
+                districts.push(District { next_order_id, ytd });
+            }
+            let n_s = read_u32(bytes, &mut at)? as usize;
+            if n_s != items {
+                return None; // apply indexes stock[.. % stock.len()]
+            }
+            let mut stock = Vec::with_capacity(n_s.min(bytes.len() / 4 + 1));
+            for _ in 0..n_s {
+                stock.push(read_u32(bytes, &mut at)?);
+            }
+            let ytd = read_u64(bytes, &mut at)?;
+            let delivered_orders = read_u32(bytes, &mut at)?;
+            warehouses.push(Warehouse { districts, stock, ytd, delivered_orders });
+        }
+        if at != bytes.len() {
+            return None; // trailing garbage
+        }
+        Some(RelStore {
+            warehouses,
+            items_per_warehouse: items,
+            applied_batches,
+            stream_digest,
+        })
+    }
 }
 
 /// Convenience re-export for cost-model constants.
@@ -216,6 +293,35 @@ mod tests {
         let after_d: Vec<u32> =
             s.warehouse(0).districts.iter().map(|d| d.next_order_id).collect();
         assert_eq!(before_d, after_d);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_lossless() {
+        let mut gen = TpccGen::new(6, 5);
+        let mut s = RelStore::new(6);
+        for _ in 0..3 {
+            s.apply(&gen.batch(400));
+        }
+        let bytes = s.to_snapshot_bytes();
+        let restored = RelStore::from_snapshot_bytes(&bytes).expect("decode");
+        assert_eq!(restored.stream_digest(), s.stream_digest());
+        assert_eq!(restored.applied_batches(), s.applied_batches());
+        assert_eq!(restored.warehouses(), s.warehouses());
+        for w in 0..s.warehouses() {
+            assert_eq!(restored.warehouse(w).ytd, s.warehouse(w).ytd, "wh {w}");
+            assert_eq!(
+                restored.warehouse(w).delivered_orders,
+                s.warehouse(w).delivered_orders
+            );
+            for d in 0..10 {
+                assert_eq!(
+                    restored.warehouse(w).districts[d].next_order_id,
+                    s.warehouse(w).districts[d].next_order_id
+                );
+            }
+        }
+        assert_eq!(restored.to_snapshot_bytes(), bytes, "deterministic encoding");
+        assert!(RelStore::from_snapshot_bytes(&bytes[..bytes.len() - 1]).is_none());
     }
 
     #[test]

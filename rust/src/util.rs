@@ -16,6 +16,14 @@ impl Fnv64 {
         Fnv64(0xcbf2_9ce4_8422_2325)
     }
 
+    /// Resume hashing from a previously `finish()`ed state. FNV has no
+    /// finalization step, so `finish` returns the raw running state and the
+    /// fold can be split at any point — the property the compactable log
+    /// uses to chain `prefix_digest` across a discarded prefix.
+    pub fn from_state(state: u64) -> Fnv64 {
+        Fnv64(state)
+    }
+
     pub fn write_u64(&mut self, v: u64) {
         for b in v.to_le_bytes() {
             self.0 ^= b as u64;
@@ -46,5 +54,21 @@ mod tests {
         c.write_u64(1);
         assert_ne!(a.finish(), c.finish(), "order must matter");
         assert_ne!(Fnv64::new().finish(), a.finish());
+    }
+
+    #[test]
+    fn split_fold_resumes_identically() {
+        let mut whole = Fnv64::new();
+        for v in [3u64, 1, 4, 1, 5] {
+            whole.write_u64(v);
+        }
+        let mut head = Fnv64::new();
+        head.write_u64(3);
+        head.write_u64(1);
+        let mut tail = Fnv64::from_state(head.finish());
+        for v in [4u64, 1, 5] {
+            tail.write_u64(v);
+        }
+        assert_eq!(whole.finish(), tail.finish(), "fold must be splittable");
     }
 }

@@ -351,8 +351,11 @@ fn committed_entries_survive_leader_changes() {
 /// Randomized-schedule safety sweep: 128 seeded chaos schedules mixing
 /// drop/duplication rates (adversarial reordering doubles as unbounded delay
 /// skew), mid-schedule crash kills, and pipelined proposal bursts at depth
-/// 1–8. Asserts election safety, log matching, the weighted-commit rule +
-/// monotonicity, and no committed-entry loss — at every depth.
+/// 1–8. Half the schedules additionally run snapshot compaction at tiny
+/// intervals (1–3 committed entries), so InstallSnapshot catch-up races the
+/// chaos too. Asserts election safety, log matching (digest-chained across
+/// compaction), the weighted-commit rule + monotonicity, and no
+/// committed-entry loss — at every depth.
 #[test]
 fn randomized_schedule_safety_sweep() {
     for seed in 0..128u64 {
@@ -375,6 +378,12 @@ fn randomized_schedule_safety_sweep() {
         let drop_p = 0.02 + (seed % 5) as f64 * 0.03;
         let dup_p = 0.02 + (seed % 3) as f64 * 0.04;
         let mut c = Chaos::new(n, mode, seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1, drop_p, dup_p);
+        if seed % 2 == 1 {
+            let every = 1 + (seed % 3); // aggressive: compact every 1–3 commits
+            for node in &mut c.nodes {
+                node.set_snapshot_every(Some(every));
+            }
+        }
         let outs = c.nodes[0].step(Input::ElectionTimeout);
         c.absorb(0, outs);
         let mut sched = Rng::new(seed ^ 0x00C0_FFEE);

@@ -314,6 +314,56 @@ fn fig20_pipeline_depth_shape() {
     }
 }
 
+/// Fig. 21 shape: every snapshot interval completes the full round budget
+/// despite the mid-run kill + restart; compaction bounds the retained log
+/// where the off-row grows with the run; the tightest interval forces an
+/// InstallSnapshot catch-up; and committed wall-clock throughput stays in
+/// family with the compaction-off baseline.
+#[test]
+fn fig21_compaction_shape() {
+    let t = figures::fig21_compaction(Scale::Quick);
+    let intervals = figures::fig21_intervals(Scale::Quick);
+    assert_eq!(t.rows.len(), intervals.len());
+    let rounds = Scale::Quick.rounds().max(16).to_string();
+    for (i, row) in t.rows.iter().enumerate() {
+        assert_eq!(row[1], rounds, "row {i}: rounds incomplete");
+    }
+    let max_log: Vec<f64> =
+        (0..t.rows.len()).map(|i| t.num(i, "max_log").unwrap()).collect();
+    assert!(
+        max_log[1] < max_log[0],
+        "compaction must bound the retained log: {max_log:?}"
+    );
+    assert!(
+        max_log[1] <= (2 + 2 * 4 + 8) as f64,
+        "interval-2 retained log too long: {}",
+        max_log[1]
+    );
+    assert!(
+        t.num(1, "installs").unwrap() >= 1.0,
+        "the restarted follower must catch up via InstallSnapshot"
+    );
+    let off = t.num(0, "wall_tput_ops_s").unwrap();
+    let on = t.num(1, "wall_tput_ops_s").unwrap();
+    assert!(
+        on > 0.5 * off && on < 2.0 * off,
+        "compaction moved committed throughput: off {off} vs on {on}"
+    );
+}
+
+/// The snapshot knobs round-trip through the TOML config path.
+#[test]
+fn snapshot_config_roundtrip() {
+    let cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 2\nn = 11\nsnapshot_every = 32\nrounds = 9\n\
+         [faults]\nrestart_kill_round = 3\nrestart_round = 6\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.snapshot_every, Some(32));
+    let rs = cfg.restart.unwrap();
+    assert_eq!((rs.kill_round, rs.restart_round), (3, 6));
+}
+
 // Note: "depth 1 reproduces the lock-step driver" holds by construction —
 // `run()` dispatches `pipeline <= 1` to the untouched historical driver
 // (see sim::cluster::run) — so there is deliberately no test comparing

@@ -73,6 +73,31 @@ fn different_seeds_diverge() {
 }
 
 #[test]
+fn compaction_preserves_commit_sequence_and_replays_bit_identical() {
+    // Snapshot compaction is pure bookkeeping: it must not change what
+    // commits (commit-sequence digest vs the compaction-off run), and a
+    // compacting run must itself replay bit-for-bit — at depth 1 and above.
+    for depth in [1usize, 4] {
+        let mut on = base(Protocol::Cabinet { t: 2 }, 7, depth, 11);
+        on.rounds = 24;
+        on.snapshot_every = Some(4);
+        let mut off = on.clone();
+        off.snapshot_every = None;
+        let a = run(&on);
+        let b = run(&off);
+        assert_eq!(a.rounds.len(), 24, "depth {depth}");
+        assert_eq!(
+            a.commit_sequence_digest(),
+            b.commit_sequence_digest(),
+            "depth {depth}: compaction changed the commit sequence"
+        );
+        assert!(a.snapshots_taken > 0, "depth {depth}: no snapshots taken");
+        let a2 = run(&on);
+        assert_bit_identical(&a, &a2, &format!("compacting depth {depth}"));
+    }
+}
+
+#[test]
 fn depth_changes_the_trajectory_but_not_the_commit_count() {
     // Depth is a real knob: depth 4 must take a different virtual-time
     // trajectory than depth 1 (same seed) while still committing every

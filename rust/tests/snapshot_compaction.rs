@@ -1,0 +1,261 @@
+//! Snapshot/compaction integration tests — the scale story behind
+//! `docs/ARCHITECTURE.md` §"Snapshotting": with `snapshot_every` set, a
+//! long simulation runs on a bounded in-memory log, a killed-and-restarted
+//! follower catches up from a leader snapshot instead of full log replay,
+//! and compaction never changes *what* commits (the commit-sequence digest
+//! is bit-identical to the compaction-off run, at pipeline depth 1 and
+//! above). Plus the storage-level property: restoring a serialized store
+//! snapshot and applying the remaining batches reaches the exact state that
+//! full replay reaches.
+
+use std::sync::Arc;
+
+use cabinet::consensus::{
+    AppState, Input, Message, Mode, Node, Output, Payload, SnapshotCapture,
+};
+use cabinet::sim::{run, Protocol, RestartSpec, SimConfig, WorkloadSpec};
+use cabinet::storage::{DocStore, RelStore};
+use cabinet::workload::{TpccGen, Workload, YcsbGen};
+
+fn small(depth: usize, rounds: u64, every: Option<u64>) -> SimConfig {
+    let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+    c.rounds = rounds;
+    c.pipeline = depth;
+    c.snapshot_every = every;
+    c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 32, records: 2_000 };
+    c
+}
+
+/// Acceptance: a 10k-round sim keeps the in-memory log bounded by the
+/// snapshot interval + pipeline window, while the commit sequence stays
+/// bit-identical to the unbounded run — at depth 1 (lock-step) and depth 4.
+#[test]
+fn ten_k_rounds_bounded_log_same_commit_sequence() {
+    for depth in [1usize, 4] {
+        let every = 64u64;
+        let on = run(&small(depth, 10_000, Some(every)));
+        let off = run(&small(depth, 10_000, None));
+        assert_eq!(on.rounds.len(), 10_000, "depth {depth}: rounds incomplete");
+        assert_eq!(off.rounds.len(), 10_000, "depth {depth}");
+        assert_eq!(
+            on.commit_sequence_digest(),
+            off.commit_sequence_digest(),
+            "depth {depth}: compaction changed the commit sequence"
+        );
+        assert!(
+            on.snapshots_taken >= 10_000 / every - 2,
+            "depth {depth}: too few snapshots ({})",
+            on.snapshots_taken
+        );
+        assert!(
+            on.max_retained_log <= every + 2 * depth as u64 + 16,
+            "depth {depth}: retained log {} exceeds interval + window bound",
+            on.max_retained_log
+        );
+        assert!(
+            off.max_retained_log > 10_000,
+            "depth {depth}: the off-run must grow with the round count"
+        );
+    }
+}
+
+/// Acceptance: a follower killed mid-run and restarted with fresh state
+/// (empty log) catches up via `InstallSnapshot` — the leader has compacted
+/// past the follower's log, so replay alone cannot recover it — and the
+/// whole scenario replays deterministically.
+#[test]
+fn restarted_follower_catches_up_via_install_snapshot() {
+    let mut c = small(4, 60, Some(8));
+    c.restart = Some(RestartSpec { kill_round: 10, restart_round: 30 });
+    let r = run(&c);
+    assert_eq!(r.rounds.len(), 60, "rounds must continue across kill + restart");
+    assert!(
+        r.snapshots_installed >= 1,
+        "the restarted follower must install a leader snapshot"
+    );
+    let r2 = run(&c);
+    assert_eq!(r.metrics_digest(), r2.metrics_digest(), "restart replay diverged");
+    assert_eq!(r.commit_sequence_digest(), r2.commit_sequence_digest());
+}
+
+/// With compaction off, the same restart recovers by full log replay — no
+/// snapshot ever flows — pinning that `InstallSnapshot` is tied to
+/// compaction, not to restarts per se.
+#[test]
+fn restart_without_compaction_replays_the_log() {
+    let mut c = small(2, 40, None);
+    c.restart = Some(RestartSpec { kill_round: 8, restart_round: 20 });
+    let r = run(&c);
+    assert_eq!(r.rounds.len(), 40);
+    assert_eq!(r.snapshots_taken, 0);
+    assert_eq!(r.snapshots_installed, 0);
+}
+
+/// End-to-end store catch-up: a leader whose driver owns a `DocStore` ships
+/// its serialized state inside `InstallSnapshot` (the `AppState::Ycsb`
+/// payload), and a fresh follower's driver rebuilds a bit-identical store
+/// from the installed blob — no log replay involved.
+#[test]
+fn install_snapshot_carries_serialized_doc_store_end_to_end() {
+    // Play the driver by hand: apply committed YCSB batches to a store,
+    // answer SnapshotRequest with the store's serialized bytes.
+    fn drive(leader: &mut Node, store: &mut DocStore, outs: Vec<Output>) {
+        for o in outs {
+            match o {
+                Output::Commit(e) => {
+                    if let Payload::Ycsb(b) = &e.payload {
+                        store.apply(b);
+                    }
+                }
+                Output::SnapshotRequest { through } => {
+                    let bytes = Arc::new(store.to_snapshot_bytes());
+                    leader.complete_snapshot(through, AppState::Ycsb(bytes));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let n = 5;
+    let mut leader = Node::new(0, n, Mode::cabinet(n, 1));
+    leader.set_snapshot_every(Some(1));
+    leader.set_snapshot_capture(SnapshotCapture::Driver);
+    let mut store = DocStore::new();
+    let outs = leader.step(Input::ElectionTimeout);
+    drive(&mut leader, &mut store, outs);
+    for p in 1..n {
+        let outs = leader.step(Input::Receive(
+            p,
+            Message::RequestVoteReply { term: 1, from: p, granted: true },
+        ));
+        drive(&mut leader, &mut store, outs);
+    }
+    let mut gen = YcsbGen::new(Workload::A, 2_000, 3);
+    // commit the noop barrier, then two YCSB batches; node 4 never hears a
+    // thing (partitioned), so its next_index falls behind the compaction
+    let commit_up_to = |leader: &mut Node, store: &mut DocStore, idx: u64| {
+        for p in [1usize, 2] {
+            let wc = leader.wclock();
+            let outs = leader.step(Input::Receive(
+                p,
+                Message::AppendEntriesReply {
+                    term: 1,
+                    from: p,
+                    success: true,
+                    match_index: idx,
+                    wclock: wc,
+                },
+            ));
+            drive(leader, store, outs);
+        }
+    };
+    commit_up_to(&mut leader, &mut store, 1);
+    for _ in 0..2 {
+        let batch = Arc::new(gen.batch(200));
+        let outs = leader.step(Input::Propose(Payload::Ycsb(batch)));
+        drive(&mut leader, &mut store, outs);
+        let idx = leader.log().last_index();
+        commit_up_to(&mut leader, &mut store, idx);
+    }
+    assert_eq!(leader.commit_index(), 3);
+    assert_eq!(leader.log().last_compacted_index(), 3, "leader compacted");
+    assert_eq!(store.applied_batches(), 2);
+
+    // the next heartbeat ships InstallSnapshot to the partitioned node
+    let hb = leader.step(Input::HeartbeatTimeout);
+    let snap_msg = hb
+        .into_iter()
+        .find_map(|o| match o {
+            Output::Send(4, m @ Message::InstallSnapshot { .. }) => Some(m),
+            _ => None,
+        })
+        .expect("lagging follower must be sent a snapshot");
+
+    let mut follower = Node::new(4, n, Mode::cabinet(n, 1));
+    let f_outs = follower.step(Input::Receive(0, snap_msg));
+    let blob = f_outs
+        .into_iter()
+        .find_map(|o| match o {
+            Output::SnapshotInstalled(b) => Some(b),
+            _ => None,
+        })
+        .expect("follower must install the snapshot");
+    assert_eq!(follower.commit_index(), 3);
+    let bytes = match &blob.app {
+        AppState::Ycsb(b) => Arc::clone(b),
+        other => panic!("expected serialized DocStore, got {other:?}"),
+    };
+    let restored = DocStore::from_snapshot_bytes(&bytes).expect("decode");
+    assert_eq!(restored.state_digest(), store.state_digest(), "stores diverge");
+    assert_eq!(restored.applied_batches(), 2);
+    assert_eq!(restored.len(), store.len());
+}
+
+/// Storage property (YCSB): state digest identical via full log replay vs
+/// snapshot-install + suffix replay, across random batch streams and split
+/// points.
+#[test]
+fn doc_store_snapshot_install_equals_full_replay() {
+    for seed in 0..10u64 {
+        let mut gen = YcsbGen::new(Workload::A, 5_000, seed);
+        let batches: Vec<_> = (0..8).map(|_| gen.batch(300)).collect();
+        let mut replayed = DocStore::new();
+        for b in &batches {
+            replayed.apply(b);
+        }
+        let split = 1 + (seed as usize % 7);
+        let mut head = DocStore::new();
+        for b in &batches[..split] {
+            head.apply(b);
+        }
+        let bytes = head.to_snapshot_bytes();
+        let mut restored = DocStore::from_snapshot_bytes(&bytes).expect("decode");
+        for b in &batches[split..] {
+            restored.apply(b);
+        }
+        assert_eq!(
+            restored.state_digest(),
+            replayed.state_digest(),
+            "seed {seed} split {split}: digests diverge"
+        );
+        assert_eq!(restored.len(), replayed.len(), "seed {seed}");
+        assert_eq!(restored.applied_batches(), replayed.applied_batches());
+        assert_eq!(restored.digest_state(), replayed.digest_state());
+    }
+}
+
+/// Storage property (TPC-C): stream digest and table state identical via
+/// full replay vs snapshot-install + suffix replay.
+#[test]
+fn rel_store_snapshot_install_equals_full_replay() {
+    for seed in 0..8u64 {
+        let mut gen = TpccGen::new(8, seed);
+        let batches: Vec<_> = (0..6).map(|_| gen.batch(300)).collect();
+        let mut replayed = RelStore::new(8);
+        for b in &batches {
+            replayed.apply(b);
+        }
+        let split = 1 + (seed as usize % 5);
+        let mut head = RelStore::new(8);
+        for b in &batches[..split] {
+            head.apply(b);
+        }
+        let bytes = head.to_snapshot_bytes();
+        let mut restored = RelStore::from_snapshot_bytes(&bytes).expect("decode");
+        for b in &batches[split..] {
+            restored.apply(b);
+        }
+        assert_eq!(
+            restored.stream_digest(),
+            replayed.stream_digest(),
+            "seed {seed} split {split}"
+        );
+        for w in 0..replayed.warehouses() {
+            assert_eq!(restored.warehouse(w).ytd, replayed.warehouse(w).ytd);
+            assert_eq!(
+                restored.warehouse(w).delivered_orders,
+                replayed.warehouse(w).delivered_orders
+            );
+        }
+    }
+}
