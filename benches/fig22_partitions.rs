@@ -1,0 +1,20 @@
+//! `cargo bench` target regenerating Fig 22 — commit availability across
+//! partition/heal cycles (quick scale; run `cargo run --release --example
+//! figures -- fig22 --paper` for the full version). Each row drives the
+//! pipelined engine through the nemesis schedule (leader isolation, a
+//! minority-follower split, 2% loss, 2% duplication, 5% bounded reordering)
+//! with the safety checker validating every run; the `terms` column shows
+//! PreVote bounding term churn on the identical schedule.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig22_partitions", || {
+        last = Some(figures::fig22_partitions(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -36,8 +36,9 @@ fn main() {
         "fig19" => vec![figures::fig19(scale)],
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         "fig21" => vec![figures::fig21_compaction(scale)],
+        "fig22" => vec![figures::fig22_partitions(scale)],
         other => {
-            eprintln!("unknown figure {other}; use fig3..fig21 or all");
+            eprintln!("unknown figure {other}; use fig3..fig22 or all");
             std::process::exit(1);
         }
     };

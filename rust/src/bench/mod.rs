@@ -5,7 +5,9 @@
 pub mod figures;
 pub mod harness;
 pub mod metrics;
+pub mod safety;
 
 pub use figures::{all_figures, lineup, Scale};
 pub use harness::{Bencher, BenchStats};
 pub use metrics::{fmt_tps, Summary, Table};
+pub use safety::{check as safety_check, SafetyReport};

@@ -1,0 +1,178 @@
+//! The deterministic safety checker: validates the evidence a run leaves
+//! behind ([`sim::SafetyLog`] — per-node commit sequences plus per-term
+//! leadership observations) against the three properties every
+//! adversarial-network scenario must preserve:
+//!
+//! 1. **Prefix consistency** — no two nodes ever commit different terms at
+//!    the same log index (Theorem 4.2 / Raft's State Machine Safety), and
+//!    each node's committed indices form a strictly increasing sequence
+//!    (no replays; forward jumps are legitimate — an installed snapshot
+//!    covers its prefix without re-emitting commits).
+//! 2. **Single leader per term** — at most one node ever establishes
+//!    leadership in any given term (Election Safety).
+//! 3. **Monotone applied state** — a node's commit index never regresses
+//!    (a duplicated or reordered InstallSnapshot / AppendEntries must not
+//!    rewind what was applied).
+//!
+//! The checker is pure data → verdict: the simulator collects the log when
+//! `SimConfig::track_safety` is set, the chaos harness in
+//! `rust/tests/consensus_safety.rs` assembles one by hand, and fig22 runs
+//! it over every row it prints.
+
+use crate::sim::SafetyLog;
+
+/// The checker's verdict: every violated property, spelled out.
+#[derive(Clone, Debug)]
+pub struct SafetyReport {
+    /// Human-readable violations; empty = the run was safe.
+    pub violations: Vec<String>,
+    /// Total commit records examined.
+    pub commits_checked: usize,
+    /// Distinct (index → term) decisions reconciled across nodes.
+    pub decisions: usize,
+    /// Leadership establishments examined.
+    pub leaders_checked: usize,
+}
+
+impl SafetyReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Validate a run's safety evidence. See the module docs for the property
+/// list. Returns every violation found (never panics — callers assert).
+pub fn check(log: &SafetyLog) -> SafetyReport {
+    let mut violations = Vec::new();
+    let mut commits_checked = 0usize;
+
+    // 1a + 3: per-node commit sequences are strictly increasing by index —
+    // commit order is apply order, so this is both "no gaps below a later
+    // commit on the same node" and "applied state never regresses".
+    for (node, commits) in log.commits.iter().enumerate() {
+        commits_checked += commits.len();
+        for w in commits.windows(2) {
+            if w[1].0 <= w[0].0 {
+                violations.push(format!(
+                    "node {node}: commit index regressed {} -> {} (terms {} -> {})",
+                    w[0].0, w[1].0, w[0].1, w[1].1
+                ));
+            }
+        }
+    }
+
+    // 1b: cross-node prefix consistency — one decided term per index.
+    // (index, term, first decider) sorted by index; a second term at the
+    // same index is a split-brain decision.
+    let mut decided: Vec<(u64, u64, usize)> = Vec::new();
+    for (node, commits) in log.commits.iter().enumerate() {
+        for &(index, term) in commits {
+            decided.push((index, term, node));
+        }
+    }
+    decided.sort_unstable();
+    let mut decisions = 0usize;
+    let mut i = 0;
+    while i < decided.len() {
+        let (index, term, node) = decided[i];
+        decisions += 1;
+        let mut j = i + 1;
+        while j < decided.len() && decided[j].0 == index {
+            if decided[j].1 != term {
+                violations.push(format!(
+                    "index {index}: node {node} committed term {term} but node {} \
+                     committed term {}",
+                    decided[j].2, decided[j].1
+                ));
+                // report each divergent pair once, not once per replica
+                break;
+            }
+            j += 1;
+        }
+        while j < decided.len() && decided[j].0 == index {
+            j += 1;
+        }
+        i = j;
+    }
+
+    // 2: single leader per term.
+    let mut by_term: Vec<(u64, usize)> = Vec::new();
+    for &(term, node) in &log.leaders {
+        match by_term.iter().find(|(t, _)| *t == term) {
+            Some(&(_, prev)) if prev != node => {
+                violations.push(format!(
+                    "term {term}: both node {prev} and node {node} became leader"
+                ));
+            }
+            Some(_) => {} // re-observing the same leader is fine
+            None => by_term.push((term, node)),
+        }
+    }
+
+    SafetyReport {
+        violations,
+        commits_checked,
+        decisions,
+        leaders_checked: log.leaders.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log2(a: Vec<(u64, u64)>, b: Vec<(u64, u64)>) -> SafetyLog {
+        SafetyLog { commits: vec![a, b], leaders: vec![] }
+    }
+
+    #[test]
+    fn clean_log_passes() {
+        let mut log = log2(
+            vec![(1, 1), (2, 1), (3, 2)],
+            vec![(1, 1), (2, 1)],
+        );
+        log.leaders = vec![(1, 0), (2, 1), (2, 1)];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.commits_checked, 5);
+        assert_eq!(r.decisions, 3);
+        assert_eq!(r.leaders_checked, 3);
+    }
+
+    #[test]
+    fn divergent_terms_at_same_index_flagged() {
+        let log = log2(vec![(1, 1), (2, 1)], vec![(1, 1), (2, 2)]);
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("index 2"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn commit_regression_flagged() {
+        let log = log2(vec![(1, 1), (3, 1), (2, 1)], vec![]);
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("regressed"), "{:?}", r.violations);
+        // duplicate re-commit of the same index is also a regression
+        let log = log2(vec![(1, 1), (1, 1)], vec![]);
+        assert!(!check(&log).is_clean());
+    }
+
+    #[test]
+    fn two_leaders_in_one_term_flagged() {
+        let log = SafetyLog {
+            commits: vec![vec![], vec![]],
+            leaders: vec![(3, 0), (4, 1), (3, 1)],
+        };
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("term 3"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn empty_log_is_clean() {
+        let r = check(&SafetyLog::new(3));
+        assert!(r.is_clean());
+        assert_eq!(r.commits_checked, 0);
+    }
+}

@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
+use crate::net::nemesis::{NemesisSpec, PartitionSpec};
 use crate::net::topology::ZoneAlloc;
 use crate::sim::{DigestMode, Protocol, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec};
 use crate::workload::Workload;
@@ -23,6 +24,7 @@ use crate::workload::Workload;
 /// seed = 42
 /// pipeline = 4           # in-flight replication rounds (default 1 = lock-step)
 /// snapshot_every = 64    # snapshot + compact every N committed entries (0 = off)
+/// pre_vote = true        # PreVote elections (Raft §9.6, n − t quorum); default off
 ///
 /// [workload]
 /// kind = "ycsb"          # ycsb | tpcc
@@ -43,6 +45,15 @@ use crate::workload::Workload;
 /// contention_slowdown = 2.5
 /// restart_kill_round = 10    # kill one follower ...
 /// restart_round = 30         # ... and restart it fresh (both or neither)
+///
+/// [nemesis]
+/// drop_p = 0.05              # per-message loss probability, [0, 1]
+/// dup_p = 0.02               # per-message duplication probability
+/// reorder_p = 0.10           # per-message bounded-extra-delay probability
+/// reorder_max_ms = 40        # upper bound on the extra delay (virtual ms)
+/// partitions = ["2000..6000=leader", "8000..20000=followers:2"]
+///                            # windows: START..END=leader | followers:K
+///                            #          | split:ids | oneway:ids
 /// ```
 pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let doc = toml::parse(text)?;
@@ -84,6 +95,7 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
             config.snapshot_every = Some(every as u64);
         }
     }
+    config.pre_vote = root.get("pre_vote").and_then(|v| v.as_bool()).unwrap_or(false);
     let _ = ZoneAlloc::heterogeneous(n); // n validated by construction
 
     if let Some(w) = doc.get("workload") {
@@ -152,6 +164,34 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
             }
             (None, None) => {}
             _ => bail!("restart_kill_round and restart_round must be set together"),
+        }
+    }
+
+    if let Some(nm) = doc.get("nemesis") {
+        let mut spec = NemesisSpec::default();
+        if let Some(p) = nm.get("drop_p").and_then(|v| v.as_float()) {
+            spec.drop_p = p;
+        }
+        if let Some(p) = nm.get("dup_p").and_then(|v| v.as_float()) {
+            spec.dup_p = p;
+        }
+        if let Some(p) = nm.get("reorder_p").and_then(|v| v.as_float()) {
+            spec.reorder_p = p;
+        }
+        if let Some(ms) = nm.get("reorder_max_ms").and_then(|v| v.as_float()) {
+            spec.reorder_max_ms = ms;
+        }
+        if let Some(parts) = nm.get("partitions").and_then(|v| v.as_array()) {
+            for p in parts {
+                let s = p
+                    .as_str()
+                    .context("[nemesis] partitions entries must be strings")?;
+                spec.partitions.push(PartitionSpec::parse(s)?);
+            }
+        }
+        spec.validate(n)?;
+        if !spec.is_noop() {
+            config.nemesis = Some(spec);
         }
     }
 
@@ -266,6 +306,56 @@ thresholds = [3, 1]
             "[faults]\nrestart_kill_round = 9\nrestart_round = 4\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn nemesis_table_roundtrip() {
+        use crate::net::nemesis::PartitionKind;
+        let cfg = sim_config_from_toml(
+            r#"
+protocol = "cabinet"
+t = 2
+n = 11
+pre_vote = true
+
+[nemesis]
+drop_p = 0.05
+dup_p = 0.02
+reorder_p = 0.1
+reorder_max_ms = 40
+partitions = ["2000..6000=leader", "8000..20000=followers:2"]
+"#,
+        )
+        .unwrap();
+        assert!(cfg.pre_vote);
+        let nm = cfg.nemesis.expect("nemesis parsed");
+        assert_eq!(nm.drop_p, 0.05);
+        assert_eq!(nm.dup_p, 0.02);
+        assert_eq!(nm.reorder_p, 0.1);
+        assert_eq!(nm.reorder_max_ms, 40.0);
+        assert_eq!(nm.partitions.len(), 2);
+        assert_eq!(nm.partitions[0].kind, PartitionKind::LeaderIsolation);
+        assert_eq!(nm.partitions[1].kind, PartitionKind::Followers { count: 2 });
+    }
+
+    #[test]
+    fn nemesis_validation_rejects_bad_tables() {
+        // probability outside [0, 1]
+        assert!(sim_config_from_toml("[nemesis]\ndrop_p = 1.5\n").is_err());
+        // overlapping partition windows
+        assert!(sim_config_from_toml(
+            "[nemesis]\npartitions = [\"0..100=leader\", \"50..200=followers:1\"]\n"
+        )
+        .is_err());
+        // group out of range for n
+        assert!(sim_config_from_toml("n = 5\n[nemesis]\npartitions = [\"0..10=split:9\"]\n")
+            .is_err());
+        // malformed DSL
+        assert!(sim_config_from_toml("[nemesis]\npartitions = [\"garbage\"]\n").is_err());
+        // empty table = no nemesis, defaults stay clean
+        let cfg = sim_config_from_toml("[nemesis]\n").unwrap();
+        assert!(cfg.nemesis.is_none());
+        assert!(!cfg.pre_vote);
     }
 
     #[test]

@@ -146,6 +146,26 @@ pub enum Message {
         from: NodeId,
         granted: bool,
     },
+    /// PreVote probe (Raft §9.6, adapted to Cabinet's n − t election
+    /// quorum): `term` is the *prospective* term the sender would campaign
+    /// in (its current term + 1). Receivers never adopt it — granting a
+    /// pre-vote changes no persistent state.
+    PreVote {
+        term: Term,
+        candidate: NodeId,
+        last_log_index: LogIndex,
+        last_log_term: Term,
+    },
+    /// Reply to a PreVote probe. `term` is the replier's *actual* current
+    /// term (a higher one steps the pre-candidate down); `for_term` echoes
+    /// the probe's prospective term so stale/reordered replies from an
+    /// earlier campaign are ignored.
+    PreVoteReply {
+        term: Term,
+        from: NodeId,
+        granted: bool,
+        for_term: Term,
+    },
     /// Leader → lagging follower: the follower's next entry was compacted
     /// away, so it catches up from a state snapshot instead of log replay.
     InstallSnapshot {
@@ -171,6 +191,8 @@ impl Message {
             | Message::AppendEntriesReply { term, .. }
             | Message::RequestVote { term, .. }
             | Message::RequestVoteReply { term, .. }
+            | Message::PreVote { term, .. }
+            | Message::PreVoteReply { term, .. }
             | Message::InstallSnapshot { term, .. }
             | Message::InstallSnapshotReply { term, .. } => *term,
         }
@@ -182,6 +204,8 @@ impl Message {
             Message::AppendEntriesReply { .. } => "AppendEntriesReply",
             Message::RequestVote { .. } => "RequestVote",
             Message::RequestVoteReply { .. } => "RequestVoteReply",
+            Message::PreVote { .. } => "PreVote",
+            Message::PreVoteReply { .. } => "PreVoteReply",
             Message::InstallSnapshot { .. } => "InstallSnapshot",
             Message::InstallSnapshotReply { .. } => "InstallSnapshotReply",
         }

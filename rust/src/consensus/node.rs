@@ -88,8 +88,10 @@ pub enum Output {
     Commit(Entry),
     /// Leader metrics hook: a replication round reached quorum.
     RoundCommitted { wclock: WClock, index: LogIndex, repliers: usize, quorum_weight: f64 },
-    /// Role transitions (metrics / logging).
-    BecameLeader,
+    /// Role transitions (metrics / logging). The term is carried so drivers
+    /// can record per-term leadership (the safety checker's
+    /// single-leader-per-term property) without reaching into the node.
+    BecameLeader { term: Term },
     SteppedDown,
     /// A proposal was rejected (not leader / reconfig in flight).
     ProposalRejected(Payload),
@@ -153,6 +155,27 @@ pub struct Node {
     // ---- candidate state ----
     votes: Vec<bool>,
 
+    // ---- PreVote state (Raft §9.6, Cabinet n − t quorum) -----------------
+    /// PreVote enabled: an election timeout first runs a non-disruptive
+    /// pre-campaign at term + 1; only a full election quorum of pre-grants
+    /// starts a real (term-incrementing) candidacy. A partitioned minority
+    /// can therefore never inflate its terms, so healing it cannot depose a
+    /// working cabinet.
+    pre_vote: bool,
+    /// A pre-campaign for `term + 1` is in flight.
+    prevote_active: bool,
+    /// Pre-grants collected (self pre-granted).
+    prevotes: Vec<bool>,
+    /// Leader contact since our own last election timeout. The sans-io
+    /// stand-in for §9.6's "heard from a leader within the minimum election
+    /// timeout": an `ElectionTimeout` input *is* the statement that a full
+    /// timeout passed without contact. While true, PreVote probes are
+    /// denied — a healthy cabinet cannot be pre-voted out from under a
+    /// working leader even by an up-to-date disruptor.
+    heard_from_leader: bool,
+    /// Real (term-incrementing) candidacies this node has started.
+    elections_started: u64,
+
     // ---- leader state ----
     next_index: Vec<LogIndex>,
     match_index: Vec<LogIndex>,
@@ -209,6 +232,11 @@ impl Node {
             my_weight: 1.0,
             my_wclock: 0,
             votes: vec![false; n],
+            pre_vote: false,
+            prevote_active: false,
+            prevotes: vec![false; n],
+            heard_from_leader: false,
+            elections_started: 0,
             next_index: vec![1; n],
             match_index: vec![0; n],
             wclock: 0,
@@ -243,6 +271,12 @@ impl Node {
     /// Select how snapshot replica state is captured (default: `Inline`).
     pub fn set_snapshot_capture(&mut self, capture: SnapshotCapture) {
         self.snapshot_capture = capture;
+    }
+
+    /// Enable PreVote (Raft §9.6, adapted to Cabinet's n − t election
+    /// quorum). Off by default — the historical election behavior.
+    pub fn set_pre_vote(&mut self, on: bool) {
+        self.pre_vote = on;
     }
 
     // ---- accessors -------------------------------------------------------
@@ -330,6 +364,18 @@ impl Node {
         self.snapshots_installed
     }
 
+    /// Real (term-incrementing) candidacies this node has started. PreVote
+    /// pre-campaigns that never reached a pre-quorum are not counted —
+    /// that is exactly the disruption PreVote suppresses.
+    pub fn elections_started(&self) -> u64 {
+        self.elections_started
+    }
+
+    /// Is a PreVote pre-campaign currently in flight? (Test/metrics hook.)
+    pub fn prevote_active(&self) -> bool {
+        self.prevote_active
+    }
+
     /// The latest snapshot this node holds (taken or installed), if any.
     pub fn snapshot(&self) -> Option<&SnapshotBlob> {
         self.snapshot.as_ref()
@@ -354,9 +400,40 @@ impl Node {
         if self.role == Role::Leader {
             return; // stale timer
         }
-        // become candidate (Raft §5.2)
+        // a full election timeout passed without leader contact
+        self.heard_from_leader = false;
+        if self.pre_vote {
+            // Pre-campaign (Raft §9.6): probe at term + 1 without touching
+            // term or voted_for. A timed-out pre-campaign simply restarts —
+            // no state was disturbed, so there is nothing to roll back.
+            self.prevote_active = true;
+            self.prevotes = vec![false; self.n];
+            self.prevotes[self.id] = true;
+            for peer in self.peers() {
+                out.push(Output::Send(
+                    peer,
+                    Message::PreVote {
+                        term: self.term + 1,
+                        candidate: self.id,
+                        last_log_index: self.log.last_index(),
+                        last_log_term: self.log.last_term(),
+                    },
+                ));
+            }
+            out.push(Output::ResetElectionTimer);
+            return;
+        }
+        self.start_candidacy(out);
+    }
+
+    /// Become a real candidate (Raft §5.2): increment the term and request
+    /// votes. With PreVote enabled this only runs after a full election
+    /// quorum of pre-grants.
+    fn start_candidacy(&mut self, out: &mut Vec<Output>) {
+        self.prevote_active = false;
         self.role = Role::Candidate;
         self.term += 1;
+        self.elections_started += 1;
         self.voted_for = Some(self.id);
         self.votes = vec![false; self.n];
         self.votes[self.id] = true;
@@ -526,8 +603,12 @@ impl Node {
     // ---- RPC handling ------------------------------------------------------
 
     fn on_receive(&mut self, from: NodeId, msg: Message, out: &mut Vec<Output>) {
-        // Raft term rule: higher term ⇒ step down to follower.
-        if msg.term() > self.term {
+        // Raft term rule: higher term ⇒ step down to follower. PreVote
+        // probes are exempt — they carry a *prospective* term (§9.6), and
+        // adopting it would reintroduce exactly the disruption PreVote
+        // exists to prevent. (PreVote *replies* carry the replier's actual
+        // term and do follow the rule.)
+        if !matches!(msg, Message::PreVote { .. }) && msg.term() > self.term {
             self.become_follower(msg.term(), out);
         }
         match msg {
@@ -559,6 +640,12 @@ impl Node {
             }
             Message::RequestVoteReply { term, from, granted } => {
                 self.on_vote_reply(term, from, granted, out)
+            }
+            Message::PreVote { term, candidate, last_log_index, last_log_term } => {
+                self.on_pre_vote(term, candidate, last_log_index, last_log_term, out)
+            }
+            Message::PreVoteReply { term, from, granted, for_term } => {
+                self.on_pre_vote_reply(term, from, granted, for_term, out)
             }
             Message::InstallSnapshot { term, leader, snapshot } => {
                 self.on_install_snapshot(term, leader, snapshot, out)
@@ -600,6 +687,9 @@ impl Node {
         if self.role != Role::Follower {
             self.become_follower(term, out);
         }
+        // a working leader exists — abandon any pre-campaign, deny probes
+        self.prevote_active = false;
+        self.heard_from_leader = true;
         out.push(Output::ResetElectionTimer);
 
         // NewWeight (Algorithm 1, Lines 29–31): store the weight clock and
@@ -831,6 +921,8 @@ impl Node {
         if self.role != Role::Follower {
             self.become_follower(term, out);
         }
+        self.prevote_active = false;
+        self.heard_from_leader = true;
         out.push(Output::ResetElectionTimer);
         if blob.wclock >= self.my_wclock {
             self.my_wclock = blob.wclock;
@@ -890,6 +982,57 @@ impl Node {
         }
     }
 
+    /// PreVote probe (Raft §9.6): grant iff the prospective term is ahead of
+    /// ours, the candidate's log is up to date, we are not ourselves a
+    /// working leader, and we have not heard from a leader since our own
+    /// last election timeout (the stickiness clause — a healthy cabinet is
+    /// never pre-voted away). Granting changes no persistent state — no term
+    /// adoption, no voted_for, no timer reset — so duplicated or reordered
+    /// probes are trivially idempotent.
+    fn on_pre_vote(
+        &mut self,
+        term: Term,
+        candidate: NodeId,
+        last_log_index: LogIndex,
+        last_log_term: Term,
+        out: &mut Vec<Output>,
+    ) {
+        let up_to_date = self.log.candidate_up_to_date(last_log_index, last_log_term);
+        let granted = self.role != Role::Leader
+            && !self.heard_from_leader
+            && term > self.term
+            && up_to_date;
+        out.push(Output::Send(
+            candidate,
+            Message::PreVoteReply { term: self.term, from: self.id, granted, for_term: term },
+        ));
+    }
+
+    fn on_pre_vote_reply(
+        &mut self,
+        term: Term,
+        from: NodeId,
+        granted: bool,
+        for_term: Term,
+        out: &mut Vec<Output>,
+    ) {
+        // the generic term rule has already stepped us down if the replier's
+        // actual term was ahead (which also cancelled the pre-campaign)
+        let _ = term;
+        // count only grants for *this* campaign (for_term pins it; a stale
+        // grant from an earlier pre-campaign must not contribute)
+        if !self.prevote_active || !granted || for_term != self.term + 1 {
+            return;
+        }
+        self.prevotes[from] = true;
+        let have = self.prevotes.iter().filter(|&&v| v).count();
+        if have >= self.mode.election_quorum(self.n) {
+            // a full election quorum is reachable and willing: campaign for
+            // real (this is the only path that increments the term)
+            self.start_candidacy(out);
+        }
+    }
+
     fn on_request_vote(
         &mut self,
         term: Term,
@@ -934,6 +1077,7 @@ impl Node {
 
     fn become_leader(&mut self, out: &mut Vec<Output>) {
         self.role = Role::Leader;
+        self.prevote_active = false;
         self.next_index = vec![self.log.last_index() + 1; self.n];
         self.match_index = vec![0; self.n];
         self.match_index[self.id] = self.log.last_index();
@@ -945,7 +1089,7 @@ impl Node {
         self.replied = vec![false; self.n];
         self.inflight.clear();
         self.pending_reconfig = None;
-        out.push(Output::BecameLeader);
+        out.push(Output::BecameLeader { term: self.term });
         out.push(Output::StartHeartbeat);
         // Commit a no-op barrier to establish leadership completeness.
         self.start_round();
@@ -966,6 +1110,7 @@ impl Node {
         }
         self.term = term;
         self.role = Role::Follower;
+        self.prevote_active = false;
         // retreat-on-conflict: any in-flight rounds die with the leadership
         self.inflight.clear();
         if was_leader {
@@ -1783,6 +1928,228 @@ mod tests {
         assert!(outs
             .iter()
             .any(|o| matches!(o, Output::Send(0, Message::InstallSnapshotReply { .. }))));
+    }
+
+    // ---- PreVote (Raft §9.6, Cabinet n − t quorum) -----------------------
+
+    #[test]
+    fn prevote_timeout_does_not_bump_term() {
+        let mut n = Node::new(0, 5, Mode::cabinet(5, 1));
+        n.set_pre_vote(true);
+        let outs = n.step(Input::ElectionTimeout);
+        assert_eq!(n.term(), 0, "pre-campaign must not touch the term");
+        assert_eq!(n.role(), Role::Follower);
+        assert!(n.prevote_active());
+        assert_eq!(n.elections_started(), 0);
+        let probes = outs
+            .iter()
+            .filter(|o| matches!(o, Output::Send(_, Message::PreVote { term: 1, .. })))
+            .count();
+        assert_eq!(probes, 4, "probe every peer at the prospective term");
+        // repeated timeouts keep probing without disturbing anything
+        let _ = n.step(Input::ElectionTimeout);
+        let _ = n.step(Input::ElectionTimeout);
+        assert_eq!(n.term(), 0);
+        assert_eq!(n.elections_started(), 0);
+    }
+
+    #[test]
+    fn prevote_quorum_starts_real_candidacy() {
+        // n=5, t=1: election quorum n − t = 4 (self + 3 pre-grants)
+        let mut n = Node::new(0, 5, Mode::cabinet(5, 1));
+        n.set_pre_vote(true);
+        let _ = n.step(Input::ElectionTimeout);
+        for p in [1usize, 2] {
+            let outs = n.step(Input::Receive(
+                p,
+                Message::PreVoteReply { term: 0, from: p, granted: true, for_term: 1 },
+            ));
+            assert_eq!(n.term(), 0, "below pre-quorum: no candidacy");
+            assert!(outs.iter().all(|o| !matches!(o, Output::Send(_, Message::RequestVote { .. }))));
+        }
+        let outs = n.step(Input::Receive(
+            3,
+            Message::PreVoteReply { term: 0, from: 3, granted: true, for_term: 1 },
+        ));
+        assert_eq!(n.role(), Role::Candidate);
+        assert_eq!(n.term(), 1, "pre-quorum reached: real candidacy at term + 1");
+        assert_eq!(n.elections_started(), 1);
+        assert!(outs.iter().any(|o| matches!(o, Output::Send(_, Message::RequestVote { term: 1, .. }))));
+    }
+
+    #[test]
+    fn stale_or_duplicate_prevote_replies_are_inert() {
+        let mut n = Node::new(0, 5, Mode::Raft); // quorum 3
+        n.set_pre_vote(true);
+        let _ = n.step(Input::ElectionTimeout);
+        // a grant for a *different* campaign term is ignored
+        let _ = n.step(Input::Receive(
+            1,
+            Message::PreVoteReply { term: 0, from: 1, granted: true, for_term: 7 },
+        ));
+        assert_eq!(n.term(), 0);
+        // duplicated grants from one node count once
+        for _ in 0..3 {
+            let _ = n.step(Input::Receive(
+                1,
+                Message::PreVoteReply { term: 0, from: 1, granted: true, for_term: 1 },
+            ));
+        }
+        assert_eq!(n.term(), 0, "one grantor cannot fake a quorum");
+        let _ = n.step(Input::Receive(
+            2,
+            Message::PreVoteReply { term: 0, from: 2, granted: true, for_term: 1 },
+        ));
+        assert_eq!(n.role(), Role::Candidate, "self + 2 distinct grants = quorum 3");
+    }
+
+    #[test]
+    fn prevote_grant_is_stateless() {
+        let mut n = Node::new(0, 3, Mode::Raft);
+        let outs = n.step(Input::Receive(
+            1,
+            Message::PreVote { term: 1, candidate: 1, last_log_index: 0, last_log_term: 0 },
+        ));
+        let granted = outs
+            .iter()
+            .find_map(|o| match o {
+                Output::Send(_, Message::PreVoteReply { granted, .. }) => Some(*granted),
+                _ => None,
+            })
+            .unwrap();
+        assert!(granted);
+        assert_eq!(n.term(), 0, "prospective term never adopted");
+        assert!(n.voted_for.is_none(), "pre-grant is not a vote");
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::ResetElectionTimer)),
+            "pre-grant must not defer our own timeout"
+        );
+        // the real vote in the same term is still free
+        let outs = n.step(Input::Receive(
+            2,
+            Message::RequestVote { term: 1, candidate: 2, last_log_index: 0, last_log_term: 0 },
+        ));
+        assert!(outs.iter().any(
+            |o| matches!(o, Output::Send(_, Message::RequestVoteReply { granted: true, .. }))
+        ));
+    }
+
+    #[test]
+    fn prevote_denied_by_leader_and_to_stale_logs() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_pre_vote(true);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        // the leader denies probes outright
+        let outs = c.nodes[0].step(Input::Receive(
+            1,
+            Message::PreVote { term: 5, candidate: 1, last_log_index: 99, last_log_term: 9 },
+        ));
+        assert!(outs.iter().any(
+            |o| matches!(o, Output::Send(_, Message::PreVoteReply { granted: false, .. }))
+        ));
+        // recent leader contact denies even an up-to-date probe (stickiness)
+        let outs = c.nodes[2].step(Input::Receive(
+            1,
+            Message::PreVote { term: 5, candidate: 1, last_log_index: 99, last_log_term: 9 },
+        ));
+        assert!(outs.iter().any(
+            |o| matches!(o, Output::Send(_, Message::PreVoteReply { granted: false, .. }))
+        ));
+        // isolate the up-to-dateness clause: after node 2's own timeout
+        // (stickiness cleared), a stale-log probe is still denied...
+        let _ = c.nodes[2].step(Input::ElectionTimeout);
+        let outs = c.nodes[2].step(Input::Receive(
+            1,
+            Message::PreVote { term: 5, candidate: 1, last_log_index: 0, last_log_term: 0 },
+        ));
+        assert!(
+            outs.iter().any(
+                |o| matches!(o, Output::Send(_, Message::PreVoteReply { granted: false, .. }))
+            ),
+            "stale-log probe must be denied on the up-to-dateness clause alone"
+        );
+        // ...while an up-to-date probe from the same state is granted
+        let (li, lt) = (c.nodes[2].log().last_index(), c.nodes[2].log().last_term());
+        let outs = c.nodes[2].step(Input::Receive(
+            1,
+            Message::PreVote { term: 5, candidate: 1, last_log_index: li, last_log_term: lt },
+        ));
+        assert!(outs.iter().any(
+            |o| matches!(o, Output::Send(_, Message::PreVoteReply { granted: true, .. }))
+        ));
+    }
+
+    #[test]
+    fn prevote_cluster_still_elects_and_commits() {
+        let mut c = TestCluster::cabinet(7, 2);
+        for node in &mut c.nodes {
+            node.set_pre_vote(true);
+        }
+        c.elect(0); // timeout → pre-campaign → pre-quorum → candidacy → leader
+        assert_eq!(c.nodes[0].term(), 1);
+        for k in 0..3 {
+            c.propose(0, Payload::Bytes(std::sync::Arc::new(vec![k])));
+        }
+        c.heartbeat(0);
+        for commits in &c.commits {
+            assert_eq!(commits.len(), 4); // noop + 3
+        }
+    }
+
+    #[test]
+    fn healed_minority_with_prevote_cannot_depose_the_leader() {
+        // The Cabinet-specific hazard: a partitioned (high-weight) minority
+        // repeatedly times out; on heal it must not be able to drag the
+        // working cabinet into new terms. With PreVote the minority's terms
+        // never moved, and its probes are denied on heal (stale log).
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_pre_vote(true);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        let leader_term = c.nodes[0].term();
+        // "partition": nodes 3 and 4 time out repeatedly with their probes
+        // swallowed (we simply discard the outputs — the minority cannot
+        // reach anyone)
+        for _ in 0..5 {
+            let _ = c.nodes[3].step(Input::ElectionTimeout);
+            let _ = c.nodes[4].step(Input::ElectionTimeout);
+        }
+        assert_eq!(c.nodes[3].term(), leader_term, "no term inflation while cut off");
+        assert_eq!(c.nodes[4].term(), leader_term);
+        // heal: the minority's next pre-campaign reaches everyone — commits
+        // in the majority moved the log past them, so every probe is denied
+        let outs = c.nodes[3].step(Input::ElectionTimeout);
+        c.pump(3, outs);
+        assert_eq!(c.nodes[0].role(), Role::Leader, "leader must survive the heal");
+        assert_eq!(c.nodes[0].term(), leader_term, "no disruption, no new term");
+        assert_eq!(c.nodes[3].elections_started(), 0);
+    }
+
+    #[test]
+    fn without_prevote_healed_minority_inflates_terms() {
+        // The control for the test above: same schedule, PreVote off — the
+        // minority's timeouts burn real terms and the heal deposes the
+        // leader (the historical Raft behavior PreVote removes).
+        let mut c = TestCluster::cabinet(5, 1);
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        let leader_term = c.nodes[0].term();
+        for _ in 0..5 {
+            let _ = c.nodes[3].step(Input::ElectionTimeout);
+        }
+        assert!(c.nodes[3].term() > leader_term, "terms inflate while cut off");
+        let outs = c.nodes[3].step(Input::ElectionTimeout);
+        c.pump(3, outs);
+        assert_ne!(
+            (c.nodes[0].role(), c.nodes[0].term()),
+            (Role::Leader, leader_term),
+            "healed inflated-term node must have disrupted the old leadership"
+        );
     }
 
     #[test]

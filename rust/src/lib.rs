@@ -22,7 +22,9 @@
 //! harnesses in `rust/tests/`. [`workload`] generates YCSB/TPC-C batches,
 //! [`storage`] applies them (with digests that tie replicas — and the
 //! [`runtime`] AOT kernels — together bit-for-bit), and [`net`] models
-//! delays, zones and faults.
+//! delays, zones and faults — including the adversarial nemesis layer
+//! (deterministic partitions, loss, duplication, reordering), with PreVote
+//! elections hardening [`consensus::Node`] against exactly that traffic.
 //!
 //! Replication is pipelined (the leader keeps up to `SimConfig::pipeline`
 //! rounds in flight, each judged by its propose-time weight/CT snapshot) and

@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -129,12 +129,38 @@ impl Default for LiveTimers {
     }
 }
 
+/// Link filter between node threads — the live runtime's nemesis hook.
+/// Every `Output::Send` consults it before crossing a channel; a blocked
+/// link silently drops the message, exactly like a partitioned network.
+/// Operator-driven (no schedule): tests and demos cut and heal links while
+/// the cluster runs.
+struct LinkTable {
+    n: usize,
+    /// Flattened n×n matrix: `blocked[from * n + to]`.
+    blocked: RwLock<Vec<bool>>,
+}
+
+impl LinkTable {
+    fn new(n: usize) -> LinkTable {
+        LinkTable { n, blocked: RwLock::new(vec![false; n * n]) }
+    }
+
+    fn allowed(&self, from: NodeId, to: NodeId) -> bool {
+        !self.blocked.read().expect("link table poisoned")[from * self.n + to]
+    }
+
+    fn set(&self, from: NodeId, to: NodeId, blocked: bool) {
+        self.blocked.write().expect("link table poisoned")[from * self.n + to] = blocked;
+    }
+}
+
 /// A running cluster. Dropping it (including during a panic unwind) stops
 /// all node threads.
 pub struct LiveCluster {
     inboxes: Vec<Sender<LiveIn>>,
     pub events: Receiver<LiveEvent>,
     handles: Vec<JoinHandle<NodeReport>>,
+    links: Arc<LinkTable>,
     n: usize,
 }
 
@@ -148,6 +174,12 @@ pub struct NodeReport {
     pub applies: usize,
     /// Last compacted log index (> 0 iff snapshotting trimmed the log).
     pub last_compacted: LogIndex,
+    /// Final term the node reached (the live `terms_advanced` signal: max
+    /// over the reports).
+    pub term: u64,
+    /// Real (term-incrementing) candidacies this node started — with
+    /// PreVote on, a partitioned minority reports zero.
+    pub elections_started: u64,
 }
 
 impl LiveCluster {
@@ -176,6 +208,20 @@ impl LiveCluster {
         seed: u64,
         snapshot_every: Option<u64>,
     ) -> LiveCluster {
+        Self::start_configured(n, mode, timers, apply_tx, seed, snapshot_every, false)
+    }
+
+    /// Fully configured start: everything `start_with_snapshots` offers plus
+    /// PreVote elections (Raft §9.6 / Cabinet n − t quorum) on every node.
+    pub fn start_configured(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+        snapshot_every: Option<u64>,
+        pre_vote: bool,
+    ) -> LiveCluster {
         let (event_tx, event_rx) = channel::<LiveEvent>();
         let mut inbox_txs = Vec::with_capacity(n);
         let mut inbox_rxs = Vec::with_capacity(n);
@@ -185,9 +231,11 @@ impl LiveCluster {
             inbox_rxs.push(rx);
         }
         let peers: Arc<Vec<Sender<LiveIn>>> = Arc::new(inbox_txs.clone());
+        let links = Arc::new(LinkTable::new(n));
         let mut handles = Vec::with_capacity(n);
         for (id, rx) in inbox_rxs.into_iter().enumerate() {
             let peers = Arc::clone(&peers);
+            let links = Arc::clone(&links);
             let event_tx = event_tx.clone();
             let apply_tx = apply_tx.clone();
             let mode = mode.clone();
@@ -195,18 +243,50 @@ impl LiveCluster {
                 .name(format!("node-{id}"))
                 .spawn(move || {
                     node_loop(
-                        id, n, mode, timers, rx, peers, event_tx, apply_tx, seed,
-                        snapshot_every,
+                        id, n, mode, timers, rx, peers, links, event_tx, apply_tx, seed,
+                        snapshot_every, pre_vote,
                     )
                 })
                 .expect("spawn node");
             handles.push(handle);
         }
-        LiveCluster { inboxes: inbox_txs, events: event_rx, handles, n }
+        LiveCluster { inboxes: inbox_txs, events: event_rx, handles, links, n }
     }
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    // ---- link filtering (the live nemesis hook) --------------------------
+
+    /// Block or unblock one directed link. Blocked sends are dropped
+    /// silently, exactly like a partitioned network path.
+    pub fn set_link(&self, from: NodeId, to: NodeId, up: bool) {
+        self.links.set(from, to, !up);
+    }
+
+    /// Cut every link between `group` and the rest of the cluster, both
+    /// directions (a bidirectional split). Links inside the group — and
+    /// inside its complement — keep working.
+    pub fn partition(&self, group: &[NodeId]) {
+        for from in 0..self.n {
+            for to in 0..self.n {
+                if group.contains(&from) != group.contains(&to) {
+                    self.links.set(from, to, true);
+                }
+            }
+        }
+    }
+
+    /// Cut a single node off from everyone else (both directions).
+    pub fn isolate(&self, node: NodeId) {
+        self.partition(&[node]);
+    }
+
+    /// Restore every link.
+    pub fn heal(&self) {
+        let mut blocked = self.links.blocked.write().expect("link table poisoned");
+        blocked.fill(false);
     }
 
     /// Bootstrap: make `node` start an election now.
@@ -285,13 +365,16 @@ fn node_loop(
     timers: LiveTimers,
     rx: Receiver<LiveIn>,
     peers: Arc<Vec<Sender<LiveIn>>>,
+    links: Arc<LinkTable>,
     events: Sender<LiveEvent>,
     apply_tx: Option<Sender<ApplyReq>>,
     seed: u64,
     snapshot_every: Option<u64>,
+    pre_vote: bool,
 ) -> NodeReport {
     let mut node = Node::new(id, n, mode);
     node.set_snapshot_every(snapshot_every);
+    node.set_pre_vote(pre_vote);
     if apply_tx.is_some() {
         // replica state lives on the applier thread — capture goes through
         // the SnapshotRequest / SnapshotReady handshake
@@ -321,7 +404,10 @@ fn node_loop(
         for o in outs {
             match o {
                 Output::Send(to, msg) => {
-                    let _ = peers[to].send(LiveIn::Rpc(id, msg));
+                    // the live nemesis hook: a cut link swallows the message
+                    if links.allowed(id, to) {
+                        let _ = peers[to].send(LiveIn::Rpc(id, msg));
+                    }
                 }
                 Output::ResetElectionTimer => {
                     *election_deadline = Instant::now() + rand_election(rng);
@@ -332,8 +418,8 @@ fn node_loop(
                 Output::StopHeartbeat => {
                     *heartbeat_deadline = None;
                 }
-                Output::BecameLeader => {
-                    let _ = events.send(LiveEvent::BecameLeader { node: id, term: 0 });
+                Output::BecameLeader { term } => {
+                    let _ = events.send(LiveEvent::BecameLeader { node: id, term });
                 }
                 Output::RoundCommitted { index, repliers, .. } => {
                     let _ = events.send(LiveEvent::RoundCommitted { node: id, index, repliers });
@@ -444,6 +530,8 @@ fn node_loop(
         committed_entries: committed,
         applies,
         last_compacted: node.log().last_compacted_index(),
+        term: node.term(),
+        elections_started: node.elections_started(),
     }
 }
 
@@ -530,6 +618,60 @@ mod tests {
             digests.windows(2).all(|w| w[0] == w[1]),
             "replica digests diverge: {digests:?}"
         );
+    }
+
+    #[test]
+    fn live_partition_failover_and_heal() {
+        // Link filtering end-to-end: isolate the leader, the majority elects
+        // a replacement (through PreVote), heal, and the old leader rejoins
+        // without deposing the new cabinet.
+        let cluster = LiveCluster::start_configured(
+            5,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            None,
+            77,
+            None,
+            true, // PreVote on
+        );
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![1])));
+        assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
+
+        cluster.isolate(leader);
+        let new_leader =
+            cluster.wait_for_leader(Duration::from_secs(10)).expect("no failover election");
+        assert_ne!(new_leader, leader, "isolated leader cannot keep leading");
+
+        cluster.heal();
+        cluster.propose(new_leader, Payload::Bytes(Arc::new(vec![2])));
+        // old barrier (1) + entry (2) + new barrier (3) + entry (4)
+        assert!(
+            cluster.wait_for_round(4, Duration::from_secs(10)).is_some(),
+            "post-heal proposal must commit"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        let caught_up = reports.iter().filter(|r| r.commit_index >= 4).count();
+        assert!(caught_up >= 4, "healed cluster must reconverge: {reports:?}");
+        // PreVote kept the disruption bounded: the bootstrap and failover
+        // elections happened (possibly with a few vote-split retries), and
+        // the isolated old leader ran none at all
+        let candidacies: u64 = reports.iter().map(|r| r.elections_started).sum();
+        assert!(
+            (2..=8).contains(&candidacies),
+            "PreVote should bound candidacies, got {candidacies}: {reports:?}"
+        );
+        // the isolated leader's candidacies all date from bootstrap (1,
+        // plus possible vote-split retries); while cut off it stays a
+        // silent leader, and after heal it follows — no churn from it
+        assert!(
+            (1..=3).contains(&reports[leader].elections_started),
+            "isolated leader must not campaign beyond bootstrap: {reports:?}"
+        );
+        let max_term = reports.iter().map(|r| r.term).max().unwrap();
+        assert!(max_term >= 2, "failover must have advanced the term");
     }
 
     #[test]

@@ -54,7 +54,10 @@ USAGE:
   cabinet sim --config exp.toml
   cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
               [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
-              [--seed S] [--pipeline D] [--snapshot-every E]
+              [--seed S] [--pipeline D] [--snapshot-every E] [--pre-vote]
+              [--nemesis \"2000..6000=leader;8000..20000=followers:2\"]
+              [--nemesis-drop P] [--nemesis-dup P] [--nemesis-reorder P]
+              [--nemesis-reorder-ms M]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts";
@@ -98,6 +101,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig19" => vec![figures::fig19(scale)],
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         "fig21" => vec![figures::fig21_compaction(scale)],
+        "fig22" => vec![figures::fig22_partitions(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -107,7 +111,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
 }
 
 fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
-    let config = if let Some(path) = flag(&mut args, "--config") {
+    let mut config = if let Some(path) = flag(&mut args, "--config") {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path}"))?;
         sim_config_from_toml(&text)?
@@ -141,6 +145,37 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
             let every: u64 = e.parse()?;
             c.snapshot_every = (every > 0).then_some(every); // 0 = off
         }
+        if has_flag(&mut args, "--pre-vote") {
+            c.pre_vote = true;
+        }
+        {
+            use cabinet::net::nemesis::{NemesisSpec, PartitionSpec};
+            let mut spec = NemesisSpec::default();
+            if let Some(parts) = flag(&mut args, "--nemesis") {
+                for p in parts.split(';').filter(|p| !p.trim().is_empty()) {
+                    spec.partitions.push(PartitionSpec::parse(p.trim())?);
+                }
+            }
+            if let Some(p) = flag(&mut args, "--nemesis-drop") {
+                spec.drop_p = p.parse()?;
+            }
+            if let Some(p) = flag(&mut args, "--nemesis-dup") {
+                spec.dup_p = p.parse()?;
+            }
+            if let Some(p) = flag(&mut args, "--nemesis-reorder") {
+                spec.reorder_p = p.parse()?;
+            }
+            if let Some(m) = flag(&mut args, "--nemesis-reorder-ms") {
+                spec.reorder_max_ms = m.parse()?;
+            }
+            if !spec.is_noop() {
+                if spec.reorder_p > 0.0 && spec.reorder_max_ms == 0.0 {
+                    spec.reorder_max_ms = 40.0; // sensible default bound
+                }
+                spec.validate(n)?;
+                c.nemesis = Some(spec);
+            }
+        }
         if let Some(w) = flag(&mut args, "--workload") {
             if w.eq_ignore_ascii_case("tpcc") {
                 c.workload = cabinet::sim::WorkloadSpec::tpcc2k();
@@ -163,6 +198,10 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         c.digest_mode = DigestMode::Sample;
         c
     };
+    // every nemesis run self-checks safety — TOML-configured ones included
+    if config.nemesis.is_some() {
+        config.track_safety = true;
+    }
     let pipeline = config.pipeline;
     let r = run(&config);
     println!("experiment: {}", r.label);
@@ -176,7 +215,27 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         "latency:    mean {:.1} ms   p50 {:.1} ms   p99 {:.1} ms",
         r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms
     );
-    println!("elections:  {}", r.elections);
+    println!("elections:  {} ({} candidacies, max term {})", r.elections, r.elections_started, r.terms_advanced);
+    if let Some(stats) = &r.nemesis_stats {
+        println!(
+            "nemesis:    cut {}  lost {}  duplicated {}  reordered {}",
+            stats.cut, stats.dropped, stats.duplicated, stats.reordered
+        );
+    }
+    if let Some(log) = &r.safety {
+        let report = cabinet::bench::safety_check(log);
+        if report.is_clean() {
+            println!(
+                "safety:     OK ({} commits, {} decisions, {} leader terms)",
+                report.commits_checked, report.decisions, report.leaders_checked
+            );
+        } else {
+            for v in &report.violations {
+                eprintln!("SAFETY VIOLATION: {v}");
+            }
+            bail!("{} safety violations detected", report.violations.len());
+        }
+    }
     if config.snapshot_every.is_some() {
         println!(
             "snapshots:  taken {}  installed {}  max retained log {}",

@@ -1,13 +1,16 @@
 //! Network + heterogeneity substrates: seeded RNG, the paper's delay
-//! models D1–D4 (§5.3 / Fig. 13), zone topology Z1–Z5 (§5), and fault
-//! injection (strong/weak/random kills + CPU contention, §5.4).
+//! models D1–D4 (§5.3 / Fig. 13), zone topology Z1–Z5 (§5), fault
+//! injection (strong/weak/random kills + CPU contention, §5.4), and the
+//! adversarial nemesis layer (partitions, loss, duplication, reordering).
 
 pub mod delay;
 pub mod fault;
+pub mod nemesis;
 pub mod rng;
 pub mod topology;
 
 pub use delay::DelayModel;
 pub use fault::{ContentionSpec, KillSpec, KillStrategy};
+pub use nemesis::{Fate, Nemesis, NemesisSpec, NemesisStats, PartitionKind, PartitionSpec};
 pub use rng::{Rng, Zipfian};
 pub use topology::{Zone, ZoneAlloc};

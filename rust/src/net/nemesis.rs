@@ -1,0 +1,517 @@
+//! The adversarial network layer ("nemesis", after the Jepsen fault
+//! injector): deterministic partition/heal schedules, per-link message loss,
+//! duplication, and bounded reordering, all driven by a forked seeded RNG so
+//! every chaotic run replays bit-for-bit.
+//!
+//! The nemesis sits between a node's `Output::Send` and the delivery
+//! substrate. Both simulator drivers route every send through
+//! [`Nemesis::fate`]; the chaos harness in `rust/tests/consensus_safety.rs`
+//! drives the same type with step indices in place of virtual milliseconds.
+//! (The live runtime uses the simpler wall-clock link table in
+//! `live::cluster` instead — partitions there are operator-driven, not
+//! scheduled.)
+//!
+//! Partition kinds cover the paper's hardest §6 scenarios plus the weighted
+//! -consensus-specific hazard from *How Hard is Asynchronous Weight
+//! Reassignment?* — a healed minority holding high weights must not be able
+//! to depose a working cabinet (that is what PreVote in `consensus::node`
+//! defends; the nemesis provides the attack):
+//!
+//! * [`PartitionKind::Split`] — a static node group is cut off from the rest
+//!   (bidirectional).
+//! * [`PartitionKind::LeaderIsolation`] — whichever node leads when the
+//!   window opens is cut off alone.
+//! * [`PartitionKind::Followers`] — the `count` highest-id non-leader nodes
+//!   (bound when the window opens) are cut off: a minority that keeps
+//!   timing out, the classic term-inflation engine.
+//! * [`PartitionKind::OneWay`] — messages *from* the group are dropped while
+//!   messages *into* it still flow (asymmetric link failure).
+
+use anyhow::{bail, Result};
+
+use crate::net::rng::Rng;
+
+/// Node identifier (mirrors `consensus::message::NodeId` without the
+/// dependency — nemesis is a pure link-level filter).
+pub type NodeId = usize;
+
+/// What a partition window cuts.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionKind {
+    /// Cut every link between `group` and the rest, both directions.
+    Split { group: Vec<NodeId> },
+    /// Cut off whichever node is leader when the window opens (bound once).
+    LeaderIsolation,
+    /// Cut off the `count` highest-id non-leader nodes (bound at window
+    /// open, when a leader is known).
+    Followers { count: usize },
+    /// Cut messages *from* `group` to the rest; the reverse direction flows.
+    OneWay { group: Vec<NodeId> },
+}
+
+/// One partition window on the virtual-time axis (the chaos tests reuse the
+/// axis for step indices — only ordering matters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionSpec {
+    pub start_ms: f64,
+    /// Heal time (exclusive): the link filter stops cutting at `end_ms`.
+    pub end_ms: f64,
+    pub kind: PartitionKind,
+}
+
+impl PartitionSpec {
+    pub fn new(start_ms: f64, end_ms: f64, kind: PartitionKind) -> Self {
+        PartitionSpec { start_ms, end_ms, kind }
+    }
+
+    /// Parse the config/CLI mini-DSL: `START..END=KIND[:ids-or-count]`.
+    ///
+    /// ```text
+    /// 2000..6000=leader        leader isolation
+    /// 8000..20000=followers:2  two highest-id non-leader nodes
+    /// 1000..4000=split:3,4     static bidirectional split
+    /// 1000..4000=oneway:0      asymmetric: node 0's sends are cut
+    /// ```
+    pub fn parse(s: &str) -> Result<PartitionSpec> {
+        let (window, kind) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("partition {s:?}: expected START..END=KIND"))?;
+        let (start, end) = window
+            .split_once("..")
+            .ok_or_else(|| anyhow::anyhow!("partition {s:?}: expected START..END window"))?;
+        let start_ms: f64 = start
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("partition {s:?}: bad start {start:?}"))?;
+        let end_ms: f64 = end
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("partition {s:?}: bad end {end:?}"))?;
+        let (name, arg) = match kind.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (kind.trim(), None),
+        };
+        let parse_ids = |a: &str| -> Result<Vec<NodeId>> {
+            let mut ids = Vec::new();
+            for part in a.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    bail!("partition {s:?}: empty node id");
+                }
+                ids.push(
+                    part.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("partition {s:?}: bad node id {part:?}"))?,
+                );
+            }
+            Ok(ids)
+        };
+        let kind = match (name, arg) {
+            ("leader", None) => PartitionKind::LeaderIsolation,
+            ("followers", Some(a)) => {
+                let count: usize = a
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("partition {s:?}: bad follower count {a:?}"))?;
+                PartitionKind::Followers { count }
+            }
+            ("split", Some(a)) => PartitionKind::Split { group: parse_ids(a)? },
+            ("oneway", Some(a)) => PartitionKind::OneWay { group: parse_ids(a)? },
+            _ => bail!(
+                "partition {s:?}: unknown kind {name:?} (leader | followers:K | split:ids | oneway:ids)"
+            ),
+        };
+        Ok(PartitionSpec { start_ms, end_ms, kind })
+    }
+}
+
+/// The full adversarial-network schedule. `Default` is a no-op spec.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NemesisSpec {
+    /// Partition/heal windows (must not overlap in time).
+    pub partitions: Vec<PartitionSpec>,
+    /// Per-message loss probability on every link, for the whole run.
+    pub drop_p: f64,
+    /// Per-message duplication probability (the copy arrives with its own
+    /// bounded extra delay, so duplicates also reorder).
+    pub dup_p: f64,
+    /// Per-message probability of a bounded extra delay (reordering).
+    pub reorder_p: f64,
+    /// Upper bound on the extra delay a reordered (or duplicated) message
+    /// picks up, in virtual ms.
+    pub reorder_max_ms: f64,
+}
+
+impl NemesisSpec {
+    /// Does this spec do anything at all?
+    pub fn is_noop(&self) -> bool {
+        self.partitions.is_empty()
+            && self.drop_p == 0.0
+            && self.dup_p == 0.0
+            && self.reorder_p == 0.0
+    }
+
+    /// Validate against a cluster of `n` nodes: probabilities in [0, 1],
+    /// well-ordered non-overlapping windows, sane groups.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        for (name, p) in
+            [("drop_p", self.drop_p), ("dup_p", self.dup_p), ("reorder_p", self.reorder_p)]
+        {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("nemesis: {name} = {p} outside [0, 1]");
+            }
+        }
+        if self.reorder_max_ms < 0.0 {
+            bail!("nemesis: reorder_max_ms = {} is negative", self.reorder_max_ms);
+        }
+        if self.reorder_p > 0.0 && self.reorder_max_ms <= 0.0 {
+            bail!(
+                "nemesis: reorder_p = {} needs reorder_max_ms > 0 (a zero bound \
+                 would count reorders that never delay anything)",
+                self.reorder_p
+            );
+        }
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        for p in &self.partitions {
+            if !(p.start_ms < p.end_ms) {
+                bail!("nemesis: partition window {}..{} is empty or reversed", p.start_ms, p.end_ms);
+            }
+            windows.push((p.start_ms, p.end_ms));
+            match &p.kind {
+                PartitionKind::Split { group } | PartitionKind::OneWay { group } => {
+                    if group.is_empty() {
+                        bail!("nemesis: empty partition group");
+                    }
+                    if group.len() >= n {
+                        bail!("nemesis: partition group covers the whole cluster");
+                    }
+                    for &id in group {
+                        if id >= n {
+                            bail!("nemesis: partition group node {id} out of range (n = {n})");
+                        }
+                    }
+                }
+                PartitionKind::Followers { count } => {
+                    if *count == 0 || *count >= n {
+                        bail!("nemesis: followers count {count} out of range (n = {n})");
+                    }
+                }
+                PartitionKind::LeaderIsolation => {}
+            }
+        }
+        windows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in windows.windows(2) {
+            if w[1].0 < w[0].1 {
+                bail!(
+                    "nemesis: overlapping partition windows {}..{} and {}..{}",
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The decided fate of one message: how many copies to deliver (0 = dropped)
+/// and the extra delay each copy picks up on top of the link latency.
+#[derive(Clone, Copy, Debug)]
+pub struct Fate {
+    pub copies: u8,
+    pub extra_delay_ms: [f64; 2],
+}
+
+impl Fate {
+    /// Undisturbed single delivery.
+    pub fn deliver() -> Fate {
+        Fate { copies: 1, extra_delay_ms: [0.0, 0.0] }
+    }
+    pub fn drop() -> Fate {
+        Fate { copies: 0, extra_delay_ms: [0.0, 0.0] }
+    }
+}
+
+/// Counters for reporting (surfaced by `cabinet sim` and fig22).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NemesisStats {
+    /// Messages cut by an active partition window.
+    pub cut: u64,
+    /// Messages lost to random per-link drop.
+    pub dropped: u64,
+    /// Messages duplicated.
+    pub duplicated: u64,
+    /// Messages given a bounded extra delay.
+    pub reordered: u64,
+}
+
+/// Runtime state: the spec plus the forked RNG stream and the lazily bound
+/// leader-relative groups. Every random decision draws from the nemesis's
+/// own stream, so enabling it never perturbs the delay/timer/kill streams —
+/// and a run with the nemesis is still a pure function of (config, seed).
+#[derive(Clone, Debug)]
+pub struct Nemesis {
+    spec: NemesisSpec,
+    rng: Rng,
+    n: usize,
+    /// Per-partition resolved group. Static kinds resolve at construction;
+    /// leader-relative kinds bind on the first message inside their window
+    /// (when the current leader is known).
+    bound: Vec<Option<Vec<NodeId>>>,
+    pub stats: NemesisStats,
+}
+
+impl Nemesis {
+    pub fn new(spec: NemesisSpec, n: usize, rng: Rng) -> Nemesis {
+        let bound = spec
+            .partitions
+            .iter()
+            .map(|p| match &p.kind {
+                PartitionKind::Split { group } | PartitionKind::OneWay { group } => {
+                    Some(group.clone())
+                }
+                PartitionKind::LeaderIsolation | PartitionKind::Followers { .. } => None,
+            })
+            .collect();
+        Nemesis { spec, rng, n, bound, stats: NemesisStats::default() }
+    }
+
+    pub fn spec(&self) -> &NemesisSpec {
+        &self.spec
+    }
+
+    /// Bind leader-relative groups whose window contains `now` (no-op once
+    /// bound; skipped while no leader is known).
+    fn bind(&mut self, now: f64, leader: Option<NodeId>) {
+        for (i, p) in self.spec.partitions.iter().enumerate() {
+            if self.bound[i].is_some() || now < p.start_ms || now >= p.end_ms {
+                continue;
+            }
+            let Some(leader) = leader else { continue };
+            match &p.kind {
+                PartitionKind::LeaderIsolation => self.bound[i] = Some(vec![leader]),
+                PartitionKind::Followers { count } => {
+                    let group: Vec<NodeId> =
+                        (0..self.n).rev().filter(|&id| id != leader).take(*count).collect();
+                    self.bound[i] = Some(group);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Is the `from → to` link cut by a partition active at `now`?
+    fn is_cut(&self, now: f64, from: NodeId, to: NodeId) -> bool {
+        for (i, p) in self.spec.partitions.iter().enumerate() {
+            if now < p.start_ms || now >= p.end_ms {
+                continue;
+            }
+            let Some(group) = &self.bound[i] else { continue };
+            let from_in = group.contains(&from);
+            let to_in = group.contains(&to);
+            let cut = match p.kind {
+                PartitionKind::OneWay { .. } => from_in && !to_in,
+                _ => from_in != to_in,
+            };
+            if cut {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Decide the fate of one message on link `from → to` at time `now`.
+    /// `leader` is the driver's current-leader view, used only to bind
+    /// leader-relative partition groups when their window opens.
+    pub fn fate(&mut self, now: f64, from: NodeId, to: NodeId, leader: Option<NodeId>) -> Fate {
+        self.bind(now, leader);
+        if self.is_cut(now, from, to) {
+            self.stats.cut += 1;
+            return Fate::drop();
+        }
+        if self.spec.drop_p > 0.0 && self.rng.chance(self.spec.drop_p) {
+            self.stats.dropped += 1;
+            return Fate::drop();
+        }
+        let mut fate = Fate::deliver();
+        if self.spec.reorder_p > 0.0 && self.rng.chance(self.spec.reorder_p) {
+            fate.extra_delay_ms[0] = self.rng.range_f64(0.0, self.spec.reorder_max_ms);
+            self.stats.reordered += 1;
+        }
+        if self.spec.dup_p > 0.0 && self.rng.chance(self.spec.dup_p) {
+            fate.copies = 2;
+            fate.extra_delay_ms[1] = self.rng.range_f64(0.0, self.spec.reorder_max_ms.max(1.0));
+            self.stats.duplicated += 1;
+        }
+        fate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split(start: f64, end: f64, group: Vec<NodeId>) -> PartitionSpec {
+        PartitionSpec::new(start, end, PartitionKind::Split { group })
+    }
+
+    #[test]
+    fn noop_spec_delivers_everything_untouched() {
+        let mut nm = Nemesis::new(NemesisSpec::default(), 5, Rng::new(1));
+        for step in 0..1000u64 {
+            let f = nm.fate(step as f64, (step % 5) as usize, ((step + 1) % 5) as usize, Some(0));
+            assert_eq!(f.copies, 1);
+            assert_eq!(f.extra_delay_ms, [0.0, 0.0]);
+        }
+        assert_eq!(nm.stats.cut + nm.stats.dropped + nm.stats.duplicated + nm.stats.reordered, 0);
+    }
+
+    #[test]
+    fn split_cuts_cross_links_both_ways_inside_window() {
+        let spec = NemesisSpec { partitions: vec![split(10.0, 20.0, vec![3, 4])], ..Default::default() };
+        let mut nm = Nemesis::new(spec, 5, Rng::new(2));
+        // before the window: flows
+        assert_eq!(nm.fate(5.0, 0, 3, Some(0)).copies, 1);
+        // inside: cut in both directions across the boundary
+        assert_eq!(nm.fate(10.0, 0, 3, Some(0)).copies, 0);
+        assert_eq!(nm.fate(15.0, 4, 1, Some(0)).copies, 0);
+        // inside: intra-group and intra-majority links still flow
+        assert_eq!(nm.fate(15.0, 3, 4, Some(0)).copies, 1);
+        assert_eq!(nm.fate(15.0, 0, 1, Some(0)).copies, 1);
+        // healed at end_ms (exclusive window)
+        assert_eq!(nm.fate(20.0, 0, 3, Some(0)).copies, 1);
+        assert!(nm.stats.cut >= 2);
+    }
+
+    #[test]
+    fn oneway_cuts_only_outbound() {
+        let spec = NemesisSpec {
+            partitions: vec![PartitionSpec::new(
+                0.0,
+                10.0,
+                PartitionKind::OneWay { group: vec![0] },
+            )],
+            ..Default::default()
+        };
+        let mut nm = Nemesis::new(spec, 3, Rng::new(3));
+        assert_eq!(nm.fate(1.0, 0, 1, Some(0)).copies, 0, "outbound cut");
+        assert_eq!(nm.fate(1.0, 1, 0, Some(0)).copies, 1, "inbound flows");
+        assert_eq!(nm.fate(1.0, 1, 2, Some(0)).copies, 1);
+    }
+
+    #[test]
+    fn leader_isolation_binds_leader_at_window_open() {
+        let spec = NemesisSpec {
+            partitions: vec![PartitionSpec::new(10.0, 20.0, PartitionKind::LeaderIsolation)],
+            ..Default::default()
+        };
+        let mut nm = Nemesis::new(spec, 5, Rng::new(4));
+        // no leader yet: nothing binds, nothing cut
+        assert_eq!(nm.fate(12.0, 0, 1, None).copies, 1);
+        // leader 2 appears: the window binds to it, even if leadership moves
+        assert_eq!(nm.fate(13.0, 2, 1, Some(2)).copies, 0);
+        assert_eq!(nm.fate(14.0, 1, 2, Some(3)).copies, 0, "binding sticks");
+        assert_eq!(nm.fate(14.0, 1, 3, Some(3)).copies, 1);
+        // heal
+        assert_eq!(nm.fate(25.0, 2, 1, Some(3)).copies, 1);
+    }
+
+    #[test]
+    fn followers_bind_highest_ids_excluding_leader() {
+        let spec = NemesisSpec {
+            partitions: vec![PartitionSpec::new(0.0, 10.0, PartitionKind::Followers { count: 2 })],
+            ..Default::default()
+        };
+        let mut nm = Nemesis::new(spec, 5, Rng::new(5));
+        // leader is node 4 (highest id): group = {3, 2}
+        assert_eq!(nm.fate(1.0, 4, 3, Some(4)).copies, 0);
+        assert_eq!(nm.fate(1.0, 2, 0, Some(4)).copies, 0);
+        assert_eq!(nm.fate(1.0, 3, 2, Some(4)).copies, 1, "intra-minority flows");
+        assert_eq!(nm.fate(1.0, 4, 0, Some(4)).copies, 1);
+    }
+
+    #[test]
+    fn drop_dup_reorder_rates_are_plausible_and_deterministic() {
+        let spec = NemesisSpec {
+            drop_p: 0.2,
+            dup_p: 0.1,
+            reorder_p: 0.3,
+            reorder_max_ms: 40.0,
+            ..Default::default()
+        };
+        let run = |seed: u64| {
+            let mut nm = Nemesis::new(spec.clone(), 5, Rng::new(seed));
+            let mut fates = Vec::new();
+            for i in 0..5000u64 {
+                let f = nm.fate(i as f64, 0, 1, Some(0));
+                assert!(f.extra_delay_ms[0] <= 40.0);
+                fates.push((f.copies, f.extra_delay_ms[0].to_bits()));
+            }
+            (fates, nm.stats)
+        };
+        let (fa, sa) = run(9);
+        let (fb, _) = run(9);
+        assert_eq!(fa, fb, "same seed must replay bit-for-bit");
+        let frac = |x: u64| x as f64 / 5000.0;
+        assert!((frac(sa.dropped) - 0.2).abs() < 0.03, "drop rate {}", frac(sa.dropped));
+        // dup/reorder are sampled only on non-dropped messages
+        assert!((frac(sa.reordered) - 0.3 * 0.8).abs() < 0.03);
+        assert!((frac(sa.duplicated) - 0.1 * 0.8).abs() < 0.03);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let bad_p = NemesisSpec { drop_p: 1.5, ..Default::default() };
+        assert!(bad_p.validate(5).is_err());
+        let neg = NemesisSpec { reorder_max_ms: -1.0, ..Default::default() };
+        assert!(neg.validate(5).is_err());
+        // reordering with a zero delay bound is a silent no-op — rejected
+        let unbounded = NemesisSpec { reorder_p: 0.1, ..Default::default() };
+        assert!(unbounded.validate(5).is_err());
+        let bounded = NemesisSpec { reorder_p: 0.1, reorder_max_ms: 10.0, ..Default::default() };
+        assert!(bounded.validate(5).is_ok());
+        let overlap = NemesisSpec {
+            partitions: vec![split(0.0, 10.0, vec![1]), split(5.0, 15.0, vec![2])],
+            ..Default::default()
+        };
+        assert!(overlap.validate(5).is_err());
+        let reversed = NemesisSpec { partitions: vec![split(10.0, 5.0, vec![1])], ..Default::default() };
+        assert!(reversed.validate(5).is_err());
+        let whole = NemesisSpec {
+            partitions: vec![split(0.0, 1.0, vec![0, 1, 2, 3, 4])],
+            ..Default::default()
+        };
+        assert!(whole.validate(5).is_err());
+        let oob = NemesisSpec { partitions: vec![split(0.0, 1.0, vec![9])], ..Default::default() };
+        assert!(oob.validate(5).is_err());
+        // back-to-back windows (end == next start) are fine
+        let ok = NemesisSpec {
+            partitions: vec![split(0.0, 10.0, vec![1]), split(10.0, 15.0, vec![2])],
+            ..Default::default()
+        };
+        assert!(ok.validate(5).is_ok());
+    }
+
+    #[test]
+    fn partition_dsl_parses_and_rejects() {
+        let p = PartitionSpec::parse("2000..6000=leader").unwrap();
+        assert_eq!(p, PartitionSpec::new(2000.0, 6000.0, PartitionKind::LeaderIsolation));
+        let p = PartitionSpec::parse("8000..20000=followers:2").unwrap();
+        assert_eq!(p.kind, PartitionKind::Followers { count: 2 });
+        let p = PartitionSpec::parse("1000..4000=split:3,4").unwrap();
+        assert_eq!(p.kind, PartitionKind::Split { group: vec![3, 4] });
+        let p = PartitionSpec::parse("0..5=oneway:0").unwrap();
+        assert_eq!(p.kind, PartitionKind::OneWay { group: vec![0] });
+        for bad in [
+            "nonsense",
+            "1..2",
+            "1..2=ring",
+            "a..2=leader",
+            "1..b=leader",
+            "1..2=split:",
+            "1..2=split:x",
+            "1..2=followers:x",
+        ] {
+            assert!(PartitionSpec::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+}

@@ -17,6 +17,7 @@ use crate::consensus::message::{Message, NodeId, Payload};
 use crate::consensus::node::{Input, Mode, Node, Output, Role};
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec};
+use crate::net::nemesis::{Fate, Nemesis, NemesisSpec, NemesisStats};
 use crate::net::rng::Rng;
 use crate::net::topology::ZoneAlloc;
 use crate::sim::event::EventQueue;
@@ -129,6 +130,34 @@ pub struct SimConfig {
     pub snapshot_every: Option<u64>,
     /// Optional kill-and-restart of one follower (Fig. 21 scenario).
     pub restart: Option<RestartSpec>,
+    /// Adversarial network schedule (partitions, loss, duplication,
+    /// reordering). None = the historical clean network. The nemesis draws
+    /// from its own forked RNG stream, so enabling it never perturbs the
+    /// delay/timer/kill streams.
+    pub nemesis: Option<NemesisSpec>,
+    /// PreVote (Raft §9.6 adapted to Cabinet's n − t election quorum) on
+    /// every node. Off by default — the historical election behavior.
+    pub pre_vote: bool,
+    /// Record per-node commit sequences and per-term leaders for the
+    /// `bench::safety` checker (off by default: O(commits × n) memory).
+    pub track_safety: bool,
+}
+
+/// Evidence collected for the deterministic safety checker
+/// (`bench::safety::check`): every `Output::Commit` each node emitted, in
+/// emission order, and every `Output::BecameLeader` observation.
+#[derive(Clone, Debug)]
+pub struct SafetyLog {
+    /// Per node: (log index, term) of every committed entry, in commit order.
+    pub commits: Vec<Vec<(u64, u64)>>,
+    /// Every leadership establishment: (term, node).
+    pub leaders: Vec<(u64, NodeId)>,
+}
+
+impl SafetyLog {
+    pub fn new(n: usize) -> Self {
+        SafetyLog { commits: vec![Vec::new(); n], leaders: Vec::new() }
+    }
 }
 
 impl SimConfig {
@@ -157,6 +186,9 @@ impl SimConfig {
             pipeline: 1,
             snapshot_every: None,
             restart: None,
+            nemesis: None,
+            pre_vote: false,
+            track_safety: false,
         }
     }
 
@@ -206,6 +238,18 @@ pub struct SimResult {
     /// Peak retained (in-memory) log length observed on any node — the
     /// quantity `snapshot_every` bounds, sampled once per proposal tick.
     pub max_retained_log: u64,
+    /// Real (term-incrementing) candidacies started across all nodes — the
+    /// PreVote acceptance metric (a lower bound when `restart` replaced a
+    /// node mid-run, since the fresh node's counter restarts at zero).
+    pub elections_started: u64,
+    /// Highest term any node reached by the end of the run — the
+    /// term-churn metric PreVote bounds.
+    pub terms_advanced: u64,
+    /// Nemesis counters (None when no nemesis was configured).
+    pub nemesis_stats: Option<NemesisStats>,
+    /// Safety evidence for `bench::safety::check` (None unless
+    /// `track_safety` was set).
+    pub safety: Option<SafetyLog>,
 }
 
 impl SimResult {
@@ -233,6 +277,10 @@ impl SimResult {
             snapshots_taken: 0,
             snapshots_installed: 0,
             max_retained_log: 0,
+            elections_started: 0,
+            terms_advanced: 0,
+            nemesis_stats: None,
+            safety: None,
         }
     }
 
@@ -289,6 +337,8 @@ impl SimResult {
         h.write_u64(self.mean_latency_ms.to_bits());
         h.write_u64(self.p99_latency_ms.to_bits());
         h.write_u64(self.elections);
+        h.write_u64(self.elections_started);
+        h.write_u64(self.terms_advanced);
         h.finish()
     }
 }
@@ -371,6 +421,7 @@ fn maybe_kill_restart(
     el_gen: &mut [u64],
     timer_rng: &mut Rng,
     q: &mut EventQueue<Ev>,
+    safety: &mut Option<SafetyLog>,
 ) {
     let Some(rs) = *restart_pending else { return };
     let n = nodes.len();
@@ -386,7 +437,14 @@ fn maybe_kill_restart(
             let mut fresh = Node::new(v, n, mode.clone());
             fresh.set_static_weights(config.static_weights);
             fresh.set_snapshot_every(config.snapshot_every);
+            fresh.set_pre_vote(config.pre_vote);
             nodes[v] = fresh;
+            // a fresh node legitimately re-commits from the bottom of the
+            // log — restart its safety-evidence stream with it, or the
+            // checker would flag the replay as a commit regression
+            if let Some(sl) = safety.as_mut() {
+                sl.commits[v].clear();
+            }
             alive[v] = true;
             el_gen[v] += 1;
             let d =
@@ -436,12 +494,21 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     let mut timer_rng = root_rng.fork(2);
     let mut kill_rng = root_rng.fork(3);
     let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
+    // the nemesis gets its own stream (fork 5): enabling it never perturbs
+    // the delay/timer/kill streams, and fork(5) is only drawn when present,
+    // so nemesis-free runs reproduce the historical trajectories bit-for-bit
+    let mut nemesis = config.nemesis.as_ref().map(|spec| {
+        spec.validate(n).expect("invalid nemesis spec");
+        Nemesis::new(spec.clone(), n, root_rng.fork(5))
+    });
+    let mut safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
 
     let mut nodes: Vec<Node> = (0..n)
         .map(|i| {
             let mut node = Node::new(i, n, mode.clone());
             node.set_static_weights(config.static_weights);
             node.set_snapshot_every(config.snapshot_every);
+            node.set_pre_vote(config.pre_vote);
             node
         })
         .collect();
@@ -516,6 +583,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                    &mut nemesis, &mut safety,
                 );
             }
             Ev::HeartbeatTimer { node, generation } => {
@@ -528,6 +596,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                    &mut nemesis, &mut safety,
                 );
             }
             Ev::Deliver { to, from, msg } => {
@@ -549,6 +618,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                    &mut nemesis, &mut safety,
                 );
             }
             Ev::ProposeNext => {
@@ -569,7 +639,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                 maybe_kill_restart(
                     &mut restart_pending, &mut restart_victim, next_round, leader,
                     config, &mode, &mut nodes, &mut alive, &mut el_gen,
-                    &mut timer_rng, &mut q,
+                    &mut timer_rng, &mut q, &mut safety,
                 );
 
                 // scheduled kills fire at the start of their round
@@ -601,7 +671,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                             &alive, &mut el_gen, &mut hb_gen, &mut current_leader,
                             &mut elections, &mut pending, pending_entry_index, &mut stats,
                             &mut round, inflight_cost_ms, &tracked, &mut doc_stores,
-                            &mut rel_stores, is_tpcc,
+                            &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                         );
                         q.push_after(1.0, Ev::ProposeNext);
                         continue;
@@ -623,6 +693,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                    &mut nemesis, &mut safety,
                 );
             }
         }
@@ -644,6 +715,10 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
     result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
     result.max_retained_log = max_retained;
+    result.elections_started = nodes.iter().map(|nd| nd.elections_started()).sum();
+    result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
+    result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
+    result.safety = safety;
     result
 }
 
@@ -688,12 +763,19 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
     let mut timer_rng = root_rng.fork(2);
     let mut kill_rng = root_rng.fork(3);
     let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
+    // own stream (fork 5) — see run_quorum for the determinism argument
+    let mut nemesis = config.nemesis.as_ref().map(|spec| {
+        spec.validate(n).expect("invalid nemesis spec");
+        Nemesis::new(spec.clone(), n, root_rng.fork(5))
+    });
+    let mut safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
 
     let mut nodes: Vec<Node> = (0..n)
         .map(|i| {
             let mut node = Node::new(i, n, mode.clone());
             node.set_static_weights(config.static_weights);
             node.set_snapshot_every(config.snapshot_every);
+            node.set_pre_vote(config.pre_vote);
             node
         })
         .collect();
@@ -764,7 +846,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                 );
             }
             Ev::HeartbeatTimer { node, generation } => {
@@ -776,7 +858,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                 );
             }
             Ev::Deliver { to, from, msg } => {
@@ -790,7 +872,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                 );
             }
             Ev::ProposeNext => {
@@ -816,7 +898,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                 maybe_kill_restart(
                     &mut restart_pending, &mut restart_victim, next_round, leader,
                     config, &mode, &mut nodes, &mut alive, &mut el_gen,
-                    &mut timer_rng, &mut q,
+                    &mut timer_rng, &mut q, &mut safety,
                 );
 
                 // scheduled kills fire at the start of their round
@@ -854,7 +936,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                             &mut timer_rng, &alive, &mut el_gen, &mut hb_gen,
                             &mut current_leader, &mut elections, &mut pending,
                             &mut stats, &mut round, &tracked, &mut doc_stores,
-                            &mut rel_stores, is_tpcc,
+                            &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                         );
                         q.push_after(1.0, Ev::ProposeNext);
                         continue;
@@ -881,7 +963,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     leader, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
                 );
                 if pending.len() < depth && proposed < config.rounds {
                     // back-to-back proposal to fill the window
@@ -926,6 +1008,10 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
     result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
     result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
     result.max_retained_log = max_retained;
+    result.elections_started = nodes.iter().map(|nd| nd.elections_started()).sum();
+    result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
+    result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
+    result.safety = safety;
     result
 }
 
@@ -998,6 +1084,8 @@ fn handle_outputs_pipelined(
     doc_stores: &mut [DocStore],
     rel_stores: &mut [RelStore],
     is_tpcc: bool,
+    nemesis: &mut Option<Nemesis>,
+    safety: &mut Option<SafetyLog>,
 ) {
     let n = config.n();
     let now = q.now();
@@ -1017,7 +1105,23 @@ fn handle_outputs_pipelined(
                     msg.wire_size(),
                     net_rng,
                 );
-                q.push_after(extra_delay + lat, Ev::Deliver { to, from: node, msg });
+                let fate = match nemesis.as_mut() {
+                    Some(nm) => nm.fate(now, node, to, *current_leader),
+                    None => Fate::deliver(),
+                };
+                if fate.copies == 0 {
+                    continue; // partitioned or lost
+                }
+                if fate.copies > 1 {
+                    q.push_after(
+                        extra_delay + lat + fate.extra_delay_ms[1],
+                        Ev::Deliver { to, from: node, msg: msg.clone() },
+                    );
+                }
+                q.push_after(
+                    extra_delay + lat + fate.extra_delay_ms[0],
+                    Ev::Deliver { to, from: node, msg },
+                );
             }
             Output::ResetElectionTimer => {
                 el_gen[node] += 1;
@@ -1035,9 +1139,12 @@ fn handle_outputs_pipelined(
             Output::StopHeartbeat => {
                 hb_gen[node] += 1;
             }
-            Output::BecameLeader => {
+            Output::BecameLeader { term } => {
                 *current_leader = Some(node);
                 *elections += 1;
+                if let Some(sl) = safety.as_mut() {
+                    sl.leaders.push((term, node));
+                }
             }
             Output::SteppedDown => {
                 if *current_leader == Some(node) {
@@ -1069,7 +1176,13 @@ fn handle_outputs_pipelined(
                 }
                 q.push_after(0.2, Ev::ProposeNext); // client turnaround
             }
-            Output::Commit(_) | Output::ProposalRejected(_) => {}
+            Output::Commit(e) => {
+                // per-node commit evidence for the bench::safety checker
+                if let Some(sl) = safety.as_mut() {
+                    sl.commits[node].push((e.index, e.term));
+                }
+            }
+            Output::ProposalRejected(_) => {}
             // nodes snapshot inline (SnapshotCapture::Inline) — these are
             // informational; installs are counted via node counters
             Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
@@ -1124,11 +1237,13 @@ fn handle_outputs(
     doc_stores: &mut [DocStore],
     rel_stores: &mut [RelStore],
     is_tpcc: bool,
+    nemesis: &mut Option<Nemesis>,
+    safety: &mut Option<SafetyLog>,
 ) {
     handle_outputs_delayed(
         node, outs, 0.0, config, q, net_rng, timer_rng, alive, el_gen, hb_gen,
         current_leader, elections, pending, pending_entry_index, stats, round,
-        inflight_cost_ms, tracked, doc_stores, rel_stores, is_tpcc,
+        inflight_cost_ms, tracked, doc_stores, rel_stores, is_tpcc, nemesis, safety,
     )
 }
 
@@ -1156,6 +1271,8 @@ fn handle_outputs_delayed(
     doc_stores: &mut [DocStore],
     rel_stores: &mut [RelStore],
     is_tpcc: bool,
+    nemesis: &mut Option<Nemesis>,
+    safety: &mut Option<SafetyLog>,
 ) {
     let n = config.n();
     let now = q.now();
@@ -1176,7 +1293,23 @@ fn handle_outputs_delayed(
                     msg.wire_size(),
                     net_rng,
                 );
-                q.push_after(extra_delay + lat, Ev::Deliver { to, from: node, msg });
+                let fate = match nemesis.as_mut() {
+                    Some(nm) => nm.fate(now, node, to, *current_leader),
+                    None => Fate::deliver(),
+                };
+                if fate.copies == 0 {
+                    continue; // partitioned or lost
+                }
+                if fate.copies > 1 {
+                    q.push_after(
+                        extra_delay + lat + fate.extra_delay_ms[1],
+                        Ev::Deliver { to, from: node, msg: msg.clone() },
+                    );
+                }
+                q.push_after(
+                    extra_delay + lat + fate.extra_delay_ms[0],
+                    Ev::Deliver { to, from: node, msg },
+                );
             }
             Output::ResetElectionTimer => {
                 el_gen[node] += 1;
@@ -1194,9 +1327,12 @@ fn handle_outputs_delayed(
             Output::StopHeartbeat => {
                 hb_gen[node] += 1;
             }
-            Output::BecameLeader => {
+            Output::BecameLeader { term } => {
                 *current_leader = Some(node);
                 *elections += 1;
+                if let Some(sl) = safety.as_mut() {
+                    sl.leaders.push((term, node));
+                }
             }
             Output::SteppedDown => {
                 if *current_leader == Some(node) {
@@ -1227,7 +1363,13 @@ fn handle_outputs_delayed(
                     }
                 }
             }
-            Output::Commit(_) | Output::ProposalRejected(_) => {}
+            Output::Commit(e) => {
+                // per-node commit evidence for the bench::safety checker
+                if let Some(sl) = safety.as_mut() {
+                    sl.commits[node].push((e.index, e.term));
+                }
+            }
+            Output::ProposalRejected(_) => {}
             // nodes snapshot inline (SnapshotCapture::Inline) — these are
             // informational; installs are counted via node counters
             Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}

@@ -10,13 +10,17 @@
 //! and the pipelined driver (`pipeline > 1`, overlapping replication
 //! rounds). Both support snapshot compaction (`SimConfig::snapshot_every`),
 //! fault schedules (kills, contention, a follower kill + restart via
-//! [`RestartSpec`]), delay models D1–D4 and heterogeneous zones.
+//! [`RestartSpec`]), delay models D1–D4, heterogeneous zones, the
+//! adversarial nemesis layer (`SimConfig::nemesis` — partitions, loss,
+//! duplication, reordering), PreVote elections (`SimConfig::pre_vote`),
+//! and safety-evidence recording (`SimConfig::track_safety` →
+//! [`SafetyLog`], validated by `bench::safety::check`).
 
 pub mod cluster;
 pub mod event;
 
 pub use cluster::{
-    run, DigestMode, Protocol, ReconfigSpec, RestartSpec, RoundStat, SimConfig, SimResult,
-    WorkloadSpec,
+    run, DigestMode, Protocol, ReconfigSpec, RestartSpec, RoundStat, SafetyLog, SimConfig,
+    SimResult, WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

@@ -12,20 +12,28 @@ use std::sync::Arc;
 use cabinet::consensus::message::{Message, NodeId, Payload};
 use cabinet::consensus::node::{Input, Mode, Node, Output, Role};
 use cabinet::consensus::weights::WeightScheme;
+use cabinet::net::nemesis::Nemesis;
 use cabinet::net::rng::Rng;
 
 /// A chaos network: pending messages get dropped, duplicated, delayed and
-/// reordered under RNG control; nodes can be crash-killed mid-schedule.
+/// reordered under RNG control; nodes can be crash-killed mid-schedule, and
+/// an optional [`Nemesis`] layers scheduled partitions (by step index) plus
+/// its own loss/duplication on top.
 struct Chaos {
     nodes: Vec<Node>,
     alive: Vec<bool>,
     queue: Vec<(NodeId, NodeId, Message)>,
     commits: Vec<Vec<(u64, u64)>>, // per node: (index, term) in commit order
+    /// Every leadership establishment: (term, node) — safety-checker input.
+    leaders: Vec<(u64, NodeId)>,
     /// Leader-side quorum closures: (leader, wclock, index, quorum weight).
     round_commits: Vec<(NodeId, u64, u64, f64)>,
     rng: Rng,
     drop_p: f64,
     dup_p: f64,
+    /// Scheduled adversarial layer; windows run on the step counter.
+    nemesis: Option<Nemesis>,
+    step_no: u64,
 }
 
 impl Chaos {
@@ -35,10 +43,13 @@ impl Chaos {
             alive: vec![true; n],
             queue: Vec::new(),
             commits: vec![Vec::new(); n],
+            leaders: Vec::new(),
             round_commits: Vec::new(),
             rng: Rng::new(seed),
             drop_p,
             dup_p,
+            nemesis: None,
+            step_no: 0,
         }
     }
 
@@ -47,6 +58,7 @@ impl Chaos {
             match o {
                 Output::Send(dst, msg) => self.queue.push((src, dst, msg)),
                 Output::Commit(e) => self.commits[src].push((e.index, e.term)),
+                Output::BecameLeader { term } => self.leaders.push((term, src)),
                 Output::RoundCommitted { wclock, index, quorum_weight, .. } => {
                     self.round_commits.push((src, wclock, index, quorum_weight));
                 }
@@ -55,14 +67,21 @@ impl Chaos {
         }
     }
 
+    /// The run's safety evidence, in checker form.
+    fn safety_log(&self) -> cabinet::sim::SafetyLog {
+        cabinet::sim::SafetyLog { commits: self.commits.clone(), leaders: self.leaders.clone() }
+    }
+
     /// Crash a node: it stops stepping and every message to it is dropped.
     fn kill(&mut self, node: NodeId) {
         self.alive[node] = false;
     }
 
     /// One chaos step: either deliver a random queued message (maybe
-    /// dropping/duplicating it) or fire a random timer.
+    /// dropping/duplicating it, maybe cut by the nemesis) or fire a random
+    /// timer. The step counter doubles as the nemesis's time axis.
     fn step(&mut self) {
+        self.step_no += 1;
         let n = self.nodes.len();
         let fire_timer = self.queue.is_empty() || self.rng.chance(0.08);
         if fire_timer {
@@ -83,6 +102,18 @@ impl Chaos {
         let (src, dst, msg) = self.queue.swap_remove(pick); // reorders
         if !self.alive[dst] || self.rng.chance(self.drop_p) {
             return; // dropped (dead receiver or lossy link)
+        }
+        let leader = self.leader();
+        let now = self.step_no;
+        if let Some(nm) = self.nemesis.as_mut() {
+            let fate = nm.fate(now as f64, src, dst, leader);
+            if fate.copies == 0 {
+                return; // partitioned or lost by the nemesis
+            }
+            if fate.copies > 1 {
+                // duplicate back into the pool — a later pick redelivers it
+                self.queue.push((src, dst, msg.clone()));
+            }
         }
         if self.rng.chance(self.dup_p) {
             self.queue.push((src, dst, msg.clone())); // duplicated
@@ -348,76 +379,134 @@ fn committed_entries_survive_leader_changes() {
     }
 }
 
-/// Randomized-schedule safety sweep: 128 seeded chaos schedules mixing
-/// drop/duplication rates (adversarial reordering doubles as unbounded delay
-/// skew), mid-schedule crash kills, and pipelined proposal bursts at depth
-/// 1–8. Half the schedules additionally run snapshot compaction at tiny
-/// intervals (1–3 committed entries), so InstallSnapshot catch-up races the
-/// chaos too. Asserts election safety, log matching (digest-chained across
-/// compaction), the weighted-commit rule + monotonicity, and no
-/// committed-entry loss — at every depth.
-#[test]
-fn randomized_schedule_safety_sweep() {
-    for seed in 0..128u64 {
-        let depth = 1 + (seed % 8) as usize;
-        let n = [5usize, 7, 9][(seed % 3) as usize];
-        let cabinet_t = 1 + (seed % 2) as usize;
-        let raft = seed % 4 == 0;
-        let mode = move |_i: usize| {
-            if raft {
-                Mode::Raft
-            } else {
-                Mode::cabinet(n, cabinet_t)
-            }
-        };
-        let ct = if raft {
-            n as f64 / 2.0
+/// One randomized-schedule run: seeded chaos mixing drop/duplication rates
+/// (adversarial reordering doubles as unbounded delay skew), a scheduled
+/// nemesis window (partition/heal of rotating kinds + 1–10% extra loss +
+/// duplication), mid-schedule crash kills, PreVote on half the schedules,
+/// and pipelined proposal bursts at depth 1–8. Half the schedules
+/// additionally run snapshot compaction at tiny intervals (1–3 committed
+/// entries), so InstallSnapshot catch-up races the chaos too. Asserts
+/// election safety, log matching (digest-chained across compaction), the
+/// weighted-commit rule + monotonicity, no committed-entry loss, and a
+/// clean `bench::safety` verdict — at every depth.
+fn nemesis_schedule(seed: u64) {
+    use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
+    use cabinet::net::rng::splitmix64;
+
+    // Decorrelated schedule dimensions: modular selectors on the raw seed
+    // would alias (e.g. seed % 4 picking both the protocol and the
+    // partition kind means Cabinet × LeaderIsolation never occurs), so the
+    // interacting dimensions — protocol, PreVote, partition kind,
+    // compaction — each take independent bits of a hashed seed. Over 128
+    // seeds every protocol × PreVote × kind combination appears.
+    let mut h = seed ^ 0x5EED_0F_CAB1_2357;
+    let bits = splitmix64(&mut h);
+    let raft = bits & 3 == 0; // 25% Raft, 75% Cabinet
+    let pre_vote_on = (bits >> 2) & 1 == 1;
+    let kind_sel = (bits >> 3) & 3;
+    let compact = (bits >> 5) & 1 == 1;
+
+    let depth = 1 + (seed % 8) as usize;
+    let n = [5usize, 7, 9][(seed % 3) as usize];
+    let cabinet_t = 1 + (seed % 2) as usize;
+    let mode = move |_i: usize| {
+        if raft {
+            Mode::Raft
         } else {
-            WeightScheme::geometric(n, cabinet_t).unwrap().ct()
-        };
-        let drop_p = 0.02 + (seed % 5) as f64 * 0.03;
-        let dup_p = 0.02 + (seed % 3) as f64 * 0.04;
-        let mut c = Chaos::new(n, mode, seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1, drop_p, dup_p);
-        if seed % 2 == 1 {
-            let every = 1 + (seed % 3); // aggressive: compact every 1–3 commits
-            for node in &mut c.nodes {
-                node.set_snapshot_every(Some(every));
-            }
+            Mode::cabinet(n, cabinet_t)
         }
-        let outs = c.nodes[0].step(Input::ElectionTimeout);
-        c.absorb(0, outs);
-        let mut sched = Rng::new(seed ^ 0x00C0_FFEE);
-        let mut committed_snapshot: Vec<(u64, u64)> = Vec::new();
-        for i in 0..2000usize {
-            c.step();
-            if i % 37 == 0 {
-                c.try_propose_burst(depth, (i % 251) as u8);
-            }
-            if i == 900 {
-                // snapshot what's committed so far, then crash two
-                // non-leader nodes on two thirds of the schedules
-                committed_snapshot = c.commits.iter().flatten().copied().collect();
-                if seed % 3 != 2 {
-                    let leader = c.leader();
-                    let mut victims = 0;
-                    while victims < 2 {
-                        let v = sched.below(n as u64) as usize;
-                        if Some(v) != leader && c.alive[v] {
-                            c.kill(v);
-                            victims += 1;
-                        }
+    };
+    let ct = if raft {
+        n as f64 / 2.0
+    } else {
+        WeightScheme::geometric(n, cabinet_t).unwrap().ct()
+    };
+    let drop_p = 0.02 + (seed % 5) as f64 * 0.03;
+    let dup_p = 0.02 + (seed % 3) as f64 * 0.04;
+    let mut c = Chaos::new(n, mode, seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1, drop_p, dup_p);
+    if compact {
+        let every = 1 + (seed % 3); // aggressive: compact every 1–3 commits
+        for node in &mut c.nodes {
+            node.set_snapshot_every(Some(every));
+        }
+    }
+    if pre_vote_on {
+        for node in &mut c.nodes {
+            node.set_pre_vote(true);
+        }
+    }
+    // scheduled nemesis: a partition window over steps [600, 1400) of a
+    // kind rotating with the hashed seed, plus 1–10% extra loss and dup
+    let kind = match kind_sel {
+        0 => PartitionKind::LeaderIsolation,
+        1 => PartitionKind::Followers { count: 2.min(n - 3) },
+        2 => PartitionKind::Split { group: vec![n - 1] },
+        _ => PartitionKind::OneWay { group: vec![n - 2] },
+    };
+    let spec = NemesisSpec {
+        partitions: vec![PartitionSpec::new(600.0, 1400.0, kind)],
+        drop_p: 0.01 + (seed % 10) as f64 * 0.01,
+        dup_p: 0.01 + (seed % 7) as f64 * 0.01,
+        reorder_p: 0.0, // the chaos queue already delivers in random order
+        reorder_max_ms: 0.0,
+    };
+    spec.validate(n).expect("sweep spec must be valid");
+    c.nemesis = Some(Nemesis::new(spec, n, Rng::new(seed ^ 0xBAD_C0DE)));
+
+    let outs = c.nodes[0].step(Input::ElectionTimeout);
+    c.absorb(0, outs);
+    let mut sched = Rng::new(seed ^ 0x00C0_FFEE);
+    let mut committed_snapshot: Vec<(u64, u64)> = Vec::new();
+    for i in 0..2000usize {
+        c.step();
+        if i % 37 == 0 {
+            c.try_propose_burst(depth, (i % 251) as u8);
+        }
+        if i == 900 {
+            // snapshot what's committed so far, then crash two
+            // non-leader nodes on two thirds of the schedules
+            committed_snapshot = c.commits.iter().flatten().copied().collect();
+            if seed % 3 != 2 {
+                let leader = c.leader();
+                let mut victims = 0;
+                while victims < 2 {
+                    let v = sched.below(n as u64) as usize;
+                    if Some(v) != leader && c.alive[v] {
+                        c.kill(v);
+                        victims += 1;
                     }
                 }
             }
-            if i % 97 == 0 {
-                c.assert_weight_permutation();
-            }
         }
-        c.settle();
-        c.assert_safety(seed);
-        c.assert_log_matching(seed);
-        c.assert_weighted_commits(ct, seed);
-        c.assert_commits_preserved(&committed_snapshot, seed);
+        if i % 97 == 0 {
+            c.assert_weight_permutation();
+        }
+    }
+    c.settle();
+    c.assert_safety(seed);
+    c.assert_log_matching(seed);
+    c.assert_weighted_commits(ct, seed);
+    c.assert_commits_preserved(&committed_snapshot, seed);
+    // the deterministic safety checker agrees: prefix consistency, single
+    // leader per term, monotone commits
+    let report = cabinet::bench::safety_check(&c.safety_log());
+    assert!(report.is_clean(), "seed {seed}: {:?}", report.violations);
+}
+
+#[test]
+fn randomized_schedule_safety_sweep() {
+    for seed in 0..128u64 {
+        nemesis_schedule(seed);
+    }
+}
+
+/// The long chaos sweep for the scheduled CI `chaos` job:
+/// `cargo test --release -- --ignored nemesis_long_sweep`.
+#[test]
+#[ignore = "long nemesis sweep (512 seeds) — run by the scheduled CI chaos job"]
+fn nemesis_long_sweep() {
+    for seed in 0..512u64 {
+        nemesis_schedule(seed);
     }
 }
 

@@ -351,6 +351,83 @@ fn fig21_compaction_shape() {
     );
 }
 
+/// Fig. 22 shape — and the heal-after-partition acceptance criterion in one
+/// pass (each cell is ~8× a normal quick figure run, so the criteria are
+/// asserted from the one table instead of re-running cells): every row
+/// commits its whole round budget through the partition/heal schedule, the
+/// safety checker reports zero violations everywhere, and PreVote strictly
+/// lowers the term churn on the identical schedule (a healed minority
+/// cannot inflate terms and depose the working cabinet).
+#[test]
+fn fig22_partitions_shape() {
+    let t = figures::fig22_partitions(Scale::Quick);
+    assert_eq!(t.rows.len(), 4, "2 algos x prevote off/on");
+    for (i, row) in t.rows.iter().enumerate() {
+        assert_eq!(row[2], "100", "row {i}: rounds incomplete through partitions");
+        assert_eq!(
+            row[8], "0",
+            "row {i}: safety violations under the nemesis schedule"
+        );
+    }
+    for (block, algo) in ["raft", "cab f20%"].iter().enumerate() {
+        let base = block * 2;
+        assert_eq!(t.rows[base][0], *algo);
+        assert_eq!(t.rows[base][1], "off");
+        assert_eq!(t.rows[base + 1][1], "on");
+        let terms_off = t.num(base, "terms").unwrap();
+        let terms_on = t.num(base + 1, "terms").unwrap();
+        assert!(
+            terms_on < terms_off,
+            "{algo}: PreVote must strictly bound term churn ({terms_on} !< {terms_off})"
+        );
+        let elections_off = t.num(base, "elections").unwrap();
+        let elections_on = t.num(base + 1, "elections").unwrap();
+        assert!(
+            elections_on <= elections_off,
+            "{algo}: PreVote must not add candidacies ({elections_on} > {elections_off})"
+        );
+    }
+}
+
+/// The `[nemesis]` table and `pre_vote` knob round-trip through the TOML
+/// config path, and invalid schedules are rejected.
+#[test]
+fn nemesis_config_roundtrip_and_rejection() {
+    use cabinet::net::nemesis::PartitionKind;
+    let cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 2\nn = 11\nrounds = 9\npre_vote = true\n\
+         [nemesis]\ndrop_p = 0.03\ndup_p = 0.02\nreorder_p = 0.05\nreorder_max_ms = 25\n\
+         partitions = [\"500..1500=followers:2\", \"2000..2500=oneway:1,2\"]\n",
+    )
+    .unwrap();
+    assert!(cfg.pre_vote);
+    let nm = cfg.nemesis.as_ref().unwrap();
+    assert_eq!(nm.drop_p, 0.03);
+    assert_eq!(nm.reorder_max_ms, 25.0);
+    assert_eq!(nm.partitions[0].kind, PartitionKind::Followers { count: 2 });
+    assert_eq!(nm.partitions[1].kind, PartitionKind::OneWay { group: vec![1, 2] });
+    // a TOML-built nemesis config must actually run
+    let mut cfg = cfg;
+    cfg.workload = WorkloadSpec::ycsb(Workload::A, 300);
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 9, "TOML-built nemesis config must complete");
+    assert!(r.nemesis_stats.is_some());
+
+    // rejection: overlapping windows, probability out of range, bad ids
+    assert!(cabinet::config::sim_config_from_toml(
+        "[nemesis]\npartitions = [\"0..1000=leader\", \"500..2000=followers:1\"]\n"
+    )
+    .is_err());
+    assert!(cabinet::config::sim_config_from_toml("[nemesis]\ndrop_p = 1.01\n").is_err());
+    assert!(cabinet::config::sim_config_from_toml("[nemesis]\ndrop_p = -0.1\n").is_err());
+    // reorder_p without a positive delay bound is a silent no-op — rejected
+    assert!(cabinet::config::sim_config_from_toml("[nemesis]\nreorder_p = 0.1\n").is_err());
+    assert!(
+        cabinet::config::sim_config_from_toml("n = 5\n[nemesis]\npartitions = [\"0..9=split:7\"]\n")
+            .is_err()
+    );
+}
+
 /// The snapshot knobs round-trip through the TOML config path.
 #[test]
 fn snapshot_config_roundtrip() {

@@ -1,0 +1,237 @@
+//! Nemesis determinism + idempotency properties.
+//!
+//! (1) A run with the adversarial network layer enabled is still a pure
+//! function of (config, seed): same seed ⇒ bit-identical commit-sequence
+//! and metrics digests, at pipeline depth 1 (the lock-step driver) and 4
+//! (the pipelined driver), with PreVote off and on.
+//!
+//! (2) Node-level property tests for what the nemesis stresses: duplicated
+//! or reordered InstallSnapshot and stale AppendEntries deliveries never
+//! regress `commit_index` or change the log's prefix digest.
+
+use std::sync::Arc;
+
+use cabinet::consensus::message::{
+    AppState, Entry, Message, Payload, SnapshotBlob,
+};
+use cabinet::consensus::log::Log;
+use cabinet::consensus::node::{Input, Mode, Node, Output};
+use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
+use cabinet::net::rng::Rng;
+use cabinet::sim::{run, Protocol, SimConfig, SimResult, WorkloadSpec};
+use cabinet::workload::Workload;
+
+fn nemesis_spec() -> NemesisSpec {
+    NemesisSpec {
+        partitions: vec![PartitionSpec::new(
+            800.0,
+            2_400.0,
+            PartitionKind::Followers { count: 1 },
+        )],
+        drop_p: 0.05,
+        dup_p: 0.05,
+        reorder_p: 0.10,
+        reorder_max_ms: 30.0,
+    }
+}
+
+fn nem_config(depth: usize, pre_vote: bool, seed: u64) -> SimConfig {
+    let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+    c.rounds = 10;
+    c.pipeline = depth;
+    c.seed = seed;
+    c.pre_vote = pre_vote;
+    c.nemesis = Some(nemesis_spec());
+    c.track_safety = true;
+    c.delay = cabinet::net::delay::DelayModel::Uniform { mean_ms: 60.0, spread_ms: 15.0 };
+    c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+    c
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.commit_sequence_digest(), b.commit_sequence_digest(), "{what}: commit seq");
+    assert_eq!(a.metrics_digest(), b.metrics_digest(), "{what}: metrics");
+    assert_eq!(a.elections_started, b.elections_started, "{what}: elections_started");
+    assert_eq!(a.terms_advanced, b.terms_advanced, "{what}: terms_advanced");
+    let (sa, sb) = (a.nemesis_stats.unwrap(), b.nemesis_stats.unwrap());
+    assert_eq!(
+        (sa.cut, sa.dropped, sa.duplicated, sa.reordered),
+        (sb.cut, sb.dropped, sb.duplicated, sb.reordered),
+        "{what}: nemesis stats"
+    );
+}
+
+#[test]
+fn nemesis_same_seed_bit_identical_depth_1_and_4() {
+    for depth in [1usize, 4] {
+        for pre_vote in [false, true] {
+            let c = nem_config(depth, pre_vote, 42);
+            let a = run(&c);
+            let b = run(&c);
+            assert_eq!(a.rounds.len(), 10, "depth {depth} pre_vote {pre_vote}: incomplete");
+            assert_bit_identical(&a, &b, &format!("depth {depth} pre_vote {pre_vote}"));
+            // every nemesis run self-checks safety
+            let report = cabinet::bench::safety_check(a.safety.as_ref().unwrap());
+            assert!(report.is_clean(), "depth {depth}: {:?}", report.violations);
+        }
+    }
+}
+
+#[test]
+fn nemesis_different_seeds_diverge() {
+    let a = run(&nem_config(4, true, 1));
+    let b = run(&nem_config(4, true, 2));
+    assert_ne!(
+        a.metrics_digest(),
+        b.metrics_digest(),
+        "different seeds must take different trajectories"
+    );
+}
+
+#[test]
+fn nemesis_actually_perturbs_the_trajectory() {
+    // guards against the nemesis being silently disconnected: the same seed
+    // with and without it must take different virtual-time trajectories
+    let with = run(&nem_config(4, false, 7));
+    let mut without_cfg = nem_config(4, false, 7);
+    without_cfg.nemesis = None;
+    let without = run(&without_cfg);
+    assert_ne!(with.metrics_digest(), without.metrics_digest());
+    let stats = with.nemesis_stats.unwrap();
+    assert!(
+        stats.cut + stats.dropped + stats.duplicated + stats.reordered > 0,
+        "the schedule must have touched some messages: {stats:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Node-level idempotency properties
+// ---------------------------------------------------------------------------
+
+fn entry(term: u64, index: u64) -> Entry {
+    Entry { term, index, payload: Payload::Bytes(Arc::new(vec![index as u8])), wclock: index }
+}
+
+fn append_msg(prev: (u64, u64), entries: Vec<Entry>, commit: u64) -> Message {
+    Message::AppendEntries {
+        term: 1,
+        leader: 0,
+        prev_log_index: prev.0,
+        prev_log_term: prev.1,
+        entries,
+        leader_commit: commit,
+        wclock: 0,
+        weight: 1.0,
+    }
+}
+
+/// Digest of the committed prefix — what "monotone applied state" protects.
+fn committed_digest(n: &Node) -> (u64, u64) {
+    (n.commit_index(), n.log().prefix_digest(n.commit_index()))
+}
+
+#[test]
+fn stale_append_entries_never_regress_commit_or_digest() {
+    let mut f = Node::new(1, 5, Mode::cabinet(5, 1));
+    let msgs = [
+        append_msg((0, 0), vec![entry(1, 1)], 0),
+        append_msg((1, 1), vec![entry(1, 2), entry(1, 3)], 1),
+        append_msg((0, 0), vec![entry(1, 1), entry(1, 2), entry(1, 3)], 3),
+    ];
+    for m in &msgs {
+        let _ = f.step(Input::Receive(0, m.clone()));
+    }
+    assert_eq!(f.commit_index(), 3);
+    let settled = committed_digest(&f);
+    let last = f.log().last_index();
+
+    // replay every stale/duplicated prefix message, in every order, twice
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let pick = rng.below(msgs.len() as u64) as usize;
+        let _ = f.step(Input::Receive(0, msgs[pick].clone()));
+        assert_eq!(committed_digest(&f), settled, "stale replay moved committed state");
+        assert_eq!(f.log().last_index(), last, "stale replay changed the log");
+    }
+}
+
+#[test]
+fn duplicated_or_late_install_snapshot_never_regresses() {
+    // reference log to compute the blob's chained digest
+    let mut reference = Log::new();
+    for i in 1..=2u64 {
+        reference.append(entry(1, i), 1.0);
+    }
+    let blob = SnapshotBlob {
+        last_index: 2,
+        last_term: 1,
+        prefix_digest: reference.prefix_digest(2),
+        wclock: 2,
+        cabinet_t: Some(1),
+        app: AppState::None,
+    };
+    let install = Message::InstallSnapshot { term: 1, leader: 0, snapshot: blob };
+
+    let mut f = Node::new(1, 5, Mode::cabinet(5, 1));
+    let outs = f.step(Input::Receive(0, install.clone()));
+    assert_eq!(f.commit_index(), 2, "fresh follower installs the snapshot");
+    assert!(outs.iter().any(|o| matches!(o, Output::SnapshotInstalled(_))));
+    assert_eq!(f.snapshots_installed(), 1);
+
+    // the log grows past the snapshot point
+    let _ = f.step(Input::Receive(0, append_msg((2, 1), vec![entry(1, 3)], 3)));
+    assert_eq!(f.commit_index(), 3);
+    let settled = committed_digest(&f);
+
+    // duplicated and reordered (now stale) installs must be inert
+    for _ in 0..5 {
+        let outs = f.step(Input::Receive(0, install.clone()));
+        assert_eq!(committed_digest(&f), settled, "late install regressed state");
+        assert_eq!(f.log().last_index(), 3, "late install truncated the suffix");
+        assert_eq!(f.snapshots_installed(), 1, "duplicate install was re-applied");
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::SnapshotInstalled(_))),
+            "stale install must not re-announce"
+        );
+    }
+}
+
+#[test]
+fn random_replay_of_recorded_traffic_keeps_commit_monotone() {
+    // Record a healthy message trace, then bombard a fresh follower with
+    // random duplicated/reordered deliveries of it. The commit index must
+    // move monotonically and the committed prefix digest must match the
+    // in-order replica's at every point.
+    let msgs = [
+        append_msg((0, 0), vec![entry(1, 1)], 0),
+        append_msg((1, 1), vec![entry(1, 2)], 1),
+        append_msg((2, 1), vec![entry(1, 3), entry(1, 4)], 2),
+        append_msg((4, 1), vec![entry(1, 5)], 4),
+        append_msg((5, 1), vec![], 5),
+    ];
+    // the in-order replica is the reference
+    let mut reference = Node::new(2, 5, Mode::cabinet(5, 1));
+    for m in &msgs {
+        let _ = reference.step(Input::Receive(0, m.clone()));
+    }
+    assert_eq!(reference.commit_index(), 5);
+
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let mut f = Node::new(1, 5, Mode::cabinet(5, 1));
+        let mut last_commit = 0;
+        for _ in 0..300 {
+            let pick = rng.below(msgs.len() as u64) as usize;
+            let _ = f.step(Input::Receive(0, msgs[pick].clone()));
+            let commit = f.commit_index();
+            assert!(commit >= last_commit, "seed {seed}: commit regressed");
+            last_commit = commit;
+            assert_eq!(
+                f.log().prefix_digest(commit),
+                reference.log().prefix_digest(commit),
+                "seed {seed}: committed prefix diverged at {commit}"
+            );
+        }
+        assert_eq!(last_commit, 5, "seed {seed}: replay never converged");
+    }
+}
