@@ -1,0 +1,22 @@
+//! `cargo bench` target regenerating Fig 23 — linearizable read paths
+//! (quick scale; run `cargo run --release --example figures -- fig23
+//! --paper` for the full version). Each row drives read-heavy YCSB through
+//! one of the three read paths — `log` (replicate every read), `readindex`
+//! (weighted-quorum leadership confirmation), `lease` (confirmation-free
+//! within a weighted-quorum-granted lease) — across a leader-isolation
+//! nemesis window, with the read-linearizability checker validating every
+//! run. The acceptance shape: `lease ≥ readindex > log` combined throughput
+//! on YCSB-C at every scale.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig23_read_paths", || {
+        last = Some(figures::fig23_read_paths(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

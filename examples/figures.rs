@@ -37,8 +37,9 @@ fn main() {
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         "fig21" => vec![figures::fig21_compaction(scale)],
         "fig22" => vec![figures::fig22_partitions(scale)],
+        "fig23" => vec![figures::fig23_read_paths(scale)],
         other => {
-            eprintln!("unknown figure {other}; use fig3..fig22 or all");
+            eprintln!("unknown figure {other}; use fig3..fig23 or all");
             std::process::exit(1);
         }
     };

@@ -20,7 +20,9 @@ impl Summary {
             return Summary { n: 0, mean: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, stddev: 0.0 };
         }
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp: a NaN sample must never panic the
+        // summary (it orders after every real number and surfaces in max)
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mean = xs.iter().sum::<f64>() / xs.len() as f64;
         let var =
             xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
@@ -147,6 +149,18 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // regression: partial_cmp().unwrap() panicked the moment a NaN
+        // latency entered the sample; total_cmp must not. The NaN sorts
+        // last, so the finite order statistics stay meaningful.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.max.is_nan(), "the NaN surfaces in max, not in a panic");
     }
 
     #[test]

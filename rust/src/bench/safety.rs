@@ -13,6 +13,12 @@
 //! 3. **Monotone applied state** — a node's commit index never regresses
 //!    (a duplicated or reordered InstallSnapshot / AppendEntries must not
 //!    rewind what was applied).
+//! 4. **Read linearizability** — every read served through a non-log read
+//!    path (ReadIndex or leader lease) observes a read index that is at
+//!    least every write completed *strictly before* the read was invoked
+//!    (no stale reads — the property an expired lease on a deposed leader
+//!    would break) and at most the highest index committed by the time the
+//!    read was served (no reading uncommitted futures).
 //!
 //! The checker is pure data → verdict: the simulator collects the log when
 //! `SimConfig::track_safety` is set, the chaos harness in
@@ -32,6 +38,8 @@ pub struct SafetyReport {
     pub decisions: usize,
     /// Leadership establishments examined.
     pub leaders_checked: usize,
+    /// Linearizable reads validated against the commit timeline.
+    pub reads_checked: usize,
 }
 
 impl SafetyReport {
@@ -95,6 +103,55 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         i = j;
     }
 
+    // 4: read linearizability. Build the running-max commit timeline (commit
+    // times can interleave across leader changes), then check every read
+    // against its invocation-time floor and response-time ceiling.
+    let mut timeline: Vec<(f64, u64)> = log.commit_times.clone();
+    timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut time_axis: Vec<f64> = Vec::with_capacity(timeline.len());
+    let mut max_idx: Vec<u64> = Vec::with_capacity(timeline.len());
+    let mut running = 0u64;
+    for (t, i) in &timeline {
+        running = running.max(*i);
+        time_axis.push(*t);
+        max_idx.push(running);
+    }
+    // highest index committed at a time satisfying `pred` (strictly-before
+    // for the invocation floor, at-or-before for the response ceiling —
+    // writes concurrent with the read may legitimately land on either side)
+    let committed = |t: f64, strict: bool| -> u64 {
+        let k = if strict {
+            time_axis.partition_point(|&x| x < t)
+        } else {
+            time_axis.partition_point(|&x| x <= t)
+        };
+        if k == 0 {
+            0
+        } else {
+            max_idx[k - 1]
+        }
+    };
+    let mut reads_checked = 0usize;
+    for r in &log.reads {
+        reads_checked += 1;
+        let floor = committed(r.invoked_ms, true);
+        if r.read_index < floor {
+            violations.push(format!(
+                "read {} at node {}: STALE — read_index {} < {} committed before \
+                 invocation at {:.1} ms (lease = {})",
+                r.id, r.node, r.read_index, floor, r.invoked_ms, r.lease
+            ));
+        }
+        let ceiling = committed(r.served_ms, false);
+        if r.read_index > ceiling {
+            violations.push(format!(
+                "read {} at node {}: read_index {} beyond {} committed by its \
+                 response at {:.1} ms",
+                r.id, r.node, r.read_index, ceiling, r.served_ms
+            ));
+        }
+    }
+
     // 2: single leader per term.
     let mut by_term: Vec<(u64, usize)> = Vec::new();
     for &(term, node) in &log.leaders {
@@ -114,6 +171,7 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         commits_checked,
         decisions,
         leaders_checked: log.leaders.len(),
+        reads_checked,
     }
 }
 
@@ -121,8 +179,16 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
 mod tests {
     use super::*;
 
+    use crate::sim::ReadRecord;
+
     fn log2(a: Vec<(u64, u64)>, b: Vec<(u64, u64)>) -> SafetyLog {
-        SafetyLog { commits: vec![a, b], leaders: vec![] }
+        let mut log = SafetyLog::new(2);
+        log.commits = vec![a, b];
+        log
+    }
+
+    fn read(invoked: f64, served: f64, read_index: u64, lease: bool) -> ReadRecord {
+        ReadRecord { node: 1, id: 0, invoked_ms: invoked, served_ms: served, read_index, lease }
     }
 
     #[test]
@@ -160,13 +226,66 @@ mod tests {
 
     #[test]
     fn two_leaders_in_one_term_flagged() {
-        let log = SafetyLog {
-            commits: vec![vec![], vec![]],
-            leaders: vec![(3, 0), (4, 1), (3, 1)],
-        };
+        let mut log = SafetyLog::new(2);
+        log.leaders = vec![(3, 0), (4, 1), (3, 1)];
         let r = check(&log);
         assert!(!r.is_clean());
         assert!(r.violations[0].contains("term 3"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn linearizable_reads_pass() {
+        let mut log = SafetyLog::new(2);
+        log.commit_times = vec![(10.0, 1), (20.0, 2), (30.0, 3)];
+        log.reads = vec![
+            // invoked after index 2 committed, observes 2: fine
+            read(25.0, 26.0, 2, false),
+            // observes 3 the moment it lands: fine (ceiling is inclusive)
+            read(25.0, 30.0, 3, true),
+            // a write commits at the exact invocation instant — concurrent,
+            // so observing the pre-state is linearizable (floor is strict)
+            read(20.0, 21.0, 1, false),
+            // invoked before anything committed, observes nothing: fine
+            read(5.0, 6.0, 0, false),
+        ];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.reads_checked, 4);
+    }
+
+    #[test]
+    fn stale_read_flagged() {
+        // the stale-lease scenario: index 2 committed (by a new leader) at
+        // t=20, a read invoked at t=25 still observes index 1
+        let mut log = SafetyLog::new(2);
+        log.commit_times = vec![(10.0, 1), (20.0, 2)];
+        log.reads = vec![read(25.0, 26.0, 1, true)];
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("STALE"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn read_ahead_of_commit_flagged() {
+        // a read cannot observe an index nothing had committed by its
+        // response time
+        let mut log = SafetyLog::new(2);
+        log.commit_times = vec![(10.0, 1)];
+        log.reads = vec![read(11.0, 12.0, 5, false)];
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("beyond"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn out_of_order_commit_times_use_running_max() {
+        // commit observations can interleave across leader changes; the
+        // floor must be the running max, not the last record
+        let mut log = SafetyLog::new(2);
+        log.commit_times = vec![(10.0, 3), (15.0, 2), (20.0, 4)];
+        log.reads = vec![read(16.0, 17.0, 3, false)];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
     }
 
     #[test]

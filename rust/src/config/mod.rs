@@ -9,7 +9,9 @@ use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
 use crate::net::nemesis::{NemesisSpec, PartitionSpec};
 use crate::net::topology::ZoneAlloc;
-use crate::sim::{DigestMode, Protocol, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec};
+use crate::sim::{
+    DigestMode, Protocol, ReadPath, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec,
+};
 use crate::workload::Workload;
 
 /// Build a `SimConfig` from a TOML-subset experiment file. Layout:
@@ -25,6 +27,8 @@ use crate::workload::Workload;
 /// pipeline = 4           # in-flight replication rounds (default 1 = lock-step)
 /// snapshot_every = 64    # snapshot + compact every N committed entries (0 = off)
 /// pre_vote = true        # PreVote elections (Raft §9.6, n − t quorum); default off
+/// read_path = "lease"    # linearizable reads: log (default) | readindex | lease
+/// lease_drift_ms = 50    # clock-drift margin under the lease bound
 ///
 /// [workload]
 /// kind = "ycsb"          # ycsb | tpcc
@@ -96,6 +100,26 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
         }
     }
     config.pre_vote = root.get("pre_vote").and_then(|v| v.as_bool()).unwrap_or(false);
+    if let Some(rp) = root.get("read_path").and_then(|v| v.as_str()) {
+        config.read_path = ReadPath::from_name(rp)
+            .with_context(|| format!("unknown read_path {rp} (log | readindex | lease)"))?;
+    }
+    if let Some(ms) = root.get("lease_drift_ms").and_then(|v| v.as_float()) {
+        if ms < 0.0 {
+            bail!("lease_drift_ms must be >= 0, got {ms}");
+        }
+        config.lease_drift_ms = ms;
+    }
+    if matches!(config.read_path, ReadPath::Lease)
+        && config.lease_drift_ms >= config.election_timeout_ms.0
+    {
+        bail!(
+            "lease_drift_ms ({}) must stay below the minimum election timeout ({}) — \
+             the lease bound would be empty",
+            config.lease_drift_ms,
+            config.election_timeout_ms.0
+        );
+    }
     let _ = ZoneAlloc::heterogeneous(n); // n validated by construction
 
     if let Some(w) = doc.get("workload") {
@@ -108,8 +132,13 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 config.workload = WorkloadSpec::ycsb(wl, batch);
             }
             "tpcc" => {
-                let wh = w.get("warehouses").and_then(|v| v.as_int()).unwrap_or(10) as u32;
-                config.workload = WorkloadSpec::Tpcc { batch, warehouses: wh };
+                let wh = w.get("warehouses").and_then(|v| v.as_int()).unwrap_or(10);
+                // parse-time validation, not a construction-site .max(1)
+                // patch-up: a zero-warehouse experiment is a config error
+                if wh < 1 {
+                    bail!("warehouses must be >= 1, got {wh}");
+                }
+                config.workload = WorkloadSpec::Tpcc { batch, warehouses: wh as u32 };
             }
             other => bail!("unknown workload kind {other}"),
         }
@@ -356,6 +385,38 @@ partitions = ["2000..6000=leader", "8000..20000=followers:2"]
         let cfg = sim_config_from_toml("[nemesis]\n").unwrap();
         assert!(cfg.nemesis.is_none());
         assert!(!cfg.pre_vote);
+    }
+
+    #[test]
+    fn read_path_roundtrip_and_validation() {
+        let cfg = sim_config_from_toml(
+            "protocol = \"cabinet\"\nt = 2\nn = 7\nread_path = \"readindex\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.read_path, ReadPath::ReadIndex);
+        let cfg =
+            sim_config_from_toml("read_path = \"lease\"\nlease_drift_ms = 80\n").unwrap();
+        assert_eq!(cfg.read_path, ReadPath::Lease);
+        assert_eq!(cfg.lease_drift_ms, 80.0);
+        // the default stays on the log path with the stock drift margin
+        let cfg = sim_config_from_toml("protocol = \"raft\"\n").unwrap();
+        assert_eq!(cfg.read_path, ReadPath::Log);
+        assert_eq!(cfg.lease_drift_ms, 50.0);
+        // rejected: unknown path, negative drift, drift swallowing the lease
+        assert!(sim_config_from_toml("read_path = \"quorum\"\n").is_err());
+        assert!(sim_config_from_toml("lease_drift_ms = -1\n").is_err());
+        assert!(
+            sim_config_from_toml("read_path = \"lease\"\nlease_drift_ms = 2500\n").is_err()
+        );
+    }
+
+    #[test]
+    fn warehouses_validated_at_parse_time() {
+        assert!(sim_config_from_toml("[workload]\nkind = \"tpcc\"\nwarehouses = 0\n").is_err());
+        assert!(sim_config_from_toml("[workload]\nkind = \"tpcc\"\nwarehouses = -3\n").is_err());
+        let cfg =
+            sim_config_from_toml("[workload]\nkind = \"tpcc\"\nwarehouses = 4\n").unwrap();
+        assert!(matches!(cfg.workload, WorkloadSpec::Tpcc { warehouses: 4, .. }));
     }
 
     #[test]

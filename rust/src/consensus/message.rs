@@ -182,6 +182,36 @@ pub enum Message {
         from: NodeId,
         match_index: LogIndex,
     },
+    /// Leader → peers: a ReadIndex leadership-confirmation probe (Raft §6.4
+    /// adapted to Cabinet): the leader may serve reads at the commit index it
+    /// recorded for round `seq` once acked probe *weight* exceeds CT.
+    ReadIndex {
+        term: Term,
+        leader: NodeId,
+        seq: u64,
+    },
+    /// Reply to a ReadIndex probe: the replier still recognizes `term`'s
+    /// leader. `seq` echoes the probe so stale rounds cannot contribute.
+    ReadIndexResp {
+        term: Term,
+        from: NodeId,
+        seq: u64,
+    },
+    /// Follower → leader: a client read arrived at `from`; confirm a read
+    /// index for request `id` so the follower can serve it locally.
+    ReadForward {
+        term: Term,
+        from: NodeId,
+        id: u64,
+    },
+    /// Leader → follower: request `id` may be served from local state once
+    /// the follower has applied through `read_index`.
+    ReadGrant {
+        term: Term,
+        leader: NodeId,
+        id: u64,
+        read_index: LogIndex,
+    },
 }
 
 impl Message {
@@ -194,7 +224,11 @@ impl Message {
             | Message::PreVote { term, .. }
             | Message::PreVoteReply { term, .. }
             | Message::InstallSnapshot { term, .. }
-            | Message::InstallSnapshotReply { term, .. } => *term,
+            | Message::InstallSnapshotReply { term, .. }
+            | Message::ReadIndex { term, .. }
+            | Message::ReadIndexResp { term, .. }
+            | Message::ReadForward { term, .. }
+            | Message::ReadGrant { term, .. } => *term,
         }
     }
 
@@ -208,6 +242,10 @@ impl Message {
             Message::PreVoteReply { .. } => "PreVoteReply",
             Message::InstallSnapshot { .. } => "InstallSnapshot",
             Message::InstallSnapshotReply { .. } => "InstallSnapshotReply",
+            Message::ReadIndex { .. } => "ReadIndex",
+            Message::ReadIndexResp { .. } => "ReadIndexResp",
+            Message::ReadForward { .. } => "ReadForward",
+            Message::ReadGrant { .. } => "ReadGrant",
         }
     }
 
@@ -271,10 +309,14 @@ mod tests {
                 },
             },
             Message::InstallSnapshotReply { term: 8, from: 1, match_index: 9 },
+            Message::ReadIndex { term: 9, leader: 0, seq: 1 },
+            Message::ReadIndexResp { term: 10, from: 1, seq: 1 },
+            Message::ReadForward { term: 11, from: 2, id: 7 },
+            Message::ReadGrant { term: 12, leader: 0, id: 7, read_index: 3 },
         ];
         assert_eq!(
             msgs.iter().map(Message::term).collect::<Vec<_>>(),
-            vec![3, 4, 5, 6, 7, 8]
+            vec![3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
         );
     }
 

@@ -10,5 +10,5 @@ pub mod node;
 pub mod weights;
 
 pub use message::{AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock};
-pub use node::{Input, Mode, Node, Output, Role, SnapshotCapture};
+pub use node::{Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 pub use weights::{ratio_bounds, threshold_pct, WeightScheme};

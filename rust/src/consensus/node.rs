@@ -60,6 +60,45 @@ impl Mode {
     }
 }
 
+/// Which path serves linearizable reads (Raft §6.4, weighted per Cabinet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReadPath {
+    /// Replicate every read through the log like a write — the historical
+    /// behavior, and the only mode with no extra protocol machinery.
+    #[default]
+    Log,
+    /// ReadIndex: the leader records its commit index for the read and
+    /// confirms it still leads by collecting probe acks whose *weight*
+    /// exceeds CT (Cabinet's quorum rule — fast heavy nodes confirm reads
+    /// as quickly as they commit writes). Safe under full asynchrony.
+    ReadIndex,
+    /// Leader leases: while a weighted-quorum-granted lease (bounded by the
+    /// minimum election timeout minus a clock-drift margin) is held, reads
+    /// are served locally with no confirmation round at all. An expired
+    /// lease falls back to ReadIndex. Relies on the §6.4.1 timing
+    /// assumption, enforced here by lease-mode vote stickiness.
+    Lease,
+}
+
+impl ReadPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReadPath::Log => "log",
+            ReadPath::ReadIndex => "readindex",
+            ReadPath::Lease => "lease",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ReadPath> {
+        match s {
+            "log" => Some(ReadPath::Log),
+            "readindex" => Some(ReadPath::ReadIndex),
+            "lease" => Some(ReadPath::Lease),
+            _ => None,
+        }
+    }
+}
+
 /// Inputs to the state machine.
 #[derive(Clone, Debug)]
 pub enum Input {
@@ -71,6 +110,10 @@ pub enum Input {
     Receive(NodeId, Message),
     /// A client proposal arrived (leader only; otherwise ignored + reported).
     Propose(Payload),
+    /// A client read arrived (non-log read paths only). Leaders serve it via
+    /// the configured fast path; followers forward it to their leader and
+    /// serve locally once granted.
+    Read { id: u64 },
 }
 
 /// Outputs produced by a step.
@@ -102,6 +145,13 @@ pub enum Output {
     /// A leader snapshot was installed over the local log; the driver must
     /// restore the carried replica state before applying later commits.
     SnapshotInstalled(SnapshotBlob),
+    /// A linearizable read is safe to serve from local applied state at
+    /// `index` — ReadIndex confirmed, lease held (`lease = true`), or
+    /// granted by the leader and now applied locally.
+    ReadReady { id: u64, index: LogIndex, lease: bool },
+    /// A read could not be served here (no leader known, leadership lost
+    /// mid-confirmation, or no committed term barrier yet) — retry.
+    ReadFailed { id: u64 },
 }
 
 /// How a node obtains the replica-state payload when it takes a snapshot.
@@ -134,6 +184,25 @@ struct InflightRound {
     acked: Vec<bool>,
     /// Accumulated weight of ackers (leader included).
     acc_weight: f64,
+}
+
+/// Leader-side bookkeeping for one ReadIndex leadership-confirmation round:
+/// the commit index the round's reads observe, the probe weights/CT
+/// snapshotted like a replication round, and the reads riding on it. An
+/// empty `reads` vec is a lease-renewal round.
+#[derive(Clone, Debug)]
+struct ReadConfirm {
+    seq: u64,
+    /// Driver time the probe round was first sent — lease extensions are
+    /// measured from here, so retransmits can only be conservative.
+    sent_at_ms: f64,
+    read_index: LogIndex,
+    /// (request id, origin node); origin == self for local reads.
+    reads: Vec<(u64, NodeId)>,
+    weights: Vec<f64>,
+    acked: Vec<bool>,
+    acc_weight: f64,
+    ct: f64,
 }
 
 /// The consensus node.
@@ -214,6 +283,36 @@ pub struct Node {
     snapshot: Option<SnapshotBlob>,
     snapshots_taken: u64,
     snapshots_installed: u64,
+
+    // ---- linearizable read path ------------------------------------------
+    /// Which fast path serves reads. `Log` (default) leaves every historical
+    /// code path untouched — `Input::Read` is then rejected outright.
+    read_path: ReadPath,
+    /// Driver-supplied monotone clock (ms). The node never reads a real
+    /// clock; drivers call [`Node::observe_time`] before stepping. Dead
+    /// state on the log path.
+    now_ms: f64,
+    /// Lease length one confirmed probe round grants (driver sets this to
+    /// `election_timeout_min − lease_drift`).
+    lease_duration_ms: f64,
+    /// Leader lease expiry on the driver clock; 0 = no lease held.
+    lease_until_ms: f64,
+    /// Next ReadIndex probe round id.
+    read_seq: u64,
+    /// Outstanding leadership-confirmation rounds (leader only).
+    pending_confirm: Vec<ReadConfirm>,
+    /// Follower: granted reads waiting for local apply (commit < read_index).
+    waiting_grants: Vec<(u64, LogIndex)>,
+    /// Follower: last known leader — the forwarding target for reads.
+    leader_hint: Option<NodeId>,
+    /// Index of this term's no-op barrier. ReadIndex is only valid once it
+    /// commits (before that the leader's commit index may trail entries the
+    /// previous term already committed — Raft §6.4 step 1).
+    barrier_index: LogIndex,
+    /// Reads this node served via the lease fast path (no probe round).
+    lease_reads: u64,
+    /// ReadIndex confirmation rounds this node closed as leader.
+    readindex_rounds: u64,
 }
 
 impl Node {
@@ -252,6 +351,17 @@ impl Node {
             snapshot: None,
             snapshots_taken: 0,
             snapshots_installed: 0,
+            read_path: ReadPath::Log,
+            now_ms: 0.0,
+            lease_duration_ms: 0.0,
+            lease_until_ms: 0.0,
+            read_seq: 0,
+            pending_confirm: Vec::new(),
+            waiting_grants: Vec::new(),
+            leader_hint: None,
+            barrier_index: 0,
+            lease_reads: 0,
+            readindex_rounds: 0,
         }
     }
 
@@ -277,6 +387,39 @@ impl Node {
     /// quorum). Off by default — the historical election behavior.
     pub fn set_pre_vote(&mut self, on: bool) {
         self.pre_vote = on;
+    }
+
+    /// Select the linearizable read path (default: [`ReadPath::Log`], which
+    /// leaves every historical code path untouched).
+    pub fn set_read_path(&mut self, path: ReadPath) {
+        self.read_path = path;
+    }
+
+    /// Lease length one confirmed probe round grants. Drivers must keep this
+    /// below their minimum election timeout minus the clock-drift margin —
+    /// the §6.4.1 timing bound lease safety rests on.
+    pub fn set_lease_duration_ms(&mut self, ms: f64) {
+        debug_assert!(ms >= 0.0);
+        self.lease_duration_ms = ms;
+    }
+
+    /// Advance the node's view of the driver clock (monotone; stale values
+    /// are ignored). Call before [`Node::step`] when a non-log read path is
+    /// configured; on the log path this is dead state.
+    pub fn observe_time(&mut self, now_ms: f64) {
+        if now_ms > self.now_ms {
+            self.now_ms = now_ms;
+        }
+    }
+
+    /// Restart hygiene for lease deployments (§6.4.1): a node restarting
+    /// with fresh volatile state must not grant votes until a full election
+    /// timeout passes — before the crash it may have acked a probe whose
+    /// lease is still live, and a vote now could elect a disruptor inside
+    /// that window. Sets the same stickiness flag leader contact sets; the
+    /// node's first own election timeout clears it.
+    pub fn hold_votes_until_timeout(&mut self) {
+        self.heard_from_leader = true;
     }
 
     // ---- accessors -------------------------------------------------------
@@ -376,6 +519,32 @@ impl Node {
         self.prevote_active
     }
 
+    /// The configured linearizable read path.
+    pub fn read_path(&self) -> ReadPath {
+        self.read_path
+    }
+
+    /// Does this node currently hold a valid leader lease?
+    pub fn lease_valid(&self) -> bool {
+        self.role == Role::Leader && self.now_ms < self.lease_until_ms
+    }
+
+    /// Reads this node served via the lease fast path.
+    pub fn lease_reads(&self) -> u64 {
+        self.lease_reads
+    }
+
+    /// ReadIndex confirmation rounds this node closed as leader (including
+    /// lease-renewal rounds carrying no reads).
+    pub fn readindex_rounds(&self) -> u64 {
+        self.readindex_rounds
+    }
+
+    /// Outstanding leadership-confirmation rounds (test hook).
+    pub fn pending_confirm_rounds(&self) -> usize {
+        self.pending_confirm.len()
+    }
+
     /// The latest snapshot this node holds (taken or installed), if any.
     pub fn snapshot(&self) -> Option<&SnapshotBlob> {
         self.snapshot.as_ref()
@@ -390,6 +559,7 @@ impl Node {
             Input::HeartbeatTimeout => self.on_heartbeat_timeout(&mut out),
             Input::Receive(from, msg) => self.on_receive(from, msg, &mut out),
             Input::Propose(payload) => self.on_propose(payload, &mut out),
+            Input::Read { id } => self.on_read(id, &mut out),
         }
         out
     }
@@ -457,6 +627,7 @@ impl Node {
             return;
         }
         self.broadcast_append(out);
+        self.read_maintenance(out);
         out.push(Output::StartHeartbeat);
     }
 
@@ -653,6 +824,18 @@ impl Node {
             Message::InstallSnapshotReply { term, from, match_index } => {
                 self.on_install_snapshot_reply(term, from, match_index, out)
             }
+            Message::ReadIndex { term, leader, seq } => {
+                self.on_read_index(term, leader, seq, out)
+            }
+            Message::ReadIndexResp { term, from, seq } => {
+                self.on_read_index_resp(term, from, seq, out)
+            }
+            Message::ReadForward { term, from, id } => {
+                self.on_read_forward(term, from, id, out)
+            }
+            Message::ReadGrant { term, leader, id, read_index } => {
+                self.on_read_grant(term, leader, id, read_index, out)
+            }
         }
         let _ = from;
     }
@@ -690,6 +873,7 @@ impl Node {
         // a working leader exists — abandon any pre-campaign, deny probes
         self.prevote_active = false;
         self.heard_from_leader = true;
+        self.leader_hint = Some(leader);
         out.push(Output::ResetElectionTimer);
 
         // NewWeight (Algorithm 1, Lines 29–31): store the weight clock and
@@ -842,6 +1026,8 @@ impl Node {
                 out.push(Output::Commit(e.clone()));
             }
         }
+        // granted reads waiting on this apply point are now servable
+        self.flush_waiting_grants(out);
         // Commit outputs precede the snapshot request, so a driver that
         // forwards commits to its applier in output order captures exactly
         // the state through `commit_index`.
@@ -923,6 +1109,7 @@ impl Node {
         }
         self.prevote_active = false;
         self.heard_from_leader = true;
+        self.leader_hint = Some(leader);
         out.push(Output::ResetElectionTimer);
         if blob.wclock >= self.my_wclock {
             self.my_wclock = blob.wclock;
@@ -948,6 +1135,8 @@ impl Node {
             self.snapshots_installed += 1;
             self.snapshot = Some(blob.clone());
             out.push(Output::SnapshotInstalled(blob));
+            // the install advanced the apply point past any waiting grants
+            self.flush_waiting_grants(out);
         }
         out.push(Output::Send(
             leader,
@@ -979,6 +1168,250 @@ impl Node {
         // ship the live suffix (the snapshot covers only the committed prefix)
         if self.next_index[from] <= self.log.last_index() {
             self.send_append(from, out);
+        }
+    }
+
+    // ---- linearizable reads (ReadIndex + leader leases, §6.4) ------------
+
+    /// A client read arrived at this node. Leaders serve it through the
+    /// configured fast path; followers forward it to their last known
+    /// leader (the grant comes back as [`Message::ReadGrant`]).
+    fn on_read(&mut self, id: u64, out: &mut Vec<Output>) {
+        if matches!(self.read_path, ReadPath::Log) {
+            // log-path clusters replicate reads as ordinary proposals; a
+            // stray Read input has no protocol to ride
+            out.push(Output::ReadFailed { id });
+            return;
+        }
+        if self.role == Role::Leader {
+            self.leader_read(id, self.id, out);
+            return;
+        }
+        match self.leader_hint {
+            Some(l) if l != self.id => out.push(Output::Send(
+                l,
+                Message::ReadForward { term: self.term, from: self.id, id },
+            )),
+            _ => out.push(Output::ReadFailed { id }),
+        }
+    }
+
+    /// Leader-side read admission (local or forwarded): serve from the
+    /// lease when one is held, otherwise open (or join) a ReadIndex
+    /// confirmation round over the current commit index.
+    fn leader_read(&mut self, id: u64, origin: NodeId, out: &mut Vec<Output>) {
+        // Raft §6.4 step 1: until this term's no-op barrier commits, the
+        // leader's commit index may trail entries the previous term already
+        // committed — serving a read index now could be stale.
+        if self.commit_index < self.barrier_index {
+            if origin == self.id {
+                out.push(Output::ReadFailed { id });
+            }
+            // forwarded reads are dropped; the origin's client retries
+            return;
+        }
+        if matches!(self.read_path, ReadPath::Lease) && self.lease_valid() {
+            self.lease_reads += 1;
+            if origin == self.id {
+                out.push(Output::ReadReady { id, index: self.commit_index, lease: true });
+            } else {
+                out.push(Output::Send(
+                    origin,
+                    Message::ReadGrant {
+                        term: self.term,
+                        leader: self.id,
+                        id,
+                        read_index: self.commit_index,
+                    },
+                ));
+            }
+            return;
+        }
+        // ReadIndex — or an expired lease falling back to it: every read
+        // opens a FRESH probe round. Joining an already-probed round would
+        // let acks answering pre-arrival probes confirm the read — and a
+        // node can ack a probe and then vote a new leader in, so such a
+        // round can close after a newer leader has already committed past
+        // us (a stale read). A fresh round's acks all answer probes sent at
+        // or after the read arrived, so every acker was still rejecting new
+        // leaders at ack time; with the election quorum taking n − t nodes,
+        // at most t non-voters remain, and L3.2 (heaviest t < CT) keeps
+        // them below the weighted threshold — the round cannot close once a
+        // newer leader exists.
+        self.open_confirm_round(vec![(id, origin)], out);
+    }
+
+    /// Open a leadership-confirmation probe round. Weights and CT are
+    /// snapshotted exactly like a replication round's, so a mid-window
+    /// re-deal or §4.1.4 reconfiguration never changes a round's rule.
+    fn open_confirm_round(&mut self, reads: Vec<(u64, NodeId)>, out: &mut Vec<Output>) {
+        self.read_seq += 1;
+        let weights = self.weight_assign.clone();
+        let mut acked = vec![false; self.n];
+        acked[self.id] = true;
+        let acc_weight = weights[self.id];
+        self.pending_confirm.push(ReadConfirm {
+            seq: self.read_seq,
+            sent_at_ms: self.now_ms,
+            read_index: self.commit_index,
+            reads,
+            weights,
+            acked,
+            acc_weight,
+            ct: self.ct(),
+        });
+        let seq = self.read_seq;
+        for peer in self.peers() {
+            out.push(Output::Send(
+                peer,
+                Message::ReadIndex { term: self.term, leader: self.id, seq },
+            ));
+        }
+    }
+
+    /// Heartbeat-cadence read upkeep (non-log paths only): re-probe rounds
+    /// still short of their quorum (loss recovery — probes and replies can
+    /// be dropped by the nemesis), and in lease mode keep a renewal round in
+    /// flight so an idle leader's lease never lapses.
+    fn read_maintenance(&mut self, out: &mut Vec<Output>) {
+        if matches!(self.read_path, ReadPath::Log) {
+            return;
+        }
+        for rc in &self.pending_confirm {
+            for peer in 0..self.n {
+                if peer != self.id && !rc.acked[peer] {
+                    out.push(Output::Send(
+                        peer,
+                        Message::ReadIndex { term: self.term, leader: self.id, seq: rc.seq },
+                    ));
+                }
+            }
+        }
+        if matches!(self.read_path, ReadPath::Lease)
+            && self.commit_index >= self.barrier_index
+            && self.pending_confirm.is_empty()
+        {
+            self.open_confirm_round(Vec::new(), out);
+        }
+    }
+
+    /// Receiver side of a probe: acknowledging it is a statement that we
+    /// still recognize this leader — which is leader contact, with all the
+    /// usual consequences (timer reset, PreVote/lease stickiness).
+    fn on_read_index(&mut self, term: Term, leader: NodeId, seq: u64, out: &mut Vec<Output>) {
+        if term < self.term {
+            // stale leader: our reply's higher term steps it down
+            out.push(Output::Send(
+                leader,
+                Message::ReadIndexResp { term: self.term, from: self.id, seq },
+            ));
+            return;
+        }
+        if self.role != Role::Follower {
+            self.become_follower(term, out);
+        }
+        self.prevote_active = false;
+        self.heard_from_leader = true;
+        self.leader_hint = Some(leader);
+        out.push(Output::ResetElectionTimer);
+        out.push(Output::Send(
+            leader,
+            Message::ReadIndexResp { term: self.term, from: self.id, seq },
+        ));
+    }
+
+    /// Leader side: accumulate probe-ack weight; past CT the round's reads
+    /// are confirmed (and in lease mode the lease extends from the probe's
+    /// original send time).
+    fn on_read_index_resp(&mut self, term: Term, from: NodeId, seq: u64, out: &mut Vec<Output>) {
+        if self.role != Role::Leader || term < self.term {
+            return; // a higher term already stepped us down (generic rule)
+        }
+        let Some(pos) = self.pending_confirm.iter().position(|rc| rc.seq == seq) else {
+            return; // already confirmed, or cleared by a leadership change
+        };
+        {
+            let rc = &mut self.pending_confirm[pos];
+            if rc.acked[from] {
+                return;
+            }
+            rc.acked[from] = true;
+            rc.acc_weight += rc.weights[from];
+            if rc.acc_weight <= rc.ct {
+                return;
+            }
+        }
+        let rc = self.pending_confirm.remove(pos);
+        self.readindex_rounds += 1;
+        if matches!(self.read_path, ReadPath::Lease) {
+            let until = rc.sent_at_ms + self.lease_duration_ms;
+            if until > self.lease_until_ms {
+                self.lease_until_ms = until;
+            }
+        }
+        for (id, origin) in rc.reads {
+            if origin == self.id {
+                out.push(Output::ReadReady { id, index: rc.read_index, lease: false });
+            } else {
+                out.push(Output::Send(
+                    origin,
+                    Message::ReadGrant {
+                        term: self.term,
+                        leader: self.id,
+                        id,
+                        read_index: rc.read_index,
+                    },
+                ));
+            }
+        }
+    }
+
+    /// A follower forwarded a client read. Non-leaders drop it (the origin's
+    /// client retries against the new leader).
+    fn on_read_forward(&mut self, term: Term, from: NodeId, id: u64, out: &mut Vec<Output>) {
+        let _ = term;
+        if self.role != Role::Leader {
+            return;
+        }
+        self.leader_read(id, from, out);
+    }
+
+    /// The leader granted one of our forwarded reads: serve it as soon as
+    /// the local applied state reaches the read index.
+    fn on_read_grant(
+        &mut self,
+        term: Term,
+        leader: NodeId,
+        id: u64,
+        read_index: LogIndex,
+        out: &mut Vec<Output>,
+    ) {
+        let _ = leader;
+        if term < self.term {
+            return; // a grant from a deposed regime must not serve a read
+        }
+        if self.commit_index >= read_index {
+            out.push(Output::ReadReady { id, index: read_index, lease: false });
+        } else {
+            self.waiting_grants.push((id, read_index));
+        }
+    }
+
+    /// Serve granted reads whose read index the local applied state has
+    /// reached (called whenever the commit index advances).
+    fn flush_waiting_grants(&mut self, out: &mut Vec<Output>) {
+        if self.waiting_grants.is_empty() {
+            return;
+        }
+        let commit = self.commit_index;
+        let mut i = 0;
+        while i < self.waiting_grants.len() {
+            if self.waiting_grants[i].1 <= commit {
+                let (id, index) = self.waiting_grants.swap_remove(i);
+                out.push(Output::ReadReady { id, index, lease: false });
+            } else {
+                i += 1;
+            }
         }
     }
 
@@ -1044,7 +1477,13 @@ impl Node {
         let up_to_date = self.log.candidate_up_to_date(last_log_index, last_log_term);
         let can_vote =
             self.voted_for.is_none() || self.voted_for == Some(candidate);
-        let granted = term >= self.term && can_vote && up_to_date;
+        // Lease-mode vote stickiness (the §6.4.1 timing assumption made
+        // explicit): while we have heard from a leader since our own last
+        // election timeout, deny votes — otherwise a disruptor elected
+        // inside another grantor's lease window could commit writes a lease
+        // read would then miss. The log path keeps historical vote behavior.
+        let sticky = matches!(self.read_path, ReadPath::Lease) && self.heard_from_leader;
+        let granted = term >= self.term && can_vote && up_to_date && !sticky;
         if granted {
             self.voted_for = Some(candidate);
             out.push(Output::ResetElectionTimer);
@@ -1089,6 +1528,11 @@ impl Node {
         self.replied = vec![false; self.n];
         self.inflight.clear();
         self.pending_reconfig = None;
+        // read state: a new regime re-earns its lease and starts its own
+        // confirmation rounds from scratch
+        self.pending_confirm.clear();
+        self.lease_until_ms = 0.0;
+        self.leader_hint = None;
         out.push(Output::BecameLeader { term: self.term });
         out.push(Output::StartHeartbeat);
         // Commit a no-op barrier to establish leadership completeness.
@@ -1100,6 +1544,8 @@ impl Node {
         );
         self.match_index[self.id] = idx;
         self.register_inflight(idx);
+        // ReadIndex is only valid once this barrier commits (§6.4 step 1)
+        self.barrier_index = idx;
         self.broadcast_append(out);
     }
 
@@ -1113,6 +1559,17 @@ impl Node {
         self.prevote_active = false;
         // retreat-on-conflict: any in-flight rounds die with the leadership
         self.inflight.clear();
+        // ... and so do outstanding read-confirmation rounds and the lease:
+        // local reads fail loudly (their clients retry against the new
+        // leader); forwarded reads are simply dropped, their origin retries
+        for rc in self.pending_confirm.drain(..) {
+            for (id, origin) in rc.reads {
+                if origin == self.id {
+                    out.push(Output::ReadFailed { id });
+                }
+            }
+        }
+        self.lease_until_ms = 0.0;
         if was_leader {
             out.push(Output::StopHeartbeat);
             out.push(Output::SteppedDown);
@@ -1155,6 +1612,8 @@ mod tests {
     struct TestCluster {
         nodes: Vec<Node>,
         commits: Vec<Vec<Entry>>,
+        /// Served reads: (node, request id, read index, via lease).
+        reads: Vec<(NodeId, u64, LogIndex, bool)>,
     }
 
     impl TestCluster {
@@ -1162,6 +1621,7 @@ mod tests {
             TestCluster {
                 nodes: (0..n).map(|i| Node::new(i, n, mode_of(i))).collect(),
                 commits: vec![Vec::new(); n],
+                reads: Vec::new(),
             }
         }
 
@@ -1212,6 +1672,9 @@ mod tests {
                 match o {
                     Output::Send(dst, msg) => queue.push((src, dst, msg)),
                     Output::Commit(e) => self.commits[src].push(e),
+                    Output::ReadReady { id, index, lease } => {
+                        self.reads.push((src, id, index, lease))
+                    }
                     _ => {}
                 }
             }
@@ -2149,6 +2612,196 @@ mod tests {
             (c.nodes[0].role(), c.nodes[0].term()),
             (Role::Leader, leader_term),
             "healed inflated-term node must have disrupted the old leadership"
+        );
+    }
+
+    // ---- linearizable read paths (ReadIndex + leader leases) -------------
+
+    #[test]
+    fn readindex_read_confirms_with_weighted_quorum() {
+        let n = 7;
+        let mut leader = solo_leader(n, Mode::cabinet(n, 2));
+        leader.set_read_path(ReadPath::ReadIndex);
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        assert_eq!(leader.commit_index(), noop, "barrier must commit first");
+        let outs = leader.step(Input::Read { id: 7 });
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::ReadReady { .. })),
+            "ReadIndex must not serve before leadership is confirmed"
+        );
+        let probes = outs
+            .iter()
+            .filter(|o| matches!(o, Output::Send(_, Message::ReadIndex { .. })))
+            .count();
+        assert_eq!(probes, n - 1, "probe every peer");
+        let seq = outs
+            .iter()
+            .find_map(|o| match o {
+                Output::Send(_, Message::ReadIndex { seq, .. }) => Some(*seq),
+                _ => None,
+            })
+            .unwrap();
+        // one cabinet member's ack is not enough weight...
+        let o1 = leader.step(Input::Receive(
+            1,
+            Message::ReadIndexResp { term: 1, from: 1, seq },
+        ));
+        assert!(!o1.iter().any(|o| matches!(o, Output::ReadReady { .. })));
+        // ...the second clears CT (leader + 2 = the t+1 cabinet, as for writes)
+        let o2 = leader.step(Input::Receive(
+            2,
+            Message::ReadIndexResp { term: 1, from: 2, seq },
+        ));
+        let ready = o2.iter().find_map(|o| match o {
+            Output::ReadReady { id, index, lease } => Some((*id, *index, *lease)),
+            _ => None,
+        });
+        assert_eq!(ready, Some((7, noop, false)));
+        assert_eq!(leader.readindex_rounds(), 1);
+    }
+
+    #[test]
+    fn read_denied_before_barrier_commits() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 1));
+        leader.set_read_path(ReadPath::ReadIndex);
+        // the term barrier has not committed: the leader's commit index may
+        // trail entries the previous term already committed (§6.4 step 1)
+        let outs = leader.step(Input::Read { id: 1 });
+        assert!(outs.iter().any(|o| matches!(o, Output::ReadFailed { id: 1 })));
+        assert_eq!(leader.pending_confirm_rounds(), 0);
+    }
+
+    #[test]
+    fn follower_read_forwards_and_serves_after_grant() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_read_path(ReadPath::ReadIndex);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Bytes(Arc::new(vec![1])));
+        c.heartbeat(0); // followers learn the commit index
+        let commit = c.nodes[0].commit_index();
+        // client read at follower 3: forward → probe quorum → grant → serve
+        let outs = c.nodes[3].step(Input::Read { id: 42 });
+        c.pump(3, outs);
+        assert_eq!(c.reads, vec![(3, 42, commit, false)]);
+    }
+
+    #[test]
+    fn lease_read_skips_confirmation_and_expired_lease_falls_back() {
+        let n = 5;
+        let mut leader = solo_leader(n, Mode::cabinet(n, 1));
+        leader.set_read_path(ReadPath::Lease);
+        leader.set_lease_duration_ms(100.0);
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        // heartbeat cadence issues a lease-renewal probe round
+        let outs = leader.step(Input::HeartbeatTimeout);
+        let seq = outs
+            .iter()
+            .find_map(|o| match o {
+                Output::Send(_, Message::ReadIndex { seq, .. }) => Some(*seq),
+                _ => None,
+            })
+            .expect("lease mode must probe at heartbeat cadence");
+        assert!(!leader.lease_valid());
+        let _ = leader.step(Input::Receive(1, Message::ReadIndexResp { term: 1, from: 1, seq }));
+        let _ = leader.step(Input::Receive(2, Message::ReadIndexResp { term: 1, from: 2, seq }));
+        assert!(leader.lease_valid(), "weighted probe quorum must grant the lease");
+        // inside the lease: reads serve instantly, no probe round opened
+        leader.observe_time(50.0);
+        let outs = leader.step(Input::Read { id: 1 });
+        assert!(outs
+            .iter()
+            .any(|o| matches!(o, Output::ReadReady { id: 1, lease: true, .. })));
+        assert!(!outs.iter().any(|o| matches!(o, Output::Send(_, Message::ReadIndex { .. }))));
+        assert_eq!(leader.lease_reads(), 1);
+        // past the lease (an isolated leader stops getting fresh acks):
+        // reads must fall back to ReadIndex, never serve on the dead lease
+        leader.observe_time(250.0);
+        assert!(!leader.lease_valid());
+        let outs = leader.step(Input::Read { id: 2 });
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::ReadReady { .. })),
+            "an expired lease must never serve"
+        );
+        let seq2 = outs
+            .iter()
+            .find_map(|o| match o {
+                Output::Send(_, Message::ReadIndex { seq, .. }) => Some(*seq),
+                _ => None,
+            })
+            .expect("expired lease must fall back to a probe round");
+        assert!(seq2 > seq);
+        // a fresh quorum confirms: the read serves and the lease renews
+        // (with t = 1 the leader + the rank-1 follower already clear CT, so
+        // the ReadReady may fire on the first resp)
+        let o1 =
+            leader.step(Input::Receive(1, Message::ReadIndexResp { term: 1, from: 1, seq: seq2 }));
+        let o2 =
+            leader.step(Input::Receive(2, Message::ReadIndexResp { term: 1, from: 2, seq: seq2 }));
+        assert!(o1
+            .iter()
+            .chain(o2.iter())
+            .any(|o| matches!(o, Output::ReadReady { id: 2, lease: false, .. })));
+        assert!(leader.lease_valid(), "confirmation renews the lease from its send time");
+    }
+
+    #[test]
+    fn lease_mode_vote_stickiness_follows_leader_contact() {
+        let mut c = TestCluster::cabinet(5, 1);
+        for node in &mut c.nodes {
+            node.set_read_path(ReadPath::Lease);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        let granted = |outs: &[Output]| {
+            outs.iter()
+                .find_map(|o| match o {
+                    Output::Send(_, Message::RequestVoteReply { granted, .. }) => Some(*granted),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        // node 2 heard from the leader: even an up-to-date candidate is
+        // denied — a vote inside a lease window could elect a disruptor
+        // whose writes a lease read would then miss
+        let (li, lt) = (c.nodes[2].log().last_index(), c.nodes[2].log().last_term());
+        let outs = c.nodes[2].step(Input::Receive(
+            1,
+            Message::RequestVote { term: 5, candidate: 1, last_log_index: li, last_log_term: lt },
+        ));
+        assert!(!granted(&outs), "lease stickiness must deny votes after leader contact");
+        // after node 2's own election timeout the stickiness clears
+        let _ = c.nodes[2].step(Input::ElectionTimeout);
+        let outs = c.nodes[2].step(Input::Receive(
+            1,
+            Message::RequestVote { term: 9, candidate: 1, last_log_index: li, last_log_term: lt },
+        ));
+        assert!(granted(&outs), "stickiness clears once the node itself times out");
+    }
+
+    #[test]
+    fn stepping_down_fails_pending_reads() {
+        let mut leader = solo_leader(5, Mode::cabinet(5, 1));
+        leader.set_read_path(ReadPath::ReadIndex);
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        let _ = leader.step(Input::Read { id: 11 });
+        assert_eq!(leader.pending_confirm_rounds(), 1);
+        let outs = leader.step(Input::Receive(
+            1,
+            Message::RequestVote { term: 99, candidate: 1, last_log_index: 50, last_log_term: 98 },
+        ));
+        assert_eq!(leader.role(), Role::Follower);
+        assert_eq!(leader.pending_confirm_rounds(), 0);
+        assert!(
+            outs.iter().any(|o| matches!(o, Output::ReadFailed { id: 11 })),
+            "a local read pending confirmation must fail loudly on step-down"
         );
     }
 

@@ -20,7 +20,7 @@ use cabinet::consensus::weights::{ratio_bounds, WeightScheme};
 use cabinet::consensus::{Mode, Payload};
 use cabinet::live::{ApplyService, Backend, LiveCluster, LiveTimers};
 use cabinet::runtime::{artifacts_available, default_artifact_dir, Engine};
-use cabinet::sim::{run, DigestMode, Protocol, SimConfig};
+use cabinet::sim::{run, DigestMode, Protocol, ReadPath, SimConfig};
 use cabinet::workload::{Workload, YcsbGen};
 
 fn main() {
@@ -55,6 +55,7 @@ USAGE:
   cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
               [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
               [--seed S] [--pipeline D] [--snapshot-every E] [--pre-vote]
+              [--read-path log|readindex|lease] [--lease-drift-ms M]
               [--nemesis \"2000..6000=leader;8000..20000=followers:2\"]
               [--nemesis-drop P] [--nemesis-dup P] [--nemesis-reorder P]
               [--nemesis-reorder-ms M]
@@ -102,6 +103,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig20" => vec![figures::fig20_pipeline_depth(scale)],
         "fig21" => vec![figures::fig21_compaction(scale)],
         "fig22" => vec![figures::fig22_partitions(scale)],
+        "fig23" => vec![figures::fig23_read_paths(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -147,6 +149,19 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         }
         if has_flag(&mut args, "--pre-vote") {
             c.pre_vote = true;
+        }
+        if let Some(rp) = flag(&mut args, "--read-path") {
+            c.read_path = ReadPath::from_name(&rp)
+                .with_context(|| format!("unknown --read-path {rp} (log|readindex|lease)"))?;
+        }
+        if let Some(ms) = flag(&mut args, "--lease-drift-ms") {
+            c.lease_drift_ms = ms.parse()?;
+            if c.lease_drift_ms < 0.0 || c.lease_drift_ms >= c.election_timeout_ms.0 {
+                bail!(
+                    "--lease-drift-ms must be in [0, {}) (minimum election timeout)",
+                    c.election_timeout_ms.0
+                );
+            }
         }
         {
             use cabinet::net::nemesis::{NemesisSpec, PartitionSpec};
@@ -198,8 +213,9 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         c.digest_mode = DigestMode::Sample;
         c
     };
-    // every nemesis run self-checks safety — TOML-configured ones included
-    if config.nemesis.is_some() {
+    // every nemesis run self-checks safety — TOML-configured ones included —
+    // and every fast-read-path run self-checks read linearizability
+    if config.nemesis.is_some() || !matches!(config.read_path, ReadPath::Log) {
         config.track_safety = true;
     }
     let pipeline = config.pipeline;
@@ -216,6 +232,19 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms
     );
     println!("elections:  {} ({} candidacies, max term {})", r.elections, r.elections_started, r.terms_advanced);
+    if r.reads_served > 0 {
+        println!(
+            "reads:      {} served ({} ops; {} via lease, {} readindex rounds, {} retried)",
+            r.reads_served, r.read_ops_served, r.lease_reads, r.readindex_rounds, r.read_failures
+        );
+        println!(
+            "read lat:   mean {:.1} ms   p50 {:.1} ms   p99 {:.1} ms   combined tput {} ops/s",
+            r.read_mean_ms,
+            r.read_p50_ms,
+            r.read_p99_ms,
+            cabinet::bench::fmt_tps(r.combined_wall_tput_ops_s())
+        );
+    }
     if let Some(stats) = &r.nemesis_stats {
         println!(
             "nemesis:    cut {}  lost {}  duplicated {}  reordered {}",
@@ -226,8 +255,11 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         let report = cabinet::bench::safety_check(log);
         if report.is_clean() {
             println!(
-                "safety:     OK ({} commits, {} decisions, {} leader terms)",
-                report.commits_checked, report.decisions, report.leaders_checked
+                "safety:     OK ({} commits, {} decisions, {} leader terms, {} reads)",
+                report.commits_checked,
+                report.decisions,
+                report.leaders_checked,
+                report.reads_checked
             );
         } else {
             for v in &report.violations {

@@ -12,9 +12,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::bench::metrics::percentile_sorted;
 use crate::consensus::hqc::{HqcMsg, HqcNode, HqcOutput, HqcTopology};
 use crate::consensus::message::{Message, NodeId, Payload};
 use crate::consensus::node::{Input, Mode, Node, Output, Role};
+pub use crate::consensus::node::ReadPath;
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec};
 use crate::net::nemesis::{Fate, Nemesis, NemesisSpec, NemesisStats};
@@ -23,7 +25,8 @@ use crate::net::topology::ZoneAlloc;
 use crate::sim::event::EventQueue;
 use crate::storage::{DocStore, RelStore};
 use crate::util::Fnv64;
-use crate::workload::{TpccGen, Workload, YcsbGen};
+use crate::workload::ycsb::{OP_READ, OP_SCAN};
+use crate::workload::{TpccGen, Workload, YcsbBatch, YcsbGen};
 
 /// Which consensus protocol the cluster runs.
 #[derive(Clone, Debug)]
@@ -141,22 +144,59 @@ pub struct SimConfig {
     /// Record per-node commit sequences and per-term leaders for the
     /// `bench::safety` checker (off by default: O(commits × n) memory).
     pub track_safety: bool,
+    /// Which path serves linearizable reads. `Log` (the default) replicates
+    /// every read through the log — bit-for-bit the historical behavior;
+    /// `ReadIndex`/`Lease` split each YCSB batch into its mutating part
+    /// (replicated) and its read-only part (served through the fast path).
+    pub read_path: ReadPath,
+    /// Clock-drift margin subtracted from the minimum election timeout to
+    /// bound the leader lease (`lease` read path only).
+    pub lease_drift_ms: f64,
+}
+
+/// One linearizable read served through a non-log read path — the evidence
+/// the read-linearizability checker (`bench::safety::check`) validates
+/// against the commit timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadRecord {
+    /// Node that served the read locally.
+    pub node: NodeId,
+    pub id: u64,
+    /// Virtual time the client invoked the read.
+    pub invoked_ms: f64,
+    /// Virtual time the read became servable (`Output::ReadReady`).
+    pub served_ms: f64,
+    /// Log index whose applied state the read observed.
+    pub read_index: u64,
+    /// Served via the lease fast path (no confirmation round).
+    pub lease: bool,
 }
 
 /// Evidence collected for the deterministic safety checker
 /// (`bench::safety::check`): every `Output::Commit` each node emitted, in
-/// emission order, and every `Output::BecameLeader` observation.
+/// emission order, every `Output::BecameLeader` observation, the
+/// write-completion timeline, and every served linearizable read.
 #[derive(Clone, Debug)]
 pub struct SafetyLog {
     /// Per node: (log index, term) of every committed entry, in commit order.
     pub commits: Vec<Vec<(u64, u64)>>,
     /// Every leadership establishment: (term, node).
     pub leaders: Vec<(u64, NodeId)>,
+    /// (virtual time, log index) of every leader-observed round commit —
+    /// the write-completion timeline reads are checked against.
+    pub commit_times: Vec<(f64, u64)>,
+    /// Every read served through a non-log read path.
+    pub reads: Vec<ReadRecord>,
 }
 
 impl SafetyLog {
     pub fn new(n: usize) -> Self {
-        SafetyLog { commits: vec![Vec::new(); n], leaders: Vec::new() }
+        SafetyLog {
+            commits: vec![Vec::new(); n],
+            leaders: Vec::new(),
+            commit_times: Vec::new(),
+            reads: Vec::new(),
+        }
     }
 }
 
@@ -189,11 +229,20 @@ impl SimConfig {
             nemesis: None,
             pre_vote: false,
             track_safety: false,
+            read_path: ReadPath::Log,
+            lease_drift_ms: 50.0,
         }
     }
 
     pub fn n(&self) -> usize {
         self.zones.n()
+    }
+
+    /// The leader-lease bound this config grants: the minimum election
+    /// timeout minus the clock-drift margin (§6.4.1). One definition for
+    /// every node-construction site — fresh starts and restarts must agree.
+    pub fn lease_duration_ms(&self) -> f64 {
+        (self.election_timeout_ms.0 - self.lease_drift_ms).max(0.0)
     }
 }
 
@@ -250,6 +299,23 @@ pub struct SimResult {
     /// Safety evidence for `bench::safety::check` (None unless
     /// `track_safety` was set).
     pub safety: Option<SafetyLog>,
+    /// Read requests served through a non-log read path (0 on `log` runs:
+    /// reads then ride the replicated batches).
+    pub reads_served: u64,
+    /// Individual read ops those requests carried.
+    pub read_ops_served: u64,
+    /// Requests served via the lease fast path (no confirmation round).
+    pub lease_reads: u64,
+    /// ReadIndex confirmation rounds leaders ran (renewals included).
+    pub readindex_rounds: u64,
+    /// Read attempts that failed and were retried (leadership churn).
+    pub read_failures: u64,
+    /// Read-request latency stats (ms) — 0 when no reads were served.
+    pub read_mean_ms: f64,
+    pub read_p50_ms: f64,
+    pub read_p99_ms: f64,
+    /// Virtual time the last read finished (extends the combined span).
+    pub read_done_ms: f64,
 }
 
 impl SimResult {
@@ -257,14 +323,12 @@ impl SimResult {
         let total_ops: usize = rounds.iter().map(|r| r.ops).sum();
         let total_ms: f64 = rounds.iter().map(|r| r.latency_ms).sum();
         let mut lats: Vec<f64> = rounds.iter().map(|r| r.latency_ms).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lats.is_empty() {
-                return 0.0;
-            }
-            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
-            lats[idx]
-        };
+        // total_cmp, not partial_cmp: a NaN latency must never panic the
+        // aggregation (it sorts to the end and shows up in max/p99 instead)
+        lats.sort_by(|a, b| a.total_cmp(b));
+        // nearest-rank percentiles come from the one shared implementation —
+        // a private reimplementation here silently diverged once already
+        let pct = |p: f64| percentile_sorted(&lats, p);
         SimResult {
             label,
             tput_ops_s: if total_ms > 0.0 { total_ops as f64 / (total_ms / 1000.0) } else { 0.0 },
@@ -281,6 +345,15 @@ impl SimResult {
             terms_advanced: 0,
             nemesis_stats: None,
             safety: None,
+            reads_served: 0,
+            read_ops_served: 0,
+            lease_reads: 0,
+            readindex_rounds: 0,
+            read_failures: 0,
+            read_mean_ms: 0.0,
+            read_p50_ms: 0.0,
+            read_p99_ms: 0.0,
+            read_done_ms: 0.0,
         }
     }
 
@@ -304,6 +377,30 @@ impl SimResult {
         }
         let ops: usize = self.rounds.iter().map(|r| r.ops).sum();
         ops as f64 / (span_ms / 1000.0)
+    }
+
+    /// Committed + read throughput over the union span (ops/s): replicated
+    /// live ops plus read ops served through a fast path, divided by the
+    /// span from the first propose to the last commit *or* read completion.
+    /// On `log` runs reads ride the batches, so this equals
+    /// [`SimResult::wall_tput_ops_s`] — making it the one comparable metric
+    /// across read paths (the Fig. 23 column).
+    pub fn combined_wall_tput_ops_s(&self) -> f64 {
+        let Some(first) = self.rounds.iter().map(|r| r.start_ms).reduce(f64::min) else {
+            return 0.0;
+        };
+        let end = self
+            .rounds
+            .iter()
+            .map(|r| r.start_ms + r.latency_ms)
+            .fold(first, f64::max)
+            .max(self.read_done_ms);
+        let span_ms = end - first;
+        if span_ms <= 0.0 {
+            return 0.0;
+        }
+        let ops: usize = self.rounds.iter().map(|r| r.ops).sum();
+        (ops as u64 + self.read_ops_served) as f64 / (span_ms / 1000.0)
     }
 
     /// Bit-exact digest of the commit sequence (round numbers and the log
@@ -339,6 +436,19 @@ impl SimResult {
         h.write_u64(self.elections);
         h.write_u64(self.elections_started);
         h.write_u64(self.terms_advanced);
+        // Read-path metrics fold in only when reads were actually served, so
+        // `read_path = "log"` digests stay bit-identical to pre-read-path
+        // builds (the replay-determinism acceptance criterion).
+        if self.reads_served > 0 {
+            h.write_u64(self.reads_served);
+            h.write_u64(self.read_ops_served);
+            h.write_u64(self.lease_reads);
+            h.write_u64(self.readindex_rounds);
+            h.write_u64(self.read_failures);
+            h.write_u64(self.read_mean_ms.to_bits());
+            h.write_u64(self.read_p99_ms.to_bits());
+            h.write_u64(self.read_done_ms.to_bits());
+        }
         h.finish()
     }
 }
@@ -353,6 +463,126 @@ enum Ev {
     HeartbeatTimer { node: NodeId, generation: u64 },
     /// Harness: try to propose the next round at the current leader.
     ProposeNext,
+    /// Harness: a client read request arrives at `node` (non-log paths).
+    ReadAt { id: u64, node: NodeId },
+    /// Harness: re-drive a read that has not been served yet (a forward or
+    /// grant was lost, or leadership moved mid-confirmation).
+    ReadRetry { id: u64 },
+}
+
+/// Client-side retry cadence for unserved reads (virtual ms).
+const READ_RETRY_MS: f64 = 400.0;
+/// Concurrent read requests per round on a non-log read path — an open-loop
+/// fan-out client: each round's read-only ops are split across this many
+/// parallel requests at rotated nodes (followers included), so read work is
+/// spread across the cluster instead of riding every replication round.
+const READ_FAN: u64 = 4;
+
+/// One in-flight client read request.
+struct ReadReq {
+    invoked_ms: f64,
+    /// Read ops this request carries (for throughput accounting).
+    ops: usize,
+    /// Apply cost of those ops at unit speed (charged at the serving node).
+    cost_ms: f64,
+    /// Round the request belongs to (target rotation slot).
+    round: u64,
+    /// Position in the fan (rotates the serving node).
+    k: u64,
+}
+
+/// Client-side read bookkeeping shared by both round drivers.
+#[derive(Default)]
+struct ReadCtl {
+    next_id: u64,
+    outstanding: HashMap<u64, ReadReq>,
+    latencies: Vec<f64>,
+    reads_served: u64,
+    read_ops_served: u64,
+    lease_reads: u64,
+    failures: u64,
+    /// Virtual time the last read finished (combined-throughput span end).
+    done_ms: f64,
+}
+
+impl ReadCtl {
+    /// Fan a round's read-only sub-batch out as [`READ_FAN`] concurrent
+    /// requests at rotated alive targets (followers serve local reads too),
+    /// each with a standing retry timer. The first request absorbs the
+    /// division remainder so op totals stay exact.
+    fn issue_fan(
+        &mut self,
+        q: &mut EventQueue<Ev>,
+        alive: &[bool],
+        invoked_ms: f64,
+        round: u64,
+        reads: &YcsbBatch,
+    ) {
+        let live = reads.live_ops();
+        let fan = READ_FAN.min(live.max(1) as u64);
+        let ops_per = live / fan as usize;
+        let cost_per = DocStore::estimate_cost_ms(reads) / fan as f64;
+        for k in 0..fan {
+            let ops = if k == 0 { live - ops_per * (fan as usize - 1) } else { ops_per };
+            let Some(target) = pick_read_target(round + k, alive) else { continue };
+            let id = self.next_id;
+            self.next_id += 1;
+            self.outstanding
+                .insert(id, ReadReq { invoked_ms, ops, cost_ms: cost_per, round, k });
+            q.push_after(0.0, Ev::ReadAt { id, node: target });
+            q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
+        }
+    }
+}
+
+/// Deterministic read-target rotation over the alive nodes.
+fn pick_read_target(slot: u64, alive: &[bool]) -> Option<NodeId> {
+    let n = alive.len();
+    (0..n).map(|d| (slot as usize + d) % n).find(|&i| alive[i])
+}
+
+/// Split a YCSB batch into its mutating part (replicated through the log)
+/// and its read-only part (READ + SCAN, served through the read path).
+fn split_ycsb(b: &YcsbBatch) -> (YcsbBatch, YcsbBatch) {
+    let empty = YcsbBatch {
+        workload: b.workload,
+        ops: Vec::new(),
+        keys: Vec::new(),
+        vals: Vec::new(),
+    };
+    let (mut writes, mut reads) = (empty.clone(), empty);
+    for i in 0..b.ops.len() {
+        let dst = if b.ops[i] == OP_READ || b.ops[i] == OP_SCAN { &mut reads } else { &mut writes };
+        dst.ops.push(b.ops[i]);
+        dst.keys.push(b.keys[i]);
+        dst.vals.push(b.vals[i]);
+    }
+    (writes, reads)
+}
+
+/// Generate the next round's batch; on a non-log read path, split out the
+/// read-only ops. Returns (payload, tracked batch, apply cost of the
+/// replicated part, replicated live ops, read-only sub-batch). TPC-C rounds
+/// stay fully log-replicated (transactions are read-write).
+fn next_round_batch(
+    driver: &mut WorkloadDriver,
+    read_path: ReadPath,
+) -> (Payload, Batch, f64, usize, Option<YcsbBatch>) {
+    let (payload, batch, cost, ops) = driver.next_batch();
+    if matches!(read_path, ReadPath::Log) {
+        return (payload, batch, cost, ops, None);
+    }
+    match payload {
+        Payload::Ycsb(full) => {
+            let (writes, reads) = split_ycsb(&full);
+            let writes = Arc::new(writes);
+            let cost = DocStore::estimate_cost_ms(&writes);
+            let ops = writes.live_ops();
+            let reads = (!reads.is_empty()).then_some(reads);
+            (Payload::Ycsb(writes.clone()), Batch::Ycsb(writes), cost, ops, reads)
+        }
+        other => (other, batch, cost, ops, None),
+    }
 }
 
 enum Batch {
@@ -376,12 +606,15 @@ impl WorkloadDriver {
                 batch_size: *batch,
                 warehouses: 0,
             },
-            WorkloadSpec::Tpcc { batch, warehouses } => WorkloadDriver {
-                ycsb: None,
-                tpcc: Some(TpccGen::new(*warehouses, seed)),
-                batch_size: *batch,
-                warehouses: *warehouses,
-            },
+            WorkloadSpec::Tpcc { batch, warehouses } => {
+                debug_assert!(*warehouses >= 1, "warehouses is validated at config parse");
+                WorkloadDriver {
+                    ycsb: None,
+                    tpcc: Some(TpccGen::new(*warehouses, seed)),
+                    batch_size: *batch,
+                    warehouses: *warehouses,
+                }
+            }
         }
     }
 
@@ -438,6 +671,13 @@ fn maybe_kill_restart(
             fresh.set_static_weights(config.static_weights);
             fresh.set_snapshot_every(config.snapshot_every);
             fresh.set_pre_vote(config.pre_vote);
+            fresh.set_read_path(config.read_path);
+            fresh.set_lease_duration_ms(config.lease_duration_ms());
+            if matches!(config.read_path, ReadPath::Lease) {
+                // a restarted voter may have acked a probe whose lease is
+                // still live — hold its vote for one full election timeout
+                fresh.hold_votes_until_timeout();
+            }
             nodes[v] = fresh;
             // a fresh node legitimately re-commits from the bottom of the
             // log — restart its safety-evidence stream with it, or the
@@ -459,6 +699,24 @@ fn maybe_kill_restart(
 fn sample_retained(nodes: &[Node], max_retained: &mut u64) {
     for node in nodes {
         *max_retained = (*max_retained).max(node.log().len() as u64);
+    }
+}
+
+/// Fold the read-client bookkeeping and node-side read counters into the
+/// result (no-op on log-path runs: everything stays zero).
+fn finish_reads(result: &mut SimResult, readctl: ReadCtl, nodes: &[Node]) {
+    result.reads_served = readctl.reads_served;
+    result.read_ops_served = readctl.read_ops_served;
+    result.lease_reads = readctl.lease_reads;
+    result.read_failures = readctl.failures;
+    result.readindex_rounds = nodes.iter().map(|nd| nd.readindex_rounds()).sum();
+    result.read_done_ms = readctl.done_ms;
+    let mut lats = readctl.latencies;
+    lats.sort_by(|a, b| a.total_cmp(b));
+    if !lats.is_empty() {
+        result.read_mean_ms = lats.iter().sum::<f64>() / lats.len() as f64;
+        result.read_p50_ms = percentile_sorted(&lats, 0.50);
+        result.read_p99_ms = percentile_sorted(&lats, 0.99);
     }
 }
 
@@ -509,11 +767,14 @@ fn run_quorum(config: &SimConfig) -> SimResult {
             node.set_static_weights(config.static_weights);
             node.set_snapshot_every(config.snapshot_every);
             node.set_pre_vote(config.pre_vote);
+            node.set_read_path(config.read_path);
+            node.set_lease_duration_ms(config.lease_duration_ms());
             node
         })
         .collect();
     let mut alive = vec![true; n];
     let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut readctl = ReadCtl::default();
 
     // timer generations (stale-timer cancellation)
     let mut el_gen = vec![0u64; n];
@@ -530,10 +791,15 @@ fn run_quorum(config: &SimConfig) -> SimResult {
         DigestMode::Sample => vec![0, n - 1],
         DigestMode::All => (0..n).collect(),
     };
-    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
-    let mut rel_stores: Vec<RelStore> =
-        tracked.iter().map(|_| RelStore::new(driver.warehouses.max(1) as usize)).collect();
     let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
+    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
+    // relational stores exist only for TPC-C runs — `warehouses >= 1` is a
+    // config-parse invariant now, not a construction-site patch-up
+    let mut rel_stores: Vec<RelStore> = if is_tpcc {
+        tracked.iter().map(|_| RelStore::new(driver.warehouses as usize)).collect()
+    } else {
+        Vec::new()
+    };
 
     // round bookkeeping
     let mut round: u64 = 0; // completed rounds
@@ -567,7 +833,8 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     // hard stop: virtual-time budget per run keeps pathological configs finite
     let max_virtual_ms = 1e9;
 
-    while round < config.rounds {
+    // reads may still be draining after the last round commits
+    while round < config.rounds || !readctl.outstanding.is_empty() {
         let Some((now, ev)) = q.pop() else { break };
         if now > max_virtual_ms {
             break;
@@ -577,26 +844,28 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                 if !alive[node] || generation != el_gen[node] {
                     continue;
                 }
+                nodes[node].observe_time(now);
                 let outs = nodes[node].step(Input::ElectionTimeout);
                 handle_outputs(
                     node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety,
+                    &mut nemesis, &mut safety, &mut readctl,
                 );
             }
             Ev::HeartbeatTimer { node, generation } => {
                 if !alive[node] || generation != hb_gen[node] {
                     continue;
                 }
+                nodes[node].observe_time(now);
                 let outs = nodes[node].step(Input::HeartbeatTimeout);
                 handle_outputs(
                     node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety,
+                    &mut nemesis, &mut safety, &mut readctl,
                 );
             }
             Ev::Deliver { to, from, msg } => {
@@ -611,6 +880,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     // reflects the node's processing speed
                     // (modeled by delaying the node's outputs)
                 }
+                nodes[to].observe_time(now);
                 let outs = nodes[to].step(Input::Receive(from, msg));
                 // outputs (replies) leave after the service time
                 handle_outputs_delayed(
@@ -618,11 +888,43 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety,
+                    &mut nemesis, &mut safety, &mut readctl,
                 );
+            }
+            Ev::ReadAt { id, node } => {
+                if !readctl.outstanding.contains_key(&id) {
+                    continue; // already served
+                }
+                if !alive[node] {
+                    continue; // the standing retry timer re-targets it
+                }
+                nodes[node].observe_time(now);
+                let service = config.rpc_proc_ms / effective_speed(config, node, round);
+                let outs = nodes[node].step(Input::Read { id });
+                handle_outputs_delayed(
+                    node, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, pending_entry_index, &mut stats, &mut round,
+                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
+                    &mut nemesis, &mut safety, &mut readctl,
+                );
+            }
+            Ev::ReadRetry { id } => {
+                if let Some(req) = readctl.outstanding.get(&id) {
+                    let target = current_leader
+                        .filter(|&l| alive[l])
+                        .or_else(|| pick_read_target(req.round + req.k, &alive));
+                    if let Some(target) = target {
+                        q.push_after(0.0, Ev::ReadAt { id, node: target });
+                    }
+                    q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
+                }
             }
             Ev::ProposeNext => {
                 sample_retained(&nodes, &mut max_retained);
+                if round >= config.rounds {
+                    continue; // only reads are draining now
+                }
                 if pending.is_some() {
                     continue; // a round is already in flight
                 }
@@ -672,19 +974,22 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                             &mut elections, &mut pending, pending_entry_index, &mut stats,
                             &mut round, inflight_cost_ms, &tracked, &mut doc_stores,
                             &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                            &mut readctl,
                         );
                         q.push_after(1.0, Ev::ProposeNext);
                         continue;
                     }
                 }
 
-                let (payload, batch, cost_ms, ops) = driver.next_batch();
+                let (payload, batch, cost_ms, ops, read_batch) =
+                    next_round_batch(&mut driver, config.read_path);
                 inflight_cost_ms = cost_ms;
                 // Fig. 7: the leader batches + coordinates; *followers*
                 // execute the workload. Leader-side work is the batching /
                 // RPC-issue overhead only.
                 let leader_speed = effective_speed(config, leader, next_round);
                 let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
+                nodes[leader].observe_time(now);
                 let outs = nodes[leader].step(Input::Propose(payload));
                 pending = Some((next_round, now, ops, leader_apply_done, batch));
                 pending_entry_index = nodes[leader].log().last_index();
@@ -693,8 +998,14 @@ fn run_quorum(config: &SimConfig) -> SimResult {
                     &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, pending_entry_index, &mut stats, &mut round,
                     inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety,
+                    &mut nemesis, &mut safety, &mut readctl,
                 );
+                // the round's read-only ops go through the selected fast
+                // path: a fan of concurrent read requests across the
+                // cluster (followers serve local reads too)
+                if let Some(rb) = read_batch {
+                    readctl.issue_fan(&mut q, &alive, now, next_round, &rb);
+                }
             }
         }
     }
@@ -719,6 +1030,7 @@ fn run_quorum(config: &SimConfig) -> SimResult {
     result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
     result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
     result.safety = safety;
+    finish_reads(&mut result, readctl, &nodes);
     result
 }
 
@@ -776,11 +1088,14 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
             node.set_static_weights(config.static_weights);
             node.set_snapshot_every(config.snapshot_every);
             node.set_pre_vote(config.pre_vote);
+            node.set_read_path(config.read_path);
+            node.set_lease_duration_ms(config.lease_duration_ms());
             node
         })
         .collect();
     let mut alive = vec![true; n];
     let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut readctl = ReadCtl::default();
     let mut el_gen = vec![0u64; n];
     let mut hb_gen = vec![0u64; n];
 
@@ -794,10 +1109,15 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
         DigestMode::Sample => vec![0, n - 1],
         DigestMode::All => (0..n).collect(),
     };
-    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
-    let mut rel_stores: Vec<RelStore> =
-        tracked.iter().map(|_| RelStore::new(driver.warehouses.max(1) as usize)).collect();
     let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
+    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
+    // relational stores exist only for TPC-C runs — `warehouses >= 1` is a
+    // config-parse invariant now, not a construction-site patch-up
+    let mut rel_stores: Vec<RelStore> = if is_tpcc {
+        tracked.iter().map(|_| RelStore::new(driver.warehouses as usize)).collect()
+    } else {
+        Vec::new()
+    };
 
     let mut round: u64 = 0; // completed rounds
     let mut proposed: u64 = 0; // rounds handed to the leader
@@ -830,7 +1150,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
     // rounds whose entries did not survive into its log are void
     let mut known_leader: Option<NodeId> = None;
 
-    while round < config.rounds {
+    while round < config.rounds || !readctl.outstanding.is_empty() {
         match q.next_time() {
             Some(t) if t <= max_virtual_ms => {}
             _ => break, // queue drained or virtual-time budget exhausted
@@ -841,24 +1161,26 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                 if !alive[node] || generation != el_gen[node] {
                     continue;
                 }
+                nodes[node].observe_time(now);
                 let outs = nodes[node].step(Input::ElectionTimeout);
                 handle_outputs_pipelined(
                     node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
                 );
             }
             Ev::HeartbeatTimer { node, generation } => {
                 if !alive[node] || generation != hb_gen[node] {
                     continue;
                 }
+                nodes[node].observe_time(now);
                 let outs = nodes[node].step(Input::HeartbeatTimeout);
                 handle_outputs_pipelined(
                     node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
                 );
             }
             Ev::Deliver { to, from, msg } => {
@@ -867,13 +1189,42 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                 }
                 let service =
                     service_ms_pipelined(config, &nodes[to], to, &msg, round, &batch_costs);
+                nodes[to].observe_time(now);
                 let outs = nodes[to].step(Input::Receive(from, msg));
                 handle_outputs_pipelined(
                     to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
                 );
+            }
+            Ev::ReadAt { id, node } => {
+                if !readctl.outstanding.contains_key(&id) {
+                    continue;
+                }
+                if !alive[node] {
+                    continue; // the standing retry timer re-targets it
+                }
+                nodes[node].observe_time(now);
+                let service = config.rpc_proc_ms / effective_speed(config, node, round);
+                let outs = nodes[node].step(Input::Read { id });
+                handle_outputs_pipelined(
+                    node, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
+                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
+                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
+                );
+            }
+            Ev::ReadRetry { id } => {
+                if let Some(req) = readctl.outstanding.get(&id) {
+                    let target = current_leader
+                        .filter(|&l| alive[l])
+                        .or_else(|| pick_read_target(req.round + req.k, &alive));
+                    if let Some(target) = target {
+                        q.push_after(0.0, Ev::ReadAt { id, node: target });
+                    }
+                    q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
+                }
             }
             Ev::ProposeNext => {
                 sample_retained(&nodes, &mut max_retained);
@@ -917,8 +1268,16 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     alive[leader] = false;
                     current_leader = None;
                     // rounds that died in the old leader's window get
-                    // regenerated (fresh batches) under the next leader
-                    proposed = proposed.saturating_sub(pending.len() as u64);
+                    // regenerated (fresh batches) under the next leader.
+                    // Every pending round incremented `proposed` when it was
+                    // pushed, so the subtraction is exact — a saturating_sub
+                    // here would only mask a broken window invariant.
+                    debug_assert!(
+                        proposed >= pending.len() as u64,
+                        "window accounting underflow: proposed {proposed} < pending {}",
+                        pending.len()
+                    );
+                    proposed -= pending.len() as u64;
                     pending.clear();
                     q.push_after(50.0, Ev::ProposeNext);
                     continue;
@@ -937,15 +1296,18 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                             &mut current_leader, &mut elections, &mut pending,
                             &mut stats, &mut round, &tracked, &mut doc_stores,
                             &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                            &mut readctl,
                         );
                         q.push_after(1.0, Ev::ProposeNext);
                         continue;
                     }
                 }
 
-                let (payload, batch, cost_ms, ops) = driver.next_batch();
+                let (payload, batch, cost_ms, ops, read_batch) =
+                    next_round_batch(&mut driver, config.read_path);
                 let leader_speed = effective_speed(config, leader, next_round);
                 let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
+                nodes[leader].observe_time(now);
                 let outs = nodes[leader].step(Input::Propose(payload));
                 let entry_index = nodes[leader].log().last_index();
                 batch_costs.insert(entry_index, cost_ms);
@@ -963,8 +1325,12 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
                     leader, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
                     &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
                     &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
+                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
                 );
+                // this round's read-only ops go through the selected fast path
+                if let Some(rb) = read_batch {
+                    readctl.issue_fan(&mut q, &alive, now, next_round, &rb);
+                }
                 if pending.len() < depth && proposed < config.rounds {
                     // back-to-back proposal to fill the window
                     q.push_after(0.2, Ev::ProposeNext);
@@ -1012,6 +1378,7 @@ fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
     result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
     result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
     result.safety = safety;
+    finish_reads(&mut result, readctl, &nodes);
     result
 }
 
@@ -1086,6 +1453,7 @@ fn handle_outputs_pipelined(
     is_tpcc: bool,
     nemesis: &mut Option<Nemesis>,
     safety: &mut Option<SafetyLog>,
+    readctl: &mut ReadCtl,
 ) {
     let n = config.n();
     let now = q.now();
@@ -1155,6 +1523,11 @@ fn handle_outputs_pipelined(
                 if Some(node) != *current_leader {
                     continue;
                 }
+                // write-completion timeline for the read checker (barrier
+                // no-ops included — read indices can point at them)
+                if let Some(sl) = safety.as_mut() {
+                    sl.commit_times.push((now, index));
+                }
                 // retire the committed prefix of the window, in order
                 while pending.first().map_or(false, |p| p.entry_index <= index) {
                     let p = pending.remove(0);
@@ -1186,7 +1559,53 @@ fn handle_outputs_pipelined(
             // nodes snapshot inline (SnapshotCapture::Inline) — these are
             // informational; installs are counted via node counters
             Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
+            Output::ReadReady { id, index, lease } => {
+                serve_read(readctl, safety, config, node, id, index, lease, now, *round);
+            }
+            Output::ReadFailed { id } => {
+                if readctl.outstanding.contains_key(&id) {
+                    readctl.failures += 1; // the standing retry re-drives it
+                }
+            }
         }
+    }
+}
+
+/// Retire one served read: record its latency and checker evidence.
+#[allow(clippy::too_many_arguments)]
+fn serve_read(
+    readctl: &mut ReadCtl,
+    safety: &mut Option<SafetyLog>,
+    config: &SimConfig,
+    node: NodeId,
+    id: u64,
+    index: u64,
+    lease: bool,
+    now: f64,
+    round: u64,
+) {
+    let Some(req) = readctl.outstanding.remove(&id) else {
+        return; // a duplicate grant after a retry already served it
+    };
+    let done = now + req.cost_ms / effective_speed(config, node, round);
+    readctl.latencies.push(done - req.invoked_ms);
+    readctl.reads_served += 1;
+    readctl.read_ops_served += req.ops as u64;
+    if lease {
+        readctl.lease_reads += 1;
+    }
+    if done > readctl.done_ms {
+        readctl.done_ms = done;
+    }
+    if let Some(sl) = safety.as_mut() {
+        sl.reads.push(ReadRecord {
+            node,
+            id,
+            invoked_ms: req.invoked_ms,
+            served_ms: now,
+            read_index: index,
+            lease,
+        });
     }
 }
 
@@ -1239,11 +1658,13 @@ fn handle_outputs(
     is_tpcc: bool,
     nemesis: &mut Option<Nemesis>,
     safety: &mut Option<SafetyLog>,
+    readctl: &mut ReadCtl,
 ) {
     handle_outputs_delayed(
         node, outs, 0.0, config, q, net_rng, timer_rng, alive, el_gen, hb_gen,
         current_leader, elections, pending, pending_entry_index, stats, round,
         inflight_cost_ms, tracked, doc_stores, rel_stores, is_tpcc, nemesis, safety,
+        readctl,
     )
 }
 
@@ -1273,6 +1694,7 @@ fn handle_outputs_delayed(
     is_tpcc: bool,
     nemesis: &mut Option<Nemesis>,
     safety: &mut Option<SafetyLog>,
+    readctl: &mut ReadCtl,
 ) {
     let n = config.n();
     let now = q.now();
@@ -1340,6 +1762,13 @@ fn handle_outputs_delayed(
                 }
             }
             Output::RoundCommitted { index, repliers, .. } => {
+                // write-completion timeline for the read checker (recorded
+                // for every leader-observed commit, barrier no-ops included)
+                if Some(node) == *current_leader {
+                    if let Some(sl) = safety.as_mut() {
+                        sl.commit_times.push((now, index));
+                    }
+                }
                 // only the harness round (pending batch) counts
                 if let Some((rnd, start, ops, leader_apply_done, _)) = pending.as_ref() {
                     if index >= pending_entry_index && Some(node) == *current_leader {
@@ -1373,6 +1802,14 @@ fn handle_outputs_delayed(
             // nodes snapshot inline (SnapshotCapture::Inline) — these are
             // informational; installs are counted via node counters
             Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
+            Output::ReadReady { id, index, lease } => {
+                serve_read(readctl, safety, config, node, id, index, lease, now, *round);
+            }
+            Output::ReadFailed { id } => {
+                if readctl.outstanding.contains_key(&id) {
+                    readctl.failures += 1; // the standing retry re-drives it
+                }
+            }
         }
     }
     let _ = inflight_cost_ms;
@@ -1721,6 +2158,96 @@ mod tests {
             r.snapshots_installed >= 1,
             "the restarted follower must catch up via InstallSnapshot"
         );
+    }
+
+    fn read_cfg(path: ReadPath, depth: usize, workload: Workload, seed: u64) -> SimConfig {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+        c.rounds = 10;
+        c.pipeline = depth;
+        c.seed = seed;
+        c.read_path = path;
+        c.track_safety = true;
+        c.workload = WorkloadSpec::Ycsb { workload, batch: 400, records: 10_000 };
+        run(&c)
+    }
+
+    #[test]
+    fn read_paths_complete_and_check_clean() {
+        for depth in [1usize, 4] {
+            for path in [ReadPath::ReadIndex, ReadPath::Lease] {
+                let r = read_cfg(path, depth, Workload::B, 11);
+                assert_eq!(r.rounds.len(), 10, "{path:?} depth {depth}: rounds incomplete");
+                assert!(r.reads_served > 0, "{path:?} depth {depth}: no reads served");
+                assert!(r.read_ops_served > 0);
+                if matches!(path, ReadPath::Lease) {
+                    assert!(r.lease_reads > 0, "depth {depth}: lease fast path unused");
+                } else {
+                    assert_eq!(r.lease_reads, 0);
+                    assert!(r.readindex_rounds > 0);
+                }
+                let report =
+                    crate::bench::safety::check(r.safety.as_ref().expect("tracked"));
+                assert!(report.is_clean(), "{path:?} depth {depth}: {:?}", report.violations);
+                assert!(report.reads_checked as u64 >= r.reads_served);
+            }
+        }
+    }
+
+    #[test]
+    fn read_path_runs_deterministic() {
+        for path in [ReadPath::ReadIndex, ReadPath::Lease] {
+            let a = read_cfg(path, 2, Workload::C, 5);
+            let b = read_cfg(path, 2, Workload::C, 5);
+            assert_eq!(a.metrics_digest(), b.metrics_digest(), "{path:?}");
+            assert_eq!(a.commit_sequence_digest(), b.commit_sequence_digest(), "{path:?}");
+            assert_eq!(a.reads_served, b.reads_served, "{path:?}");
+        }
+    }
+
+    #[test]
+    fn log_path_ignores_read_knobs() {
+        // read_path = "log" must be bit-identical regardless of the lease
+        // knobs: no reads are issued, no read machinery runs
+        let mk = |drift: f64| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+            c.rounds = 8;
+            c.lease_drift_ms = drift;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::B, batch: 300, records: 10_000 };
+            run(&c)
+        };
+        let a = mk(50.0);
+        let b = mk(500.0);
+        assert_eq!(a.metrics_digest(), b.metrics_digest());
+        assert_eq!(a.reads_served, 0);
+        assert_eq!(a.readindex_rounds, 0);
+    }
+
+    #[test]
+    fn ycsb_c_read_paths_beat_log_replication() {
+        // the acceptance shape at sim level: on the LAN baseline (the
+        // paper's testbed) a read-only workload is dominated by the cost of
+        // shipping + applying reads at every follower — which is exactly
+        // what the fast paths skip
+        let mk = |path: ReadPath| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+            c.rounds = 12;
+            c.pipeline = 2;
+            c.read_path = path;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::C, batch: 2000, records: 10_000 };
+            c.track_safety = true;
+            let r = run(&c);
+            assert_eq!(r.rounds.len(), 12, "{path:?}");
+            let report = crate::bench::safety::check(r.safety.as_ref().unwrap());
+            assert!(report.is_clean(), "{path:?}: {:?}", report.violations);
+            r.combined_wall_tput_ops_s()
+        };
+        let log = mk(ReadPath::Log);
+        let ri = mk(ReadPath::ReadIndex);
+        let lease = mk(ReadPath::Lease);
+        assert!(ri > log, "readindex {ri:.0} must beat log {log:.0}");
+        assert!(lease >= 0.95 * ri, "lease {lease:.0} must not trail readindex {ri:.0}");
     }
 
     #[test]

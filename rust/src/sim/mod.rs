@@ -20,7 +20,7 @@ pub mod cluster;
 pub mod event;
 
 pub use cluster::{
-    run, DigestMode, Protocol, ReconfigSpec, RestartSpec, RoundStat, SafetyLog, SimConfig,
-    SimResult, WorkloadSpec,
+    run, DigestMode, Protocol, ReadPath, ReadRecord, ReconfigSpec, RestartSpec, RoundStat,
+    SafetyLog, SimConfig, SimResult, WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

@@ -7,13 +7,15 @@
 //! with explicit seeds, which doubles as a regression corpus: any failing
 //! seed is a one-line reproduction.)
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use cabinet::consensus::message::{Message, NodeId, Payload};
-use cabinet::consensus::node::{Input, Mode, Node, Output, Role};
+use cabinet::consensus::node::{Input, Mode, Node, Output, ReadPath, Role};
 use cabinet::consensus::weights::WeightScheme;
 use cabinet::net::nemesis::Nemesis;
 use cabinet::net::rng::Rng;
+use cabinet::sim::ReadRecord;
 
 /// A chaos network: pending messages get dropped, duplicated, delayed and
 /// reordered under RNG control; nodes can be crash-killed mid-schedule, and
@@ -34,6 +36,19 @@ struct Chaos {
     /// Scheduled adversarial layer; windows run on the step counter.
     nemesis: Option<Nemesis>,
     step_no: u64,
+    // ---- linearizable read evidence (non-log read paths) -----------------
+    /// Outstanding reads: id → invocation step.
+    read_outstanding: HashMap<u64, f64>,
+    next_read_id: u64,
+    /// Served reads + the commit timeline, in checker form.
+    reads: Vec<ReadRecord>,
+    commit_times: Vec<(f64, u64)>,
+    /// Lease timing discipline: minimum steps between a node's last
+    /// election-timer reset and a delivered `ElectionTimeout`. None = fully
+    /// chaotic timers (log/readindex schedules — those paths are safe under
+    /// full asynchrony; leases are not, by design).
+    et_min_steps: Option<u64>,
+    last_reset: Vec<u64>,
 }
 
 impl Chaos {
@@ -50,6 +65,12 @@ impl Chaos {
             dup_p,
             nemesis: None,
             step_no: 0,
+            read_outstanding: HashMap::new(),
+            next_read_id: 0,
+            reads: Vec::new(),
+            commit_times: Vec::new(),
+            et_min_steps: None,
+            last_reset: vec![0; n],
         }
     }
 
@@ -61,15 +82,58 @@ impl Chaos {
                 Output::BecameLeader { term } => self.leaders.push((term, src)),
                 Output::RoundCommitted { wclock, index, quorum_weight, .. } => {
                     self.round_commits.push((src, wclock, index, quorum_weight));
+                    self.commit_times.push((self.step_no as f64, index));
+                }
+                Output::ResetElectionTimer => self.last_reset[src] = self.step_no,
+                Output::ReadReady { id, index, lease } => {
+                    if let Some(invoked) = self.read_outstanding.remove(&id) {
+                        self.reads.push(ReadRecord {
+                            node: src,
+                            id,
+                            invoked_ms: invoked,
+                            served_ms: self.step_no as f64,
+                            read_index: index,
+                            lease,
+                        });
+                    }
+                }
+                Output::ReadFailed { id } => {
+                    // dropped reads are simply re-issued later as fresh ids
+                    self.read_outstanding.remove(&id);
                 }
                 _ => {}
             }
         }
     }
 
+    /// Step one node with the harness clock observed (lease bookkeeping).
+    fn step_node(&mut self, node: NodeId, input: Input) {
+        self.nodes[node].observe_time(self.step_no as f64);
+        let outs = self.nodes[node].step(input);
+        self.absorb(node, outs);
+    }
+
     /// The run's safety evidence, in checker form.
     fn safety_log(&self) -> cabinet::sim::SafetyLog {
-        cabinet::sim::SafetyLog { commits: self.commits.clone(), leaders: self.leaders.clone() }
+        let mut log = cabinet::sim::SafetyLog::new(self.nodes.len());
+        log.commits = self.commits.clone();
+        log.leaders = self.leaders.clone();
+        log.commit_times = self.commit_times.clone();
+        log.reads = self.reads.clone();
+        log
+    }
+
+    /// Issue a linearizable read at a random alive node (non-log schedules).
+    fn try_read(&mut self) {
+        let n = self.nodes.len();
+        let node = self.rng.below(n as u64) as usize;
+        if !self.alive[node] {
+            return;
+        }
+        let id = self.next_read_id;
+        self.next_read_id += 1;
+        self.read_outstanding.insert(id, self.step_no as f64);
+        self.step_node(node, Input::Read { id });
     }
 
     /// Crash a node: it stops stepping and every message to it is dropped.
@@ -92,10 +156,21 @@ impl Chaos {
             let input = if self.rng.chance(0.5) && self.nodes[node].role() == Role::Leader {
                 Input::HeartbeatTimeout
             } else {
+                // Lease schedules model a minimum election timeout: a node
+                // fires only once `et_min_steps` have passed since its last
+                // timer reset. This is the §6.4.1 timing assumption leases
+                // rest on — without it, arbitrary timer fires could elect a
+                // new leader inside a still-valid lease window, and the
+                // "stale" reads the checker would flag are exactly the ones
+                // real deployments exclude by bounding clock drift.
+                if let Some(min) = self.et_min_steps {
+                    if self.step_no.saturating_sub(self.last_reset[node]) < min {
+                        return;
+                    }
+                }
                 Input::ElectionTimeout
             };
-            let outs = self.nodes[node].step(input);
-            self.absorb(node, outs);
+            self.step_node(node, input);
             return;
         }
         let pick = self.rng.below(self.queue.len() as u64) as usize;
@@ -118,8 +193,7 @@ impl Chaos {
         if self.rng.chance(self.dup_p) {
             self.queue.push((src, dst, msg.clone())); // duplicated
         }
-        let outs = self.nodes[dst].step(Input::Receive(src, msg));
-        self.absorb(dst, outs);
+        self.step_node(dst, Input::Receive(src, msg));
     }
 
     fn leader(&self) -> Option<NodeId> {
@@ -130,9 +204,7 @@ impl Chaos {
     /// Propose at whichever node is currently a leader (if any).
     fn try_propose(&mut self, k: u8) {
         if let Some(leader) = self.leader() {
-            let outs =
-                self.nodes[leader].step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
-            self.absorb(leader, outs);
+            self.step_node(leader, Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
         }
     }
 
@@ -141,9 +213,13 @@ impl Chaos {
     fn try_propose_burst(&mut self, depth: usize, tag: u8) {
         if let Some(leader) = self.leader() {
             for j in 0..depth {
-                let outs = self.nodes[leader]
-                    .step(Input::Propose(Payload::Bytes(Arc::new(vec![tag, j as u8]))));
-                self.absorb(leader, outs);
+                if self.leader() != Some(leader) {
+                    break;
+                }
+                self.step_node(
+                    leader,
+                    Input::Propose(Payload::Bytes(Arc::new(vec![tag, j as u8]))),
+                );
             }
         }
     }
@@ -158,8 +234,7 @@ impl Chaos {
             if !self.alive[dst] {
                 continue;
             }
-            let outs = self.nodes[dst].step(Input::Receive(src, msg));
-            self.absorb(dst, outs);
+            self.step_node(dst, Input::Receive(src, msg));
         }
     }
 
@@ -385,10 +460,14 @@ fn committed_entries_survive_leader_changes() {
 /// duplication), mid-schedule crash kills, PreVote on half the schedules,
 /// and pipelined proposal bursts at depth 1–8. Half the schedules
 /// additionally run snapshot compaction at tiny intervals (1–3 committed
-/// entries), so InstallSnapshot catch-up races the chaos too. Asserts
-/// election safety, log matching (digest-chained across compaction), the
-/// weighted-commit rule + monotonicity, no committed-entry loss, and a
-/// clean `bench::safety` verdict — at every depth.
+/// entries), so InstallSnapshot catch-up races the chaos too; half run a
+/// fast linearizable read path (25% ReadIndex, 25% lease — lease schedules
+/// model the minimum election timeout on the step axis) with client reads
+/// injected throughout. Asserts election safety, log matching
+/// (digest-chained across compaction), the weighted-commit rule +
+/// monotonicity, no committed-entry loss, and a clean `bench::safety`
+/// verdict — prefix consistency, single-leader-per-term, monotone commits,
+/// and read linearizability — at every depth.
 fn nemesis_schedule(seed: u64) {
     use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
     use cabinet::net::rng::splitmix64;
@@ -405,6 +484,13 @@ fn nemesis_schedule(seed: u64) {
     let pre_vote_on = (bits >> 2) & 1 == 1;
     let kind_sel = (bits >> 3) & 3;
     let compact = (bits >> 5) & 1 == 1;
+    // half the schedules run a fast read path (25% readindex, 25% lease) —
+    // the read-linearizability checker runs on every schedule either way
+    let read_path = match (bits >> 6) & 3 {
+        2 => ReadPath::ReadIndex,
+        3 => ReadPath::Lease,
+        _ => ReadPath::Log,
+    };
 
     let depth = 1 + (seed % 8) as usize;
     let n = [5usize, 7, 9][(seed % 3) as usize];
@@ -435,6 +521,18 @@ fn nemesis_schedule(seed: u64) {
             node.set_pre_vote(true);
         }
     }
+    // Lease timing: a 150-step minimum election timeout with a 30-step
+    // drift margin (duration 120). ReadIndex needs no timing assumption.
+    const ET_MIN_STEPS: u64 = 150;
+    if !matches!(read_path, ReadPath::Log) {
+        for node in &mut c.nodes {
+            node.set_read_path(read_path);
+            node.set_lease_duration_ms((ET_MIN_STEPS - 30) as f64);
+        }
+        if matches!(read_path, ReadPath::Lease) {
+            c.et_min_steps = Some(ET_MIN_STEPS);
+        }
+    }
     // scheduled nemesis: a partition window over steps [600, 1400) of a
     // kind rotating with the hashed seed, plus 1–10% extra loss and dup
     let kind = match kind_sel {
@@ -461,6 +559,9 @@ fn nemesis_schedule(seed: u64) {
         c.step();
         if i % 37 == 0 {
             c.try_propose_burst(depth, (i % 251) as u8);
+        }
+        if i % 29 == 0 && !matches!(read_path, ReadPath::Log) {
+            c.try_read();
         }
         if i == 900 {
             // snapshot what's committed so far, then crash two

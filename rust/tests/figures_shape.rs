@@ -5,7 +5,7 @@
 use cabinet::bench::figures::{self, Scale};
 use cabinet::net::delay::DelayModel;
 use cabinet::net::fault::{ContentionSpec, KillSpec, KillStrategy};
-use cabinet::sim::{run, Protocol, SimConfig, WorkloadSpec};
+use cabinet::sim::{run, Protocol, ReadPath, SimConfig, WorkloadSpec};
 use cabinet::workload::Workload;
 
 fn quick(proto: Protocol, n: usize, het: bool) -> SimConfig {
@@ -387,6 +387,81 @@ fn fig22_partitions_shape() {
             "{algo}: PreVote must not add candidacies ({elections_on} > {elections_off})"
         );
     }
+}
+
+/// Fig. 23 shape — the read-path acceptance criteria in one pass: every row
+/// commits its full round budget through the leader-isolation window with
+/// zero read-linearizability violations; non-log rows actually serve reads
+/// through their fast path; and on YCSB-C the combined throughput satisfies
+/// `lease ≥ readindex > log` at every scale, for both quorum rules.
+#[test]
+fn fig23_read_paths_shape() {
+    let t = figures::fig23_read_paths(Scale::Quick);
+    // one B cell (n=11) + two C cells (n=5, 11), each 2 algos × 3 paths
+    assert_eq!(t.rows.len(), 18);
+    for (i, row) in t.rows.iter().enumerate() {
+        assert_eq!(row[5], "40", "row {i}: rounds incomplete through the isolation window");
+        assert_eq!(row[11], "0", "row {i}: read-linearizability violations");
+        match row[3].as_str() {
+            "log" => {
+                assert_eq!(t.num(i, "reads"), Some(0.0), "row {i}: log path issued reads");
+            }
+            "readindex" => {
+                assert!(t.num(i, "reads").unwrap() > 0.0, "row {i}: no reads served");
+                assert!(t.num(i, "ri_rounds").unwrap() > 0.0, "row {i}: no probe rounds");
+                assert_eq!(t.num(i, "lease"), Some(0.0), "row {i}: spurious lease serve");
+            }
+            "lease" => {
+                let reads = t.num(i, "reads").unwrap();
+                let lease = t.num(i, "lease").unwrap();
+                assert!(reads > 0.0, "row {i}: no reads served");
+                assert!(
+                    lease >= reads / 2.0,
+                    "row {i}: lease fast path barely used ({lease} of {reads})"
+                );
+            }
+            other => panic!("row {i}: unknown path {other}"),
+        }
+    }
+    // acceptance: lease ≥ readindex > log on YCSB-C, every scale, both algos
+    for base in (0..t.rows.len()).step_by(3) {
+        if t.rows[base][0] != "C" {
+            continue;
+        }
+        let log = t.num(base, "tput_ops_s").unwrap();
+        let ri = t.num(base + 1, "tput_ops_s").unwrap();
+        let lease = t.num(base + 2, "tput_ops_s").unwrap();
+        let who = format!("{} n={}", t.rows[base][2], t.rows[base][1]);
+        assert!(ri > log, "{who}: readindex {ri} must beat log {log}");
+        assert!(lease >= 0.95 * ri, "{who}: lease {lease} must not trail readindex {ri}");
+    }
+}
+
+/// The `read_path`/`lease_drift_ms` knobs round-trip through the TOML config
+/// path, a TOML-built read-path run actually serves reads cleanly, and bad
+/// values are rejected.
+#[test]
+fn read_path_config_roundtrip_and_rejection() {
+    let mut cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 1\nn = 5\nrounds = 6\nread_path = \"lease\"\n\
+         lease_drift_ms = 60\n[workload]\nkind = \"ycsb\"\nworkload = \"B\"\nbatch = 300\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.read_path, ReadPath::Lease);
+    assert_eq!(cfg.lease_drift_ms, 60.0);
+    cfg.track_safety = true;
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 6, "TOML-built read-path config must complete");
+    assert!(r.reads_served > 0, "the read path must have served reads");
+    let report = cabinet::bench::safety_check(r.safety.as_ref().unwrap());
+    assert!(report.is_clean(), "{:?}", report.violations);
+    assert!(report.reads_checked > 0);
+    // rejected: unknown path, drift swallowing the entire lease bound
+    assert!(cabinet::config::sim_config_from_toml("read_path = \"quorum\"\n").is_err());
+    assert!(cabinet::config::sim_config_from_toml(
+        "read_path = \"lease\"\nlease_drift_ms = 99999\n"
+    )
+    .is_err());
 }
 
 /// The `[nemesis]` table and `pre_vote` knob round-trip through the TOML

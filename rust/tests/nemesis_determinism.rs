@@ -15,7 +15,7 @@ use cabinet::consensus::message::{
     AppState, Entry, Message, Payload, SnapshotBlob,
 };
 use cabinet::consensus::log::Log;
-use cabinet::consensus::node::{Input, Mode, Node, Output};
+use cabinet::consensus::node::{Input, Mode, Node, Output, ReadPath, Role};
 use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
 use cabinet::net::rng::Rng;
 use cabinet::sim::{run, Protocol, SimConfig, SimResult, WorkloadSpec};
@@ -102,6 +102,28 @@ fn nemesis_actually_perturbs_the_trajectory() {
         stats.cut + stats.dropped + stats.duplicated + stats.reordered > 0,
         "the schedule must have touched some messages: {stats:?}"
     );
+}
+
+#[test]
+fn read_paths_under_nemesis_deterministic_and_clean() {
+    // the nemesis determinism guarantee extends to the read paths: same
+    // seed ⇒ bit-identical run (read metrics fold into the digest), and the
+    // read-linearizability checker stays clean through partition + loss
+    for path in [ReadPath::ReadIndex, ReadPath::Lease] {
+        let mut c = nem_config(2, true, 77);
+        c.read_path = path;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::B, batch: 300, records: 10_000 };
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.rounds.len(), 10, "{path:?}: rounds incomplete");
+        assert!(a.reads_served > 0, "{path:?}: no reads served under nemesis");
+        assert_bit_identical(&a, &b, &format!("read path {path:?}"));
+        assert_eq!(a.reads_served, b.reads_served, "{path:?}");
+        assert_eq!(a.lease_reads, b.lease_reads, "{path:?}");
+        let report = cabinet::bench::safety_check(a.safety.as_ref().unwrap());
+        assert!(report.is_clean(), "{path:?}: {:?}", report.violations);
+        assert!(report.reads_checked > 0, "{path:?}: checker saw no reads");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -194,6 +216,79 @@ fn duplicated_or_late_install_snapshot_never_regresses() {
             "stale install must not re-announce"
         );
     }
+}
+
+/// The stale-lease-under-partition regression: an isolated leader whose
+/// lease has expired must fall back to ReadIndex confirmation — and, cut
+/// off from every quorum, must then never serve the read at all. Serving it
+/// would be exactly the stale read the checker flags: a healed majority may
+/// have elected a new leader and committed past the isolated one.
+#[test]
+fn isolated_leader_with_expired_lease_never_serves_reads() {
+    let n = 5;
+    let mut leader = Node::new(0, n, Mode::cabinet(n, 1));
+    leader.set_read_path(ReadPath::Lease);
+    leader.set_lease_duration_ms(100.0);
+    // elect + commit the term barrier
+    let _ = leader.step(Input::ElectionTimeout);
+    for p in [1usize, 2, 3] {
+        let _ = leader.step(Input::Receive(
+            p,
+            Message::RequestVoteReply { term: 1, from: p, granted: true },
+        ));
+    }
+    assert_eq!(leader.role(), Role::Leader);
+    let barrier = leader.log().last_index();
+    for p in [1usize, 2] {
+        let _ = leader.step(Input::Receive(
+            p,
+            Message::AppendEntriesReply {
+                term: 1,
+                from: p,
+                success: true,
+                match_index: barrier,
+                wclock: leader.wclock(),
+            },
+        ));
+    }
+    assert_eq!(leader.commit_index(), barrier);
+    // a heartbeat-cadence probe round earns the lease
+    let outs = leader.step(Input::HeartbeatTimeout);
+    let seq = outs
+        .iter()
+        .find_map(|o| match o {
+            Output::Send(_, Message::ReadIndex { seq, .. }) => Some(*seq),
+            _ => None,
+        })
+        .expect("lease mode probes at heartbeat cadence");
+    for p in [1usize, 2] {
+        let _ = leader.step(Input::Receive(p, Message::ReadIndexResp { term: 1, from: p, seq }));
+    }
+    assert!(leader.lease_valid());
+    // the partition opens: no acks ever arrive again. Within the lease the
+    // leader may still serve (provably no newer leader can exist yet)...
+    leader.observe_time(60.0);
+    let outs = leader.step(Input::Read { id: 1 });
+    assert!(outs.iter().any(|o| matches!(o, Output::ReadReady { id: 1, lease: true, .. })));
+    // ...but past expiry every read falls back to ReadIndex and, with no
+    // quorum reachable, never serves — across repeated attempts and
+    // heartbeat re-probes
+    leader.observe_time(300.0);
+    assert!(!leader.lease_valid(), "lease must expire without fresh acks");
+    for (t, id) in [(300.0, 2u64), (500.0, 3), (900.0, 4)] {
+        leader.observe_time(t);
+        let outs = leader.step(Input::Read { id });
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::ReadReady { .. })),
+            "isolated leader served read {id} on a dead lease"
+        );
+        let outs = leader.step(Input::HeartbeatTimeout);
+        assert!(
+            !outs.iter().any(|o| matches!(o, Output::ReadReady { .. })),
+            "re-probing without a quorum must not serve"
+        );
+    }
+    assert!(leader.pending_confirm_rounds() >= 1, "reads parked on confirmation");
 }
 
 #[test]
