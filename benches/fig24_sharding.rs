@@ -1,0 +1,22 @@
+//! `cargo bench` target regenerating Fig 24 — sharded multi-group scaling
+//! (quick scale; run `cargo run --release --example figures -- fig24
+//! --paper` for the full version). Each row runs G ∈ {1, 2, 4, 8}
+//! independent weighted-consensus groups over one shared virtual-time
+//! fabric at n = 11 under D1-100 ms, every group replicating only its own
+//! hash-partitioned YCSB shard under its own leader. The acceptance shape:
+//! aggregate wall-clock throughput increases from G=1 to G=4 (groups
+//! overlap their replication rounds), and the G=1 row is bit-for-bit the
+//! historical single-group driver.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig24_sharding", || {
+        last = Some(figures::fig24_sharding(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

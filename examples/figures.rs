@@ -38,8 +38,9 @@ fn main() {
         "fig21" => vec![figures::fig21_compaction(scale)],
         "fig22" => vec![figures::fig22_partitions(scale)],
         "fig23" => vec![figures::fig23_read_paths(scale)],
+        "fig24" => vec![figures::fig24_sharding(scale)],
         other => {
-            eprintln!("unknown figure {other}; use fig3..fig23 or all");
+            eprintln!("unknown figure {other}; use fig3..fig24 or all");
             std::process::exit(1);
         }
     };

@@ -12,7 +12,7 @@ use crate::net::topology::ZoneAlloc;
 use crate::sim::{
     DigestMode, Protocol, ReadPath, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec,
 };
-use crate::workload::Workload;
+use crate::workload::{ShardBy, Workload};
 
 /// Build a `SimConfig` from a TOML-subset experiment file. Layout:
 ///
@@ -34,6 +34,7 @@ use crate::workload::Workload;
 /// kind = "ycsb"          # ycsb | tpcc
 /// workload = "A"         # ycsb only
 /// batch = 5000
+/// records = 100000       # ycsb only: keyspace size
 ///
 /// [delay]
 /// model = "d0"           # d0 | d1 | d2 | d3 | d4
@@ -50,6 +51,12 @@ use crate::workload::Workload;
 /// restart_kill_round = 10    # kill one follower ...
 /// restart_round = 30         # ... and restart it fresh (both or neither)
 ///
+/// [sharding]
+/// groups = 4                 # independent consensus groups over one fabric
+///                            # (1 = the historical single-group deployment)
+/// shard_by = "hash"          # hash (YCSB keys) | warehouse (TPC-C ranges);
+///                            # default follows the workload kind
+///
 /// [nemesis]
 /// drop_p = 0.05              # per-message loss probability, [0, 1]
 /// dup_p = 0.02               # per-message duplication probability
@@ -58,6 +65,8 @@ use crate::workload::Workload;
 /// partitions = ["2000..6000=leader", "8000..20000=followers:2"]
 ///                            # windows: START..END=leader | followers:K
 ///                            #          | split:ids | oneway:ids
+/// groups = [0, 2]            # sharded runs: restrict the schedule to these
+///                            # group indices (default: every group)
 /// ```
 pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let doc = toml::parse(text)?;
@@ -129,7 +138,12 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 let name = w.get("workload").and_then(|v| v.as_str()).unwrap_or("A");
                 let wl = Workload::from_name(name)
                     .with_context(|| format!("unknown YCSB workload {name}"))?;
-                config.workload = WorkloadSpec::ycsb(wl, batch);
+                let records = w.get("records").and_then(|v| v.as_int()).unwrap_or(100_000);
+                if records < 1 {
+                    bail!("records must be >= 1, got {records}");
+                }
+                config.workload =
+                    WorkloadSpec::Ycsb { workload: wl, batch, records: records as u64 };
             }
             "tpcc" => {
                 let wh = w.get("warehouses").and_then(|v| v.as_int()).unwrap_or(10);
@@ -141,6 +155,26 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 config.workload = WorkloadSpec::Tpcc { batch, warehouses: wh as u32 };
             }
             other => bail!("unknown workload kind {other}"),
+        }
+    }
+
+    if let Some(s) = doc.get("sharding") {
+        let groups = s.get("groups").and_then(|v| v.as_int()).unwrap_or(1);
+        // negative values would wrap through the usize cast below; the rest
+        // of the validation (range, protocol, workload bounds) is the one
+        // shared `SimConfig::validate_sharding` implementation
+        if groups < 1 {
+            bail!("groups must be >= 1, got {groups}");
+        }
+        config.groups = groups as usize;
+        if let Some(sb) = s.get("shard_by").and_then(|v| v.as_str()) {
+            config.shard_by = Some(
+                ShardBy::from_name(sb)
+                    .with_context(|| format!("unknown shard_by {sb} (hash | warehouse)"))?,
+            );
+        }
+        if let Err(e) = config.validate_sharding() {
+            bail!("[sharding] {e}");
         }
     }
 
@@ -221,6 +255,28 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
         spec.validate(n)?;
         if !spec.is_noop() {
             config.nemesis = Some(spec);
+        }
+        if let Some(gs) = nm.get("groups").and_then(|v| v.as_array()) {
+            if config.nemesis.is_none() {
+                bail!("[nemesis] groups requires a non-empty nemesis schedule");
+            }
+            let mut scope = Vec::new();
+            for g in gs {
+                let g = g
+                    .as_int()
+                    .context("[nemesis] groups entries must be integers")?;
+                if g < 0 || g as usize >= config.groups {
+                    bail!(
+                        "[nemesis] group {g} out of range for groups = {}",
+                        config.groups
+                    );
+                }
+                scope.push(g as usize);
+            }
+            if scope.is_empty() {
+                bail!("[nemesis] groups must name at least one group");
+            }
+            config.nemesis_groups = Some(scope);
         }
     }
 
@@ -417,6 +473,96 @@ partitions = ["2000..6000=leader", "8000..20000=followers:2"]
         let cfg =
             sim_config_from_toml("[workload]\nkind = \"tpcc\"\nwarehouses = 4\n").unwrap();
         assert!(matches!(cfg.workload, WorkloadSpec::Tpcc { warehouses: 4, .. }));
+    }
+
+    #[test]
+    fn sharding_validated_at_parse_time() {
+        // happy path: groups + explicit shard_by round-trip
+        let cfg = sim_config_from_toml(
+            "n = 11\n[sharding]\ngroups = 4\nshard_by = \"hash\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.groups, 4);
+        assert_eq!(cfg.shard_by, Some(ShardBy::KeyHash));
+        let cfg = sim_config_from_toml(
+            "n = 8\n[workload]\nkind = \"tpcc\"\nwarehouses = 8\n\
+             [sharding]\ngroups = 4\nshard_by = \"warehouse\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.groups, 4);
+        assert_eq!(cfg.shard_by, Some(ShardBy::Warehouse));
+        // default stays single-group with workload-derived shard dimension
+        let cfg = sim_config_from_toml("protocol = \"cabinet\"\n").unwrap();
+        assert_eq!(cfg.groups, 1);
+        assert_eq!(cfg.shard_by, None);
+        assert_eq!(cfg.effective_shard_by(), ShardBy::KeyHash);
+
+        // groups < 1 rejected
+        assert!(sim_config_from_toml("[sharding]\ngroups = 0\n").is_err());
+        assert!(sim_config_from_toml("[sharding]\ngroups = -2\n").is_err());
+        // groups > n rejected
+        assert!(sim_config_from_toml("n = 5\n[sharding]\ngroups = 6\n").is_err());
+        // groups exceeding the YCSB key count rejected
+        assert!(sim_config_from_toml(
+            "n = 5\n[workload]\nkind = \"ycsb\"\nrecords = 3\n[sharding]\ngroups = 4\n"
+        )
+        .is_err());
+        // groups exceeding the TPC-C warehouse count rejected
+        assert!(sim_config_from_toml(
+            "n = 5\n[workload]\nkind = \"tpcc\"\nwarehouses = 3\n[sharding]\ngroups = 4\n"
+        )
+        .is_err());
+        // shard dimension must match the workload kind
+        assert!(sim_config_from_toml(
+            "[sharding]\ngroups = 2\nshard_by = \"warehouse\"\n"
+        )
+        .is_err());
+        assert!(sim_config_from_toml(
+            "n = 8\n[workload]\nkind = \"tpcc\"\nwarehouses = 8\n\
+             [sharding]\ngroups = 2\nshard_by = \"hash\"\n"
+        )
+        .is_err());
+        // unknown shard dimension rejected
+        assert!(sim_config_from_toml("[sharding]\nshard_by = \"modulo\"\n").is_err());
+        // HQC cannot shard
+        assert!(sim_config_from_toml(
+            "protocol = \"hqc\"\nn = 9\nsizes = [3, 3, 3]\n[sharding]\ngroups = 3\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn ycsb_records_knob_parses_and_validates() {
+        let cfg = sim_config_from_toml("[workload]\nkind = \"ycsb\"\nrecords = 5000\n").unwrap();
+        assert!(matches!(cfg.workload, WorkloadSpec::Ycsb { records: 5000, .. }));
+        assert!(sim_config_from_toml("[workload]\nkind = \"ycsb\"\nrecords = 0\n").is_err());
+        let err = sim_config_from_toml(
+            "n = 5\n[workload]\nkind = \"tpcc\"\nwarehouses = 2\n[sharding]\ngroups = 3\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("warehouse count"), "{err:#}");
+    }
+
+    #[test]
+    fn nemesis_group_scope_validated() {
+        let cfg = sim_config_from_toml(
+            "n = 11\n[sharding]\ngroups = 4\n\
+             [nemesis]\ndrop_p = 0.05\ngroups = [0, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.nemesis_groups, Some(vec![0, 2]));
+        // out-of-range group index
+        assert!(sim_config_from_toml(
+            "n = 11\n[sharding]\ngroups = 2\n[nemesis]\ndrop_p = 0.05\ngroups = [2]\n"
+        )
+        .is_err());
+        // scope without a schedule
+        assert!(sim_config_from_toml("n = 11\n[nemesis]\ngroups = [0]\n").is_err());
+        // empty scope
+        assert!(sim_config_from_toml(
+            "n = 11\n[sharding]\ngroups = 2\n[nemesis]\ndrop_p = 0.05\ngroups = []\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -10,6 +10,10 @@ use crate::workload::{TpccBatch, YcsbBatch};
 
 /// Node identifier (dense 0..n).
 pub type NodeId = usize;
+/// Consensus-group identifier (dense 0..G) — the sharded deployments run G
+/// independent weighted-consensus groups multiplexed over one fabric, and
+/// every wire message travels inside an [`Envelope`] naming its group.
+pub type GroupId = usize;
 /// Raft term.
 pub type Term = u64;
 /// 1-based log index; 0 = "nothing".
@@ -214,6 +218,24 @@ pub enum Message {
     },
 }
 
+/// One wire message plus the consensus group it belongs to. The sans-io
+/// [`crate::consensus::node::Node`] stays group-unaware (its peers are dense
+/// 0..n within its own group); the *fabric* — the simulator's shared event
+/// queue, the live runtime's channels — wraps every [`Message`] in an
+/// `Envelope` so a single network multiplexes all G groups and routes each
+/// RPC to the right group replica on the receiving node.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub group: GroupId,
+    pub msg: Message,
+}
+
+impl Envelope {
+    pub fn new(group: GroupId, msg: Message) -> Self {
+        Envelope { group, msg }
+    }
+}
+
 impl Message {
     pub fn term(&self) -> Term {
         match self {
@@ -357,6 +379,13 @@ mod tests {
             weight: 1.0,
         };
         assert!(mk(large).wire_size() > 50 * mk(small).wire_size() / 2);
+    }
+
+    #[test]
+    fn envelope_carries_group() {
+        let e = Envelope::new(3, Message::ReadIndex { term: 1, leader: 0, seq: 1 });
+        assert_eq!(e.group, 3);
+        assert!(matches!(e.msg, Message::ReadIndex { .. }));
     }
 
     #[test]

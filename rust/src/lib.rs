@@ -33,6 +33,15 @@
 //! restarted followers catch up via `InstallSnapshot`, and digest chaining
 //! keeps replay fingerprints bit-identical across the cut.
 //!
+//! Deployments shard horizontally (`SimConfig::groups`,
+//! `live::LiveCluster::start_sharded`): G independent consensus groups run
+//! over one fabric, Multi-Raft style — every node hosts a replica per
+//! group, every message travels in a `consensus::message::Envelope` naming
+//! its group, and each group replicates only its own workload shard
+//! (hash-partitioned YCSB keys / range-partitioned TPC-C warehouses, see
+//! `workload::shard`). A `groups = 1` run is bit-for-bit the historical
+//! single-group driver.
+//!
 //! # Driving a node directly
 //!
 //! ```

@@ -1,8 +1,16 @@
-//! Live cluster: one OS thread per consensus node, real message passing
+//! Live cluster: one OS thread per physical node, real message passing
 //! over channels, real wall-clock timers — the same sans-io `Node` state
 //! machines the simulator drives, now with Python-free PJRT apply on every
 //! commit. This is the runtime behind `examples/quickstart.rs` and
 //! `examples/e2e_live.rs`.
+//!
+//! Sharded deployments multiplex G consensus groups over the same fabric:
+//! every node thread hosts one group-replica per group (Multi-Raft layout),
+//! every cross-thread RPC travels inside an
+//! [`crate::consensus::message::Envelope`] naming its group, and the one
+//! link table filters all of them — a partition cuts every group's traffic
+//! on that physical link at once, exactly like a real switch failure.
+//! Reports are per (group, node): [`NodeReport::group`].
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -10,13 +18,13 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::consensus::message::{AppState, Entry, LogIndex, Message, NodeId, Payload};
+use crate::consensus::message::{AppState, Entry, Envelope, GroupId, LogIndex, NodeId, Payload};
 use crate::consensus::node::{Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 use crate::live::apply::{empty_state, ApplyReq};
 use crate::net::rng::Rng;
 use crate::workload::YcsbBatch;
 
-/// Work items for the applier thread, processed strictly in commit order.
+/// Work items for an applier thread, processed strictly in commit order.
 enum ApplierMsg {
     /// A committed batch to fold into the replica state.
     Batch(Arc<YcsbBatch>),
@@ -25,28 +33,28 @@ enum ApplierMsg {
     /// applier's state at dequeue time is exactly the state at `through`;
     /// the answer goes back over the node's own inbox, so heartbeats never
     /// wait on the capture.
-    Capture { through: LogIndex, reply: Sender<LiveIn> },
+    Capture { group: GroupId, through: LogIndex, reply: Sender<LiveIn> },
     /// Replace the replica state with an installed leader snapshot (a
     /// lagging follower caught up past its missing log prefix).
     Install(Vec<u32>),
 }
 
-/// Per-replica applier: a thread owning this node's replica state, applying
-/// committed batches in commit order through the apply service. Keeping the
-/// apply off the consensus thread is essential — a blocking apply starves
-/// heartbeats and triggers spurious elections (found the hard way; see
-/// rust/tests/live_e2e.rs). Snapshot capture rides the same queue for the
-/// same reason.
+/// Per-(node, group) applier: a thread owning this group-replica's state,
+/// applying committed batches in commit order through the apply service.
+/// Keeping the apply off the consensus thread is essential — a blocking
+/// apply starves heartbeats and triggers spurious elections (found the hard
+/// way; see rust/tests/live_e2e.rs). Snapshot capture rides the same queue
+/// for the same reason.
 struct Applier {
     tx: Sender<ApplierMsg>,
     handle: JoinHandle<(usize, Option<[u32; 2]>)>,
 }
 
 impl Applier {
-    fn spawn(node: NodeId, service: Sender<ApplyReq>) -> Applier {
+    fn spawn(node: NodeId, group: GroupId, service: Sender<ApplyReq>) -> Applier {
         let (tx, rx) = channel::<ApplierMsg>();
         let handle = std::thread::Builder::new()
-            .name(format!("applier-{node}"))
+            .name(format!("applier-{node}-g{group}"))
             .spawn(move || {
                 let mut state = empty_state();
                 let mut applies = 0usize;
@@ -72,9 +80,12 @@ impl Applier {
                                 Err(_) => break,
                             }
                         }
-                        ApplierMsg::Capture { through, reply } => {
-                            let _ = reply
-                                .send(LiveIn::SnapshotReady { through, state: state.clone() });
+                        ApplierMsg::Capture { group, through, reply } => {
+                            let _ = reply.send(LiveIn::SnapshotReady {
+                                group,
+                                through,
+                                state: state.clone(),
+                            });
                         }
                         ApplierMsg::Install(s) => {
                             state = s;
@@ -91,32 +102,35 @@ impl Applier {
     }
 }
 
-/// Inputs to a node thread.
+/// Inputs to a node thread. RPCs arrive enveloped with their group; client
+/// operations name the group they target (0 on unsharded clusters).
 pub enum LiveIn {
-    Rpc(NodeId, Message),
-    Propose(Payload),
+    Rpc(NodeId, Envelope),
+    Propose { group: GroupId, payload: Payload },
     /// A client read request (non-log read paths): serve via ReadIndex /
-    /// lease at the leader, or forward-and-serve-locally at a follower.
-    Read(u64),
-    /// Fire the election timer immediately (bootstrap).
-    ForceElection,
+    /// lease at the group's leader, or forward-and-serve-locally at a
+    /// follower replica.
+    Read { group: GroupId, id: u64 },
+    /// Fire the group's election timer immediately (bootstrap).
+    ForceElection(GroupId),
     /// Applier → node: captured replica state for a pending snapshot
     /// (completes the `Output::SnapshotRequest` handshake).
-    SnapshotReady { through: LogIndex, state: Vec<u32> },
+    SnapshotReady { group: GroupId, through: LogIndex, state: Vec<u32> },
     Stop,
 }
 
-/// Events surfaced to the harness/client.
+/// Events surfaced to the harness/client, tagged with the group they
+/// happened in (always 0 on unsharded clusters).
 #[derive(Clone, Debug)]
 pub enum LiveEvent {
-    Committed { node: NodeId, index: LogIndex, digest: Option<[u32; 2]> },
-    BecameLeader { node: NodeId, term: u64 },
-    RoundCommitted { node: NodeId, index: LogIndex, repliers: usize },
+    Committed { group: GroupId, node: NodeId, index: LogIndex, digest: Option<[u32; 2]> },
+    BecameLeader { group: GroupId, node: NodeId, term: u64 },
+    RoundCommitted { group: GroupId, node: NodeId, index: LogIndex, repliers: usize },
     /// A read is servable from `node`'s applied state at `index`.
-    ReadReady { node: NodeId, id: u64, index: LogIndex, lease: bool },
+    ReadReady { group: GroupId, node: NodeId, id: u64, index: LogIndex, lease: bool },
     /// A read could not be served at `node` (no leader known / leadership
     /// lost) — re-issue it.
-    ReadFailed { node: NodeId, id: u64 },
+    ReadFailed { group: GroupId, node: NodeId, id: u64 },
 }
 
 /// Timer configuration for live nodes.
@@ -138,10 +152,10 @@ impl Default for LiveTimers {
 }
 
 /// Link filter between node threads — the live runtime's nemesis hook.
-/// Every `Output::Send` consults it before crossing a channel; a blocked
-/// link silently drops the message, exactly like a partitioned network.
-/// Operator-driven (no schedule): tests and demos cut and heal links while
-/// the cluster runs.
+/// Every `Output::Send` (from every group — links are physical) consults it
+/// before crossing a channel; a blocked link silently drops the message,
+/// exactly like a partitioned network. Operator-driven (no schedule): tests
+/// and demos cut and heal links while the cluster runs.
 struct LinkTable {
     n: usize,
     /// Flattened n×n matrix: `blocked[from * n + to]`.
@@ -167,14 +181,19 @@ impl LinkTable {
 pub struct LiveCluster {
     inboxes: Vec<Sender<LiveIn>>,
     pub events: Receiver<LiveEvent>,
-    handles: Vec<JoinHandle<NodeReport>>,
+    handles: Vec<JoinHandle<Vec<NodeReport>>>,
     links: Arc<LinkTable>,
     n: usize,
+    groups: usize,
 }
 
-/// Final per-node report returned at shutdown.
+/// Final per-(group, node) report returned at shutdown. Unsharded clusters
+/// produce one report per node (all `group = 0`, ordered by node id, the
+/// historical layout); sharded clusters produce `n × groups` reports,
+/// grouped by node id then group.
 #[derive(Clone, Debug)]
 pub struct NodeReport {
+    pub group: GroupId,
     pub id: NodeId,
     pub commit_index: LogIndex,
     pub final_digest: Option<[u32; 2]>,
@@ -251,6 +270,31 @@ impl LiveCluster {
         read_path: ReadPath,
         lease_drift_ms: f64,
     ) -> LiveCluster {
+        Self::start_sharded(
+            n, 1, mode, timers, apply_tx, seed, snapshot_every, pre_vote, read_path,
+            lease_drift_ms,
+        )
+    }
+
+    /// Everything `start_full` offers, with `groups` independent consensus
+    /// groups multiplexed over the one link table: every node thread hosts
+    /// one replica per group, every RPC travels enveloped with its
+    /// [`GroupId`], and client operations target a group via the `*_in`
+    /// methods. `groups = 1` is exactly `start_full`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_sharded(
+        n: usize,
+        groups: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+        snapshot_every: Option<u64>,
+        pre_vote: bool,
+        read_path: ReadPath,
+        lease_drift_ms: f64,
+    ) -> LiveCluster {
+        assert!(groups >= 1 && groups <= n, "groups must be in 1..=n");
         let (event_tx, event_rx) = channel::<LiveEvent>();
         let mut inbox_txs = Vec::with_capacity(n);
         let mut inbox_rxs = Vec::with_capacity(n);
@@ -272,24 +316,29 @@ impl LiveCluster {
                 .name(format!("node-{id}"))
                 .spawn(move || {
                     node_loop(
-                        id, n, mode, timers, rx, peers, links, event_tx, apply_tx, seed,
-                        snapshot_every, pre_vote, read_path, lease_drift_ms,
+                        id, n, groups, mode, timers, rx, peers, links, event_tx, apply_tx,
+                        seed, snapshot_every, pre_vote, read_path, lease_drift_ms,
                     )
                 })
                 .expect("spawn node");
             handles.push(handle);
         }
-        LiveCluster { inboxes: inbox_txs, events: event_rx, handles, links, n }
+        LiveCluster { inboxes: inbox_txs, events: event_rx, handles, links, n, groups }
     }
 
     pub fn n(&self) -> usize {
         self.n
     }
 
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
     // ---- link filtering (the live nemesis hook) --------------------------
 
     /// Block or unblock one directed link. Blocked sends are dropped
-    /// silently, exactly like a partitioned network path.
+    /// silently, exactly like a partitioned network path — for every group
+    /// multiplexed over it.
     pub fn set_link(&self, from: NodeId, to: NodeId, up: bool) {
         self.links.set(from, to, !up);
     }
@@ -318,21 +367,49 @@ impl LiveCluster {
         blocked.fill(false);
     }
 
-    /// Bootstrap: make `node` start an election now.
+    /// Bootstrap: make `node` start an election now (group 0).
     pub fn force_election(&self, node: NodeId) {
-        let _ = self.inboxes[node].send(LiveIn::ForceElection);
+        self.force_election_in(0, node);
     }
 
-    /// Submit a proposal to `node` (should be the leader).
+    /// Panic with an attributable message instead of letting an unhosted
+    /// group id index-panic (and silently kill) the receiving node thread.
+    fn check_group(&self, group: GroupId) {
+        assert!(
+            group < self.groups,
+            "group {group} out of range: this cluster hosts {} group(s)",
+            self.groups
+        );
+    }
+
+    /// Bootstrap one group: make `node`'s replica of `group` campaign now.
+    pub fn force_election_in(&self, group: GroupId, node: NodeId) {
+        self.check_group(group);
+        let _ = self.inboxes[node].send(LiveIn::ForceElection(group));
+    }
+
+    /// Submit a proposal to `node` (should be the leader; group 0).
     pub fn propose(&self, node: NodeId, payload: Payload) {
-        let _ = self.inboxes[node].send(LiveIn::Propose(payload));
+        self.propose_in(0, node, payload);
+    }
+
+    /// Submit a proposal to `node`'s replica of `group`.
+    pub fn propose_in(&self, group: GroupId, node: NodeId, payload: Payload) {
+        self.check_group(group);
+        let _ = self.inboxes[node].send(LiveIn::Propose { group, payload });
     }
 
     /// Submit a linearizable read to `node` (any node: followers forward to
-    /// their leader and serve locally once granted). The answer arrives as
-    /// [`LiveEvent::ReadReady`] / [`LiveEvent::ReadFailed`].
+    /// their leader and serve locally once granted; group 0). The answer
+    /// arrives as [`LiveEvent::ReadReady`] / [`LiveEvent::ReadFailed`].
     pub fn read(&self, node: NodeId, id: u64) {
-        let _ = self.inboxes[node].send(LiveIn::Read(id));
+        self.read_in(0, node, id);
+    }
+
+    /// Submit a linearizable read to `node`'s replica of `group`.
+    pub fn read_in(&self, group: GroupId, node: NodeId, id: u64) {
+        self.check_group(group);
+        let _ = self.inboxes[node].send(LiveIn::Read { group, id });
     }
 
     /// Wait until read `id` is served; returns (read index, via lease).
@@ -341,6 +418,11 @@ impl LiveCluster {
     /// leader drops (e.g. its term barrier has not committed yet) produces
     /// no reply at all and only surfaces as a timeout — there are no
     /// node-side retries, so callers should re-issue with a fresh id.
+    ///
+    /// Matches `id` across **all** groups — read ids are cluster-wide here.
+    /// On a sharded cluster reusing one id in two groups, use
+    /// [`LiveCluster::wait_for_read_in`] to pin the group (or keep ids
+    /// disjoint across groups).
     pub fn wait_for_read(&self, id: u64, timeout: Duration) -> Option<(LogIndex, bool)> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -356,7 +438,37 @@ impl LiveCluster {
         }
     }
 
-    /// Wait until some node reports leadership; returns its id.
+    /// Like [`LiveCluster::wait_for_read`], but only accepts the answer
+    /// from `group` — a same-id read in another group can neither satisfy
+    /// nor abort the wait (its events are consumed and discarded).
+    pub fn wait_for_read_in(
+        &self,
+        group: GroupId,
+        id: u64,
+        timeout: Duration,
+    ) -> Option<(LogIndex, bool)> {
+        self.check_group(group);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::ReadReady { group: g, id: rid, index, lease, .. })
+                    if g == group && rid == id =>
+                {
+                    return Some((index, lease))
+                }
+                Ok(LiveEvent::ReadFailed { group: g, id: rid, .. })
+                    if g == group && rid == id =>
+                {
+                    return None
+                }
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Wait until some node reports leadership (any group); returns its id.
     pub fn wait_for_leader(&self, timeout: Duration) -> Option<NodeId> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -369,8 +481,49 @@ impl LiveCluster {
         }
     }
 
-    /// Wait until the leader commits `index` (RoundCommitted); returns the
-    /// elapsed time.
+    /// Wait until `group` elects a leader; returns its node id.
+    ///
+    /// The event channel has a single consumer, so this scan **consumes
+    /// and discards** other groups' events — including their one-shot
+    /// `BecameLeader`s. Calling it once per group in sequence therefore
+    /// loses races; to collect every group's leader, use
+    /// [`LiveCluster::wait_for_leaders`] (one scan, all groups) instead.
+    pub fn wait_for_leader_in(&self, group: GroupId, timeout: Duration) -> Option<NodeId> {
+        self.check_group(group);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::BecameLeader { group: g, node, .. }) if g == group => {
+                    return Some(node)
+                }
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Wait until **every** group has reported a leader, in one scan of the
+    /// shared event stream; returns the latest-known leader per group,
+    /// indexed by `GroupId`. This is the multi-group counterpart of
+    /// [`LiveCluster::wait_for_leader_in`] that cannot lose another
+    /// group's one-shot election event to a sequential wait.
+    pub fn wait_for_leaders(&self, timeout: Duration) -> Option<Vec<NodeId>> {
+        let deadline = Instant::now() + timeout;
+        let mut leaders: Vec<Option<NodeId>> = vec![None; self.groups];
+        while leaders.iter().any(Option::is_none) {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::BecameLeader { group, node, .. }) => leaders[group] = Some(node),
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+        Some(leaders.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Wait until a leader commits `index` (RoundCommitted, any group);
+    /// returns the elapsed time.
     pub fn wait_for_round(&self, index: LogIndex, timeout: Duration) -> Option<Duration> {
         let t0 = Instant::now();
         let deadline = t0 + timeout;
@@ -386,17 +539,70 @@ impl LiveCluster {
         }
     }
 
-    /// Crash a single node (its thread exits; peers stop hearing from it).
+    /// Wait until **every** group's leader has committed `index`, in one
+    /// scan of the shared event stream. The multi-group counterpart of
+    /// [`LiveCluster::wait_for_round_in`] — sequential per-group waits
+    /// would discard each other's commit events.
+    pub fn wait_for_round_all(&self, index: LogIndex, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut done = vec![false; self.groups];
+        while done.iter().any(|d| !d) {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::RoundCommitted { group, index: i, .. }) if i >= index => {
+                    done[group] = true;
+                }
+                Ok(_) => continue,
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Wait until `group`'s leader commits `index`; returns the elapsed
+    /// time. Like [`LiveCluster::wait_for_leader_in`], this consumes and
+    /// discards other groups' events — use
+    /// [`LiveCluster::wait_for_round_all`] to wait on every group at once.
+    pub fn wait_for_round_in(
+        &self,
+        group: GroupId,
+        index: LogIndex,
+        timeout: Duration,
+    ) -> Option<Duration> {
+        self.check_group(group);
+        let t0 = Instant::now();
+        let deadline = t0 + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::RoundCommitted { group: g, index: i, .. })
+                    if g == group && i >= index =>
+                {
+                    return Some(t0.elapsed())
+                }
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Crash a single node (its thread exits; every group loses that
+    /// replica at once — a machine failure, not a process failure).
     pub fn stop_node(&self, node: NodeId) {
         let _ = self.inboxes[node].send(LiveIn::Stop);
     }
 
-    /// Stop all nodes and collect their final reports.
+    /// Stop all nodes and collect their final per-(group, node) reports.
     pub fn shutdown(mut self) -> Vec<NodeReport> {
         for tx in &self.inboxes {
             let _ = tx.send(LiveIn::Stop);
         }
-        self.handles.drain(..).map(|h| h.join().expect("node panicked")).collect()
+        self.handles
+            .drain(..)
+            .flat_map(|h| h.join().expect("node panicked"))
+            .collect()
     }
 }
 
@@ -418,6 +624,7 @@ impl Drop for LiveCluster {
 fn node_loop(
     id: NodeId,
     n: usize,
+    groups: usize,
     mode: Mode,
     timers: LiveTimers,
     rx: Receiver<LiveIn>,
@@ -430,19 +637,25 @@ fn node_loop(
     pre_vote: bool,
     read_path: ReadPath,
     lease_drift_ms: f64,
-) -> NodeReport {
-    let mut node = Node::new(id, n, mode);
-    node.set_snapshot_every(snapshot_every);
-    node.set_pre_vote(pre_vote);
-    node.set_read_path(read_path);
-    node.set_lease_duration_ms(
-        (timers.election_lo.as_secs_f64() * 1000.0 - lease_drift_ms).max(0.0),
-    );
-    if apply_tx.is_some() {
-        // replica state lives on the applier thread — capture goes through
-        // the SnapshotRequest / SnapshotReady handshake
-        node.set_snapshot_capture(SnapshotCapture::Driver);
-    }
+) -> Vec<NodeReport> {
+    // one replica per group, all hosted on this thread (Multi-Raft layout)
+    let mut nodes: Vec<Node> = (0..groups)
+        .map(|_| {
+            let mut node = Node::new(id, n, mode.clone());
+            node.set_snapshot_every(snapshot_every);
+            node.set_pre_vote(pre_vote);
+            node.set_read_path(read_path);
+            node.set_lease_duration_ms(
+                (timers.election_lo.as_secs_f64() * 1000.0 - lease_drift_ms).max(0.0),
+            );
+            if apply_tx.is_some() {
+                // replica state lives on the applier thread — capture goes
+                // through the SnapshotRequest / SnapshotReady handshake
+                node.set_snapshot_capture(SnapshotCapture::Driver);
+            }
+            node
+        })
+        .collect();
     // the node's sans-io clock: ms since this thread started (all lease
     // decisions are relative, so per-node epochs are fine)
     let epoch = Instant::now();
@@ -454,69 +667,95 @@ fn node_loop(
         Duration::from_secs_f64(rng.range_f64(lo, hi))
     };
 
-    let mut election_deadline = Instant::now() + rand_election(&mut rng);
-    let mut heartbeat_deadline: Option<Instant> = None;
+    let mut election_deadline: Vec<Instant> =
+        (0..groups).map(|_| Instant::now() + rand_election(&mut rng)).collect();
+    let mut heartbeat_deadline: Vec<Option<Instant>> = vec![None; groups];
 
-    // committed batches are applied off-thread, in commit order
-    let applier = apply_tx.map(|service| Applier::spawn(id, service));
-    let mut committed = 0usize;
+    // committed batches are applied off-thread, in commit order, one
+    // applier (and one replica state) per group
+    let appliers: Vec<Option<Applier>> = (0..groups)
+        .map(|g| apply_tx.clone().map(|service| Applier::spawn(id, g, service)))
+        .collect();
+    let mut committed = vec![0usize; groups];
 
-    let handle_outputs = |outs: Vec<Output>,
-                              applier: &Option<Applier>,
-                              committed: &mut usize,
-                              election_deadline: &mut Instant,
-                              heartbeat_deadline: &mut Option<Instant>,
+    let handle_outputs = |g: GroupId,
+                              outs: Vec<Output>,
+                              appliers: &[Option<Applier>],
+                              committed: &mut [usize],
+                              election_deadline: &mut [Instant],
+                              heartbeat_deadline: &mut [Option<Instant>],
                               rng: &mut Rng| {
         for o in outs {
             match o {
                 Output::Send(to, msg) => {
-                    // the live nemesis hook: a cut link swallows the message
+                    // the live nemesis hook: a cut (physical) link swallows
+                    // the message whichever group it belongs to
                     if links.allowed(id, to) {
-                        let _ = peers[to].send(LiveIn::Rpc(id, msg));
+                        let _ = peers[to].send(LiveIn::Rpc(id, Envelope::new(g, msg)));
                     }
                 }
                 Output::ResetElectionTimer => {
-                    *election_deadline = Instant::now() + rand_election(rng);
+                    election_deadline[g] = Instant::now() + rand_election(rng);
                 }
                 Output::StartHeartbeat => {
-                    *heartbeat_deadline = Some(Instant::now() + timers.heartbeat);
+                    heartbeat_deadline[g] = Some(Instant::now() + timers.heartbeat);
                 }
                 Output::StopHeartbeat => {
-                    *heartbeat_deadline = None;
+                    heartbeat_deadline[g] = None;
                 }
                 Output::BecameLeader { term } => {
-                    let _ = events.send(LiveEvent::BecameLeader { node: id, term });
+                    let _ =
+                        events.send(LiveEvent::BecameLeader { group: g, node: id, term });
                 }
                 Output::RoundCommitted { index, repliers, .. } => {
-                    let _ = events.send(LiveEvent::RoundCommitted { node: id, index, repliers });
+                    let _ = events.send(LiveEvent::RoundCommitted {
+                        group: g,
+                        node: id,
+                        index,
+                        repliers,
+                    });
                 }
                 Output::Commit(Entry { index, payload, .. }) => {
-                    *committed += 1;
-                    if let (Payload::Ycsb(batch), Some(a)) = (&payload, applier) {
+                    committed[g] += 1;
+                    if let (Payload::Ycsb(batch), Some(a)) = (&payload, &appliers[g]) {
                         let _ = a.tx.send(ApplierMsg::Batch(Arc::clone(batch)));
                     }
-                    let _ = events.send(LiveEvent::Committed { node: id, index, digest: None });
+                    let _ = events.send(LiveEvent::Committed {
+                        group: g,
+                        node: id,
+                        index,
+                        digest: None,
+                    });
                 }
                 Output::SnapshotRequest { through } => {
                     // Driver capture: ride the applier queue so the state is
                     // captured exactly after the commits the blob covers —
                     // the consensus thread never waits.
-                    if let Some(a) = applier {
-                        let _ = a
-                            .tx
-                            .send(ApplierMsg::Capture { through, reply: my_inbox.clone() });
+                    if let Some(a) = &appliers[g] {
+                        let _ = a.tx.send(ApplierMsg::Capture {
+                            group: g,
+                            through,
+                            reply: my_inbox.clone(),
+                        });
                     }
                 }
                 Output::SnapshotInstalled(blob) => {
-                    if let (AppState::Slots(s), Some(a)) = (&blob.app, applier) {
+                    if let (AppState::Slots(s), Some(a)) = (&blob.app, &appliers[g]) {
                         let _ = a.tx.send(ApplierMsg::Install(s.to_vec()));
                     }
                 }
                 Output::ReadReady { id: rid, index, lease } => {
-                    let _ = events.send(LiveEvent::ReadReady { node: id, id: rid, index, lease });
+                    let _ = events.send(LiveEvent::ReadReady {
+                        group: g,
+                        node: id,
+                        id: rid,
+                        index,
+                        lease,
+                    });
                 }
                 Output::ReadFailed { id: rid } => {
-                    let _ = events.send(LiveEvent::ReadFailed { node: id, id: rid });
+                    let _ =
+                        events.send(LiveEvent::ReadFailed { group: g, node: id, id: rid });
                 }
                 Output::SteppedDown | Output::ProposalRejected(_) => {}
             }
@@ -524,103 +763,127 @@ fn node_loop(
     };
 
     loop {
-        // next wakeup: the earlier of election / heartbeat deadline
+        // next wakeup: the earliest election / heartbeat deadline across
+        // every hosted group
         let now = Instant::now();
-        let mut next = election_deadline;
-        if let Some(hb) = heartbeat_deadline {
-            if hb < next {
-                next = hb;
+        let mut next = election_deadline[0];
+        for g in 0..groups {
+            if election_deadline[g] < next {
+                next = election_deadline[g];
+            }
+            if let Some(hb) = heartbeat_deadline[g] {
+                if hb < next {
+                    next = hb;
+                }
             }
         }
         let wait = next.saturating_duration_since(now);
-        node.observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
+        let now_ms = epoch.elapsed().as_secs_f64() * 1000.0;
+        for node in nodes.iter_mut() {
+            node.observe_time(now_ms);
+        }
         match rx.recv_timeout(wait) {
             Ok(LiveIn::Stop) => break,
-            Ok(LiveIn::Rpc(from, msg)) => {
-                node.observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
-                let outs = node.step(Input::Receive(from, msg));
+            Ok(LiveIn::Rpc(from, env)) => {
+                let g = env.group;
+                debug_assert!(g < groups, "envelope for unhosted group {g}");
+                nodes[g].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
+                let outs = nodes[g].step(Input::Receive(from, env.msg));
                 handle_outputs(
-                    outs, &applier, &mut committed,
+                    g, outs, &appliers, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                 );
             }
-            Ok(LiveIn::Propose(payload)) => {
-                let outs = node.step(Input::Propose(payload));
+            Ok(LiveIn::Propose { group, payload }) => {
+                let outs = nodes[group].step(Input::Propose(payload));
                 handle_outputs(
-                    outs, &applier, &mut committed,
+                    group, outs, &appliers, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                 );
             }
-            Ok(LiveIn::Read(id)) => {
-                node.observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
-                let outs = node.step(Input::Read { id });
+            Ok(LiveIn::Read { group, id: rid }) => {
+                nodes[group].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
+                let outs = nodes[group].step(Input::Read { id: rid });
                 handle_outputs(
-                    outs, &applier, &mut committed,
+                    group, outs, &appliers, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                 );
             }
-            Ok(LiveIn::ForceElection) => {
-                let outs = node.step(Input::ElectionTimeout);
+            Ok(LiveIn::ForceElection(group)) => {
+                let outs = nodes[group].step(Input::ElectionTimeout);
                 handle_outputs(
-                    outs, &applier, &mut committed,
+                    group, outs, &appliers, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                 );
             }
-            Ok(LiveIn::SnapshotReady { through, state }) => {
-                node.complete_snapshot(through, AppState::Slots(Arc::new(state)));
+            Ok(LiveIn::SnapshotReady { group, through, state }) => {
+                nodes[group].complete_snapshot(through, AppState::Slots(Arc::new(state)));
             }
             Err(RecvTimeoutError::Timeout) => {
                 let now = Instant::now();
-                node.observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
-                if let Some(hb) = heartbeat_deadline {
-                    if now >= hb {
-                        heartbeat_deadline = Some(now + timers.heartbeat);
-                        let outs = node.step(Input::HeartbeatTimeout);
+                let now_ms = epoch.elapsed().as_secs_f64() * 1000.0;
+                for g in 0..groups {
+                    nodes[g].observe_time(now_ms);
+                    if let Some(hb) = heartbeat_deadline[g] {
+                        if now >= hb {
+                            heartbeat_deadline[g] = Some(now + timers.heartbeat);
+                            let outs = nodes[g].step(Input::HeartbeatTimeout);
+                            handle_outputs(
+                                g, outs, &appliers, &mut committed,
+                                &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                            );
+                        }
+                    }
+                    if now >= election_deadline[g] && nodes[g].role() != Role::Leader {
+                        election_deadline[g] = now + rand_election(&mut rng);
+                        let outs = nodes[g].step(Input::ElectionTimeout);
                         handle_outputs(
-                            outs, &applier, &mut committed,
+                            g, outs, &appliers, &mut committed,
                             &mut election_deadline, &mut heartbeat_deadline, &mut rng,
                         );
+                    } else if now >= election_deadline[g] {
+                        // leaders don't run election timers; push it out
+                        election_deadline[g] = now + rand_election(&mut rng);
                     }
-                }
-                if now >= election_deadline && node.role() != Role::Leader {
-                    election_deadline = now + rand_election(&mut rng);
-                    let outs = node.step(Input::ElectionTimeout);
-                    handle_outputs(
-                        outs, &applier, &mut committed,
-                        &mut election_deadline, &mut heartbeat_deadline, &mut rng,
-                    );
-                } else if now >= election_deadline {
-                    // leaders don't run election timers; push it out
-                    election_deadline = now + rand_election(&mut rng);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
 
-    // drain the applier: close its queue and collect the final digest
-    let (applies, final_digest) = match applier {
-        Some(Applier { tx, handle }) => {
-            drop(tx);
-            handle.join().unwrap_or((0, None))
-        }
-        None => (0, None),
-    };
-    NodeReport {
-        id,
-        commit_index: node.commit_index(),
-        final_digest,
-        committed_entries: committed,
-        applies,
-        last_compacted: node.log().last_compacted_index(),
-        term: node.term(),
-        elections_started: node.elections_started(),
-    }
+    // drain the appliers: close their queues and collect the final digests
+    nodes
+        .into_iter()
+        .zip(appliers)
+        .zip(committed)
+        .enumerate()
+        .map(|(g, ((node, applier), committed))| {
+            let (applies, final_digest) = match applier {
+                Some(Applier { tx, handle }) => {
+                    drop(tx);
+                    handle.join().unwrap_or((0, None))
+                }
+                None => (0, None),
+            };
+            NodeReport {
+                group: g,
+                id,
+                commit_index: node.commit_index(),
+                final_digest,
+                committed_entries: committed,
+                applies,
+                last_compacted: node.log().last_compacted_index(),
+                term: node.term(),
+                elections_started: node.elections_started(),
+            }
+        })
+        .collect()
 }
 
-/// Convenience: map of per-node final digests (for convergence assertions).
-pub fn digest_map(reports: &[NodeReport]) -> HashMap<NodeId, Option<[u32; 2]>> {
-    reports.iter().map(|r| (r.id, r.final_digest)).collect()
+/// Convenience: map of per-(group, node) final digests (for convergence
+/// assertions; unsharded clusters key everything under group 0).
+pub fn digest_map(reports: &[NodeReport]) -> HashMap<(GroupId, NodeId), Option<[u32; 2]>> {
+    reports.iter().map(|r| ((r.group, r.id), r.final_digest)).collect()
 }
 
 #[cfg(test)]
@@ -639,6 +902,7 @@ mod tests {
         assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
         let reports = cluster.shutdown();
         assert!(reports.iter().any(|r| r.commit_index >= 2));
+        assert!(reports.iter().all(|r| r.group == 0), "unsharded runs report group 0");
     }
 
     #[test]
@@ -868,5 +1132,89 @@ mod tests {
             digests.windows(2).all(|w| w[0] == w[1]),
             "replica digests diverge: {digests:?}"
         );
+    }
+
+    #[test]
+    fn live_sharded_groups_commit_independently() {
+        // Two groups multiplexed over the same five threads and one link
+        // table: per-group leaders, per-group commits, per-group reports.
+        let cluster = LiveCluster::start_sharded(
+            5,
+            2,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            None,
+            57,
+            None,
+            false,
+            ReadPath::Log,
+            40.0,
+        );
+        // spread initial leadership: group 0 at node 0, group 1 at node 1
+        cluster.force_election_in(0, 0);
+        cluster.force_election_in(1, 1);
+        let leaders = cluster.wait_for_leaders(Duration::from_secs(5)).expect("no leaders");
+        cluster.propose_in(0, leaders[0], Payload::Bytes(Arc::new(vec![0xA])));
+        cluster.propose_in(1, leaders[1], Payload::Bytes(Arc::new(vec![0xB])));
+        assert!(
+            cluster.wait_for_round_all(2, Duration::from_secs(10)),
+            "both groups must commit their entries"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        assert_eq!(reports.len(), 10, "5 nodes × 2 groups");
+        for g in 0..2 {
+            let caught_up = reports
+                .iter()
+                .filter(|r| r.group == g && r.commit_index >= 2)
+                .count();
+            assert!(caught_up >= 3, "group {g}: quorum must commit: {reports:?}");
+        }
+        let map = digest_map(&reports);
+        assert_eq!(map.len(), 10, "per-(group, node) keys must not collide");
+    }
+
+    #[test]
+    fn live_sharded_partition_cuts_every_group() {
+        // The link table is physical: isolating a node partitions it in
+        // every group at once, and both groups fail over independently.
+        let cluster = LiveCluster::start_sharded(
+            5,
+            2,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            None,
+            61,
+            None,
+            true, // PreVote bounds the churn
+            ReadPath::Log,
+            40.0,
+        );
+        cluster.force_election_in(0, 0);
+        cluster.force_election_in(1, 0); // both groups led by node 0
+        let leaders = cluster.wait_for_leaders(Duration::from_secs(5)).expect("no leaders");
+        assert_eq!(leaders, vec![0, 0]);
+        cluster.isolate(0);
+        // scan the shared stream until both groups elected around the cut
+        // node (one consumer — sequential waits would race each other)
+        let deadline = Instant::now() + Duration::from_secs(15);
+        let mut failover: Vec<Option<NodeId>> = vec![None; 2];
+        while failover.iter().any(Option::is_none) {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .expect("failover timed out");
+            match cluster.events.recv_timeout(remaining) {
+                Ok(LiveEvent::BecameLeader { group, node, .. }) if node != 0 => {
+                    failover[group] = Some(node);
+                }
+                Ok(_) => continue,
+                Err(e) => panic!("failover timed out: {e}"),
+            }
+        }
+        for (g, l) in failover.iter().enumerate() {
+            assert_ne!(l.unwrap(), 0, "group {g} must elect around the cut node");
+        }
+        cluster.heal();
+        cluster.shutdown();
     }
 }

@@ -14,6 +14,14 @@
 //! spurious elections. Snapshot capture rides the applier's own queue (so
 //! it sees exactly the committed prefix it covers) and answers back over
 //! the node's inbox; see `docs/ARCHITECTURE.md` §"Snapshotting".
+//!
+//! Sharded clusters ([`LiveCluster::start_sharded`]) multiplex G consensus
+//! groups over the same n threads and the one link table: every consensus
+//! thread hosts one `consensus::Node` per group (with per-group timers and
+//! its own applier), and every RPC crosses the channel inside a
+//! [`crate::consensus::message::Envelope`] naming its group — so a cut
+//! physical link partitions every group at once, like a real switch
+//! failure. Reports come back per (group, node): [`NodeReport::group`].
 
 pub mod apply;
 pub mod cluster;

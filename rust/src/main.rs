@@ -55,6 +55,7 @@ USAGE:
   cabinet sim [--proto raft|cabinet|hqc] [--n N] [--t T] [--het|--hom]
               [--rounds R] [--workload A..F|tpcc] [--delay d0|d1|d2|d3|d4]
               [--seed S] [--pipeline D] [--snapshot-every E] [--pre-vote]
+              [--groups G] [--shard-by hash|warehouse]
               [--read-path log|readindex|lease] [--lease-drift-ms M]
               [--nemesis \"2000..6000=leader;8000..20000=followers:2\"]
               [--nemesis-drop P] [--nemesis-dup P] [--nemesis-reorder P]
@@ -104,6 +105,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig21" => vec![figures::fig21_compaction(scale)],
         "fig22" => vec![figures::fig22_partitions(scale)],
         "fig23" => vec![figures::fig23_read_paths(scale)],
+        "fig24" => vec![figures::fig24_sharding(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -149,6 +151,17 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         }
         if has_flag(&mut args, "--pre-vote") {
             c.pre_vote = true;
+        }
+        if let Some(g) = flag(&mut args, "--groups") {
+            // validated below (with --shard-by and --workload settled) via
+            // the shared SimConfig::validate_sharding
+            c.groups = g.parse()?;
+        }
+        if let Some(sb) = flag(&mut args, "--shard-by") {
+            c.shard_by = Some(
+                cabinet::workload::ShardBy::from_name(&sb)
+                    .with_context(|| format!("unknown --shard-by {sb} (hash|warehouse)"))?,
+            );
         }
         if let Some(rp) = flag(&mut args, "--read-path") {
             c.read_path = ReadPath::from_name(&rp)
@@ -210,6 +223,11 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
                 other => bail!("unknown delay {other}"),
             };
         }
+        // sharding cross-checks — the one shared implementation, run after
+        // --groups/--shard-by/--workload/--proto are all settled
+        if let Err(e) = c.validate_sharding() {
+            bail!("{e}");
+        }
         c.digest_mode = DigestMode::Sample;
         c
     };
@@ -232,6 +250,24 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms
     );
     println!("elections:  {} ({} candidacies, max term {})", r.elections, r.elections_started, r.terms_advanced);
+    if config.groups > 1 {
+        println!(
+            "sharding:   {} groups   agg wall tput {} ops/s",
+            config.groups,
+            cabinet::bench::fmt_tps(r.agg_wall_tput_ops_s())
+        );
+        for g in &r.group_stats {
+            println!(
+                "  group {}: {} rounds  {} ops/s wall  leader {}  term {}  {} elections",
+                g.group,
+                g.rounds,
+                cabinet::bench::fmt_tps(g.wall_tput_ops_s),
+                g.leader.map(|l| l.to_string()).unwrap_or_else(|| "-".into()),
+                g.term,
+                g.elections
+            );
+        }
+    }
     if r.reads_served > 0 {
         println!(
             "reads:      {} served ({} ops; {} via lease, {} readindex rounds, {} retried)",
@@ -251,11 +287,15 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
             stats.cut, stats.dropped, stats.duplicated, stats.reordered
         );
     }
-    if let Some(log) = &r.safety {
+    for (group, log) in r.safety_logs() {
         let report = cabinet::bench::safety_check(log);
+        let scope = match group {
+            Some(g) => format!("group {g}"),
+            None => "cluster".into(),
+        };
         if report.is_clean() {
             println!(
-                "safety:     OK ({} commits, {} decisions, {} leader terms, {} reads)",
+                "safety:     {scope} OK ({} commits, {} decisions, {} leader terms, {} reads)",
                 report.commits_checked,
                 report.decisions,
                 report.leaders_checked,
@@ -263,9 +303,9 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
             );
         } else {
             for v in &report.violations {
-                eprintln!("SAFETY VIOLATION: {v}");
+                eprintln!("SAFETY VIOLATION [{scope}]: {v}");
             }
-            bail!("{} safety violations detected", report.violations.len());
+            bail!("{} safety violations detected in {scope}", report.violations.len());
         }
     }
     if config.snapshot_every.is_some() {

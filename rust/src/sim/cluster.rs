@@ -1,32 +1,42 @@
-//! The simulated cluster: drives n sans-io consensus nodes (or the HQC
-//! baseline) over the deterministic event queue, reproducing the paper's
-//! benchmark-round pipeline (Fig. 7): the leader batches a workload round,
-//! ships it via AppendEntries, followers *execute the transmitted workload*
-//! and reply, and the round commits at the quorum rule's threshold.
+//! The simulated cluster: drives G consensus groups of n sans-io nodes (or
+//! the HQC baseline) over one deterministic event queue, reproducing the
+//! paper's benchmark-round pipeline (Fig. 7): each group's leader batches a
+//! workload round, ships it via AppendEntries, followers *execute the
+//! transmitted workload* and reply, and the round commits at the quorum
+//! rule's threshold.
+//!
+//! This module owns the experiment surface — [`SimConfig`] in,
+//! [`SimResult`] out — and the thin scheduler in [`run`]: it builds one
+//! `sim::group::GroupEngine` per group (`SimConfig::groups`),
+//! multiplexes their events through the shared [`EventQueue`] / delay model
+//! / nemesis fabric, and merges the per-group results into aggregate
+//! rollups ([`GroupStat`], [`SimResult::agg_wall_tput_ops_s`]). The drive
+//! loops themselves — lock-step and pipelined windows, read control,
+//! snapshot/restart handling — live in `sim::group`. With `groups = 1` the
+//! scheduler steps a single engine whose behavior is bit-for-bit the
+//! historical single-group driver (same digests per seed; pinned by the
+//! replay-determinism suite).
 //!
 //! Virtual-time calibration (DESIGN.md §6): follower response time =
 //! link delay (DelayModel) + RPC processing + batch apply cost / zone speed
 //! (× contention). Batch apply cost comes from the same cost model as the
 //! AOT kernels (`storage::doc` / `storage::rel`).
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::bench::metrics::percentile_sorted;
 use crate::consensus::hqc::{HqcMsg, HqcNode, HqcOutput, HqcTopology};
-use crate::consensus::message::{Message, NodeId, Payload};
-use crate::consensus::node::{Input, Mode, Node, Output, Role};
+use crate::consensus::message::NodeId;
 pub use crate::consensus::node::ReadPath;
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec};
-use crate::net::nemesis::{Fate, Nemesis, NemesisSpec, NemesisStats};
+use crate::net::nemesis::{NemesisSpec, NemesisStats};
 use crate::net::rng::Rng;
 use crate::net::topology::ZoneAlloc;
 use crate::sim::event::EventQueue;
-use crate::storage::{DocStore, RelStore};
+use crate::sim::group::{GroupEngine, GroupEv, GroupOutcome, WorkloadDriver};
 use crate::util::Fnv64;
-use crate::workload::ycsb::{OP_READ, OP_SCAN};
-use crate::workload::{TpccGen, Workload, YcsbBatch, YcsbGen};
+use crate::workload::{ShardBy, Workload};
 
 /// Which consensus protocol the cluster runs.
 #[derive(Clone, Debug)]
@@ -67,6 +77,14 @@ impl WorkloadSpec {
     }
     pub fn tpcc2k() -> Self {
         WorkloadSpec::Tpcc { batch: 2000, warehouses: 10 }
+    }
+
+    /// The shard dimension this workload partitions on when sharded.
+    pub fn default_shard_by(&self) -> ShardBy {
+        match self {
+            WorkloadSpec::Ycsb { .. } => ShardBy::KeyHash,
+            WorkloadSpec::Tpcc { .. } => ShardBy::Warehouse,
+        }
     }
 }
 
@@ -123,21 +141,27 @@ pub struct SimConfig {
     pub rpc_proc_ms: f64,
     /// P2 ablation: freeze the initial weight assignment (no re-dealing).
     pub static_weights: bool,
-    /// Max replication rounds the leader keeps in flight. 1 = the paper's
-    /// lock-step benchmark pipeline (Fig. 7); >1 enables the pipelined
-    /// driver, which overlaps replication of consecutive batches.
+    /// Max replication rounds each group's leader keeps in flight. 1 = the
+    /// paper's lock-step benchmark pipeline (Fig. 7); >1 enables the
+    /// pipelined window, which overlaps replication of consecutive batches.
     pub pipeline: usize,
     /// Snapshot/compaction: every node takes a snapshot (and truncates its
     /// log prefix) every this many committed entries. None = unbounded log
     /// (the historical behavior).
     pub snapshot_every: Option<u64>,
-    /// Optional kill-and-restart of one follower (Fig. 21 scenario).
+    /// Optional kill-and-restart of one follower (Fig. 21 scenario),
+    /// applied in every group.
     pub restart: Option<RestartSpec>,
     /// Adversarial network schedule (partitions, loss, duplication,
-    /// reordering). None = the historical clean network. The nemesis draws
-    /// from its own forked RNG stream, so enabling it never perturbs the
-    /// delay/timer/kill streams.
+    /// reordering). None = the historical clean network. Each affected
+    /// group's nemesis draws from its own forked RNG stream, so enabling it
+    /// never perturbs the delay/timer/kill streams.
     pub nemesis: Option<NemesisSpec>,
+    /// Partition scope for the nemesis in a sharded run: `None` = every
+    /// group runs the schedule (all-group scope, and the only sensible
+    /// value when `groups == 1`); `Some(gs)` = only the listed group
+    /// indices do (per-group scope — e.g. a per-shard partition window).
+    pub nemesis_groups: Option<Vec<usize>>,
     /// PreVote (Raft §9.6 adapted to Cabinet's n − t election quorum) on
     /// every node. Off by default — the historical election behavior.
     pub pre_vote: bool,
@@ -152,6 +176,16 @@ pub struct SimConfig {
     /// Clock-drift margin subtracted from the minimum election timeout to
     /// bound the leader lease (`lease` read path only).
     pub lease_drift_ms: f64,
+    /// Number of independent consensus groups sharing the fabric (Multi-Raft
+    /// style: every physical node hosts a replica of every group). 1 = the
+    /// historical single-group deployment, bit-for-bit. Each group
+    /// replicates only its own workload shard — see `shard_by`.
+    pub groups: usize,
+    /// Shard dimension for `groups > 1`: hash-partitioned YCSB keys or
+    /// range-partitioned TPC-C warehouses. `None` = pick by workload kind
+    /// ([`WorkloadSpec::default_shard_by`]); a mismatched explicit choice is
+    /// rejected at config parse.
+    pub shard_by: Option<ShardBy>,
 }
 
 /// One linearizable read served through a non-log read path — the evidence
@@ -175,7 +209,9 @@ pub struct ReadRecord {
 /// Evidence collected for the deterministic safety checker
 /// (`bench::safety::check`): every `Output::Commit` each node emitted, in
 /// emission order, every `Output::BecameLeader` observation, the
-/// write-completion timeline, and every served linearizable read.
+/// write-completion timeline, and every served linearizable read. Sharded
+/// runs collect one log per group (consensus is per-group; the checker runs
+/// group by group).
 #[derive(Clone, Debug)]
 pub struct SafetyLog {
     /// Per node: (log index, term) of every committed entry, in commit order.
@@ -227,10 +263,13 @@ impl SimConfig {
             snapshot_every: None,
             restart: None,
             nemesis: None,
+            nemesis_groups: None,
             pre_vote: false,
             track_safety: false,
             read_path: ReadPath::Log,
             lease_drift_ms: 50.0,
+            groups: 1,
+            shard_by: None,
         }
     }
 
@@ -243,6 +282,55 @@ impl SimConfig {
     /// every node-construction site — fresh starts and restarts must agree.
     pub fn lease_duration_ms(&self) -> f64 {
         (self.election_timeout_ms.0 - self.lease_drift_ms).max(0.0)
+    }
+
+    /// The effective shard dimension: the explicit `shard_by` or the
+    /// workload's natural one.
+    pub fn effective_shard_by(&self) -> ShardBy {
+        self.shard_by.unwrap_or_else(|| self.workload.default_shard_by())
+    }
+
+    /// Validate the sharding layout. One implementation for every front
+    /// end — the TOML parser and the CLI both call this, so the two paths
+    /// cannot drift apart. Call after `groups`, `shard_by`, `protocol` and
+    /// `workload` are all settled.
+    pub fn validate_sharding(&self) -> Result<(), String> {
+        let groups = self.groups;
+        if groups < 1 {
+            return Err(format!("groups must be >= 1, got {groups}"));
+        }
+        if groups > self.n() {
+            return Err(format!(
+                "groups ({groups}) must not exceed n ({}) — every node hosts one replica \
+                 per group",
+                self.n()
+            ));
+        }
+        if groups > 1 && matches!(self.protocol, Protocol::Hqc { .. }) {
+            return Err("sharding (groups > 1) requires protocol raft or cabinet".into());
+        }
+        match (self.shard_by, &self.workload) {
+            (Some(ShardBy::Warehouse), WorkloadSpec::Ycsb { .. }) => {
+                return Err("shard_by = \"warehouse\" requires the tpcc workload".into())
+            }
+            (Some(ShardBy::KeyHash), WorkloadSpec::Tpcc { .. }) => {
+                return Err("shard_by = \"hash\" requires a ycsb workload".into())
+            }
+            _ => {}
+        }
+        match &self.workload {
+            WorkloadSpec::Ycsb { records, .. } if groups as u64 > *records => Err(format!(
+                "groups ({groups}) exceed the YCSB key count ({records}) — shards would \
+                 be empty"
+            )),
+            WorkloadSpec::Tpcc { warehouses, .. } if groups as u32 > *warehouses => {
+                Err(format!(
+                    "groups ({groups}) exceed the TPC-C warehouse count ({warehouses}) — \
+                     shards would be empty"
+                ))
+            }
+            _ => Ok(()),
+        }
     }
 }
 
@@ -264,7 +352,35 @@ pub struct RoundStat {
     pub repliers: usize,
 }
 
-/// Aggregated run result.
+/// Per-group rollup of a sharded run (empty on single-group runs): the
+/// group's committed rounds and ops, its wall-clock throughput over the
+/// shared virtual timeline, and its final leader / term / election counts —
+/// the "per-shard leaders" evidence.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupStat {
+    pub group: usize,
+    pub rounds: u64,
+    pub ops: u64,
+    /// The group's combined wall-clock throughput (fast-path read ops
+    /// included) — the same definition as the aggregate
+    /// [`SimResult::agg_wall_tput_ops_s`], so the per-group rows are a
+    /// consistent breakdown of it.
+    pub wall_tput_ops_s: f64,
+    /// Leader of the group when the run ended (None: group leaderless).
+    pub leader: Option<NodeId>,
+    /// Highest term the group reached.
+    pub term: u64,
+    pub elections: u64,
+    pub elections_started: u64,
+    /// The group's own commit-sequence digest (per-group replay pinning).
+    pub commit_digest: u64,
+}
+
+/// Aggregated run result. For `groups = 1` the flat fields are bit-for-bit
+/// the historical single-group result; for `groups > 1` they are aggregate
+/// rollups over all groups (`rounds` concatenates the per-group round
+/// series in group order) and `group_stats` / `group_safety` carry the
+/// per-group breakdown.
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub label: String,
@@ -277,7 +393,7 @@ pub struct SimResult {
     pub p99_latency_ms: f64,
     /// Replica digest convergence (None when DigestMode::Off).
     pub digests_match: Option<bool>,
-    /// Leader elections observed (≥ 1: the bootstrap election).
+    /// Leader elections observed (≥ 1 per group: the bootstrap election).
     pub elections: u64,
     /// Snapshots taken across all nodes (0 when compaction is off; resets
     /// with a node on restart, so this is a lower bound under `restart`).
@@ -294,11 +410,18 @@ pub struct SimResult {
     /// Highest term any node reached by the end of the run — the
     /// term-churn metric PreVote bounds.
     pub terms_advanced: u64,
-    /// Nemesis counters (None when no nemesis was configured).
+    /// Nemesis counters (None when no nemesis was configured; summed across
+    /// groups on sharded runs).
     pub nemesis_stats: Option<NemesisStats>,
     /// Safety evidence for `bench::safety::check` (None unless
-    /// `track_safety` was set).
+    /// `track_safety` was set; on sharded runs per-group evidence lives in
+    /// `group_safety` instead).
     pub safety: Option<SafetyLog>,
+    /// Per-group safety evidence on sharded runs (`groups > 1` with
+    /// `track_safety`) — run the checker on each entry.
+    pub group_safety: Vec<SafetyLog>,
+    /// Per-group rollups (empty on single-group runs).
+    pub group_stats: Vec<GroupStat>,
     /// Read requests served through a non-log read path (0 on `log` runs:
     /// reads then ride the replicated batches).
     pub reads_served: u64,
@@ -319,7 +442,12 @@ pub struct SimResult {
 }
 
 impl SimResult {
-    fn from_rounds(label: String, rounds: Vec<RoundStat>, digests: Option<bool>, elections: u64) -> Self {
+    pub(crate) fn from_rounds(
+        label: String,
+        rounds: Vec<RoundStat>,
+        digests: Option<bool>,
+        elections: u64,
+    ) -> Self {
         let total_ops: usize = rounds.iter().map(|r| r.ops).sum();
         let total_ms: f64 = rounds.iter().map(|r| r.latency_ms).sum();
         let mut lats: Vec<f64> = rounds.iter().map(|r| r.latency_ms).collect();
@@ -345,6 +473,8 @@ impl SimResult {
             terms_advanced: 0,
             nemesis_stats: None,
             safety: None,
+            group_safety: Vec::new(),
+            group_stats: Vec::new(),
             reads_served: 0,
             read_ops_served: 0,
             lease_reads: 0,
@@ -403,9 +533,30 @@ impl SimResult {
         (ops as u64 + self.read_ops_served) as f64 / (span_ms / 1000.0)
     }
 
+    /// Aggregate wall-clock throughput across all groups (ops/s): every
+    /// group's committed (and fast-path read) ops over the union of their
+    /// spans on the shared virtual timeline — the Fig. 24 scaling metric.
+    /// On single-group runs this is exactly
+    /// [`SimResult::combined_wall_tput_ops_s`]; on sharded runs the
+    /// per-group round series are already concatenated into `rounds`, so
+    /// the same union-span computation yields the aggregate.
+    pub fn agg_wall_tput_ops_s(&self) -> f64 {
+        self.combined_wall_tput_ops_s()
+    }
+
+    /// Every safety log this run collected, with the group it belongs to
+    /// (`None` = the single-group log): run `bench::safety::check` on each.
+    pub fn safety_logs(&self) -> Vec<(Option<usize>, &SafetyLog)> {
+        let mut logs: Vec<(Option<usize>, &SafetyLog)> =
+            self.safety.iter().map(|l| (None, l)).collect();
+        logs.extend(self.group_safety.iter().enumerate().map(|(g, l)| (Some(g), l)));
+        logs
+    }
+
     /// Bit-exact digest of the commit sequence (round numbers and the log
-    /// indices they committed at, in commit order) — the deterministic-replay
-    /// regression tests compare these across runs of the same seed.
+    /// indices they committed at, in commit order; group order on sharded
+    /// runs) — the deterministic-replay regression tests compare these
+    /// across runs of the same seed.
     pub fn commit_sequence_digest(&self) -> u64 {
         let mut h = Fnv64::new();
         for r in &self.rounds {
@@ -449,1396 +600,161 @@ impl SimResult {
             h.write_u64(self.read_p99_ms.to_bits());
             h.write_u64(self.read_done_ms.to_bits());
         }
+        // Per-group rollups fold in only on sharded runs (`group_stats` is
+        // empty for `groups = 1`), so single-group digests stay bit-identical
+        // to pre-sharding builds — the refactor's acceptance criterion.
+        for g in &self.group_stats {
+            h.write_u64(g.group as u64);
+            h.write_u64(g.rounds);
+            h.write_u64(g.ops);
+            h.write_u64(g.wall_tput_ops_s.to_bits());
+            h.write_u64(g.leader.map(|l| l as u64 + 1).unwrap_or(0));
+            h.write_u64(g.term);
+            h.write_u64(g.elections);
+            h.write_u64(g.elections_started);
+            h.write_u64(g.commit_digest);
+        }
         h.finish()
     }
 }
 
 // ---------------------------------------------------------------------------
-// Raft / Cabinet simulation
+// Raft / Cabinet simulation: the multi-group scheduler
 // ---------------------------------------------------------------------------
-
-enum Ev {
-    Deliver { to: NodeId, from: NodeId, msg: Message },
-    ElectionTimer { node: NodeId, generation: u64 },
-    HeartbeatTimer { node: NodeId, generation: u64 },
-    /// Harness: try to propose the next round at the current leader.
-    ProposeNext,
-    /// Harness: a client read request arrives at `node` (non-log paths).
-    ReadAt { id: u64, node: NodeId },
-    /// Harness: re-drive a read that has not been served yet (a forward or
-    /// grant was lost, or leadership moved mid-confirmation).
-    ReadRetry { id: u64 },
-}
-
-/// Client-side retry cadence for unserved reads (virtual ms).
-const READ_RETRY_MS: f64 = 400.0;
-/// Concurrent read requests per round on a non-log read path — an open-loop
-/// fan-out client: each round's read-only ops are split across this many
-/// parallel requests at rotated nodes (followers included), so read work is
-/// spread across the cluster instead of riding every replication round.
-const READ_FAN: u64 = 4;
-
-/// One in-flight client read request.
-struct ReadReq {
-    invoked_ms: f64,
-    /// Read ops this request carries (for throughput accounting).
-    ops: usize,
-    /// Apply cost of those ops at unit speed (charged at the serving node).
-    cost_ms: f64,
-    /// Round the request belongs to (target rotation slot).
-    round: u64,
-    /// Position in the fan (rotates the serving node).
-    k: u64,
-}
-
-/// Client-side read bookkeeping shared by both round drivers.
-#[derive(Default)]
-struct ReadCtl {
-    next_id: u64,
-    outstanding: HashMap<u64, ReadReq>,
-    latencies: Vec<f64>,
-    reads_served: u64,
-    read_ops_served: u64,
-    lease_reads: u64,
-    failures: u64,
-    /// Virtual time the last read finished (combined-throughput span end).
-    done_ms: f64,
-}
-
-impl ReadCtl {
-    /// Fan a round's read-only sub-batch out as [`READ_FAN`] concurrent
-    /// requests at rotated alive targets (followers serve local reads too),
-    /// each with a standing retry timer. The first request absorbs the
-    /// division remainder so op totals stay exact.
-    fn issue_fan(
-        &mut self,
-        q: &mut EventQueue<Ev>,
-        alive: &[bool],
-        invoked_ms: f64,
-        round: u64,
-        reads: &YcsbBatch,
-    ) {
-        let live = reads.live_ops();
-        let fan = READ_FAN.min(live.max(1) as u64);
-        let ops_per = live / fan as usize;
-        let cost_per = DocStore::estimate_cost_ms(reads) / fan as f64;
-        for k in 0..fan {
-            let ops = if k == 0 { live - ops_per * (fan as usize - 1) } else { ops_per };
-            let Some(target) = pick_read_target(round + k, alive) else { continue };
-            let id = self.next_id;
-            self.next_id += 1;
-            self.outstanding
-                .insert(id, ReadReq { invoked_ms, ops, cost_ms: cost_per, round, k });
-            q.push_after(0.0, Ev::ReadAt { id, node: target });
-            q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
-        }
-    }
-}
-
-/// Deterministic read-target rotation over the alive nodes.
-fn pick_read_target(slot: u64, alive: &[bool]) -> Option<NodeId> {
-    let n = alive.len();
-    (0..n).map(|d| (slot as usize + d) % n).find(|&i| alive[i])
-}
-
-/// Split a YCSB batch into its mutating part (replicated through the log)
-/// and its read-only part (READ + SCAN, served through the read path).
-fn split_ycsb(b: &YcsbBatch) -> (YcsbBatch, YcsbBatch) {
-    let empty = YcsbBatch {
-        workload: b.workload,
-        ops: Vec::new(),
-        keys: Vec::new(),
-        vals: Vec::new(),
-    };
-    let (mut writes, mut reads) = (empty.clone(), empty);
-    for i in 0..b.ops.len() {
-        let dst = if b.ops[i] == OP_READ || b.ops[i] == OP_SCAN { &mut reads } else { &mut writes };
-        dst.ops.push(b.ops[i]);
-        dst.keys.push(b.keys[i]);
-        dst.vals.push(b.vals[i]);
-    }
-    (writes, reads)
-}
-
-/// Generate the next round's batch; on a non-log read path, split out the
-/// read-only ops. Returns (payload, tracked batch, apply cost of the
-/// replicated part, replicated live ops, read-only sub-batch). TPC-C rounds
-/// stay fully log-replicated (transactions are read-write).
-fn next_round_batch(
-    driver: &mut WorkloadDriver,
-    read_path: ReadPath,
-) -> (Payload, Batch, f64, usize, Option<YcsbBatch>) {
-    let (payload, batch, cost, ops) = driver.next_batch();
-    if matches!(read_path, ReadPath::Log) {
-        return (payload, batch, cost, ops, None);
-    }
-    match payload {
-        Payload::Ycsb(full) => {
-            let (writes, reads) = split_ycsb(&full);
-            let writes = Arc::new(writes);
-            let cost = DocStore::estimate_cost_ms(&writes);
-            let ops = writes.live_ops();
-            let reads = (!reads.is_empty()).then_some(reads);
-            (Payload::Ycsb(writes.clone()), Batch::Ycsb(writes), cost, ops, reads)
-        }
-        other => (other, batch, cost, ops, None),
-    }
-}
-
-enum Batch {
-    Ycsb(Arc<crate::workload::YcsbBatch>),
-    Tpcc(Arc<crate::workload::TpccBatch>),
-}
-
-struct WorkloadDriver {
-    ycsb: Option<YcsbGen>,
-    tpcc: Option<TpccGen>,
-    batch_size: usize,
-    warehouses: u32,
-}
-
-impl WorkloadDriver {
-    fn new(spec: &WorkloadSpec, seed: u64) -> Self {
-        match spec {
-            WorkloadSpec::Ycsb { workload, batch, records } => WorkloadDriver {
-                ycsb: Some(YcsbGen::new(*workload, *records, seed)),
-                tpcc: None,
-                batch_size: *batch,
-                warehouses: 0,
-            },
-            WorkloadSpec::Tpcc { batch, warehouses } => {
-                debug_assert!(*warehouses >= 1, "warehouses is validated at config parse");
-                WorkloadDriver {
-                    ycsb: None,
-                    tpcc: Some(TpccGen::new(*warehouses, seed)),
-                    batch_size: *batch,
-                    warehouses: *warehouses,
-                }
-            }
-        }
-    }
-
-    /// Generate the next round's batch; returns (payload, base apply cost in
-    /// ms at unit speed, live op count).
-    fn next_batch(&mut self) -> (Payload, Batch, f64, usize) {
-        if let Some(gen) = self.ycsb.as_mut() {
-            let b = Arc::new(gen.batch(self.batch_size));
-            let cost = DocStore::estimate_cost_ms(&b);
-            let ops = b.live_ops();
-            (Payload::Ycsb(b.clone()), Batch::Ycsb(b), cost, ops)
-        } else {
-            let gen = self.tpcc.as_mut().unwrap();
-            let b = Arc::new(gen.batch(self.batch_size));
-            let cost = RelStore::estimate_cost_ms(&b, self.warehouses as usize);
-            let ops = b.live_txns();
-            (Payload::Tpcc(b.clone()), Batch::Tpcc(b), cost, ops)
-        }
-    }
-}
-
-/// Fig. 21 kill/restart schedule, shared by both round drivers: kill the
-/// highest-id non-leader follower at the start of `kill_round`, bring it
-/// back with completely fresh state (empty log, zero commit) at the start
-/// of `restart_round`. The restarted node re-arms a randomized election
-/// timer; with compaction on, catch-up goes through `InstallSnapshot`.
-#[allow(clippy::too_many_arguments)]
-fn maybe_kill_restart(
-    restart_pending: &mut Option<RestartSpec>,
-    restart_victim: &mut Option<NodeId>,
-    next_round: u64,
-    leader: NodeId,
-    config: &SimConfig,
-    mode: &Mode,
-    nodes: &mut [Node],
-    alive: &mut [bool],
-    el_gen: &mut [u64],
-    timer_rng: &mut Rng,
-    q: &mut EventQueue<Ev>,
-    safety: &mut Option<SafetyLog>,
-) {
-    let Some(rs) = *restart_pending else { return };
-    let n = nodes.len();
-    if rs.kill_round == next_round && restart_victim.is_none() {
-        if let Some(v) = (0..n).rev().find(|&i| i != leader && alive[i]) {
-            alive[v] = false;
-            *restart_victim = Some(v);
-        }
-    }
-    if rs.restart_round == next_round {
-        *restart_pending = None; // one-shot
-        if let Some(v) = *restart_victim {
-            let mut fresh = Node::new(v, n, mode.clone());
-            fresh.set_static_weights(config.static_weights);
-            fresh.set_snapshot_every(config.snapshot_every);
-            fresh.set_pre_vote(config.pre_vote);
-            fresh.set_read_path(config.read_path);
-            fresh.set_lease_duration_ms(config.lease_duration_ms());
-            if matches!(config.read_path, ReadPath::Lease) {
-                // a restarted voter may have acked a probe whose lease is
-                // still live — hold its vote for one full election timeout
-                fresh.hold_votes_until_timeout();
-            }
-            nodes[v] = fresh;
-            // a fresh node legitimately re-commits from the bottom of the
-            // log — restart its safety-evidence stream with it, or the
-            // checker would flag the replay as a commit regression
-            if let Some(sl) = safety.as_mut() {
-                sl.commits[v].clear();
-            }
-            alive[v] = true;
-            el_gen[v] += 1;
-            let d =
-                timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
-            q.push_after(d, Ev::ElectionTimer { node: v, generation: el_gen[v] });
-        }
-    }
-}
-
-/// Track the peak retained (post-compaction) log length across all nodes —
-/// the quantity `snapshot_every` bounds.
-fn sample_retained(nodes: &[Node], max_retained: &mut u64) {
-    for node in nodes {
-        *max_retained = (*max_retained).max(node.log().len() as u64);
-    }
-}
-
-/// Fold the read-client bookkeeping and node-side read counters into the
-/// result (no-op on log-path runs: everything stays zero).
-fn finish_reads(result: &mut SimResult, readctl: ReadCtl, nodes: &[Node]) {
-    result.reads_served = readctl.reads_served;
-    result.read_ops_served = readctl.read_ops_served;
-    result.lease_reads = readctl.lease_reads;
-    result.read_failures = readctl.failures;
-    result.readindex_rounds = nodes.iter().map(|nd| nd.readindex_rounds()).sum();
-    result.read_done_ms = readctl.done_ms;
-    let mut lats = readctl.latencies;
-    lats.sort_by(|a, b| a.total_cmp(b));
-    if !lats.is_empty() {
-        result.read_mean_ms = lats.iter().sum::<f64>() / lats.len() as f64;
-        result.read_p50_ms = percentile_sorted(&lats, 0.50);
-        result.read_p99_ms = percentile_sorted(&lats, 0.99);
-    }
-}
 
 /// Run one experiment; deterministic in (config, seed).
 ///
-/// `pipeline = 1` runs the paper's lock-step round driver (bit-for-bit the
+/// `pipeline = 1` runs the paper's lock-step round window (bit-for-bit the
 /// historical behavior, so every existing figure stays valid); `pipeline > 1`
-/// runs the pipelined driver, which keeps up to that many replication rounds
-/// in flight at the leader.
+/// runs the pipelined window, which keeps up to that many replication rounds
+/// in flight at each group's leader. `groups > 1` steps G independent
+/// engines over the shared fabric (one hash-/range-partitioned workload
+/// shard each) and merges their results.
 pub fn run(config: &SimConfig) -> SimResult {
     match &config.protocol {
-        Protocol::Hqc { sizes } => run_hqc(config, sizes.clone()),
-        Protocol::Raft | Protocol::Cabinet { .. } => {
-            if config.pipeline > 1 {
-                run_quorum_pipelined(config)
-            } else {
-                run_quorum(config)
-            }
+        Protocol::Hqc { sizes } => {
+            assert!(config.groups <= 1, "sharding requires raft or cabinet (validated at parse)");
+            run_hqc(config, sizes.clone())
         }
+        Protocol::Raft | Protocol::Cabinet { .. } => run_groups(config),
     }
 }
 
-#[allow(clippy::too_many_lines)]
-fn run_quorum(config: &SimConfig) -> SimResult {
-    let n = config.n();
-    let mode = match &config.protocol {
-        Protocol::Raft => Mode::Raft,
-        Protocol::Cabinet { t } => Mode::cabinet(n, *t),
-        Protocol::Hqc { .. } => unreachable!(),
-    };
+/// The thin scheduler the historical drive loops decomposed into: build one
+/// engine per group, pump the shared event queue, route each event to its
+/// group, merge. A single group reproduces the historical trajectory
+/// bit-for-bit (same loop structure, same fork order, same push order).
+fn run_groups(config: &SimConfig) -> SimResult {
+    let groups = config.groups.max(1);
+    assert!(
+        groups <= config.n(),
+        "groups ({groups}) must not exceed n ({}) — validated at config parse",
+        config.n()
+    );
     let mut root_rng = Rng::new(config.seed);
-    let mut net_rng = root_rng.fork(1);
-    let mut timer_rng = root_rng.fork(2);
-    let mut kill_rng = root_rng.fork(3);
-    let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
-    // the nemesis gets its own stream (fork 5): enabling it never perturbs
-    // the delay/timer/kill streams, and fork(5) is only drawn when present,
-    // so nemesis-free runs reproduce the historical trajectories bit-for-bit
-    let mut nemesis = config.nemesis.as_ref().map(|spec| {
-        spec.validate(n).expect("invalid nemesis spec");
-        Nemesis::new(spec.clone(), n, root_rng.fork(5))
-    });
-    let mut safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
-
-    let mut nodes: Vec<Node> = (0..n)
-        .map(|i| {
-            let mut node = Node::new(i, n, mode.clone());
-            node.set_static_weights(config.static_weights);
-            node.set_snapshot_every(config.snapshot_every);
-            node.set_pre_vote(config.pre_vote);
-            node.set_read_path(config.read_path);
-            node.set_lease_duration_ms(config.lease_duration_ms());
-            node
-        })
+    // one shared allocation for all G engines
+    let shared = Arc::new(config.clone());
+    let mut engines: Vec<GroupEngine> = (0..groups)
+        .map(|g| GroupEngine::new(&shared, g, groups, &mut root_rng))
         .collect();
-    let mut alive = vec![true; n];
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    let mut readctl = ReadCtl::default();
-
-    // timer generations (stale-timer cancellation)
-    let mut el_gen = vec![0u64; n];
-    let mut hb_gen = vec![0u64; n];
-
-    // Fig. 21 restart schedule + retained-log peak tracking
-    let mut restart_pending = config.restart;
-    let mut restart_victim: Option<NodeId> = None;
-    let mut max_retained: u64 = 0;
-
-    // digest-tracked replica stores
-    let tracked: Vec<usize> = match config.digest_mode {
-        DigestMode::Off => vec![],
-        DigestMode::Sample => vec![0, n - 1],
-        DigestMode::All => (0..n).collect(),
-    };
-    let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
-    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
-    // relational stores exist only for TPC-C runs — `warehouses >= 1` is a
-    // config-parse invariant now, not a construction-site patch-up
-    let mut rel_stores: Vec<RelStore> = if is_tpcc {
-        tracked.iter().map(|_| RelStore::new(driver.warehouses as usize)).collect()
-    } else {
-        Vec::new()
-    };
-
-    // round bookkeeping
-    let mut round: u64 = 0; // completed rounds
-    let mut stats: Vec<RoundStat> = Vec::with_capacity(config.rounds as usize);
-    let mut current_leader: Option<NodeId> = None;
-    let mut elections: u64 = 0;
-    let mut pending: Option<(u64, f64, usize, f64, Batch)> = None; // (round, start, ops, leader_apply_done, batch)
-    let mut pending_entry_index: u64 = 0;
-    let mut reconfig_queue: Vec<ReconfigSpec> = config.reconfigs.clone();
-    reconfig_queue.sort_by_key(|r| r.round);
-    let mut kills = config.kills.clone();
-    kills.sort_by_key(|k| k.round);
-    let mut kill_leader_at = config.kill_leader_at_round; // one-shot
-
-    // bootstrap: node 0 starts the first election immediately; everyone else
-    // arms a randomized election timer
-    for node in 0..n {
-        let delay = if node == 0 {
-            0.0
-        } else {
-            timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1)
-        };
-        el_gen[node] += 1;
-        q.push_after(delay, Ev::ElectionTimer { node, generation: el_gen[node] });
+    let mut q: EventQueue<GroupEv> = EventQueue::new();
+    for engine in engines.iter_mut() {
+        engine.bootstrap(&mut q);
     }
-    q.push_after(1.0, Ev::ProposeNext);
-
-    // batch cost of the in-flight round, for follower service times
-    let mut inflight_cost_ms: f64 = 0.0;
 
     // hard stop: virtual-time budget per run keeps pathological configs finite
     let max_virtual_ms = 1e9;
-
-    // reads may still be draining after the last round commits
-    while round < config.rounds || !readctl.outstanding.is_empty() {
-        let Some((now, ev)) = q.pop() else { break };
-        if now > max_virtual_ms {
-            break;
-        }
-        match ev {
-            Ev::ElectionTimer { node, generation } => {
-                if !alive[node] || generation != el_gen[node] {
-                    continue;
-                }
-                nodes[node].observe_time(now);
-                let outs = nodes[node].step(Input::ElectionTimeout);
-                handle_outputs(
-                    node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
-                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, pending_entry_index, &mut stats, &mut round,
-                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::HeartbeatTimer { node, generation } => {
-                if !alive[node] || generation != hb_gen[node] {
-                    continue;
-                }
-                nodes[node].observe_time(now);
-                let outs = nodes[node].step(Input::HeartbeatTimeout);
-                handle_outputs(
-                    node, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
-                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, pending_entry_index, &mut stats, &mut round,
-                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::Deliver { to, from, msg } => {
-                if !alive[to] {
-                    continue;
-                }
-                // follower service time: RPC processing + batch apply,
-                // scaled by zone speed and contention
-                let service = service_ms(config, to, &msg, round, inflight_cost_ms);
-                if service > 0.0 {
-                    // re-deliver after the service time so the reply
-                    // reflects the node's processing speed
-                    // (modeled by delaying the node's outputs)
-                }
-                nodes[to].observe_time(now);
-                let outs = nodes[to].step(Input::Receive(from, msg));
-                // outputs (replies) leave after the service time
-                handle_outputs_delayed(
-                    to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, pending_entry_index, &mut stats, &mut round,
-                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::ReadAt { id, node } => {
-                if !readctl.outstanding.contains_key(&id) {
-                    continue; // already served
-                }
-                if !alive[node] {
-                    continue; // the standing retry timer re-targets it
-                }
-                nodes[node].observe_time(now);
-                let service = config.rpc_proc_ms / effective_speed(config, node, round);
-                let outs = nodes[node].step(Input::Read { id });
-                handle_outputs_delayed(
-                    node, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, pending_entry_index, &mut stats, &mut round,
-                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::ReadRetry { id } => {
-                if let Some(req) = readctl.outstanding.get(&id) {
-                    let target = current_leader
-                        .filter(|&l| alive[l])
-                        .or_else(|| pick_read_target(req.round + req.k, &alive));
-                    if let Some(target) = target {
-                        q.push_after(0.0, Ev::ReadAt { id, node: target });
-                    }
-                    q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
-                }
-            }
-            Ev::ProposeNext => {
-                sample_retained(&nodes, &mut max_retained);
-                if round >= config.rounds {
-                    continue; // only reads are draining now
-                }
-                if pending.is_some() {
-                    continue; // a round is already in flight
-                }
-                let Some(leader) = current_leader.filter(|&l| alive[l]) else {
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                };
-                if nodes[leader].role() != Role::Leader {
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                }
-                let next_round = round + 1;
-
-                maybe_kill_restart(
-                    &mut restart_pending, &mut restart_victim, next_round, leader,
-                    config, &mode, &mut nodes, &mut alive, &mut el_gen,
-                    &mut timer_rng, &mut q, &mut safety,
-                );
-
-                // scheduled kills fire at the start of their round
-                while let Some(k) = kills.first() {
-                    if k.round != next_round {
-                        break;
-                    }
-                    let weights = nodes[leader].weight_assignment().to_vec();
-                    for v in k.victims(&weights, leader, &alive, &mut kill_rng) {
-                        alive[v] = false;
-                    }
-                    kills.remove(0);
-                }
-                if kill_leader_at == Some(next_round) {
-                    kill_leader_at = None; // fire exactly once
-                    alive[leader] = false;
-                    current_leader = None;
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                }
-                // scheduled reconfiguration (not counted as a round)
-                if let Some(rc) = reconfig_queue.first().copied() {
-                    if rc.round == next_round {
-                        reconfig_queue.remove(0);
-                        let outs =
-                            nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
-                        handle_outputs(
-                            leader, outs, config, &mut q, &mut net_rng, &mut timer_rng,
-                            &alive, &mut el_gen, &mut hb_gen, &mut current_leader,
-                            &mut elections, &mut pending, pending_entry_index, &mut stats,
-                            &mut round, inflight_cost_ms, &tracked, &mut doc_stores,
-                            &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
-                            &mut readctl,
-                        );
-                        q.push_after(1.0, Ev::ProposeNext);
-                        continue;
-                    }
-                }
-
-                let (payload, batch, cost_ms, ops, read_batch) =
-                    next_round_batch(&mut driver, config.read_path);
-                inflight_cost_ms = cost_ms;
-                // Fig. 7: the leader batches + coordinates; *followers*
-                // execute the workload. Leader-side work is the batching /
-                // RPC-issue overhead only.
-                let leader_speed = effective_speed(config, leader, next_round);
-                let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
-                nodes[leader].observe_time(now);
-                let outs = nodes[leader].step(Input::Propose(payload));
-                pending = Some((next_round, now, ops, leader_apply_done, batch));
-                pending_entry_index = nodes[leader].log().last_index();
-                handle_outputs(
-                    leader, outs, config, &mut q, &mut net_rng, &mut timer_rng, &alive,
-                    &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, pending_entry_index, &mut stats, &mut round,
-                    inflight_cost_ms, &tracked, &mut doc_stores, &mut rel_stores, is_tpcc,
-                    &mut nemesis, &mut safety, &mut readctl,
-                );
-                // the round's read-only ops go through the selected fast
-                // path: a fan of concurrent read requests across the
-                // cluster (followers serve local reads too)
-                if let Some(rb) = read_batch {
-                    readctl.issue_fan(&mut q, &alive, now, next_round, &rb);
-                }
-            }
-        }
-    }
-
-    // convergence check across tracked replicas
-    let digests = if tracked.is_empty() {
-        None
-    } else if is_tpcc {
-        let d0 = rel_stores[0].stream_digest();
-        Some(rel_stores.iter().all(|s| s.stream_digest() == d0))
-    } else {
-        let d0 = doc_stores[0].state_digest();
-        Some(doc_stores.iter().all(|s| s.state_digest() == d0))
-    };
-
-    sample_retained(&nodes, &mut max_retained);
-    let mut result = SimResult::from_rounds(config.protocol.label(), stats, digests, elections);
-    result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
-    result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
-    result.max_retained_log = max_retained;
-    result.elections_started = nodes.iter().map(|nd| nd.elections_started()).sum();
-    result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
-    result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
-    result.safety = safety;
-    finish_reads(&mut result, readctl, &nodes);
-    result
-}
-
-// ---------------------------------------------------------------------------
-// Pipelined Raft / Cabinet simulation (pipeline depth > 1)
-// ---------------------------------------------------------------------------
-
-/// One workload round the pipelined harness has proposed but whose commit it
-/// has not yet observed.
-struct PendingRound {
-    round: u64,
-    entry_index: u64,
-    /// Term of the entry at propose time — (index, term) is exact entry
-    /// identity (Raft log matching), so a leader change can tell surviving
-    /// rounds from overwritten ones.
-    term: u64,
-    start_ms: f64,
-    ops: usize,
-    leader_apply_done: f64,
-    batch: Batch,
-}
-
-/// The pipelined round driver: the leader keeps up to `config.pipeline`
-/// replication rounds in flight. Proposals are issued back-to-back until the
-/// window fills; every `RoundCommitted` from the current leader retires the
-/// committed prefix of the window (the consensus layer advances the commit
-/// index out-of-order-ack-tolerantly, see `consensus::node`) and immediately
-/// refills it. Virtual-time apply costs overlap: a follower is charged each
-/// batch's apply cost exactly once — on the AppendEntries that first ships
-/// it — so a window of overlapping retransmissions does not re-execute work.
-#[allow(clippy::too_many_lines)]
-fn run_quorum_pipelined(config: &SimConfig) -> SimResult {
-    let n = config.n();
-    let depth = config.pipeline.max(1);
-    let mode = match &config.protocol {
-        Protocol::Raft => Mode::Raft,
-        Protocol::Cabinet { t } => Mode::cabinet(n, *t),
-        Protocol::Hqc { .. } => unreachable!(),
-    };
-    let mut root_rng = Rng::new(config.seed);
-    let mut net_rng = root_rng.fork(1);
-    let mut timer_rng = root_rng.fork(2);
-    let mut kill_rng = root_rng.fork(3);
-    let mut driver = WorkloadDriver::new(&config.workload, root_rng.fork(4).next_u64());
-    // own stream (fork 5) — see run_quorum for the determinism argument
-    let mut nemesis = config.nemesis.as_ref().map(|spec| {
-        spec.validate(n).expect("invalid nemesis spec");
-        Nemesis::new(spec.clone(), n, root_rng.fork(5))
-    });
-    let mut safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
-
-    let mut nodes: Vec<Node> = (0..n)
-        .map(|i| {
-            let mut node = Node::new(i, n, mode.clone());
-            node.set_static_weights(config.static_weights);
-            node.set_snapshot_every(config.snapshot_every);
-            node.set_pre_vote(config.pre_vote);
-            node.set_read_path(config.read_path);
-            node.set_lease_duration_ms(config.lease_duration_ms());
-            node
-        })
-        .collect();
-    let mut alive = vec![true; n];
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    let mut readctl = ReadCtl::default();
-    let mut el_gen = vec![0u64; n];
-    let mut hb_gen = vec![0u64; n];
-
-    // Fig. 21 restart schedule + retained-log peak tracking
-    let mut restart_pending = config.restart;
-    let mut restart_victim: Option<NodeId> = None;
-    let mut max_retained: u64 = 0;
-
-    let tracked: Vec<usize> = match config.digest_mode {
-        DigestMode::Off => vec![],
-        DigestMode::Sample => vec![0, n - 1],
-        DigestMode::All => (0..n).collect(),
-    };
-    let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
-    let mut doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
-    // relational stores exist only for TPC-C runs — `warehouses >= 1` is a
-    // config-parse invariant now, not a construction-site patch-up
-    let mut rel_stores: Vec<RelStore> = if is_tpcc {
-        tracked.iter().map(|_| RelStore::new(driver.warehouses as usize)).collect()
-    } else {
-        Vec::new()
-    };
-
-    let mut round: u64 = 0; // completed rounds
-    let mut proposed: u64 = 0; // rounds handed to the leader
-    let mut stats: Vec<RoundStat> = Vec::with_capacity(config.rounds as usize);
-    let mut current_leader: Option<NodeId> = None;
-    let mut elections: u64 = 0;
-    let mut pending: Vec<PendingRound> = Vec::with_capacity(depth);
-    // entry index → batch apply cost at unit speed (for follower service
-    // times); retained for the whole run so retransmits resolve too
-    let mut batch_costs: HashMap<u64, f64> = HashMap::new();
-    let mut reconfig_queue: Vec<ReconfigSpec> = config.reconfigs.clone();
-    reconfig_queue.sort_by_key(|r| r.round);
-    let mut kills = config.kills.clone();
-    kills.sort_by_key(|k| k.round);
-    let mut kill_leader_at = config.kill_leader_at_round; // one-shot
-
-    for node in 0..n {
-        let delay = if node == 0 {
-            0.0
-        } else {
-            timer_rng.range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1)
-        };
-        el_gen[node] += 1;
-        q.push_after(delay, Ev::ElectionTimer { node, generation: el_gen[node] });
-    }
-    q.push_after(1.0, Ev::ProposeNext);
-
-    let max_virtual_ms = 1e9;
-    // leadership epoch tracking: when a new leader takes over, pending
-    // rounds whose entries did not survive into its log are void
-    let mut known_leader: Option<NodeId> = None;
-
-    while round < config.rounds || !readctl.outstanding.is_empty() {
+    // groups may still be replicating or draining reads after others finish
+    while engines.iter().any(|e| !e.done()) {
         match q.next_time() {
             Some(t) if t <= max_virtual_ms => {}
             _ => break, // queue drained or virtual-time budget exhausted
         }
         let Some((now, ev)) = q.pop() else { break };
-        match ev {
-            Ev::ElectionTimer { node, generation } => {
-                if !alive[node] || generation != el_gen[node] {
-                    continue;
-                }
-                nodes[node].observe_time(now);
-                let outs = nodes[node].step(Input::ElectionTimeout);
-                handle_outputs_pipelined(
-                    node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::HeartbeatTimer { node, generation } => {
-                if !alive[node] || generation != hb_gen[node] {
-                    continue;
-                }
-                nodes[node].observe_time(now);
-                let outs = nodes[node].step(Input::HeartbeatTimeout);
-                handle_outputs_pipelined(
-                    node, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::Deliver { to, from, msg } => {
-                if !alive[to] {
-                    continue;
-                }
-                let service =
-                    service_ms_pipelined(config, &nodes[to], to, &msg, round, &batch_costs);
-                nodes[to].observe_time(now);
-                let outs = nodes[to].step(Input::Receive(from, msg));
-                handle_outputs_pipelined(
-                    to, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::ReadAt { id, node } => {
-                if !readctl.outstanding.contains_key(&id) {
-                    continue;
-                }
-                if !alive[node] {
-                    continue; // the standing retry timer re-targets it
-                }
-                nodes[node].observe_time(now);
-                let service = config.rpc_proc_ms / effective_speed(config, node, round);
-                let outs = nodes[node].step(Input::Read { id });
-                handle_outputs_pipelined(
-                    node, outs, service, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
-                );
-            }
-            Ev::ReadRetry { id } => {
-                if let Some(req) = readctl.outstanding.get(&id) {
-                    let target = current_leader
-                        .filter(|&l| alive[l])
-                        .or_else(|| pick_read_target(req.round + req.k, &alive));
-                    if let Some(target) = target {
-                        q.push_after(0.0, Ev::ReadAt { id, node: target });
-                    }
-                    q.push_after(READ_RETRY_MS, Ev::ReadRetry { id });
-                }
-            }
-            Ev::ProposeNext => {
-                sample_retained(&nodes, &mut max_retained);
-                if pending.len() >= depth || proposed >= config.rounds {
-                    continue; // window full (a commit re-arms the proposer)
-                }
-                let Some(leader) = current_leader.filter(|&l| alive[l]) else {
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                };
-                if nodes[leader].role() != Role::Leader {
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                }
-                if nodes[leader].reconfig_pending() {
-                    // §4.1.4: the pipeline drains across a reconfiguration
-                    q.push_after(5.0, Ev::ProposeNext);
-                    continue;
-                }
-                let next_round = proposed + 1;
-
-                maybe_kill_restart(
-                    &mut restart_pending, &mut restart_victim, next_round, leader,
-                    config, &mode, &mut nodes, &mut alive, &mut el_gen,
-                    &mut timer_rng, &mut q, &mut safety,
-                );
-
-                // scheduled kills fire at the start of their round
-                while let Some(k) = kills.first() {
-                    if k.round != next_round {
-                        break;
-                    }
-                    let weights = nodes[leader].weight_assignment().to_vec();
-                    for v in k.victims(&weights, leader, &alive, &mut kill_rng) {
-                        alive[v] = false;
-                    }
-                    kills.remove(0);
-                }
-                if kill_leader_at == Some(next_round) {
-                    kill_leader_at = None; // fire exactly once
-                    alive[leader] = false;
-                    current_leader = None;
-                    // rounds that died in the old leader's window get
-                    // regenerated (fresh batches) under the next leader.
-                    // Every pending round incremented `proposed` when it was
-                    // pushed, so the subtraction is exact — a saturating_sub
-                    // here would only mask a broken window invariant.
-                    debug_assert!(
-                        proposed >= pending.len() as u64,
-                        "window accounting underflow: proposed {proposed} < pending {}",
-                        pending.len()
-                    );
-                    proposed -= pending.len() as u64;
-                    pending.clear();
-                    q.push_after(50.0, Ev::ProposeNext);
-                    continue;
-                }
-                // scheduled reconfiguration (not counted as a round) — may
-                // land while earlier rounds are still in flight; their
-                // propose-time weight/CT snapshots keep them correct
-                if let Some(rc) = reconfig_queue.first().copied() {
-                    if rc.round == next_round {
-                        reconfig_queue.remove(0);
-                        let outs = nodes[leader]
-                            .step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
-                        handle_outputs_pipelined(
-                            leader, outs, 0.0, config, &mut q, &mut net_rng,
-                            &mut timer_rng, &alive, &mut el_gen, &mut hb_gen,
-                            &mut current_leader, &mut elections, &mut pending,
-                            &mut stats, &mut round, &tracked, &mut doc_stores,
-                            &mut rel_stores, is_tpcc, &mut nemesis, &mut safety,
-                            &mut readctl,
-                        );
-                        q.push_after(1.0, Ev::ProposeNext);
-                        continue;
-                    }
-                }
-
-                let (payload, batch, cost_ms, ops, read_batch) =
-                    next_round_batch(&mut driver, config.read_path);
-                let leader_speed = effective_speed(config, leader, next_round);
-                let leader_apply_done = now + config.rpc_proc_ms / leader_speed;
-                nodes[leader].observe_time(now);
-                let outs = nodes[leader].step(Input::Propose(payload));
-                let entry_index = nodes[leader].log().last_index();
-                batch_costs.insert(entry_index, cost_ms);
-                proposed = next_round;
-                pending.push(PendingRound {
-                    round: next_round,
-                    entry_index,
-                    term: nodes[leader].term(),
-                    start_ms: now,
-                    ops,
-                    leader_apply_done,
-                    batch,
-                });
-                handle_outputs_pipelined(
-                    leader, outs, 0.0, config, &mut q, &mut net_rng, &mut timer_rng,
-                    &alive, &mut el_gen, &mut hb_gen, &mut current_leader, &mut elections,
-                    &mut pending, &mut stats, &mut round, &tracked, &mut doc_stores,
-                    &mut rel_stores, is_tpcc, &mut nemesis, &mut safety, &mut readctl,
-                );
-                // this round's read-only ops go through the selected fast path
-                if let Some(rb) = read_batch {
-                    readctl.issue_fan(&mut q, &alive, now, next_round, &rb);
-                }
-                if pending.len() < depth && proposed < config.rounds {
-                    // back-to-back proposal to fill the window
-                    q.push_after(0.2, Ev::ProposeNext);
-                }
-            }
-        }
-        // A leadership change voids every pending round whose entry did not
-        // survive into the new leader's log — (index, term) is exact entry
-        // identity by Raft log matching. The winner overwrites dead slots,
-        // so retiring them on its commits would misattribute fresh entries
-        // to old batches. Dropped rounds are regenerated with fresh batches.
-        // This runs before any RoundCommitted from the new leader can be
-        // processed (its quorum needs at least one more network round trip).
-        if current_leader != known_leader {
-            if let Some(x) = current_leader {
-                pending.retain(|p| {
-                    let survived =
-                        nodes[x].log().term_at(p.entry_index) == Some(p.term);
-                    if !survived {
-                        proposed -= 1;
-                    }
-                    survived
-                });
-            }
-            known_leader = current_leader;
-        }
+        engines[ev.group].handle(now, ev.ev, &mut q);
     }
 
-    let digests = if tracked.is_empty() {
-        None
-    } else if is_tpcc {
-        let d0 = rel_stores[0].stream_digest();
-        Some(rel_stores.iter().all(|s| s.stream_digest() == d0))
+    let outcomes: Vec<GroupOutcome> = engines.into_iter().map(GroupEngine::finish).collect();
+    if groups == 1 {
+        let mut outcomes = outcomes;
+        outcomes.pop().expect("one group").result
     } else {
-        let d0 = doc_stores[0].state_digest();
-        Some(doc_stores.iter().all(|s| s.state_digest() == d0))
-    };
-
-    sample_retained(&nodes, &mut max_retained);
-    let mut result = SimResult::from_rounds(config.protocol.label(), stats, digests, elections);
-    result.snapshots_taken = nodes.iter().map(|nd| nd.snapshots_taken()).sum();
-    result.snapshots_installed = nodes.iter().map(|nd| nd.snapshots_installed()).sum();
-    result.max_retained_log = max_retained;
-    result.elections_started = nodes.iter().map(|nd| nd.elections_started()).sum();
-    result.terms_advanced = nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
-    result.nemesis_stats = nemesis.as_ref().map(|nm| nm.stats);
-    result.safety = safety;
-    finish_reads(&mut result, readctl, &nodes);
-    result
-}
-
-/// Pipelined-driver service time: apply cost accrues per batch entry the
-/// node will actually append — the message must pass the term and
-/// log-consistency checks, and each entry is charged at its own round's
-/// cost only the first time it ships. Overlapping retransmissions inside
-/// the window and rejected appends (stale term / log mismatch after a
-/// failover) never re-charge an executed batch.
-fn service_ms_pipelined(
-    config: &SimConfig,
-    receiver: &Node,
-    node: NodeId,
-    msg: &Message,
-    round: u64,
-    batch_costs: &HashMap<u64, f64>,
-) -> f64 {
-    match msg {
-        Message::AppendEntries { term, prev_log_index, prev_log_term, entries, .. }
-            if !entries.is_empty() =>
-        {
-            let speed = effective_speed(config, node, round);
-            let accepted = *term >= receiver.term()
-                && receiver.log().matches(*prev_log_index, *prev_log_term);
-            let apply: f64 = if accepted {
-                let last = receiver.log().last_index();
-                entries
-                    .iter()
-                    .filter(|e| {
-                        e.index > last
-                            && matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_))
-                    })
-                    .map(|e| batch_costs.get(&e.index).copied().unwrap_or(0.0))
-                    .sum()
-            } else {
-                0.0
-            };
-            (config.rpc_proc_ms + apply) / speed
-        }
-        _ => config.rpc_proc_ms / effective_speed(config, node, round),
+        merge_sharded(config, outcomes)
     }
 }
 
-/// Route one node's outputs for the pipelined driver; sends leave
-/// `extra_delay` ms after now (the node's service time).
-///
-/// Deliberately a separate copy of the lock-step `handle_outputs_delayed`
-/// (only the `RoundCommitted` arm differs): the lock-step handler is frozen
-/// so `pipeline = 1` keeps reproducing the historical figures bit-for-bit,
-/// and sharing the routing scaffold would couple every future pipelined
-/// change to that guarantee.
-#[allow(clippy::too_many_arguments)]
-fn handle_outputs_pipelined(
-    node: NodeId,
-    outs: Vec<Output>,
-    extra_delay: f64,
-    config: &SimConfig,
-    q: &mut EventQueue<Ev>,
-    net_rng: &mut Rng,
-    timer_rng: &mut Rng,
-    alive: &[bool],
-    el_gen: &mut [u64],
-    hb_gen: &mut [u64],
-    current_leader: &mut Option<NodeId>,
-    elections: &mut u64,
-    pending: &mut Vec<PendingRound>,
-    stats: &mut Vec<RoundStat>,
-    round: &mut u64,
-    tracked: &[usize],
-    doc_stores: &mut [DocStore],
-    rel_stores: &mut [RelStore],
-    is_tpcc: bool,
-    nemesis: &mut Option<Nemesis>,
-    safety: &mut Option<SafetyLog>,
-    readctl: &mut ReadCtl,
-) {
-    let n = config.n();
-    let now = q.now();
-    for o in outs {
-        match o {
-            Output::Send(to, msg) => {
-                if !alive[to] {
-                    continue;
-                }
-                let shaped_end =
-                    if node == current_leader.unwrap_or(usize::MAX) { to } else { node };
-                let lat = config.delay.link_latency(
-                    shaped_end,
-                    n,
-                    now,
-                    *round,
-                    msg.wire_size(),
-                    net_rng,
-                );
-                let fate = match nemesis.as_mut() {
-                    Some(nm) => nm.fate(now, node, to, *current_leader),
-                    None => Fate::deliver(),
-                };
-                if fate.copies == 0 {
-                    continue; // partitioned or lost
-                }
-                if fate.copies > 1 {
-                    q.push_after(
-                        extra_delay + lat + fate.extra_delay_ms[1],
-                        Ev::Deliver { to, from: node, msg: msg.clone() },
-                    );
-                }
-                q.push_after(
-                    extra_delay + lat + fate.extra_delay_ms[0],
-                    Ev::Deliver { to, from: node, msg },
-                );
-            }
-            Output::ResetElectionTimer => {
-                el_gen[node] += 1;
-                let d = timer_rng
-                    .range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
-                q.push_after(d, Ev::ElectionTimer { node, generation: el_gen[node] });
-            }
-            Output::StartHeartbeat => {
-                hb_gen[node] += 1;
-                q.push_after(
-                    config.heartbeat_ms,
-                    Ev::HeartbeatTimer { node, generation: hb_gen[node] },
-                );
-            }
-            Output::StopHeartbeat => {
-                hb_gen[node] += 1;
-            }
-            Output::BecameLeader { term } => {
-                *current_leader = Some(node);
-                *elections += 1;
-                if let Some(sl) = safety.as_mut() {
-                    sl.leaders.push((term, node));
-                }
-            }
-            Output::SteppedDown => {
-                if *current_leader == Some(node) {
-                    *current_leader = None;
-                }
-            }
-            Output::RoundCommitted { index, repliers, .. } => {
-                if Some(node) != *current_leader {
-                    continue;
-                }
-                // write-completion timeline for the read checker (barrier
-                // no-ops included — read indices can point at them)
-                if let Some(sl) = safety.as_mut() {
-                    sl.commit_times.push((now, index));
-                }
-                // retire the committed prefix of the window, in order
-                while pending.first().map_or(false, |p| p.entry_index <= index) {
-                    let p = pending.remove(0);
-                    let commit_time = now.max(p.leader_apply_done);
-                    let latency = commit_time - p.start_ms;
-                    stats.push(RoundStat {
-                        round: p.round,
-                        entry_index: p.entry_index,
-                        start_ms: p.start_ms,
-                        latency_ms: latency,
-                        tput_ops_s: p.ops as f64 / (latency / 1000.0),
-                        ops: p.ops,
-                        repliers,
-                    });
-                    if p.round > *round {
-                        *round = p.round;
-                    }
-                    apply_tracked(&p.batch, tracked, doc_stores, rel_stores, is_tpcc);
-                }
-                q.push_after(0.2, Ev::ProposeNext); // client turnaround
-            }
-            Output::Commit(e) => {
-                // per-node commit evidence for the bench::safety checker
-                if let Some(sl) = safety.as_mut() {
-                    sl.commits[node].push((e.index, e.term));
-                }
-            }
-            Output::ProposalRejected(_) => {}
-            // nodes snapshot inline (SnapshotCapture::Inline) — these are
-            // informational; installs are counted via node counters
-            Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
-            Output::ReadReady { id, index, lease } => {
-                serve_read(readctl, safety, config, node, id, index, lease, now, *round);
-            }
-            Output::ReadFailed { id } => {
-                if readctl.outstanding.contains_key(&id) {
-                    readctl.failures += 1; // the standing retry re-drives it
-                }
-            }
-        }
-    }
-}
+/// Merge G per-group outcomes into the aggregate [`SimResult`]: rounds
+/// concatenated in group order (deterministic), counters summed, terms
+/// maxed, read percentiles recomputed over the merged latency population,
+/// and per-group rollups folded into [`GroupStat`]s.
+fn merge_sharded(config: &SimConfig, outcomes: Vec<GroupOutcome>) -> SimResult {
+    let label = format!("{}-g{}", config.protocol.label(), outcomes.len());
+    let mut all_rounds = Vec::new();
+    let mut group_stats = Vec::new();
+    let mut group_safety = Vec::new();
+    let mut digests: Option<bool> = None;
+    let mut elections = 0u64;
+    let mut read_latencies: Vec<f64> = Vec::new();
 
-/// Retire one served read: record its latency and checker evidence.
-#[allow(clippy::too_many_arguments)]
-fn serve_read(
-    readctl: &mut ReadCtl,
-    safety: &mut Option<SafetyLog>,
-    config: &SimConfig,
-    node: NodeId,
-    id: u64,
-    index: u64,
-    lease: bool,
-    now: f64,
-    round: u64,
-) {
-    let Some(req) = readctl.outstanding.remove(&id) else {
-        return; // a duplicate grant after a retry already served it
-    };
-    let done = now + req.cost_ms / effective_speed(config, node, round);
-    readctl.latencies.push(done - req.invoked_ms);
-    readctl.reads_served += 1;
-    readctl.read_ops_served += req.ops as u64;
-    if lease {
-        readctl.lease_reads += 1;
-    }
-    if done > readctl.done_ms {
-        readctl.done_ms = done;
-    }
-    if let Some(sl) = safety.as_mut() {
-        sl.reads.push(ReadRecord {
-            node,
-            id,
-            invoked_ms: req.invoked_ms,
-            served_ms: now,
-            read_index: index,
-            lease,
+    for (g, o) in outcomes.iter().enumerate() {
+        let r = &o.result;
+        group_stats.push(GroupStat {
+            group: g,
+            rounds: r.rounds.len() as u64,
+            ops: r.rounds.iter().map(|s| s.ops as u64).sum(),
+            // combined (reads included): same definition as the aggregate,
+            // so the group rows break the printed aggregate down exactly
+            wall_tput_ops_s: r.combined_wall_tput_ops_s(),
+            leader: o.final_leader,
+            term: r.terms_advanced,
+            elections: r.elections,
+            elections_started: r.elections_started,
+            commit_digest: r.commit_sequence_digest(),
         });
-    }
-}
-
-/// Service time charged on a node for processing a message (ms).
-fn service_ms(config: &SimConfig, node: NodeId, msg: &Message, round: u64, batch_cost_ms: f64) -> f64 {
-    match msg {
-        Message::AppendEntries { entries, .. } if !entries.is_empty() => {
-            let speed = effective_speed(config, node, round);
-            let has_batch = entries
-                .iter()
-                .any(|e| matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_)));
-            let apply = if has_batch { batch_cost_ms } else { 0.0 };
-            (config.rpc_proc_ms + apply) / speed
+        // replica convergence must hold in every tracked group
+        if let Some(ok) = r.digests_match {
+            digests = Some(digests.unwrap_or(true) && ok);
         }
-        _ => config.rpc_proc_ms / effective_speed(config, node, round),
+        elections += r.elections;
+        read_latencies.extend_from_slice(&o.read_latencies);
     }
-}
 
-/// Zone speed × contention factor at the given round.
-fn effective_speed(config: &SimConfig, node: NodeId, round: u64) -> f64 {
-    let mut speed = config.zones.speed(node);
-    if let Some(c) = &config.contention {
-        speed /= c.factor(round);
+    for o in &outcomes {
+        all_rounds.extend_from_slice(&o.result.rounds);
     }
-    speed
-}
+    let mut agg = SimResult::from_rounds(label, all_rounds, digests, elections);
 
-/// Route one node's outputs into the event queue (no extra send delay).
-#[allow(clippy::too_many_arguments)]
-fn handle_outputs(
-    node: NodeId,
-    outs: Vec<Output>,
-    config: &SimConfig,
-    q: &mut EventQueue<Ev>,
-    net_rng: &mut Rng,
-    timer_rng: &mut Rng,
-    alive: &[bool],
-    el_gen: &mut [u64],
-    hb_gen: &mut [u64],
-    current_leader: &mut Option<NodeId>,
-    elections: &mut u64,
-    pending: &mut Option<(u64, f64, usize, f64, Batch)>,
-    pending_entry_index: u64,
-    stats: &mut Vec<RoundStat>,
-    round: &mut u64,
-    inflight_cost_ms: f64,
-    tracked: &[usize],
-    doc_stores: &mut [DocStore],
-    rel_stores: &mut [RelStore],
-    is_tpcc: bool,
-    nemesis: &mut Option<Nemesis>,
-    safety: &mut Option<SafetyLog>,
-    readctl: &mut ReadCtl,
-) {
-    handle_outputs_delayed(
-        node, outs, 0.0, config, q, net_rng, timer_rng, alive, el_gen, hb_gen,
-        current_leader, elections, pending, pending_entry_index, stats, round,
-        inflight_cost_ms, tracked, doc_stores, rel_stores, is_tpcc, nemesis, safety,
-        readctl,
-    )
-}
-
-/// Route outputs; sends leave `extra_delay` ms after now (service time).
-#[allow(clippy::too_many_arguments)]
-fn handle_outputs_delayed(
-    node: NodeId,
-    outs: Vec<Output>,
-    extra_delay: f64,
-    config: &SimConfig,
-    q: &mut EventQueue<Ev>,
-    net_rng: &mut Rng,
-    timer_rng: &mut Rng,
-    alive: &[bool],
-    el_gen: &mut [u64],
-    hb_gen: &mut [u64],
-    current_leader: &mut Option<NodeId>,
-    elections: &mut u64,
-    pending: &mut Option<(u64, f64, usize, f64, Batch)>,
-    pending_entry_index: u64,
-    stats: &mut Vec<RoundStat>,
-    round: &mut u64,
-    inflight_cost_ms: f64,
-    tracked: &[usize],
-    doc_stores: &mut [DocStore],
-    rel_stores: &mut [RelStore],
-    is_tpcc: bool,
-    nemesis: &mut Option<Nemesis>,
-    safety: &mut Option<SafetyLog>,
-    readctl: &mut ReadCtl,
-) {
-    let n = config.n();
-    let now = q.now();
-    for o in outs {
-        match o {
-            Output::Send(to, msg) => {
-                if !alive[to] {
-                    continue;
-                }
-                // link delay is sampled on the non-leader endpoint (the
-                // paper's netem delays are installed on follower nodes)
-                let shaped_end = if node == current_leader.unwrap_or(usize::MAX) { to } else { node };
-                let lat = config.delay.link_latency(
-                    shaped_end,
-                    n,
-                    now,
-                    *round,
-                    msg.wire_size(),
-                    net_rng,
-                );
-                let fate = match nemesis.as_mut() {
-                    Some(nm) => nm.fate(now, node, to, *current_leader),
-                    None => Fate::deliver(),
-                };
-                if fate.copies == 0 {
-                    continue; // partitioned or lost
-                }
-                if fate.copies > 1 {
-                    q.push_after(
-                        extra_delay + lat + fate.extra_delay_ms[1],
-                        Ev::Deliver { to, from: node, msg: msg.clone() },
-                    );
-                }
-                q.push_after(
-                    extra_delay + lat + fate.extra_delay_ms[0],
-                    Ev::Deliver { to, from: node, msg },
-                );
-            }
-            Output::ResetElectionTimer => {
-                el_gen[node] += 1;
-                let d = timer_rng
-                    .range_f64(config.election_timeout_ms.0, config.election_timeout_ms.1);
-                q.push_after(d, Ev::ElectionTimer { node, generation: el_gen[node] });
-            }
-            Output::StartHeartbeat => {
-                hb_gen[node] += 1;
-                q.push_after(
-                    config.heartbeat_ms,
-                    Ev::HeartbeatTimer { node, generation: hb_gen[node] },
-                );
-            }
-            Output::StopHeartbeat => {
-                hb_gen[node] += 1;
-            }
-            Output::BecameLeader { term } => {
-                *current_leader = Some(node);
-                *elections += 1;
-                if let Some(sl) = safety.as_mut() {
-                    sl.leaders.push((term, node));
-                }
-            }
-            Output::SteppedDown => {
-                if *current_leader == Some(node) {
-                    *current_leader = None;
-                }
-            }
-            Output::RoundCommitted { index, repliers, .. } => {
-                // write-completion timeline for the read checker (recorded
-                // for every leader-observed commit, barrier no-ops included)
-                if Some(node) == *current_leader {
-                    if let Some(sl) = safety.as_mut() {
-                        sl.commit_times.push((now, index));
-                    }
-                }
-                // only the harness round (pending batch) counts
-                if let Some((rnd, start, ops, leader_apply_done, _)) = pending.as_ref() {
-                    if index >= pending_entry_index && Some(node) == *current_leader {
-                        let commit_time = now.max(*leader_apply_done);
-                        let latency = commit_time - start;
-                        stats.push(RoundStat {
-                            round: *rnd,
-                            entry_index: pending_entry_index,
-                            start_ms: *start,
-                            latency_ms: latency,
-                            tput_ops_s: *ops as f64 / (latency / 1000.0),
-                            ops: *ops,
-                            repliers,
-                        });
-                        *round = *rnd;
-                        // apply to tracked replicas (replica convergence)
-                        if let Some((_, _, _, _, batch)) = pending.take() {
-                            apply_tracked(&batch, tracked, doc_stores, rel_stores, is_tpcc);
-                        }
-                        q.push_after(0.2, Ev::ProposeNext); // client turnaround
-                    }
-                }
-            }
-            Output::Commit(e) => {
-                // per-node commit evidence for the bench::safety checker
-                if let Some(sl) = safety.as_mut() {
-                    sl.commits[node].push((e.index, e.term));
-                }
-            }
-            Output::ProposalRejected(_) => {}
-            // nodes snapshot inline (SnapshotCapture::Inline) — these are
-            // informational; installs are counted via node counters
-            Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
-            Output::ReadReady { id, index, lease } => {
-                serve_read(readctl, safety, config, node, id, index, lease, now, *round);
-            }
-            Output::ReadFailed { id } => {
-                if readctl.outstanding.contains_key(&id) {
-                    readctl.failures += 1; // the standing retry re-drives it
-                }
-            }
+    for o in &outcomes {
+        let r = &o.result;
+        agg.snapshots_taken += r.snapshots_taken;
+        agg.snapshots_installed += r.snapshots_installed;
+        agg.max_retained_log = agg.max_retained_log.max(r.max_retained_log);
+        agg.elections_started += r.elections_started;
+        agg.terms_advanced = agg.terms_advanced.max(r.terms_advanced);
+        if let Some(ns) = r.nemesis_stats {
+            let agg_ns = agg.nemesis_stats.get_or_insert_with(NemesisStats::default);
+            agg_ns.cut += ns.cut;
+            agg_ns.dropped += ns.dropped;
+            agg_ns.duplicated += ns.duplicated;
+            agg_ns.reordered += ns.reordered;
+        }
+        agg.reads_served += r.reads_served;
+        agg.read_ops_served += r.read_ops_served;
+        agg.lease_reads += r.lease_reads;
+        agg.readindex_rounds += r.readindex_rounds;
+        agg.read_failures += r.read_failures;
+        agg.read_done_ms = agg.read_done_ms.max(r.read_done_ms);
+    }
+    read_latencies.sort_by(|a, b| a.total_cmp(b));
+    crate::sim::group::fold_read_latencies(&mut agg, &read_latencies);
+    for o in outcomes {
+        if let Some(sl) = o.result.safety {
+            group_safety.push(sl);
         }
     }
-    let _ = inflight_cost_ms;
-}
-
-fn apply_tracked(
-    batch: &Batch,
-    tracked: &[usize],
-    doc_stores: &mut [DocStore],
-    rel_stores: &mut [RelStore],
-    is_tpcc: bool,
-) {
-    if tracked.is_empty() {
-        return;
-    }
-    match batch {
-        Batch::Ycsb(b) => {
-            for store in doc_stores.iter_mut() {
-                store.apply(b);
-            }
-        }
-        Batch::Tpcc(b) => {
-            if is_tpcc {
-                for store in rel_stores.iter_mut() {
-                    store.apply(b);
-                }
-            }
-        }
-    }
+    agg.group_safety = group_safety;
+    agg.group_stats = group_stats;
+    agg
 }
 
 // ---------------------------------------------------------------------------
@@ -1847,6 +763,16 @@ fn apply_tracked(
 
 enum HqcEv {
     Deliver { to: NodeId, from: NodeId, msg: HqcMsg },
+}
+
+/// Zone speed × contention factor at the given round (HQC baseline; the
+/// group engines carry their own copy keyed to per-group round counters).
+fn effective_speed(config: &SimConfig, node: NodeId, round: u64) -> f64 {
+    let mut speed = config.zones.speed(node);
+    if let Some(c) = &config.contention {
+        speed /= c.factor(round);
+    }
+    speed
 }
 
 fn run_hqc(config: &SimConfig, sizes: Vec<usize>) -> SimResult {
@@ -2261,5 +1187,83 @@ mod tests {
         let first: f64 = r.rounds[2..10].iter().map(|x| x.latency_ms).sum::<f64>() / 8.0;
         let second: f64 = r.rounds[12..20].iter().map(|x| x.latency_ms).sum::<f64>() / 8.0;
         assert!(second < first, "t=1 rounds should be faster: {second} vs {first}");
+    }
+
+    // -- sharded (multi-group) runs -----------------------------------------
+
+    fn sharded(groups: usize, rounds: u64, seed: u64) -> SimResult {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 8, true);
+        c.rounds = rounds;
+        c.seed = seed;
+        c.groups = groups;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 400, records: 10_000 };
+        run(&c)
+    }
+
+    #[test]
+    fn sharded_completes_every_group_and_aggregates() {
+        let r = sharded(4, 6, 42);
+        assert_eq!(r.group_stats.len(), 4);
+        assert_eq!(r.rounds.len(), 4 * 6, "every group must commit its rounds");
+        for g in &r.group_stats {
+            assert_eq!(g.rounds, 6, "group {}", g.group);
+            assert!(g.ops > 0 && g.wall_tput_ops_s > 0.0, "group {}", g.group);
+            assert!(g.leader.is_some(), "group {} ended leaderless", g.group);
+            assert!(g.elections >= 1);
+        }
+        assert!(r.agg_wall_tput_ops_s() > 0.0);
+        assert_eq!(r.elections, r.group_stats.iter().map(|g| g.elections).sum::<u64>());
+        assert!(r.label.ends_with("-g4"), "sharded label: {}", r.label);
+    }
+
+    #[test]
+    fn sharded_initial_leaders_spread_across_nodes() {
+        // group g bootstraps node g % n first, so a clean sharded run ends
+        // with distinct per-shard leaders — the Multi-Raft layout
+        let r = sharded(4, 4, 7);
+        let leaders: Vec<_> = r.group_stats.iter().filter_map(|g| g.leader).collect();
+        assert_eq!(leaders.len(), 4);
+        let mut distinct = leaders.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() >= 3, "leaders collapsed: {leaders:?}");
+    }
+
+    #[test]
+    fn single_group_has_no_rollups() {
+        let r = sharded(1, 4, 9);
+        assert!(r.group_stats.is_empty());
+        assert!(r.group_safety.is_empty());
+        assert!(!r.label.contains("-g"));
+    }
+
+    #[test]
+    fn sharded_tpcc_ranges_converge() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+        c.rounds = 4;
+        c.groups = 2;
+        c.digest_mode = DigestMode::Sample;
+        c.workload = WorkloadSpec::Tpcc { batch: 200, warehouses: 10 };
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 2 * 4);
+        assert_eq!(r.digests_match, Some(true), "per-group replicas must converge");
+    }
+
+    #[test]
+    fn sharded_pipelined_and_deterministic() {
+        let mk = || {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 8, true);
+            c.rounds = 5;
+            c.pipeline = 4;
+            c.groups = 4;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+            run(&c)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.rounds.len(), 4 * 5);
+        assert_eq!(a.metrics_digest(), b.metrics_digest());
+        assert_eq!(a.commit_sequence_digest(), b.commit_sequence_digest());
     }
 }

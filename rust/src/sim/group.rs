@@ -1,0 +1,1192 @@
+//! The per-group consensus engine: everything one Cabinet/Raft group needs
+//! to be driven over the shared virtual-time fabric — its n sans-io nodes,
+//! timer generations, forked RNG streams, workload shard generator, the
+//! lock-step and pipelined replication windows, client-read bookkeeping,
+//! fault/restart schedules, and the per-group nemesis.
+//!
+//! `sim::cluster::run` is a thin scheduler: it builds G `GroupEngine`s,
+//! multiplexes their events through one [`EventQueue`] (each event wrapped
+//! in a [`GroupEv`] carrying its [`GroupId`], mirroring the wire-level
+//! [`crate::consensus::message::Envelope`]), and merges the per-group
+//! results. With `groups = 1` the engine is a line-for-line transplant of
+//! the historical single-group drivers: same RNG fork order (streams 1–5
+//! off the root), same event push order, same service-time model — so a
+//! one-group run reproduces the pre-sharding commit sequences and metrics
+//! digests bit-for-bit (the replay-determinism suite pins this).
+//!
+//! Both drive modes live here, selected by `SimConfig::pipeline`:
+//! the lock-step window (`depth == 1`, frozen — the paper's Fig. 7 loop)
+//! and the pipelined window (`depth > 1`, out-of-order-ack-tolerant
+//! retirement with leadership-epoch voiding). The read-retry/rotation
+//! logic both drivers used to duplicate is one implementation now
+//! ([`GroupEngine`]'s `ReadAt`/`ReadRetry` handling and [`ReadCtl`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::consensus::message::{GroupId, Message, NodeId, Payload};
+use crate::consensus::node::{Input, Mode, Node, Output, ReadPath, Role};
+use crate::net::fault::KillSpec;
+use crate::net::nemesis::{Fate, Nemesis};
+use crate::net::rng::Rng;
+use crate::sim::cluster::{
+    Protocol, ReadRecord, ReconfigSpec, RestartSpec, RoundStat, SafetyLog, SimConfig,
+    SimResult, WorkloadSpec,
+};
+use crate::sim::event::EventQueue;
+use crate::storage::{DocStore, RelStore};
+use crate::workload::shard::warehouse_range;
+use crate::workload::ycsb::{OP_READ, OP_SCAN};
+use crate::workload::{TpccGen, YcsbBatch, YcsbGen};
+
+/// Client-side retry cadence for unserved reads (virtual ms).
+const READ_RETRY_MS: f64 = 400.0;
+/// Concurrent read requests per round on a non-log read path — an open-loop
+/// fan-out client: each round's read-only ops are split across this many
+/// parallel requests at rotated nodes (followers included), so read work is
+/// spread across the cluster instead of riding every replication round.
+const READ_FAN: u64 = 4;
+
+/// One event on the shared fabric: the per-group event plus the group it
+/// belongs to. The scheduler routes it to that group's engine — the
+/// in-queue analogue of the wire [`crate::consensus::message::Envelope`].
+pub(crate) struct GroupEv {
+    pub group: GroupId,
+    pub ev: Ev,
+}
+
+pub(crate) enum Ev {
+    Deliver { to: NodeId, from: NodeId, msg: Message },
+    ElectionTimer { node: NodeId, generation: u64 },
+    HeartbeatTimer { node: NodeId, generation: u64 },
+    /// Harness: try to propose the next round at the current leader.
+    ProposeNext,
+    /// Harness: a client read request arrives at `node` (non-log paths).
+    ReadAt { id: u64, node: NodeId },
+    /// Harness: re-drive a read that has not been served yet (a forward or
+    /// grant was lost, or leadership moved mid-confirmation).
+    ReadRetry { id: u64 },
+}
+
+/// One in-flight client read request.
+struct ReadReq {
+    invoked_ms: f64,
+    /// Read ops this request carries (for throughput accounting).
+    ops: usize,
+    /// Apply cost of those ops at unit speed (charged at the serving node).
+    cost_ms: f64,
+    /// Round the request belongs to (target rotation slot).
+    round: u64,
+    /// Position in the fan (rotates the serving node).
+    k: u64,
+}
+
+/// Client-side read bookkeeping — one instance per group engine (the
+/// deduplicated successor of the two near-copies the round drivers grew).
+#[derive(Default)]
+pub(crate) struct ReadCtl {
+    next_id: u64,
+    outstanding: HashMap<u64, ReadReq>,
+    pub(crate) latencies: Vec<f64>,
+    reads_served: u64,
+    read_ops_served: u64,
+    lease_reads: u64,
+    failures: u64,
+    /// Virtual time the last read finished (combined-throughput span end).
+    done_ms: f64,
+}
+
+impl ReadCtl {
+    /// Fan a round's read-only sub-batch out as [`READ_FAN`] concurrent
+    /// requests at rotated alive targets (followers serve local reads too),
+    /// each with a standing retry timer. The first request absorbs the
+    /// division remainder so op totals stay exact.
+    fn issue_fan(
+        &mut self,
+        gid: GroupId,
+        q: &mut EventQueue<GroupEv>,
+        alive: &[bool],
+        invoked_ms: f64,
+        round: u64,
+        reads: &YcsbBatch,
+    ) {
+        let live = reads.live_ops();
+        let fan = READ_FAN.min(live.max(1) as u64);
+        let ops_per = live / fan as usize;
+        let cost_per = DocStore::estimate_cost_ms(reads) / fan as f64;
+        for k in 0..fan {
+            let ops = if k == 0 { live - ops_per * (fan as usize - 1) } else { ops_per };
+            let Some(target) = pick_read_target(round + k, alive) else { continue };
+            let id = self.next_id;
+            self.next_id += 1;
+            self.outstanding
+                .insert(id, ReadReq { invoked_ms, ops, cost_ms: cost_per, round, k });
+            q.push_after(0.0, GroupEv { group: gid, ev: Ev::ReadAt { id, node: target } });
+            q.push_after(READ_RETRY_MS, GroupEv { group: gid, ev: Ev::ReadRetry { id } });
+        }
+    }
+}
+
+/// Deterministic read-target rotation over the alive nodes.
+fn pick_read_target(slot: u64, alive: &[bool]) -> Option<NodeId> {
+    let n = alive.len();
+    (0..n).map(|d| (slot as usize + d) % n).find(|&i| alive[i])
+}
+
+/// Split a YCSB batch into its mutating part (replicated through the log)
+/// and its read-only part (READ + SCAN, served through the read path).
+fn split_ycsb(b: &YcsbBatch) -> (YcsbBatch, YcsbBatch) {
+    let empty = YcsbBatch {
+        workload: b.workload,
+        ops: Vec::new(),
+        keys: Vec::new(),
+        vals: Vec::new(),
+    };
+    let (mut writes, mut reads) = (empty.clone(), empty);
+    for i in 0..b.ops.len() {
+        let dst = if b.ops[i] == OP_READ || b.ops[i] == OP_SCAN { &mut reads } else { &mut writes };
+        dst.ops.push(b.ops[i]);
+        dst.keys.push(b.keys[i]);
+        dst.vals.push(b.vals[i]);
+    }
+    (writes, reads)
+}
+
+/// Generate the next round's batch; on a non-log read path, split out the
+/// read-only ops. Returns (payload, tracked batch, apply cost of the
+/// replicated part, replicated live ops, read-only sub-batch). TPC-C rounds
+/// stay fully log-replicated (transactions are read-write).
+fn next_round_batch(
+    driver: &mut WorkloadDriver,
+    read_path: ReadPath,
+) -> (Payload, Batch, f64, usize, Option<YcsbBatch>) {
+    let (payload, batch, cost, ops) = driver.next_batch();
+    if matches!(read_path, ReadPath::Log) {
+        return (payload, batch, cost, ops, None);
+    }
+    match payload {
+        Payload::Ycsb(full) => {
+            let (writes, reads) = split_ycsb(&full);
+            let writes = Arc::new(writes);
+            let cost = DocStore::estimate_cost_ms(&writes);
+            let ops = writes.live_ops();
+            let reads = (!reads.is_empty()).then_some(reads);
+            (Payload::Ycsb(writes.clone()), Batch::Ycsb(writes), cost, ops, reads)
+        }
+        other => (other, batch, cost, ops, None),
+    }
+}
+
+pub(crate) enum Batch {
+    Ycsb(Arc<crate::workload::YcsbBatch>),
+    Tpcc(Arc<crate::workload::TpccBatch>),
+}
+
+/// Per-group workload source: the shard router in action. With `groups = 1`
+/// it is the historical full-keyspace generator (identical RNG
+/// consumption); with `groups > 1` each group generates full-size batches
+/// restricted to its own shard — hash-partitioned YCSB keys,
+/// range-partitioned TPC-C warehouses — modelling every shard serving its
+/// own client population.
+pub(crate) struct WorkloadDriver {
+    ycsb: Option<YcsbGen>,
+    tpcc: Option<TpccGen>,
+    pub(crate) batch_size: usize,
+    pub(crate) warehouses: u32,
+    group: usize,
+    groups: usize,
+    /// TPC-C: the warehouse range this group owns.
+    wh_range: (u32, u32),
+}
+
+impl WorkloadDriver {
+    pub(crate) fn new(spec: &WorkloadSpec, seed: u64) -> Self {
+        Self::new_sharded(spec, seed, 0, 1)
+    }
+
+    pub(crate) fn new_sharded(
+        spec: &WorkloadSpec,
+        seed: u64,
+        group: usize,
+        groups: usize,
+    ) -> Self {
+        match spec {
+            WorkloadSpec::Ycsb { workload, batch, records } => {
+                assert!(
+                    groups as u64 <= *records,
+                    "groups ({groups}) exceed the YCSB key count ({records}) — \
+                     validated at config parse"
+                );
+                WorkloadDriver {
+                    ycsb: Some(YcsbGen::new(*workload, *records, seed)),
+                    tpcc: None,
+                    batch_size: *batch,
+                    warehouses: 0,
+                    group,
+                    groups,
+                    wh_range: (0, 0),
+                }
+            }
+            WorkloadSpec::Tpcc { batch, warehouses } => {
+                debug_assert!(*warehouses >= 1, "warehouses is validated at config parse");
+                assert!(
+                    groups as u32 <= *warehouses,
+                    "groups ({groups}) exceed the TPC-C warehouse count ({warehouses}) — \
+                     validated at config parse"
+                );
+                WorkloadDriver {
+                    ycsb: None,
+                    tpcc: Some(TpccGen::new(*warehouses, seed)),
+                    batch_size: *batch,
+                    warehouses: *warehouses,
+                    group,
+                    groups,
+                    wh_range: warehouse_range(group, groups, *warehouses),
+                }
+            }
+        }
+    }
+
+    /// Generate the next round's batch; returns (payload, base apply cost in
+    /// ms at unit speed, live op count).
+    pub(crate) fn next_batch(&mut self) -> (Payload, Batch, f64, usize) {
+        if let Some(gen) = self.ycsb.as_mut() {
+            // groups = 1 takes the untouched generator path (bit-identical)
+            let b = Arc::new(if self.groups <= 1 {
+                gen.batch(self.batch_size)
+            } else {
+                gen.batch_sharded(self.batch_size, self.group, self.groups)
+            });
+            let cost = DocStore::estimate_cost_ms(&b);
+            let ops = b.live_ops();
+            (Payload::Ycsb(b.clone()), Batch::Ycsb(b), cost, ops)
+        } else {
+            let gen = self.tpcc.as_mut().unwrap();
+            let b = Arc::new(if self.groups <= 1 {
+                gen.batch(self.batch_size)
+            } else {
+                gen.batch_sharded(self.batch_size, self.wh_range.0, self.wh_range.1)
+            });
+            let cost = RelStore::estimate_cost_ms(&b, self.warehouses as usize);
+            let ops = b.live_txns();
+            (Payload::Tpcc(b.clone()), Batch::Tpcc(b), cost, ops)
+        }
+    }
+}
+
+/// One workload round the pipelined window has proposed but whose commit it
+/// has not yet observed.
+struct PendingRound {
+    round: u64,
+    entry_index: u64,
+    /// Term of the entry at propose time — (index, term) is exact entry
+    /// identity (Raft log matching), so a leader change can tell surviving
+    /// rounds from overwritten ones.
+    term: u64,
+    start_ms: f64,
+    ops: usize,
+    leader_apply_done: f64,
+    batch: Batch,
+}
+
+/// Track the peak retained (post-compaction) log length across all nodes —
+/// the quantity `snapshot_every` bounds.
+fn sample_retained(nodes: &[Node], max_retained: &mut u64) {
+    for node in nodes {
+        *max_retained = (*max_retained).max(node.log().len() as u64);
+    }
+}
+
+/// Fold a sorted (ascending) read-latency population into the result's
+/// mean/p50/p99 — the one copy of this computation, shared by the
+/// per-group fold below and the multi-group merge in `sim::cluster`.
+pub(crate) fn fold_read_latencies(result: &mut SimResult, sorted_lats: &[f64]) {
+    if sorted_lats.is_empty() {
+        return;
+    }
+    use crate::bench::metrics::percentile_sorted;
+    result.read_mean_ms = sorted_lats.iter().sum::<f64>() / sorted_lats.len() as f64;
+    result.read_p50_ms = percentile_sorted(sorted_lats, 0.50);
+    result.read_p99_ms = percentile_sorted(sorted_lats, 0.99);
+}
+
+/// Fold the read-client bookkeeping and node-side read counters into the
+/// result (no-op on log-path runs: everything stays zero). `sorted_lats`
+/// is the request-latency population, ascending — the caller keeps
+/// ownership so the multi-group merge can re-pool it without a copy.
+fn finish_reads(result: &mut SimResult, readctl: &ReadCtl, sorted_lats: &[f64], nodes: &[Node]) {
+    result.reads_served = readctl.reads_served;
+    result.read_ops_served = readctl.read_ops_served;
+    result.lease_reads = readctl.lease_reads;
+    result.read_failures = readctl.failures;
+    result.readindex_rounds = nodes.iter().map(|nd| nd.readindex_rounds()).sum();
+    result.read_done_ms = readctl.done_ms;
+    fold_read_latencies(result, sorted_lats);
+}
+
+/// What one finished engine hands back to the scheduler: the group's full
+/// [`SimResult`] (for `groups = 1` it *is* the run result, bit-for-bit the
+/// historical one), plus the raw read latencies and final leader the
+/// multi-group merge needs for aggregate rollups.
+pub(crate) struct GroupOutcome {
+    pub result: SimResult,
+    pub read_latencies: Vec<f64>,
+    pub final_leader: Option<NodeId>,
+}
+
+/// One consensus group being driven over the shared fabric. See the module
+/// docs for the bit-for-bit G=1 contract.
+pub(crate) struct GroupEngine {
+    gid: GroupId,
+    /// Shared, immutable run configuration (one allocation for all G
+    /// engines — the per-group mutable schedules below are copied out).
+    config: Arc<SimConfig>,
+    mode: Mode,
+    depth: usize,
+    /// `pipeline == 1`: the frozen lock-step window (Fig. 7 drive loop).
+    lockstep: bool,
+
+    nodes: Vec<Node>,
+    alive: Vec<bool>,
+    /// Timer generations (stale-timer cancellation).
+    el_gen: Vec<u64>,
+    hb_gen: Vec<u64>,
+
+    /// Per-group forked RNG streams — group g forks streams 8g+1..8g+5 off
+    /// the root, so group 0 forks 1..5 in the historical order.
+    net_rng: Rng,
+    timer_rng: Rng,
+    kill_rng: Rng,
+    driver: WorkloadDriver,
+    nemesis: Option<Nemesis>,
+    safety: Option<SafetyLog>,
+    readctl: ReadCtl,
+
+    /// Fig. 21 restart schedule + retained-log peak tracking.
+    restart_pending: Option<RestartSpec>,
+    restart_victim: Option<NodeId>,
+    max_retained: u64,
+
+    /// Digest-tracked replica stores (one shard's state per group).
+    tracked: Vec<usize>,
+    doc_stores: Vec<DocStore>,
+    rel_stores: Vec<RelStore>,
+    is_tpcc: bool,
+
+    /// Completed rounds.
+    round: u64,
+    /// Rounds handed to the leader (pipelined window accounting).
+    proposed: u64,
+    stats: Vec<RoundStat>,
+    current_leader: Option<NodeId>,
+    /// Leadership epoch tracking (pipelined): when a new leader takes over,
+    /// pending rounds whose entries did not survive into its log are void.
+    known_leader: Option<NodeId>,
+    elections: u64,
+
+    // -- lock-step window (depth == 1) --
+    /// (round, start, ops, leader_apply_done, batch)
+    pending1: Option<(u64, f64, usize, f64, Batch)>,
+    pending1_entry: u64,
+    /// Batch cost of the in-flight round, for follower service times.
+    inflight_cost_ms: f64,
+
+    // -- pipelined window (depth > 1) --
+    pending: Vec<PendingRound>,
+    /// Entry index → batch apply cost at unit speed (for follower service
+    /// times); retained for the whole run so retransmits resolve too.
+    batch_costs: HashMap<u64, f64>,
+
+    reconfig_queue: Vec<ReconfigSpec>,
+    kills: Vec<KillSpec>,
+    kill_leader_at: Option<u64>,
+}
+
+impl GroupEngine {
+    pub(crate) fn new(
+        config: &Arc<SimConfig>,
+        gid: GroupId,
+        groups: usize,
+        root_rng: &mut Rng,
+    ) -> Self {
+        let n = config.n();
+        let mode = match &config.protocol {
+            Protocol::Raft => Mode::Raft,
+            Protocol::Cabinet { t } => Mode::cabinet(n, *t),
+            Protocol::Hqc { .. } => unreachable!("HQC runs through the replication baseline"),
+        };
+        // fork order is part of the determinism contract: streams 1..4 in
+        // order, then 5 only when this group actually runs a nemesis — for
+        // group 0 that is exactly the historical single-group sequence
+        let base = 8 * gid as u64;
+        let net_rng = root_rng.fork(base + 1);
+        let timer_rng = root_rng.fork(base + 2);
+        let kill_rng = root_rng.fork(base + 3);
+        let wl_seed = root_rng.fork(base + 4).next_u64();
+        let driver = WorkloadDriver::new_sharded(&config.workload, wl_seed, gid, groups);
+        let nemesis_here = config.nemesis.is_some()
+            && config.nemesis_groups.as_ref().map_or(true, |gs| gs.contains(&gid));
+        let nemesis = if nemesis_here {
+            let spec = config.nemesis.as_ref().unwrap();
+            spec.validate(n).expect("invalid nemesis spec");
+            Some(Nemesis::new(spec.clone(), n, root_rng.fork(base + 5)))
+        } else {
+            None
+        };
+        let safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
+
+        let nodes: Vec<Node> = (0..n)
+            .map(|i| {
+                let mut node = Node::new(i, n, mode.clone());
+                node.set_static_weights(config.static_weights);
+                node.set_snapshot_every(config.snapshot_every);
+                node.set_pre_vote(config.pre_vote);
+                node.set_read_path(config.read_path);
+                node.set_lease_duration_ms(config.lease_duration_ms());
+                node
+            })
+            .collect();
+
+        let tracked: Vec<usize> = match config.digest_mode {
+            crate::sim::cluster::DigestMode::Off => vec![],
+            crate::sim::cluster::DigestMode::Sample => vec![0, n - 1],
+            crate::sim::cluster::DigestMode::All => (0..n).collect(),
+        };
+        let is_tpcc = matches!(config.workload, WorkloadSpec::Tpcc { .. });
+        let doc_stores: Vec<DocStore> = tracked.iter().map(|_| DocStore::new()).collect();
+        // relational stores exist only for TPC-C runs — `warehouses >= 1` is
+        // a config-parse invariant, not a construction-site patch-up
+        let rel_stores: Vec<RelStore> = if is_tpcc {
+            tracked.iter().map(|_| RelStore::new(driver.warehouses as usize)).collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut reconfig_queue = config.reconfigs.clone();
+        reconfig_queue.sort_by_key(|r| r.round);
+        let mut kills = config.kills.clone();
+        kills.sort_by_key(|k| k.round);
+
+        GroupEngine {
+            gid,
+            config: Arc::clone(config),
+            mode,
+            depth: config.pipeline.max(1),
+            lockstep: config.pipeline <= 1,
+            nodes,
+            alive: vec![true; n],
+            el_gen: vec![0u64; n],
+            hb_gen: vec![0u64; n],
+            net_rng,
+            timer_rng,
+            kill_rng,
+            driver,
+            nemesis,
+            safety,
+            readctl: ReadCtl::default(),
+            restart_pending: config.restart,
+            restart_victim: None,
+            max_retained: 0,
+            tracked,
+            doc_stores,
+            rel_stores,
+            is_tpcc,
+            round: 0,
+            proposed: 0,
+            stats: Vec::with_capacity(config.rounds as usize),
+            current_leader: None,
+            known_leader: None,
+            elections: 0,
+            pending1: None,
+            pending1_entry: 0,
+            inflight_cost_ms: 0.0,
+            pending: Vec::with_capacity(config.pipeline.max(1)),
+            batch_costs: HashMap::new(),
+            reconfig_queue,
+            kills,
+            kill_leader_at: config.kill_leader_at_round,
+        }
+    }
+
+    #[inline]
+    fn push(&self, q: &mut EventQueue<GroupEv>, delay: f64, ev: Ev) {
+        q.push_after(delay, GroupEv { group: self.gid, ev });
+    }
+
+    /// Bootstrap this group: one node starts the first election immediately
+    /// (node `gid % n`, so sharded runs spread initial leaders across the
+    /// cluster; for a single group that is node 0, the historical choice);
+    /// everyone else arms a randomized election timer.
+    pub(crate) fn bootstrap(&mut self, q: &mut EventQueue<GroupEv>) {
+        let n = self.config.n();
+        let first = self.gid % n;
+        for node in 0..n {
+            let delay = if node == first {
+                0.0
+            } else {
+                self.timer_rng
+                    .range_f64(self.config.election_timeout_ms.0, self.config.election_timeout_ms.1)
+            };
+            self.el_gen[node] += 1;
+            self.push(q, delay, Ev::ElectionTimer { node, generation: self.el_gen[node] });
+        }
+        self.push(q, 1.0, Ev::ProposeNext);
+    }
+
+    /// This group has committed every round and drained every read.
+    pub(crate) fn done(&self) -> bool {
+        self.round >= self.config.rounds && self.readctl.outstanding.is_empty()
+    }
+
+    /// Process one fabric event addressed to this group.
+    pub(crate) fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<GroupEv>) {
+        match ev {
+            Ev::ElectionTimer { node, generation } => {
+                if !self.alive[node] || generation != self.el_gen[node] {
+                    return;
+                }
+                self.nodes[node].observe_time(now);
+                let outs = self.nodes[node].step(Input::ElectionTimeout);
+                self.route(node, outs, 0.0, q);
+            }
+            Ev::HeartbeatTimer { node, generation } => {
+                if !self.alive[node] || generation != self.hb_gen[node] {
+                    return;
+                }
+                self.nodes[node].observe_time(now);
+                let outs = self.nodes[node].step(Input::HeartbeatTimeout);
+                self.route(node, outs, 0.0, q);
+            }
+            Ev::Deliver { to, from, msg } => {
+                if !self.alive[to] {
+                    return;
+                }
+                // follower service time: RPC processing + batch apply,
+                // scaled by zone speed and contention (modeled by delaying
+                // the node's outputs)
+                let service = if self.lockstep {
+                    self.service_ms_lockstep(to, &msg)
+                } else {
+                    self.service_ms_pipelined(to, &msg)
+                };
+                self.nodes[to].observe_time(now);
+                let outs = self.nodes[to].step(Input::Receive(from, msg));
+                self.route(to, outs, service, q);
+            }
+            Ev::ReadAt { id, node } => {
+                if !self.readctl.outstanding.contains_key(&id) {
+                    return; // already served
+                }
+                if !self.alive[node] {
+                    return; // the standing retry timer re-targets it
+                }
+                self.nodes[node].observe_time(now);
+                let service = self.config.rpc_proc_ms / self.effective_speed(node);
+                let outs = self.nodes[node].step(Input::Read { id });
+                self.route(node, outs, service, q);
+            }
+            Ev::ReadRetry { id } => {
+                if let Some(req) = self.readctl.outstanding.get(&id) {
+                    let target = self
+                        .current_leader
+                        .filter(|&l| self.alive[l])
+                        .or_else(|| pick_read_target(req.round + req.k, &self.alive));
+                    if let Some(target) = target {
+                        self.push(q, 0.0, Ev::ReadAt { id, node: target });
+                    }
+                    self.push(q, READ_RETRY_MS, Ev::ReadRetry { id });
+                }
+            }
+            Ev::ProposeNext => {
+                if self.lockstep {
+                    self.propose_next_lockstep(now, q);
+                } else {
+                    self.propose_next_pipelined(now, q);
+                }
+            }
+        }
+        // A leadership change voids every pending round whose entry did not
+        // survive into the new leader's log — (index, term) is exact entry
+        // identity by Raft log matching. The winner overwrites dead slots,
+        // so retiring them on its commits would misattribute fresh entries
+        // to old batches. Dropped rounds are regenerated with fresh batches.
+        // This runs before any RoundCommitted from the new leader can be
+        // processed (its quorum needs at least one more network round trip).
+        // Pipelined window only — the lock-step window keeps its single
+        // pending round across leader changes (the frozen Fig. 7 behavior).
+        if !self.lockstep && self.current_leader != self.known_leader {
+            if let Some(x) = self.current_leader {
+                let nodes = &self.nodes;
+                let proposed = &mut self.proposed;
+                self.pending.retain(|p| {
+                    let survived = nodes[x].log().term_at(p.entry_index) == Some(p.term);
+                    if !survived {
+                        *proposed -= 1;
+                    }
+                    survived
+                });
+            }
+            self.known_leader = self.current_leader;
+        }
+    }
+
+    /// The lock-step proposer (`pipeline = 1`): one round in flight, frozen
+    /// so the historical figures reproduce bit-for-bit.
+    fn propose_next_lockstep(&mut self, now: f64, q: &mut EventQueue<GroupEv>) {
+        sample_retained(&self.nodes, &mut self.max_retained);
+        if self.round >= self.config.rounds {
+            return; // only reads are draining now
+        }
+        if self.pending1.is_some() {
+            return; // a round is already in flight
+        }
+        let Some(leader) = self.current_leader.filter(|&l| self.alive[l]) else {
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        };
+        if self.nodes[leader].role() != Role::Leader {
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        }
+        let next_round = self.round + 1;
+
+        self.maybe_kill_restart(next_round, leader, q);
+        self.run_scheduled_kills(next_round, leader);
+        if self.kill_leader_at == Some(next_round) {
+            self.kill_leader_at = None; // fire exactly once
+            self.alive[leader] = false;
+            self.current_leader = None;
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        }
+        // scheduled reconfiguration (not counted as a round)
+        if let Some(rc) = self.reconfig_queue.first().copied() {
+            if rc.round == next_round {
+                self.reconfig_queue.remove(0);
+                let outs =
+                    self.nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
+                self.route(leader, outs, 0.0, q);
+                self.push(q, 1.0, Ev::ProposeNext);
+                return;
+            }
+        }
+
+        let (payload, batch, cost_ms, ops, read_batch) =
+            next_round_batch(&mut self.driver, self.config.read_path);
+        self.inflight_cost_ms = cost_ms;
+        // Fig. 7: the leader batches + coordinates; *followers* execute the
+        // workload. Leader-side work is the batching / RPC-issue overhead.
+        let leader_speed = self.effective_speed_at(leader, next_round);
+        let leader_apply_done = now + self.config.rpc_proc_ms / leader_speed;
+        self.nodes[leader].observe_time(now);
+        let outs = self.nodes[leader].step(Input::Propose(payload));
+        self.pending1 = Some((next_round, now, ops, leader_apply_done, batch));
+        self.pending1_entry = self.nodes[leader].log().last_index();
+        self.route(leader, outs, 0.0, q);
+        // the round's read-only ops go through the selected fast path
+        if let Some(rb) = read_batch {
+            self.readctl.issue_fan(self.gid, q, &self.alive, now, next_round, &rb);
+        }
+    }
+
+    /// The pipelined proposer (`pipeline > 1`): keeps up to `depth` rounds
+    /// in flight, refilled on every commit.
+    fn propose_next_pipelined(&mut self, now: f64, q: &mut EventQueue<GroupEv>) {
+        sample_retained(&self.nodes, &mut self.max_retained);
+        if self.pending.len() >= self.depth || self.proposed >= self.config.rounds {
+            return; // window full (a commit re-arms the proposer)
+        }
+        let Some(leader) = self.current_leader.filter(|&l| self.alive[l]) else {
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        };
+        if self.nodes[leader].role() != Role::Leader {
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        }
+        if self.nodes[leader].reconfig_pending() {
+            // §4.1.4: the pipeline drains across a reconfiguration
+            self.push(q, 5.0, Ev::ProposeNext);
+            return;
+        }
+        let next_round = self.proposed + 1;
+
+        self.maybe_kill_restart(next_round, leader, q);
+        self.run_scheduled_kills(next_round, leader);
+        if self.kill_leader_at == Some(next_round) {
+            self.kill_leader_at = None; // fire exactly once
+            self.alive[leader] = false;
+            self.current_leader = None;
+            // rounds that died in the old leader's window get regenerated
+            // (fresh batches) under the next leader. Every pending round
+            // incremented `proposed` when it was pushed, so the subtraction
+            // is exact — a saturating_sub here would only mask a broken
+            // window invariant.
+            debug_assert!(
+                self.proposed >= self.pending.len() as u64,
+                "window accounting underflow: proposed {} < pending {}",
+                self.proposed,
+                self.pending.len()
+            );
+            self.proposed -= self.pending.len() as u64;
+            self.pending.clear();
+            self.push(q, 50.0, Ev::ProposeNext);
+            return;
+        }
+        // scheduled reconfiguration (not counted as a round) — may land
+        // while earlier rounds are still in flight; their propose-time
+        // weight/CT snapshots keep them correct
+        if let Some(rc) = self.reconfig_queue.first().copied() {
+            if rc.round == next_round {
+                self.reconfig_queue.remove(0);
+                let outs =
+                    self.nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
+                self.route(leader, outs, 0.0, q);
+                self.push(q, 1.0, Ev::ProposeNext);
+                return;
+            }
+        }
+
+        let (payload, batch, cost_ms, ops, read_batch) =
+            next_round_batch(&mut self.driver, self.config.read_path);
+        let leader_speed = self.effective_speed_at(leader, next_round);
+        let leader_apply_done = now + self.config.rpc_proc_ms / leader_speed;
+        self.nodes[leader].observe_time(now);
+        let outs = self.nodes[leader].step(Input::Propose(payload));
+        let entry_index = self.nodes[leader].log().last_index();
+        self.batch_costs.insert(entry_index, cost_ms);
+        self.proposed = next_round;
+        self.pending.push(PendingRound {
+            round: next_round,
+            entry_index,
+            term: self.nodes[leader].term(),
+            start_ms: now,
+            ops,
+            leader_apply_done,
+            batch,
+        });
+        self.route(leader, outs, 0.0, q);
+        // this round's read-only ops go through the selected fast path
+        if let Some(rb) = read_batch {
+            self.readctl.issue_fan(self.gid, q, &self.alive, now, next_round, &rb);
+        }
+        if self.pending.len() < self.depth && self.proposed < self.config.rounds {
+            // back-to-back proposal to fill the window
+            self.push(q, 0.2, Ev::ProposeNext);
+        }
+    }
+
+    /// Fig. 21 kill/restart schedule, shared by both windows: kill the
+    /// highest-id non-leader follower at the start of `kill_round`, bring
+    /// it back with completely fresh state (empty log, zero commit) at the
+    /// start of `restart_round`. The restarted node re-arms a randomized
+    /// election timer; with compaction on, catch-up goes through
+    /// `InstallSnapshot`.
+    fn maybe_kill_restart(&mut self, next_round: u64, leader: NodeId, q: &mut EventQueue<GroupEv>) {
+        let Some(rs) = self.restart_pending else { return };
+        let n = self.nodes.len();
+        if rs.kill_round == next_round && self.restart_victim.is_none() {
+            if let Some(v) = (0..n).rev().find(|&i| i != leader && self.alive[i]) {
+                self.alive[v] = false;
+                self.restart_victim = Some(v);
+            }
+        }
+        if rs.restart_round == next_round {
+            self.restart_pending = None; // one-shot
+            if let Some(v) = self.restart_victim {
+                let mut fresh = Node::new(v, n, self.mode.clone());
+                fresh.set_static_weights(self.config.static_weights);
+                fresh.set_snapshot_every(self.config.snapshot_every);
+                fresh.set_pre_vote(self.config.pre_vote);
+                fresh.set_read_path(self.config.read_path);
+                fresh.set_lease_duration_ms(self.config.lease_duration_ms());
+                if matches!(self.config.read_path, ReadPath::Lease) {
+                    // a restarted voter may have acked a probe whose lease is
+                    // still live — hold its vote for one full election timeout
+                    fresh.hold_votes_until_timeout();
+                }
+                self.nodes[v] = fresh;
+                // a fresh node legitimately re-commits from the bottom of
+                // the log — restart its safety-evidence stream with it, or
+                // the checker would flag the replay as a commit regression
+                if let Some(sl) = self.safety.as_mut() {
+                    sl.commits[v].clear();
+                }
+                self.alive[v] = true;
+                self.el_gen[v] += 1;
+                let d = self
+                    .timer_rng
+                    .range_f64(self.config.election_timeout_ms.0, self.config.election_timeout_ms.1);
+                self.push(q, d, Ev::ElectionTimer { node: v, generation: self.el_gen[v] });
+            }
+        }
+    }
+
+    /// Scheduled kills fire at the start of their round.
+    fn run_scheduled_kills(&mut self, next_round: u64, leader: NodeId) {
+        while let Some(k) = self.kills.first().cloned() {
+            if k.round != next_round {
+                break;
+            }
+            let weights = self.nodes[leader].weight_assignment().to_vec();
+            for v in k.victims(&weights, leader, &self.alive, &mut self.kill_rng) {
+                self.alive[v] = false;
+            }
+            self.kills.remove(0);
+        }
+    }
+
+    /// Lock-step service time: any batch-carrying AppendEntries charges the
+    /// one in-flight round's apply cost.
+    fn service_ms_lockstep(&self, node: NodeId, msg: &Message) -> f64 {
+        match msg {
+            Message::AppendEntries { entries, .. } if !entries.is_empty() => {
+                let speed = self.effective_speed(node);
+                let has_batch = entries
+                    .iter()
+                    .any(|e| matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_)));
+                let apply = if has_batch { self.inflight_cost_ms } else { 0.0 };
+                (self.config.rpc_proc_ms + apply) / speed
+            }
+            _ => self.config.rpc_proc_ms / self.effective_speed(node),
+        }
+    }
+
+    /// Pipelined service time: apply cost accrues per batch entry the node
+    /// will actually append — the message must pass the term and
+    /// log-consistency checks, and each entry is charged at its own round's
+    /// cost only the first time it ships. Overlapping retransmissions inside
+    /// the window and rejected appends (stale term / log mismatch after a
+    /// failover) never re-charge an executed batch.
+    fn service_ms_pipelined(&self, node: NodeId, msg: &Message) -> f64 {
+        let receiver = &self.nodes[node];
+        match msg {
+            Message::AppendEntries { term, prev_log_index, prev_log_term, entries, .. }
+                if !entries.is_empty() =>
+            {
+                let speed = self.effective_speed(node);
+                let accepted = *term >= receiver.term()
+                    && receiver.log().matches(*prev_log_index, *prev_log_term);
+                let apply: f64 = if accepted {
+                    let last = receiver.log().last_index();
+                    entries
+                        .iter()
+                        .filter(|e| {
+                            e.index > last
+                                && matches!(e.payload, Payload::Ycsb(_) | Payload::Tpcc(_))
+                        })
+                        .map(|e| self.batch_costs.get(&e.index).copied().unwrap_or(0.0))
+                        .sum()
+                } else {
+                    0.0
+                };
+                (self.config.rpc_proc_ms + apply) / speed
+            }
+            _ => self.config.rpc_proc_ms / self.effective_speed(node),
+        }
+    }
+
+    /// Zone speed × contention factor at this group's current round.
+    fn effective_speed(&self, node: NodeId) -> f64 {
+        self.effective_speed_at(node, self.round)
+    }
+
+    fn effective_speed_at(&self, node: NodeId, round: u64) -> f64 {
+        let mut speed = self.config.zones.speed(node);
+        if let Some(c) = &self.config.contention {
+            speed /= c.factor(round);
+        }
+        speed
+    }
+
+    /// Route one node's outputs into the fabric; sends leave `extra_delay`
+    /// ms after now (the node's service time). One implementation for both
+    /// windows — only round retirement differs, and that branches on
+    /// `lockstep` (the G=1 digests pin both behaviors).
+    fn route(
+        &mut self,
+        node: NodeId,
+        outs: Vec<Output>,
+        extra_delay: f64,
+        q: &mut EventQueue<GroupEv>,
+    ) {
+        let n = self.config.n();
+        let now = q.now();
+        for o in outs {
+            match o {
+                Output::Send(to, msg) => {
+                    if !self.alive[to] {
+                        continue;
+                    }
+                    // link delay is sampled on the non-leader endpoint (the
+                    // paper's netem delays are installed on follower nodes)
+                    let shaped_end =
+                        if node == self.current_leader.unwrap_or(usize::MAX) { to } else { node };
+                    let lat = self.config.delay.link_latency(
+                        shaped_end,
+                        n,
+                        now,
+                        self.round,
+                        msg.wire_size(),
+                        &mut self.net_rng,
+                    );
+                    let fate = match self.nemesis.as_mut() {
+                        Some(nm) => nm.fate(now, node, to, self.current_leader),
+                        None => Fate::deliver(),
+                    };
+                    if fate.copies == 0 {
+                        continue; // partitioned or lost
+                    }
+                    if fate.copies > 1 {
+                        self.push(
+                            q,
+                            extra_delay + lat + fate.extra_delay_ms[1],
+                            Ev::Deliver { to, from: node, msg: msg.clone() },
+                        );
+                    }
+                    self.push(
+                        q,
+                        extra_delay + lat + fate.extra_delay_ms[0],
+                        Ev::Deliver { to, from: node, msg },
+                    );
+                }
+                Output::ResetElectionTimer => {
+                    self.el_gen[node] += 1;
+                    let d = self.timer_rng.range_f64(
+                        self.config.election_timeout_ms.0,
+                        self.config.election_timeout_ms.1,
+                    );
+                    self.push(q, d, Ev::ElectionTimer { node, generation: self.el_gen[node] });
+                }
+                Output::StartHeartbeat => {
+                    self.hb_gen[node] += 1;
+                    self.push(
+                        q,
+                        self.config.heartbeat_ms,
+                        Ev::HeartbeatTimer { node, generation: self.hb_gen[node] },
+                    );
+                }
+                Output::StopHeartbeat => {
+                    self.hb_gen[node] += 1;
+                }
+                Output::BecameLeader { term } => {
+                    self.current_leader = Some(node);
+                    self.elections += 1;
+                    if let Some(sl) = self.safety.as_mut() {
+                        sl.leaders.push((term, node));
+                    }
+                }
+                Output::SteppedDown => {
+                    if self.current_leader == Some(node) {
+                        self.current_leader = None;
+                    }
+                }
+                Output::RoundCommitted { index, repliers, .. } => {
+                    if self.lockstep {
+                        self.round_committed_lockstep(node, index, repliers, now, q);
+                    } else {
+                        self.round_committed_pipelined(node, index, repliers, now, q);
+                    }
+                }
+                Output::Commit(e) => {
+                    // per-node commit evidence for the bench::safety checker
+                    if let Some(sl) = self.safety.as_mut() {
+                        sl.commits[node].push((e.index, e.term));
+                    }
+                }
+                Output::ProposalRejected(_) => {}
+                // nodes snapshot inline (SnapshotCapture::Inline) — these
+                // are informational; installs are counted via node counters
+                Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
+                Output::ReadReady { id, index, lease } => {
+                    self.serve_read(node, id, index, lease, now);
+                }
+                Output::ReadFailed { id } => {
+                    if self.readctl.outstanding.contains_key(&id) {
+                        self.readctl.failures += 1; // the standing retry re-drives it
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lock-step retirement: only the harness round (pending batch) counts.
+    fn round_committed_lockstep(
+        &mut self,
+        node: NodeId,
+        index: u64,
+        repliers: usize,
+        now: f64,
+        q: &mut EventQueue<GroupEv>,
+    ) {
+        // write-completion timeline for the read checker (recorded for
+        // every leader-observed commit, barrier no-ops included)
+        if Some(node) == self.current_leader {
+            if let Some(sl) = self.safety.as_mut() {
+                sl.commit_times.push((now, index));
+            }
+        }
+        if let Some((rnd, start, ops, leader_apply_done, _)) = self.pending1.as_ref() {
+            if index >= self.pending1_entry && Some(node) == self.current_leader {
+                let commit_time = now.max(*leader_apply_done);
+                let latency = commit_time - start;
+                self.stats.push(RoundStat {
+                    round: *rnd,
+                    entry_index: self.pending1_entry,
+                    start_ms: *start,
+                    latency_ms: latency,
+                    tput_ops_s: *ops as f64 / (latency / 1000.0),
+                    ops: *ops,
+                    repliers,
+                });
+                self.round = *rnd;
+                // apply to tracked replicas (replica convergence)
+                if let Some((_, _, _, _, batch)) = self.pending1.take() {
+                    apply_tracked(
+                        &batch,
+                        &self.tracked,
+                        &mut self.doc_stores,
+                        &mut self.rel_stores,
+                        self.is_tpcc,
+                    );
+                }
+                self.push(q, 0.2, Ev::ProposeNext); // client turnaround
+            }
+        }
+    }
+
+    /// Pipelined retirement: the committed prefix of the window retires in
+    /// order and the proposer is re-armed.
+    fn round_committed_pipelined(
+        &mut self,
+        node: NodeId,
+        index: u64,
+        repliers: usize,
+        now: f64,
+        q: &mut EventQueue<GroupEv>,
+    ) {
+        if Some(node) != self.current_leader {
+            return;
+        }
+        // write-completion timeline for the read checker (barrier no-ops
+        // included — read indices can point at them)
+        if let Some(sl) = self.safety.as_mut() {
+            sl.commit_times.push((now, index));
+        }
+        // retire the committed prefix of the window, in order
+        while self.pending.first().map_or(false, |p| p.entry_index <= index) {
+            let p = self.pending.remove(0);
+            let commit_time = now.max(p.leader_apply_done);
+            let latency = commit_time - p.start_ms;
+            self.stats.push(RoundStat {
+                round: p.round,
+                entry_index: p.entry_index,
+                start_ms: p.start_ms,
+                latency_ms: latency,
+                tput_ops_s: p.ops as f64 / (latency / 1000.0),
+                ops: p.ops,
+                repliers,
+            });
+            if p.round > self.round {
+                self.round = p.round;
+            }
+            apply_tracked(
+                &p.batch,
+                &self.tracked,
+                &mut self.doc_stores,
+                &mut self.rel_stores,
+                self.is_tpcc,
+            );
+        }
+        self.push(q, 0.2, Ev::ProposeNext); // client turnaround
+    }
+
+    /// Retire one served read: record its latency and checker evidence.
+    fn serve_read(&mut self, node: NodeId, id: u64, index: u64, lease: bool, now: f64) {
+        let Some(req) = self.readctl.outstanding.remove(&id) else {
+            return; // a duplicate grant after a retry already served it
+        };
+        let done = now + req.cost_ms / self.effective_speed(node);
+        self.readctl.latencies.push(done - req.invoked_ms);
+        self.readctl.reads_served += 1;
+        self.readctl.read_ops_served += req.ops as u64;
+        if lease {
+            self.readctl.lease_reads += 1;
+        }
+        if done > self.readctl.done_ms {
+            self.readctl.done_ms = done;
+        }
+        if let Some(sl) = self.safety.as_mut() {
+            sl.reads.push(ReadRecord {
+                node,
+                id,
+                invoked_ms: req.invoked_ms,
+                served_ms: now,
+                read_index: index,
+                lease,
+            });
+        }
+    }
+
+    /// Fold this group's run into its [`SimResult`] — the exact tail both
+    /// historical drivers shared.
+    pub(crate) fn finish(mut self) -> GroupOutcome {
+        // convergence check across tracked replicas
+        let digests = if self.tracked.is_empty() {
+            None
+        } else if self.is_tpcc {
+            let d0 = self.rel_stores[0].stream_digest();
+            Some(self.rel_stores.iter().all(|s| s.stream_digest() == d0))
+        } else {
+            let d0 = self.doc_stores[0].state_digest();
+            Some(self.doc_stores.iter().all(|s| s.state_digest() == d0))
+        };
+
+        sample_retained(&self.nodes, &mut self.max_retained);
+        let mut result = SimResult::from_rounds(
+            self.config.protocol.label(),
+            self.stats,
+            digests,
+            self.elections,
+        );
+        result.snapshots_taken = self.nodes.iter().map(|nd| nd.snapshots_taken()).sum();
+        result.snapshots_installed = self.nodes.iter().map(|nd| nd.snapshots_installed()).sum();
+        result.max_retained_log = self.max_retained;
+        result.elections_started = self.nodes.iter().map(|nd| nd.elections_started()).sum();
+        result.terms_advanced = self.nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
+        result.nemesis_stats = self.nemesis.as_ref().map(|nm| nm.stats);
+        result.safety = self.safety.take();
+        // one sorted pass serves both the per-group percentiles and (moved,
+        // not cloned) the multi-group merge's pooled population
+        let mut read_latencies = std::mem::take(&mut self.readctl.latencies);
+        read_latencies.sort_by(|a, b| a.total_cmp(b));
+        finish_reads(&mut result, &self.readctl, &read_latencies, &self.nodes);
+        GroupOutcome { result, read_latencies, final_leader: self.current_leader }
+    }
+}
+
+fn apply_tracked(
+    batch: &Batch,
+    tracked: &[usize],
+    doc_stores: &mut [DocStore],
+    rel_stores: &mut [RelStore],
+    is_tpcc: bool,
+) {
+    if tracked.is_empty() {
+        return;
+    }
+    match batch {
+        Batch::Ycsb(b) => {
+            for store in doc_stores.iter_mut() {
+                store.apply(b);
+            }
+        }
+        Batch::Tpcc(b) => {
+            if is_tpcc {
+                for store in rel_stores.iter_mut() {
+                    store.apply(b);
+                }
+            }
+        }
+    }
+}

@@ -5,22 +5,29 @@
 //!
 //! A run is a pure function of `(SimConfig, seed)`: same inputs ⇒
 //! bit-identical commit sequence and metrics (the replay-determinism tests
-//! pin this). Two round drivers share the event queue: the lock-step driver
-//! (`pipeline = 1`, frozen so the historical figures reproduce bit-for-bit)
-//! and the pipelined driver (`pipeline > 1`, overlapping replication
-//! rounds). Both support snapshot compaction (`SimConfig::snapshot_every`),
-//! fault schedules (kills, contention, a follower kill + restart via
-//! [`RestartSpec`]), delay models D1–D4, heterogeneous zones, the
-//! adversarial nemesis layer (`SimConfig::nemesis` — partitions, loss,
-//! duplication, reordering), PreVote elections (`SimConfig::pre_vote`),
-//! and safety-evidence recording (`SimConfig::track_safety` →
-//! [`SafetyLog`], validated by `bench::safety::check`).
+//! pin this). The scheduler in [`cluster`] steps `SimConfig::groups`
+//! independent consensus groups — each a `sim::group::GroupEngine` owning
+//! one workload shard — over one shared event queue, delay model and nemesis
+//! fabric; with `groups = 1` it reproduces the historical single-group
+//! driver bit-for-bit. Each engine drives one of two round windows: the
+//! lock-step window (`pipeline = 1`, frozen so the historical figures
+//! reproduce bit-for-bit) and the pipelined window (`pipeline > 1`,
+//! overlapping replication rounds). Both support snapshot compaction
+//! (`SimConfig::snapshot_every`), fault schedules (kills, contention, a
+//! follower kill + restart via [`RestartSpec`]), delay models D1–D4,
+//! heterogeneous zones, the adversarial nemesis layer (`SimConfig::nemesis`
+//! — partitions, loss, duplication, reordering; per-group or all-group
+//! scope via `SimConfig::nemesis_groups`), PreVote elections
+//! (`SimConfig::pre_vote`), and safety-evidence recording
+//! (`SimConfig::track_safety` → [`SafetyLog`], validated by
+//! `bench::safety::check` — per group on sharded runs).
 
 pub mod cluster;
 pub mod event;
+pub(crate) mod group;
 
 pub use cluster::{
-    run, DigestMode, Protocol, ReadPath, ReadRecord, ReconfigSpec, RestartSpec, RoundStat,
-    SafetyLog, SimConfig, SimResult, WorkloadSpec,
+    run, DigestMode, GroupStat, Protocol, ReadPath, ReadRecord, ReconfigSpec, RestartSpec,
+    RoundStat, SafetyLog, SimConfig, SimResult, WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

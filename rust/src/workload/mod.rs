@@ -1,7 +1,11 @@
-//! Workload generators: YCSB core workloads A–F and TPC-C (§5.1).
+//! Workload generators: YCSB core workloads A–F and TPC-C (§5.1), plus the
+//! deterministic shard router the multi-group deployments partition them
+//! with ([`shard`]).
 
+pub mod shard;
 pub mod tpcc;
 pub mod ycsb;
 
+pub use shard::ShardBy;
 pub use tpcc::{TpccBatch, TpccGen};
 pub use ycsb::{Workload, YcsbBatch, YcsbGen};

@@ -1,0 +1,207 @@
+//! Deterministic shard router for the sharded (multi-group) deployments.
+//!
+//! Each of the G consensus groups replicates only its own shard of the
+//! keyspace: YCSB keys are hash-partitioned (keys 0..G pinned round-robin,
+//! the rest a SplitMix64 mix modulo G — so the zipfian head keys spread
+//! across shards instead of all landing in group 0, and no shard is ever
+//! empty), TPC-C warehouses are range-partitioned (group g owns the
+//! contiguous warehouse range `[g·W/G, (g+1)·W/G)`, the classic layout for
+//! a workload whose transactions are warehouse-local).
+//!
+//! Routing is a pure function of (key, G) / (warehouse, G): every layer —
+//! the per-group workload generators in [`crate::workload::ycsb`] /
+//! [`crate::workload::tpcc`], the sim's `GroupEngine`s, the live cluster —
+//! agrees on shard ownership without coordination, and a run stays a pure
+//! function of (config, seed).
+
+use crate::net::rng::splitmix64;
+
+/// Which dimension the workload is partitioned on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardBy {
+    /// Hash-partition YCSB keys across groups (SplitMix64 mix mod G).
+    KeyHash,
+    /// Range-partition TPC-C warehouses across groups.
+    Warehouse,
+}
+
+impl ShardBy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardBy::KeyHash => "hash",
+            ShardBy::Warehouse => "warehouse",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ShardBy> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" | "keyhash" | "key-hash" => Some(ShardBy::KeyHash),
+            "warehouse" | "range" => Some(ShardBy::Warehouse),
+            _ => None,
+        }
+    }
+}
+
+/// Hash-partition: the group that owns `key` among `groups` shards.
+///
+/// Mostly a SplitMix64 mix modulo G, with two deterministic pinning rules
+/// a pure hash cannot provide (for small keyspaces some residue classes
+/// are simply never hit, which would hang the generators):
+///
+/// * keys `0..G` are pinned round-robin (key g → shard g) — the zipfian
+///   head, YCSB's hottest keys 0, 1, 2, …, spreads exactly evenly, and
+///   every shard owns a key whenever `records >= groups` (the parse-time
+///   invariant), so the generators' cyclic fallback walk over the keyspace
+///   terminates;
+/// * one key per G-aligned block is pinned (`k % G == (k / G) % G` →
+///   shard `(k / G) % G`) — every shard appears pinned within any G
+///   consecutive blocks, so an *ascending* scan (the fresh-insert advance,
+///   whose keys grow beyond the head) provably reaches every shard within
+///   G² keys.
+///
+/// Everything else goes through the mix (not the raw key mod G, so
+/// warm-but-not-hottest consecutive keys still scatter). The map is a
+/// fixed pure function of (key, G): ownership is stable across runs,
+/// nodes and layers.
+#[inline]
+pub fn key_shard(key: u32, groups: usize) -> usize {
+    debug_assert!(groups >= 1);
+    if groups <= 1 {
+        return 0;
+    }
+    let g = groups as u64;
+    let k = key as u64;
+    if k < g {
+        return k as usize;
+    }
+    if k % g == (k / g) % g {
+        return ((k / g) % g) as usize;
+    }
+    let mut s = k;
+    (splitmix64(&mut s) % g) as usize
+}
+
+/// Range-partition: the warehouse interval `[lo, hi)` group `g` owns. With
+/// `warehouses >= groups` (a config-parse invariant) every group's range is
+/// non-empty.
+#[inline]
+pub fn warehouse_range(group: usize, groups: usize, warehouses: u32) -> (u32, u32) {
+    debug_assert!(groups >= 1 && group < groups);
+    let w = warehouses as u64;
+    let lo = (group as u64 * w) / groups as u64;
+    let hi = ((group as u64 + 1) * w) / groups as u64;
+    (lo as u32, hi as u32)
+}
+
+/// The group that owns warehouse `wid` under the range partition — the
+/// inverse of [`warehouse_range`].
+#[inline]
+pub fn warehouse_shard(wid: u32, groups: usize, warehouses: u32) -> usize {
+    debug_assert!(wid < warehouses);
+    if groups <= 1 {
+        return 0;
+    }
+    // ⌊(wid+1)·G − 1) / W⌋ inverts lo = ⌊g·W/G⌋ for any W ≥ G
+    (((wid as u64 + 1) * groups as u64 - 1) / warehouses as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for sb in [ShardBy::KeyHash, ShardBy::Warehouse] {
+            assert_eq!(ShardBy::from_name(sb.name()), Some(sb));
+        }
+        assert_eq!(ShardBy::from_name("range"), Some(ShardBy::Warehouse));
+        assert_eq!(ShardBy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn key_shard_in_range_and_stable() {
+        for groups in [1usize, 2, 4, 8] {
+            for key in 0..10_000u32 {
+                let s = key_shard(key, groups);
+                assert!(s < groups);
+                assert_eq!(s, key_shard(key, groups), "ownership must be stable");
+            }
+        }
+    }
+
+    #[test]
+    fn key_shard_spreads_hot_head() {
+        // the zipfian head (keys 0..G) is pinned exactly round-robin
+        let groups = 4;
+        for key in 0..groups as u32 {
+            assert_eq!(key_shard(key, groups), key as usize);
+        }
+    }
+
+    #[test]
+    fn every_shard_nonempty_at_minimum_keyspace() {
+        // the invariant the generators' fallback walk relies on: with
+        // records >= groups, every shard owns at least one key — even at
+        // the records == groups floor, for every G the config layer admits
+        for groups in 1..=128usize {
+            let mut seen = vec![false; groups];
+            for key in 0..groups as u32 {
+                seen[key_shard(key, groups)] = true;
+            }
+            assert!(
+                seen.iter().all(|&s| s),
+                "G={groups}: a shard owns no key in 0..G"
+            );
+        }
+    }
+
+    #[test]
+    fn ascending_scan_reaches_every_shard_within_g_squared() {
+        // the invariant the fresh-insert advance relies on: from ANY start
+        // (insert keys live beyond the pinned head), an ascending scan of
+        // at most G² keys hits every shard — the per-block pinning rule
+        for groups in [2usize, 3, 4, 8, 16] {
+            for start in [0u64, 1, 999, 100_000, u32::MAX as u64 - 4096] {
+                let mut seen = vec![false; groups];
+                let bound = (groups * groups) as u64;
+                for k in start..start + bound {
+                    seen[key_shard(k as u32, groups)] = true;
+                }
+                assert!(
+                    seen.iter().all(|&s| s),
+                    "G={groups} start={start}: a shard unreachable within G²"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn key_shard_roughly_balanced() {
+        let groups = 8;
+        let mut counts = [0usize; 8];
+        for key in 0..100_000u32 {
+            counts[key_shard(key, groups)] += 1;
+        }
+        for &c in &counts {
+            let share = c as f64 / 100_000.0;
+            assert!((share - 1.0 / 8.0).abs() < 0.02, "skewed shard: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn warehouse_ranges_tile_exactly() {
+        for (groups, w) in [(1usize, 10u32), (2, 10), (4, 10), (3, 7), (10, 10)] {
+            let mut next = 0u32;
+            for g in 0..groups {
+                let (lo, hi) = warehouse_range(g, groups, w);
+                assert_eq!(lo, next, "gap before group {g}");
+                assert!(hi > lo, "empty range for group {g} (G={groups}, W={w})");
+                for wid in lo..hi {
+                    assert_eq!(warehouse_shard(wid, groups, w), g, "inverse mismatch");
+                }
+                next = hi;
+            }
+            assert_eq!(next, w, "ranges must cover every warehouse");
+        }
+    }
+}

@@ -174,6 +174,64 @@ impl YcsbGen {
         YcsbBatch { workload: self.workload, ops, keys, vals }
     }
 
+    /// Generate a batch of exactly `size` live ops restricted to shard
+    /// `group` of `groups` under the hash partition
+    /// ([`crate::workload::shard::key_shard`]) — the per-group load for a
+    /// sharded deployment, modelling each shard serving its own clients.
+    ///
+    /// Keys are rejection-sampled from the workload's own distribution, so
+    /// within a shard the popularity skew matches the unsharded workload.
+    /// After a bounded number of rejections the draw falls back to a
+    /// deterministic linear probe of the keyspace; the probe always
+    /// terminates because `groups <= record_count` (a config-parse
+    /// invariant) and [`key_shard`](crate::workload::shard::key_shard) pins
+    /// keys `0..groups` round-robin, so every shard owns at least one key
+    /// inside the probed cycle. Inserts advance the shared fresh-key
+    /// sequence until it lands in this shard — `key_shard`'s per-block
+    /// pinning bounds that ascending scan at G² steps (in practice ~G),
+    /// mirroring what the other groups' generators skip. With
+    /// `groups <= 1` this is exactly [`YcsbGen::batch`].
+    pub fn batch_sharded(&mut self, size: usize, group: usize, groups: usize) -> YcsbBatch {
+        use crate::workload::shard::key_shard;
+        if groups <= 1 {
+            return self.batch(size);
+        }
+        debug_assert!(group < groups);
+        debug_assert!(groups as u64 <= self.record_count, "groups exceed key count");
+        let mut ops = Vec::with_capacity(size);
+        let mut keys = Vec::with_capacity(size);
+        let mut vals = Vec::with_capacity(size);
+        for _ in 0..size {
+            let op = self.next_op();
+            let key = if op == OP_INSERT {
+                loop {
+                    let k = self.insert_seq as u32;
+                    self.insert_seq += 1;
+                    if key_shard(k, groups) == group {
+                        break k;
+                    }
+                }
+            } else {
+                let mut k = self.next_key();
+                let mut rejects = 0usize;
+                while key_shard(k, groups) != group {
+                    rejects += 1;
+                    if rejects < 64 {
+                        k = self.next_key();
+                    } else {
+                        // deterministic fallback: walk the keyspace
+                        k = ((k as u64 + 1) % self.record_count) as u32;
+                    }
+                }
+                k
+            };
+            ops.push(op);
+            keys.push(key);
+            vals.push(self.rng.next_u32());
+        }
+        YcsbBatch { workload: self.workload, ops, keys, vals }
+    }
+
     pub fn record_count(&self) -> u64 {
         self.record_count
     }
@@ -279,5 +337,39 @@ mod tests {
         let mut g = YcsbGen::new(Workload::B, 1000, 9);
         let b = g.batch(300).padded_to(256);
         assert_eq!(b.len(), 256);
+    }
+
+    #[test]
+    fn sharded_batch_stays_in_shard() {
+        use crate::workload::shard::key_shard;
+        let groups = 4;
+        for group in 0..groups {
+            // D exercises inserts + the latest distribution
+            for wl in [Workload::A, Workload::D] {
+                let mut g = YcsbGen::new(wl, 1000, 10 + group as u64);
+                let b = g.batch_sharded(2000, group, groups);
+                assert_eq!(b.len(), 2000);
+                assert!(
+                    b.keys.iter().all(|&k| key_shard(k, groups) == group),
+                    "{wl:?}: key escaped shard {group}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_single_group_is_plain_batch() {
+        // groups = 1 must consume the RNG identically to batch() — the
+        // sharded sim's G=1 bit-for-bit guarantee leans on this
+        let a = YcsbGen::new(Workload::A, 1000, 11).batch(500);
+        let b = YcsbGen::new(Workload::A, 1000, 11).batch_sharded(500, 0, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_batch_deterministic() {
+        let a = YcsbGen::new(Workload::B, 1000, 12).batch_sharded(300, 2, 4);
+        let b = YcsbGen::new(Workload::B, 1000, 12).batch_sharded(300, 2, 4);
+        assert_eq!(a, b);
     }
 }

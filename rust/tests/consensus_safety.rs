@@ -657,6 +657,83 @@ fn randomized_sim_configs_safe_and_deterministic() {
     }
 }
 
+/// Sharded slice: 64 seeds of G = 4 groups over one fabric, each with a
+/// *per-shard* nemesis window — one rotating victim group runs a
+/// leader-isolation schedule with light loss/duplication while the other
+/// three shards stay clean. The `bench::safety` checker runs on every
+/// group's evidence (consensus is per-group: prefix consistency,
+/// single-leader-per-term and monotone commits must hold inside each
+/// shard), every shard must finish its rounds despite its neighbors'
+/// chaos, and the whole sharded run must replay bit-for-bit.
+#[test]
+fn sharded_randomized_safety_sweep() {
+    use cabinet::net::delay::DelayModel;
+    use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
+    use cabinet::sim::{run, Protocol, SimConfig, WorkloadSpec};
+    use cabinet::workload::Workload;
+
+    let groups = 4usize;
+    for seed in 0..64u64 {
+        let t = 1 + (seed % 2) as usize;
+        let depth = [1usize, 2][(seed % 2) as usize];
+        let mut c = SimConfig::new(Protocol::Cabinet { t }, 11, true);
+        c.rounds = 4;
+        c.pipeline = depth;
+        c.seed = 9_000 + seed;
+        c.groups = groups;
+        c.track_safety = true;
+        c.pre_vote = seed % 2 == 0;
+        c.workload =
+            WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 5_000 };
+        c.delay = if seed % 3 == 0 {
+            DelayModel::Uniform { mean_ms: 60.0, spread_ms: 15.0 }
+        } else {
+            DelayModel::None
+        };
+        // per-shard nemesis window: leader isolation early in the run plus
+        // 2% loss / 1% duplication, confined to the rotating victim group
+        let victim = (seed % groups as u64) as usize;
+        c.nemesis = Some(NemesisSpec {
+            partitions: vec![PartitionSpec::new(
+                // open early so the window catches the victim shard mid-run
+                // even on the fast d0 schedules
+                50.0 + 100.0 * (seed % 5) as f64,
+                4_000.0,
+                PartitionKind::LeaderIsolation,
+            )],
+            drop_p: 0.02,
+            dup_p: 0.01,
+            reorder_p: 0.0,
+            reorder_max_ms: 0.0,
+        });
+        c.nemesis_groups = Some(vec![victim]);
+
+        let a = run(&c);
+        assert_eq!(
+            a.rounds.len() as u64,
+            groups as u64 * c.rounds,
+            "seed {seed}: a shard stalled (victim {victim})"
+        );
+        assert_eq!(a.group_safety.len(), groups, "seed {seed}: missing group evidence");
+        for (g, log) in a.group_safety.iter().enumerate() {
+            let report = cabinet::bench::safety_check(log);
+            assert!(
+                report.is_clean(),
+                "seed {seed} group {g} (victim {victim}): {:?}",
+                report.violations
+            );
+        }
+        assert!(a.nemesis_stats.is_some(), "seed {seed}: victim group ran no nemesis");
+        let b = run(&c);
+        assert_eq!(a.metrics_digest(), b.metrics_digest(), "seed {seed}: replay diverged");
+        assert_eq!(
+            a.commit_sequence_digest(),
+            b.commit_sequence_digest(),
+            "seed {seed}: commit sequence diverged"
+        );
+    }
+}
+
 #[test]
 fn weight_scheme_invariants_random_nt() {
     // randomized (n, t) sweep — the property-based check for Eq. 2

@@ -437,6 +437,112 @@ fn fig23_read_paths_shape() {
     }
 }
 
+/// Fig. 24 acceptance shape: sharding is horizontal scale. Aggregate
+/// wall-clock throughput must be non-decreasing in G on the d0 LAN baseline
+/// (each group replicates a full-size shard batch; groups overlap on the
+/// shared fabric), and the printed D1-100ms table must show the aggregate
+/// increasing from G=1 to G=4 at n=11 — the headline acceptance criterion —
+/// with every group committing all its rounds and per-shard leaders spread
+/// across nodes.
+#[test]
+fn fig24_sharding_shape() {
+    use cabinet::net::delay::DelayModel;
+
+    // d0: non-decreasing aggregate throughput in G
+    let d0: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&g| figures::fig24_run(g, DelayModel::None, Scale::Quick).agg_wall_tput_ops_s())
+        .collect();
+    assert!(
+        d0[1] >= d0[0] && d0[2] >= d0[1],
+        "d0 aggregate throughput must be non-decreasing in G: {d0:?}"
+    );
+    assert!(
+        d0[2] > 1.5 * d0[0],
+        "4 shards on d0 should aggregate well beyond one ({:.0} vs {:.0})",
+        d0[2],
+        d0[0]
+    );
+
+    // the printed D1-100ms table: the acceptance criterion rows
+    let t = figures::fig24_sharding(Scale::Quick);
+    assert_eq!(t.rows.len(), 4);
+    let committed = |i: usize| t.num(i, "committed").unwrap();
+    let tput = |i: usize| t.num(i, "agg_tput_ops_s").unwrap();
+    for (i, &g) in [1usize, 2, 4, 8].iter().enumerate() {
+        assert_eq!(t.rows[i][0], g.to_string());
+        assert_eq!(
+            committed(i),
+            (g as f64) * 12.0,
+            "G={g}: every shard must commit its rounds"
+        );
+    }
+    let (g1, g2, g4) = (tput(0), tput(1), tput(2));
+    assert!(
+        g4 > g1,
+        "aggregate throughput must increase from G=1 ({g1:.0}) to G=4 ({g4:.0})"
+    );
+    assert!(g2 > g1, "G=2 ({g2:.0}) must beat G=1 ({g1:.0})");
+    // per-shard leaders spread across the cluster (group g bootstraps
+    // node g mod n)
+    for (i, &g) in [2usize, 4, 8].iter().enumerate() {
+        let leaders = t.num(i + 1, "leaders").unwrap();
+        assert!(
+            leaders >= (g as f64) / 2.0,
+            "G={g}: leaders collapsed onto {leaders} nodes"
+        );
+    }
+}
+
+/// The `[sharding]` table round-trips through the TOML config path, a
+/// TOML-built sharded run completes with per-group rollups, and invalid
+/// layouts are rejected.
+#[test]
+fn sharding_config_roundtrip_and_rejection() {
+    use cabinet::workload::ShardBy;
+    let cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 2\nn = 11\nrounds = 4\n\
+         [workload]\nkind = \"ycsb\"\nworkload = \"A\"\nbatch = 300\n\
+         [sharding]\ngroups = 4\nshard_by = \"hash\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.groups, 4);
+    assert_eq!(cfg.shard_by, Some(ShardBy::KeyHash));
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 4 * 4, "TOML-built sharded config must complete");
+    assert_eq!(r.group_stats.len(), 4);
+    assert!(r.agg_wall_tput_ops_s() > 0.0);
+
+    // warehouse-range sharding for TPC-C
+    let cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 1\nn = 5\nrounds = 3\n\
+         [workload]\nkind = \"tpcc\"\nwarehouses = 10\nbatch = 200\n\
+         [sharding]\ngroups = 2\nshard_by = \"warehouse\"\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.effective_shard_by(), ShardBy::Warehouse);
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 2 * 3);
+
+    // rejections: bad counts, over-sharding, mismatched dimension, HQC
+    let bad = [
+        "[sharding]\ngroups = 0\n",
+        "n = 5\n[sharding]\ngroups = 6\n",
+        "n = 5\n[workload]\nkind = \"ycsb\"\nrecords = 2\n[sharding]\ngroups = 3\n",
+        "n = 5\n[workload]\nkind = \"tpcc\"\nwarehouses = 2\n[sharding]\ngroups = 3\n",
+        "[sharding]\ngroups = 2\nshard_by = \"warehouse\"\n",
+        "n = 8\n[workload]\nkind = \"tpcc\"\nwarehouses = 8\n[sharding]\ngroups = 2\nshard_by = \"hash\"\n",
+        "protocol = \"hqc\"\nn = 9\nsizes = [3, 3, 3]\n[sharding]\ngroups = 3\n",
+        "n = 11\n[sharding]\ngroups = 2\n[nemesis]\ndrop_p = 0.05\ngroups = [5]\n",
+    ];
+    for toml in bad {
+        assert!(
+            cabinet::config::sim_config_from_toml(toml).is_err(),
+            "should have been rejected:\n{toml}"
+        );
+    }
+}
+
 /// The `read_path`/`lease_drift_ms` knobs round-trip through the TOML config
 /// path, a TOML-built read-path run actually serves reads cleanly, and bad
 /// values are rejected.
@@ -517,9 +623,13 @@ fn snapshot_config_roundtrip() {
 }
 
 // Note: "depth 1 reproduces the lock-step driver" holds by construction —
-// `run()` dispatches `pipeline <= 1` to the untouched historical driver
-// (see sim::cluster::run) — so there is deliberately no test comparing
-// depth-1 runs against each other; such a comparison is tautological.
+// `sim::group::GroupEngine` keeps the frozen lock-step window as its own
+// branch (`pipeline <= 1`), transplanted line-for-line from the historical
+// driver — so there is deliberately no test comparing depth-1 runs against
+// each other; such a comparison is tautological. The same applies to
+// "groups = 1 reproduces the single-group driver": the scheduler steps one
+// engine whose fork order and push order are the historical ones, and the
+// whole replay/nemesis determinism suite runs through that path.
 
 /// The `pipeline` knob round-trips through the TOML config path.
 #[test]
