@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use cabinet::bench::Bencher;
+use cabinet::bench::{quick_requested, BenchReport, Bencher};
 use cabinet::consensus::message::{Message, Payload};
 use cabinet::consensus::node::{Input, Mode, Node, Role};
 use cabinet::sim::{run, Protocol, SimConfig};
@@ -30,12 +30,18 @@ fn make_leader(n: usize, t: usize) -> Node {
 }
 
 fn main() {
-    let b = Bencher::default();
+    let quick = quick_requested();
+    let b = Bencher::from_env();
+    let mut report = BenchReport::new(
+        "micro_hotpath",
+        "leader_round n=[11,50,100]; ycsb_gen/native_apply/docstore_apply 5k; sim_run n50 r12; wire_size 5k",
+        quick,
+    );
 
     // 1. replication round at the leader: propose + n-1 replies + commit
     for (n, t) in [(11usize, 1usize), (50, 5), (100, 10)] {
         let leader0 = make_leader(n, t);
-        b.iter(&format!("leader_round/n{n}_t{t}"), || {
+        b.iter_rec(&mut report, &format!("leader_round/n{n}_t{t}"), || {
             let mut leader = leader0.clone();
             let _ = leader.step(Input::Propose(Payload::Noop));
             let wc = leader.wclock();
@@ -58,23 +64,23 @@ fn main() {
 
     // 2. YCSB batch generation (5k ops, workload A)
     let mut gen = YcsbGen::new(Workload::A, 100_000, 1);
-    b.iter("ycsb_gen/5k", || gen.batch(5000));
+    b.iter_rec(&mut report, "ycsb_gen/5k", || gen.batch(5000));
 
     // 3. native digest apply (the simulator's state-machine path)
     let batch = YcsbGen::new(Workload::A, 100_000, 2).batch(5000).padded_to(5120);
-    b.iter("native_apply/5120", || {
+    b.iter_rec(&mut report, "native_apply/5120", || {
         let mut st = DigestState::default();
         st.apply_ycsb(&batch.ops, &batch.keys, &batch.vals)
     });
 
     // 4. document-store apply (real CRUD + digest)
-    b.iter("docstore_apply/5k", || {
+    b.iter_rec(&mut report, "docstore_apply/5k", || {
         let mut store = DocStore::new();
         store.apply(&batch)
     });
 
     // 5. full simulated experiment (12 rounds, n=50 het)
-    b.iter("sim_run/n50_cab_f10_12rounds", || {
+    b.iter_rec(&mut report, "sim_run/n50_cab_f10_12rounds", || {
         let mut c = SimConfig::new(Protocol::Cabinet { t: 5 }, 50, true);
         c.rounds = 12;
         run(&c).tput_ops_s
@@ -82,7 +88,7 @@ fn main() {
 
     // 6. wire-size accounting on a large AppendEntries
     let entries_batch = Arc::new(YcsbGen::new(Workload::A, 100_000, 3).batch(5000));
-    b.iter("wire_size/5k", || {
+    b.iter_rec(&mut report, "wire_size/5k", || {
         Message::AppendEntries {
             term: 1,
             leader: 0,
@@ -100,4 +106,12 @@ fn main() {
         }
         .wire_size()
     });
+
+    match report.write_to_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write bench report: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -1,0 +1,79 @@
+//! Macro-benchmark: host-side throughput of the simulator across the
+//! n × pipeline-depth × group-count grid, plus a live-runtime ops/sec
+//! sample. Emits `BENCH_sim_throughput.json` at the repo root — see
+//! PROFILING.md for how to read the trajectory.
+//!
+//! The grid itself lives in `cabinet::bench::throughput` so the schema test
+//! in rust/tests/bench_report.rs can assert coverage without re-listing it.
+//!
+//! Run: `cargo bench --bench sim_throughput` (add `--quick` or
+//! `CABINET_BENCH_QUICK=1` for the short CI profile).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cabinet::bench::report::BenchRecord;
+use cabinet::bench::throughput;
+use cabinet::bench::{quick_requested, Bencher};
+use cabinet::consensus::{Mode, Payload};
+use cabinet::live::{LiveCluster, LiveTimers};
+use cabinet::workload::{Workload, YcsbGen};
+
+fn main() {
+    let quick = quick_requested();
+    let b = Bencher::from_env();
+    let rounds = if quick { 6 } else { 12 };
+
+    // 1. the simulator grid: one record per (n, depth, G) cell
+    let mut report = throughput::build_report(&b, rounds, quick);
+
+    // 2. live runtime: ops/sec through the real thread-per-node cluster.
+    // One wall-clock sample (elections and socketless channel plumbing make
+    // repeated starts noisy; the trajectory compares like with like).
+    let (n, t) = (5, 1);
+    let batches = if quick { 3 } else { 8 };
+    let ops_per_batch = if quick { 500 } else { 1000 };
+    let cluster = LiveCluster::start(n, Mode::cabinet(n, t), LiveTimers::default(), None, 42);
+    cluster.force_election(0);
+    let leader = cluster
+        .wait_for_leader(Duration::from_secs(5))
+        .expect("no live leader elected");
+    let mut gen = YcsbGen::new(Workload::A, 100_000, 9);
+    let t0 = Instant::now();
+    for i in 0..batches {
+        cluster.propose(leader, Payload::Ycsb(Arc::new(gen.batch(ops_per_batch))));
+        // election noop holds round 1, so user batch i commits at round i+2
+        cluster
+            .wait_for_round((i + 2) as u64, Duration::from_secs(10))
+            .expect("live batch commit timed out");
+    }
+    let elapsed = t0.elapsed();
+    cluster.shutdown();
+    let total_ops = (batches * ops_per_batch) as f64;
+    let name = format!("live/n{n}_t{t}_b{batches}x{ops_per_batch}");
+    let ns = elapsed.as_secs_f64() * 1e9;
+    report.records.push(BenchRecord {
+        name: name.clone(),
+        samples: 1,
+        mean_ns: ns,
+        stddev_ns: 0.0,
+        min_ns: ns,
+        max_ns: ns,
+        metrics: vec![
+            ("ops_per_sec".to_string(), total_ops / elapsed.as_secs_f64()),
+            ("batches".to_string(), batches as f64),
+        ],
+    });
+    println!(
+        "{name:<48} time: [{elapsed:.2?}]  ({:.0} ops/s)",
+        total_ops / elapsed.as_secs_f64()
+    );
+
+    match report.write_to_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write bench report: {e}");
+            std::process::exit(1);
+        }
+    }
+}

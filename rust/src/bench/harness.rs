@@ -33,9 +33,27 @@ pub struct BenchStats {
     pub max: Duration,
 }
 
+/// Was a quick-profile run requested? `CABINET_BENCH_QUICK=1` (any value
+/// but "0"/"") or a `--quick` CLI argument selects the short profile — the
+/// CI bench job runs this way to emit a trajectory point per push without
+/// paying for full sampling.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("CABINET_BENCH_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
 impl Bencher {
     pub fn quick() -> Self {
         Bencher { samples: 5, warmup: 1, min_time: Duration::from_millis(50) }
+    }
+
+    /// Quick profile when [`quick_requested`], full profile otherwise.
+    pub fn from_env() -> Self {
+        if quick_requested() {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        }
     }
 
     /// Measure `f`, printing a criterion-style line. Returns the stats so
@@ -71,6 +89,21 @@ impl Bencher {
             fmt_dur(stats.max),
             stats.samples
         );
+        stats
+    }
+
+    /// [`Bencher::iter`], recording the result into `report` as well — the
+    /// one-liner the `benches/*.rs` targets use to build their
+    /// `BENCH_<suite>.json` emission while keeping the familiar printed
+    /// output.
+    pub fn iter_rec<T>(
+        &self,
+        report: &mut crate::bench::report::BenchReport,
+        name: &str,
+        f: impl FnMut() -> T,
+    ) -> BenchStats {
+        let stats = self.iter(name, f);
+        report.push(name, &stats);
         stats
     }
 }

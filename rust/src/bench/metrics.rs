@@ -90,7 +90,9 @@ impl Table {
         };
         out.push_str(&fmt_row(&self.header, &widths));
         out.push('\n');
-        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        // saturating_sub: a zero-column table must render its title, not
+        // underflow usize and panic on a ~2^64-char separator allocation
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncols.saturating_sub(1)));
         out.push('\n');
         for row in &self.rows {
             out.push_str(&fmt_row(row, &widths));
@@ -182,6 +184,27 @@ mod tests {
         assert!(s.contains("cab f10%"));
         assert_eq!(t.num(0, "tput"), Some(10136.0));
         assert_eq!(t.find_row("cab f10%"), Some(1));
+    }
+
+    #[test]
+    fn zero_column_table_renders() {
+        // regression: `2 * (ncols - 1)` underflowed usize for an empty
+        // header and panicked render() on a ~2^64-char separator
+        let empty: &[&str] = &[];
+        let t = Table::new("degenerate", empty);
+        let s = t.render();
+        assert!(s.contains("degenerate"));
+    }
+
+    #[test]
+    fn one_column_table_renders() {
+        let mut t = Table::new("single", &["only"]);
+        t.row(vec!["value".into()]);
+        let s = t.render();
+        assert!(s.contains("only"));
+        assert!(s.contains("value"));
+        // separator spans exactly the one column (no inter-column padding)
+        assert!(s.lines().any(|l| l == "-----"), "got:\n{s}");
     }
 
     #[test]

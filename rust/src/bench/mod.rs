@@ -5,9 +5,12 @@
 pub mod figures;
 pub mod harness;
 pub mod metrics;
+pub mod report;
 pub mod safety;
+pub mod throughput;
 
 pub use figures::{all_figures, lineup, Scale};
-pub use harness::{Bencher, BenchStats};
+pub use harness::{quick_requested, Bencher, BenchStats};
 pub use metrics::{fmt_tps, Summary, Table};
+pub use report::{BenchRecord, BenchReport};
 pub use safety::{check as safety_check, SafetyReport};

@@ -1,0 +1,554 @@
+//! Machine-readable bench artifacts: `BENCH_<suite>.json` at the repo root.
+//!
+//! Every `benches/*.rs` target records its [`crate::bench::BenchStats`]
+//! into a [`BenchReport`] and writes one JSON file per suite, so the perf
+//! trajectory is a diffable sequence of artifacts instead of scrollback:
+//! each record carries name, sample count, and mean/σ/min/max in
+//! nanoseconds, and the report header pins the git revision and a
+//! fingerprint of the bench configuration. The vendored crate set has no
+//! serde, so the writer and the (deliberately minimal) parser are
+//! hand-rolled here — `cabinet bench-check` and the schema round-trip test
+//! in `rust/tests/bench_report.rs` keep them honest against each other.
+
+use std::path::PathBuf;
+
+use crate::bench::harness::BenchStats;
+use crate::util::Fnv64;
+
+/// Bumped whenever a field is added/renamed, so trajectory tooling can
+/// refuse to compare artifacts across incompatible shapes.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One benchmark's measured result (durations in nanoseconds), plus any
+/// derived rates (`rounds_per_sec`, `messages_per_sec`, `ops_per_sec`, …).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub samples: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Extra named metrics, in insertion order (kept as a vec, not a map,
+    /// so emission order — and therefore the artifact bytes — is
+    /// deterministic).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    pub fn from_stats(name: &str, stats: &BenchStats) -> Self {
+        BenchRecord {
+            name: name.to_string(),
+            samples: stats.samples as u64,
+            mean_ns: stats.mean.as_secs_f64() * 1e9,
+            stddev_ns: stats.stddev.as_secs_f64() * 1e9,
+            min_ns: stats.min.as_secs_f64() * 1e9,
+            max_ns: stats.max.as_secs_f64() * 1e9,
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+}
+
+/// One suite's emission: header + records, serialized to
+/// `BENCH_<suite>.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub suite: String,
+    pub schema: u64,
+    /// `git rev-parse --short HEAD` at emission time ("unknown" when git
+    /// is unavailable — artifacts must still be writable offline).
+    pub git_rev: String,
+    /// FNV-1a fingerprint (16 hex digits) of the canonical configuration
+    /// string the suite was run with — two artifacts are comparable iff
+    /// their fingerprints match.
+    pub config_fingerprint: String,
+    /// Was this a quick-profile run (CI trajectory mode)?
+    pub quick: bool,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    /// `config` is the canonical human-readable description of the suite's
+    /// parameters; its fingerprint gates artifact-to-artifact comparison.
+    pub fn new(suite: &str, config: &str, quick: bool) -> Self {
+        BenchReport {
+            suite: suite.to_string(),
+            schema: BENCH_SCHEMA_VERSION,
+            git_rev: git_short_rev(),
+            config_fingerprint: fingerprint(config),
+            quick,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, stats: &BenchStats) -> &mut BenchRecord {
+        self.records.push(BenchRecord::from_stats(name, stats));
+        self.records.last_mut().expect("just pushed")
+    }
+
+    pub fn record(&self, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.name == name)
+    }
+
+    // ---- emission --------------------------------------------------------
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256 + self.records.len() * 192);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"suite\": {},\n", json_str(&self.suite)));
+        s.push_str(&format!("  \"schema\": {},\n", self.schema));
+        s.push_str(&format!("  \"git_rev\": {},\n", json_str(&self.git_rev)));
+        s.push_str(&format!(
+            "  \"config_fingerprint\": {},\n",
+            json_str(&self.config_fingerprint)
+        ));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"name\": {}, ", json_str(&r.name)));
+            s.push_str(&format!("\"samples\": {}, ", r.samples));
+            s.push_str(&format!("\"mean_ns\": {}, ", json_num(r.mean_ns)));
+            s.push_str(&format!("\"stddev_ns\": {}, ", json_num(r.stddev_ns)));
+            s.push_str(&format!("\"min_ns\": {}, ", json_num(r.min_ns)));
+            s.push_str(&format!("\"max_ns\": {}, ", json_num(r.max_ns)));
+            s.push_str("\"metrics\": {");
+            for (j, (k, v)) in r.metrics.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("{}: {}", json_str(k), json_num(*v)));
+            }
+            s.push_str("}}");
+            s.push_str(if i + 1 < self.records.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<suite>.json` at the repo root; returns the path.
+    pub fn write_to_repo_root(&self) -> std::io::Result<PathBuf> {
+        let path = repo_root().join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    // ---- parsing ---------------------------------------------------------
+
+    /// Parse an emitted artifact back into a report. Strict about the
+    /// schema (every header field and per-record stat must be present and
+    /// of the right type) — `cabinet bench-check` rides on this to fail CI
+    /// on malformed emission.
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let v = Json::parse(text)?;
+        let top = v.as_obj().ok_or("top level is not an object")?;
+        let records_json = obj_get(top, "records")?
+            .as_arr()
+            .ok_or("\"records\" is not an array")?;
+        let mut records = Vec::with_capacity(records_json.len());
+        for (i, rec) in records_json.iter().enumerate() {
+            let o = rec.as_obj().ok_or_else(|| format!("record {i} is not an object"))?;
+            let metrics_obj = obj_get(o, "metrics")?
+                .as_obj()
+                .ok_or_else(|| format!("record {i}: \"metrics\" is not an object"))?;
+            let metrics = metrics_obj
+                .iter()
+                .map(|(k, v)| {
+                    v.as_num()
+                        .map(|x| (k.clone(), x))
+                        .ok_or_else(|| format!("record {i}: metric {k:?} is not a number"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            records.push(BenchRecord {
+                name: get_str(o, "name").map_err(|e| format!("record {i}: {e}"))?,
+                samples: get_num(o, "samples").map_err(|e| format!("record {i}: {e}"))? as u64,
+                mean_ns: get_num(o, "mean_ns").map_err(|e| format!("record {i}: {e}"))?,
+                stddev_ns: get_num(o, "stddev_ns").map_err(|e| format!("record {i}: {e}"))?,
+                min_ns: get_num(o, "min_ns").map_err(|e| format!("record {i}: {e}"))?,
+                max_ns: get_num(o, "max_ns").map_err(|e| format!("record {i}: {e}"))?,
+                metrics,
+            });
+        }
+        Ok(BenchReport {
+            suite: get_str(top, "suite")?,
+            schema: get_num(top, "schema")? as u64,
+            git_rev: get_str(top, "git_rev")?,
+            config_fingerprint: get_str(top, "config_fingerprint")?,
+            quick: obj_get(top, "quick")?.as_bool().ok_or("\"quick\" is not a bool")?,
+            records,
+        })
+    }
+}
+
+/// Repo root: cargo sets `CARGO_MANIFEST_DIR` for bench/test targets; fall
+/// back to the current directory for standalone binaries.
+pub fn repo_root() -> PathBuf {
+    std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Short git revision of the working tree, or "unknown".
+pub fn git_short_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(repo_root())
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// FNV-1a fingerprint of a canonical config string, as 16 hex digits.
+pub fn fingerprint(config: &str) -> String {
+    let mut h = Fnv64::new();
+    h.write_bytes(config.as_bytes());
+    format!("{:016x}", h.finish())
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// `{:?}` prints the shortest decimal that round-trips the exact f64, so
+/// write → parse → write is byte-stable. JSON has no NaN/∞; durations and
+/// rates are nonnegative reals, so a non-finite value is itself a bug —
+/// surface it as 0 rather than emitting unparseable output.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + recursive-descent parser (std only, no serde)
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Objects keep insertion order (vec of pairs) so a
+/// parse → re-emit cycle is deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(kv) => Some(kv),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn obj_get<'a>(obj: &'a [(String, Json)], key: &str) -> Result<&'a Json, String> {
+    obj.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn get_str(obj: &[(String, Json)], key: &str) -> Result<String, String> {
+    obj_get(obj, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("field {key:?} is not a string"))
+}
+
+fn get_num(obj: &[(String, Json)], key: &str) -> Result<f64, String> {
+    obj_get(obj, key)?.as_num().ok_or_else(|| format!("field {key:?} is not a number"))
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, val: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(val)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            kv.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000C}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or("truncated \\u escape")?;
+                            let code = std::str::from_utf8(hex)
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or("invalid \\u escape")?;
+                            // BMP only — enough for our own emission, which
+                            // never escapes astral characters
+                            out.push(char::from_u32(code).ok_or("invalid \\u code point")?);
+                            self.pos += 4;
+                        }
+                        _ => return Err(format!("invalid escape at byte {}", self.pos)),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (input is &str, so slicing on
+                    // the next boundary is safe)
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest).map_err(|_| "invalid utf-8")?;
+                    let c = s.chars().next().ok_or("unterminated string")?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| "bad number")?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("invalid number {text:?} at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::Bencher;
+
+    #[test]
+    fn json_escaping_round_trips() {
+        let s = "quote \" slash \\ newline \n tab \t";
+        let parsed = Json::parse(&json_str(s)).unwrap();
+        assert_eq!(parsed.as_str(), Some(s));
+    }
+
+    #[test]
+    fn parser_handles_nesting_and_numbers() {
+        let v = Json::parse(r#"{"a": [1, 2.5, -3e-2], "b": {"c": true, "d": null}}"#).unwrap();
+        let top = v.as_obj().unwrap();
+        let arr = obj_get(top, "a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[1].as_num(), Some(2.5));
+        assert_eq!(arr[2].as_num(), Some(-0.03));
+        let b = obj_get(top, "b").unwrap().as_obj().unwrap();
+        assert_eq!(obj_get(b, "c").unwrap().as_bool(), Some(true));
+        assert_eq!(obj_get(b, "d").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn report_round_trips_exactly() {
+        let b = Bencher::quick();
+        let mut report = BenchReport::new("unit", "cfg=1", true);
+        let stats = b.iter("unit_noop", || std::hint::black_box(1 + 1));
+        report.push("unit_noop", &stats).metrics.push(("ops_per_sec".to_string(), 1.5e9));
+        let parsed = BenchReport::parse(&report.to_json()).expect("own emission parses");
+        assert_eq!(parsed, report);
+    }
+
+    #[test]
+    fn parse_is_strict_about_schema() {
+        // a record missing its stats must fail, not default to zero
+        let bad = r#"{"suite": "x", "schema": 1, "git_rev": "r", "config_fingerprint": "f",
+                      "quick": false, "records": [{"name": "a", "samples": 3}]}"#;
+        assert!(BenchReport::parse(bad).is_err());
+        // wrong type fails too
+        let bad2 = r#"{"suite": "x", "schema": 1, "git_rev": "r", "config_fingerprint": "f",
+                       "quick": "yes", "records": []}"#;
+        assert!(BenchReport::parse(bad2).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        assert_eq!(fingerprint("a"), fingerprint("a"));
+        assert_ne!(fingerprint("a"), fingerprint("b"));
+        assert_eq!(fingerprint("a").len(), 16);
+    }
+}

@@ -1,0 +1,121 @@
+//! The `sim_throughput` macro-bench grid: host-side rounds/sec and
+//! messages/sec for the simulator across n × pipeline-depth × group-count
+//! cells. The grid lives in the library (not in `benches/sim_throughput.rs`
+//! itself) so the schema test in `rust/tests/bench_report.rs` can assert
+//! one emitted record per cell without duplicating the cell list.
+//!
+//! What the numbers mean: the simulator advances virtual time, so the
+//! committed-throughput figures in EXPERIMENTS.md are *virtual*; this suite
+//! measures the *host* cost of pushing a round (and a message) through the
+//! engine — the quantity the hot-path optimizations (VecDeque windows,
+//! scratch-vector routing, incremental digests) move. The digest guardrail
+//! lives elsewhere: replay tests pin bit-identical commit/metrics digests,
+//! so a perf PR that changes these rates but not the digests is safe.
+
+use crate::bench::report::BenchReport;
+use crate::bench::Bencher;
+use crate::sim::{run, Protocol, SimConfig, SimResult};
+
+/// One grid cell. `t = n/10` keeps the failure threshold at the paper's
+/// 10% operating point across scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub n: usize,
+    pub t: usize,
+    pub depth: usize,
+    pub groups: usize,
+}
+
+impl Cell {
+    /// Record name in the emitted report: `sim/n{n}_d{depth}_g{groups}`.
+    pub fn label(&self) -> String {
+        format!("sim/n{}_d{}_g{}", self.n, self.depth, self.groups)
+    }
+
+    /// The cell's run configuration (heterogeneous zones, fixed seed — the
+    /// run is deterministic, so every sample re-executes the same
+    /// trajectory and only host time varies).
+    pub fn config(&self, rounds: u64) -> SimConfig {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: self.t }, self.n, true);
+        c.rounds = rounds;
+        c.pipeline = self.depth;
+        c.groups = self.groups;
+        c.seed = 42;
+        c
+    }
+}
+
+/// The full grid: n ∈ {11, 50, 100} × depth ∈ {1, 8} × G ∈ {1, 4}.
+pub fn cells() -> Vec<Cell> {
+    let mut out = Vec::with_capacity(12);
+    for &n in &[11usize, 50, 100] {
+        for &depth in &[1usize, 8] {
+            for &groups in &[1usize, 4] {
+                out.push(Cell { n, t: n / 10, depth, groups });
+            }
+        }
+    }
+    out
+}
+
+/// Measure every cell with `bencher`, recording per-cell host-time stats
+/// plus derived `rounds_per_sec` / `messages_per_sec` / `ops_per_sec`
+/// rates (committed counts over mean host time per run).
+pub fn build_report(bencher: &Bencher, rounds: u64, quick: bool) -> BenchReport {
+    let config = format!(
+        "grid n=[11,50,100] depth=[1,8] groups=[1,4] rounds={rounds} seed=42 het=true"
+    );
+    let mut report = BenchReport::new("sim_throughput", &config, quick);
+    for cell in cells() {
+        let c = cell.config(rounds);
+        let mut last: Option<SimResult> = None;
+        let stats = bencher.iter(&cell.label(), || {
+            let r = run(&c);
+            let digest = r.commit_sequence_digest();
+            last = Some(r);
+            digest
+        });
+        let r = last.expect("at least one sample ran");
+        let committed_rounds = r.rounds.len() as f64;
+        let committed_ops: usize = r.rounds.iter().map(|s| s.ops).sum();
+        let secs = stats.mean.as_secs_f64();
+        let rec = report.push(&cell.label(), &stats);
+        rec.metrics.push(("rounds_per_sec".to_string(), committed_rounds / secs));
+        rec.metrics
+            .push(("messages_per_sec".to_string(), r.messages_delivered as f64 / secs));
+        rec.metrics.push(("ops_per_sec".to_string(), committed_ops as f64 / secs));
+        rec.metrics.push(("messages_delivered".to_string(), r.messages_delivered as f64));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_the_full_cross_product() {
+        let cs = cells();
+        assert_eq!(cs.len(), 12);
+        for &n in &[11usize, 50, 100] {
+            for &depth in &[1usize, 8] {
+                for &groups in &[1usize, 4] {
+                    assert!(
+                        cs.iter().any(|c| c.n == n && c.depth == depth && c.groups == groups),
+                        "missing cell n={n} depth={depth} groups={groups}"
+                    );
+                }
+            }
+        }
+        // thresholds track the 10% operating point
+        assert!(cs.iter().all(|c| c.t == c.n / 10 && c.t >= 1));
+    }
+
+    #[test]
+    fn cell_labels_are_unique() {
+        let mut labels: Vec<String> = cells().iter().map(Cell::label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 12);
+    }
+}

@@ -468,8 +468,10 @@ impl Node {
             Mode::Raft => vec![],
             Mode::Cabinet { scheme } => {
                 let mut ids: Vec<NodeId> = (0..self.n).collect();
+                // total_cmp, not partial_cmp: a NaN weight must never panic
+                // membership queries (it ranks highest and stays visible)
                 ids.sort_by(|&a, &b| {
-                    self.weight_assign[b].partial_cmp(&self.weight_assign[a]).unwrap()
+                    self.weight_assign[b].total_cmp(&self.weight_assign[a])
                 });
                 ids.truncate(scheme.cabinet_size());
                 ids
@@ -554,14 +556,22 @@ impl Node {
 
     pub fn step(&mut self, input: Input) -> Vec<Output> {
         let mut out = Vec::new();
-        match input {
-            Input::ElectionTimeout => self.on_election_timeout(&mut out),
-            Input::HeartbeatTimeout => self.on_heartbeat_timeout(&mut out),
-            Input::Receive(from, msg) => self.on_receive(from, msg, &mut out),
-            Input::Propose(payload) => self.on_propose(payload, &mut out),
-            Input::Read { id } => self.on_read(id, &mut out),
-        }
+        self.step_into(input, &mut out);
         out
+    }
+
+    /// [`Node::step`] into a caller-provided buffer (appended, not
+    /// cleared). Hot-path drivers reuse one scratch vector across steps,
+    /// making the sans-io boundary allocation-free; `step` stays as the
+    /// convenient allocating wrapper.
+    pub fn step_into(&mut self, input: Input, out: &mut Vec<Output>) {
+        match input {
+            Input::ElectionTimeout => self.on_election_timeout(out),
+            Input::HeartbeatTimeout => self.on_heartbeat_timeout(out),
+            Input::Receive(from, msg) => self.on_receive(from, msg, out),
+            Input::Propose(payload) => self.on_propose(payload, out),
+            Input::Read { id } => self.on_read(id, out),
+        }
     }
 
     // ---- timers ----------------------------------------------------------
@@ -577,7 +587,7 @@ impl Node {
             // term or voted_for. A timed-out pre-campaign simply restarts —
             // no state was disturbed, so there is nothing to roll back.
             self.prevote_active = true;
-            self.prevotes = vec![false; self.n];
+            self.prevotes.fill(false); // reuse, don't reallocate
             self.prevotes[self.id] = true;
             for peer in self.peers() {
                 out.push(Output::Send(
@@ -605,7 +615,7 @@ impl Node {
         self.term += 1;
         self.elections_started += 1;
         self.voted_for = Some(self.id);
-        self.votes = vec![false; self.n];
+        self.votes.fill(false); // reuse, don't reallocate
         self.votes[self.id] = true;
         for peer in self.peers() {
             out.push(Output::Send(
@@ -713,8 +723,10 @@ impl Node {
             // remaining nodes (Line 20), stably by previous-round rank
             let mut rest: Vec<NodeId> =
                 (0..self.n).filter(|&i| i != self.id && assign[i] == 0.0).collect();
+            // total_cmp, not partial_cmp: one NaN weight (a degenerate
+            // scheme passes I1/I2 vacuously) must not panic the re-deal
             rest.sort_by(|&a, &b| {
-                self.weight_assign[b].partial_cmp(&self.weight_assign[a]).unwrap()
+                self.weight_assign[b].total_cmp(&self.weight_assign[a])
             });
             for nid in rest {
                 assign[nid] = scheme.weight_of_rank(rank);
@@ -727,9 +739,12 @@ impl Node {
     }
 
     fn broadcast_append(&mut self, out: &mut Vec<Output>) {
-        let peers: Vec<NodeId> = self.peers().collect();
-        for peer in peers {
-            self.send_append(peer, out);
+        // index loop, not peers().collect(): send_append needs &mut self,
+        // and collecting allocated a peer list on every heartbeat/propose
+        for peer in 0..self.n {
+            if peer != self.id {
+                self.send_append(peer, out);
+            }
         }
     }
 
@@ -1725,7 +1740,7 @@ mod tests {
         c.propose(0, Payload::Noop);
         let scheme = WeightScheme::geometric(7, 2).unwrap();
         let mut got: Vec<f64> = c.nodes[0].weight_assignment().to_vec();
-        got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        got.sort_by(|a, b| b.total_cmp(a));
         for (g, w) in got.iter().zip(scheme.weights()) {
             assert!((g - w).abs() < 1e-12);
         }
@@ -1739,6 +1754,25 @@ mod tests {
         let members = c.nodes[0].cabinet_members();
         assert_eq!(members.len(), 3);
         assert!(members.contains(&0)); // leader always a member
+    }
+
+    #[test]
+    fn nan_weight_survives_election_and_redeal() {
+        // Regression: the weight-ordered sorts used partial_cmp().unwrap(),
+        // so a single NaN weight panicked the FIFO re-deal and every
+        // membership query. A NaN scheme is constructible through the public
+        // API — validate() passes it vacuously (NaN comparisons are false) —
+        // so the node must degrade (NaN ranks highest, rounds stall against
+        // the NaN threshold) rather than crash mid-election.
+        let scheme = WeightScheme::from_weights(vec![8.0, f64::NAN, 4.0, 2.0, 1.0], 1)
+            .expect("NaN passes I1/I2 vacuously");
+        let mut c = TestCluster::new(5, |_| Mode::Cabinet { scheme: scheme.clone() });
+        c.elect(0); // count-based quorum (n - t): unaffected by NaN weights
+        c.propose(0, Payload::Noop); // first weight re-deal
+        c.propose(0, Payload::Noop); // re-deal again, sorting the NaN assignment
+        let members = c.nodes[0].cabinet_members(); // weight-ordered query
+        assert_eq!(members.len(), 2);
+        assert!(c.nodes[0].weight_assignment().iter().any(|w| w.is_nan()));
     }
 
     #[test]

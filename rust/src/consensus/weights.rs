@@ -92,7 +92,11 @@ impl WeightScheme {
     pub fn from_weights(mut weights: Vec<f64>, t: usize) -> Result<Self, WeightError> {
         let n = weights.len();
         Self::check_params(n, t)?;
-        weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // total_cmp, not partial_cmp: a NaN weight must not panic here — it
+        // sorts first (ranks highest) and flows into a NaN CT, which stalls
+        // commits instead of crashing the sort (validate() passes NaN
+        // vacuously, so this is reachable through the public API)
+        weights.sort_by(|a, b| b.total_cmp(a));
         let ct = weights.iter().sum::<f64>() / 2.0;
         let ws = WeightScheme { weights, ct, t, ratio: f64::NAN };
         ws.validate()?;
@@ -229,6 +233,19 @@ pub fn threshold_pct(n: usize, pct: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nan_weight_does_not_panic_construction() {
+        // regression: the descending sort used partial_cmp().unwrap(), so a
+        // NaN weight panicked before validate() could even look at it. NaN
+        // passes I1/I2 vacuously (every comparison is false), so the scheme
+        // constructs — degenerate but non-crashing (its CT is NaN, which
+        // stalls commits; the node-level sorts are total_cmp-safe too).
+        let ws = WeightScheme::from_weights(vec![8.0, f64::NAN, 4.0, 2.0, 1.0], 1)
+            .expect("vacuously valid");
+        assert!(ws.weights()[0].is_nan(), "NaN ranks highest under total_cmp");
+        assert!(ws.ct().is_nan());
+    }
 
     #[test]
     fn fig4_ratios_match_paper() {

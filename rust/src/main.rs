@@ -7,6 +7,7 @@
 //! cabinet weights --n N --t T              print a weight scheme
 //! cabinet live [--n N] [--t T] [--rounds R]  run the live cluster demo
 //! cabinet check-artifacts                  validate AOT artifacts via PJRT
+//! cabinet bench-check BENCH_*.json ...     validate bench emission (CI)
 //! ```
 
 use std::collections::VecDeque;
@@ -39,6 +40,7 @@ fn real_main() -> Result<()> {
         "weights" => cmd_weights(args),
         "live" => cmd_live(args),
         "check-artifacts" => cmd_check_artifacts(),
+        "bench-check" => cmd_bench_check(args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -62,7 +64,8 @@ USAGE:
               [--nemesis-reorder-ms M]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
-  cabinet check-artifacts";
+  cabinet check-artifacts
+  cabinet bench-check BENCH_suite.json [...]";
 
 fn flag(args: &mut VecDeque<String>, name: &str) -> Option<String> {
     let pos = args.iter().position(|a| a == name)?;
@@ -387,6 +390,33 @@ fn cmd_live(mut args: VecDeque<String>) -> Result<()> {
     let digests: Vec<_> = reports.iter().filter_map(|r| r.final_digest).collect();
     let all_eq = digests.windows(2).all(|w| w[0] == w[1]);
     println!("replicas with applied state: {} / {n}; digests match: {all_eq}", digests.len());
+    Ok(())
+}
+
+/// Validate `BENCH_<suite>.json` perf artifacts (the CI bench job runs this
+/// after `cargo bench` to fail on malformed emission — no perf gating, the
+/// trajectory is informational).
+fn cmd_bench_check(args: VecDeque<String>) -> Result<()> {
+    anyhow::ensure!(!args.is_empty(), "usage: cabinet bench-check BENCH_suite.json [...]");
+    for path in &args {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let report = cabinet::bench::BenchReport::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: malformed bench artifact: {e}"))?;
+        anyhow::ensure!(
+            report.schema == cabinet::bench::report::BENCH_SCHEMA_VERSION,
+            "{path}: schema {} != expected {}",
+            report.schema,
+            cabinet::bench::report::BENCH_SCHEMA_VERSION
+        );
+        anyhow::ensure!(!report.records.is_empty(), "{path}: no records emitted");
+        println!(
+            "{path}: ok — suite {:?}, {} records, rev {}, quick={}",
+            report.suite,
+            report.records.len(),
+            report.git_rev,
+            report.quick
+        );
+    }
     Ok(())
 }
 

@@ -62,11 +62,14 @@ impl KillSpec {
             .filter(|&i| i != leader && alive[i])
             .collect();
         match self.strategy {
+            // total_cmp, not partial_cmp: a NaN weight must not panic victim
+            // selection (it counts as the largest weight, so strong kills
+            // target it first and weak kills last)
             KillStrategy::Strong => {
-                candidates.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+                candidates.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]));
             }
             KillStrategy::Weak => {
-                candidates.sort_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap());
+                candidates.sort_by(|&a, &b| weights[a].total_cmp(&weights[b]));
             }
             KillStrategy::Random => rng.shuffle(&mut candidates),
         }
@@ -139,6 +142,21 @@ mod tests {
         let mut sorted = v.clone();
         sorted.dedup();
         assert_eq!(sorted.len(), 3);
+    }
+
+    #[test]
+    fn nan_weight_does_not_panic_victim_selection() {
+        // regression: strong/weak kills sorted with partial_cmp().unwrap(),
+        // so one NaN weight (reachable via a degenerate scheme) panicked the
+        // kill schedule instead of selecting victims
+        let mut rng = Rng::new(5);
+        let alive = vec![true; 7];
+        let mut w = weights();
+        w[2] = f64::NAN;
+        let strong = KillSpec::new(20, 2, KillStrategy::Strong).victims(&w, 0, &alive, &mut rng);
+        assert_eq!(strong, vec![2, 1], "NaN counts as the top weight");
+        let weak = KillSpec::new(20, 2, KillStrategy::Weak).victims(&w, 0, &alive, &mut rng);
+        assert_eq!(weak, vec![6, 5], "NaN sorts last in ascending total order");
     }
 
     #[test]

@@ -197,7 +197,9 @@ impl NemesisSpec {
                 PartitionKind::LeaderIsolation => {}
             }
         }
-        windows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp, not partial_cmp: a NaN window start must not panic
+        // validation (it sorts last, deterministically)
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in windows.windows(2) {
             if w[1].0 < w[0].1 {
                 bail!(

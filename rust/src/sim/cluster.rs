@@ -439,6 +439,12 @@ pub struct SimResult {
     pub read_p99_ms: f64,
     /// Virtual time the last read finished (extends the combined span).
     pub read_done_ms: f64,
+    /// Messages delivered to live nodes across the run (summed over groups
+    /// on sharded runs) — the denominator-side count the `sim_throughput`
+    /// bench turns into messages/sec. Deliberately *not* folded into
+    /// [`SimResult::metrics_digest`]: it is host-profiling telemetry, and
+    /// folding it in would break digest parity with pre-counter builds.
+    pub messages_delivered: u64,
 }
 
 impl SimResult {
@@ -484,6 +490,7 @@ impl SimResult {
             read_p50_ms: 0.0,
             read_p99_ms: 0.0,
             read_done_ms: 0.0,
+            messages_delivered: 0,
         }
     }
 
@@ -744,6 +751,7 @@ fn merge_sharded(config: &SimConfig, outcomes: Vec<GroupOutcome>) -> SimResult {
         agg.readindex_rounds += r.readindex_rounds;
         agg.read_failures += r.read_failures;
         agg.read_done_ms = agg.read_done_ms.max(r.read_done_ms);
+        agg.messages_delivered += r.messages_delivered;
     }
     read_latencies.sort_by(|a, b| a.total_cmp(b));
     crate::sim::group::fold_read_latencies(&mut agg, &read_latencies);

@@ -24,12 +24,13 @@ impl<E> Eq for Item<E> {}
 
 impl<E> Ord for Item<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest-first
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // reversed: BinaryHeap is a max-heap, we want earliest-first.
+        // total_cmp, not partial_cmp(..).unwrap_or(Equal): the old fallback
+        // made a NaN time compare Equal to *everything*, silently corrupting
+        // heap order (Ord's transitivity contract) — under total_cmp a NaN
+        // orders deterministically (after every real time), and push_at
+        // rejects it loudly in debug builds before it ever reaches the heap.
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 impl<E> PartialOrd for Item<E> {
@@ -63,6 +64,7 @@ impl<E> EventQueue<E> {
 
     /// Schedule `event` at absolute time `at` (clamped to now).
     pub fn push_at(&mut self, at: SimTime, event: E) {
+        debug_assert!(at.is_finite(), "non-finite event time {at}");
         let time = if at < self.now { self.now } else { at };
         self.seq += 1;
         self.heap.push(Item { time, seq: self.seq, event });
@@ -148,6 +150,29 @@ mod tests {
         let (t, e) = q.pop().unwrap();
         assert_eq!((t, e), (2.0, "a"));
         assert_eq!(q.next_time(), Some(4.0));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_event_time_fails_loudly() {
+        // regression: a NaN time used to slip into the heap and compare
+        // Equal to everything, silently corrupting pop order; now the push
+        // asserts in debug builds (and orders deterministically in release)
+        let mut q = EventQueue::new();
+        q.push_at(f64::NAN, ());
+    }
+
+    #[test]
+    fn negative_zero_time_orders_deterministically() {
+        // total_cmp orders -0.0 before +0.0 — harmless here (the clock
+        // starts at 0.0 and delays are clamped nonnegative) but pinned so a
+        // future change to the comparator is a conscious one
+        let mut q = EventQueue::new();
+        q.push_at(0.0, "pos");
+        q.push_at(-0.0, "neg");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["neg", "pos"]);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! logic both drivers used to duplicate is one implementation now
 //! ([`GroupEngine`]'s `ReadAt`/`ReadRetry` handling and [`ReadCtl`]).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::consensus::message::{GroupId, Message, NodeId, Payload};
@@ -392,14 +392,24 @@ pub(crate) struct GroupEngine {
     inflight_cost_ms: f64,
 
     // -- pipelined window (depth > 1) --
-    pending: Vec<PendingRound>,
+    /// In-flight rounds, oldest first. A deque: the retire loop pops the
+    /// committed prefix from the front, which `Vec::remove(0)` made O(n)
+    /// per retired round.
+    pending: VecDeque<PendingRound>,
     /// Entry index → batch apply cost at unit speed (for follower service
     /// times); retained for the whole run so retransmits resolve too.
     batch_costs: HashMap<u64, f64>,
 
-    reconfig_queue: Vec<ReconfigSpec>,
-    kills: Vec<KillSpec>,
+    reconfig_queue: VecDeque<ReconfigSpec>,
+    kills: VecDeque<KillSpec>,
     kill_leader_at: Option<u64>,
+
+    /// Reusable output buffer for `Node::step_into` — one allocation per
+    /// engine instead of one `Vec<Output>` per step (the routing hot path).
+    out_scratch: Vec<Output>,
+    /// Messages delivered to live nodes (host-profiling telemetry for the
+    /// `sim_throughput` bench; never folded into the metrics digest).
+    messages: u64,
 }
 
 impl GroupEngine {
@@ -466,6 +476,7 @@ impl GroupEngine {
         reconfig_queue.sort_by_key(|r| r.round);
         let mut kills = config.kills.clone();
         kills.sort_by_key(|k| k.round);
+        let (reconfig_queue, kills) = (VecDeque::from(reconfig_queue), VecDeque::from(kills));
 
         GroupEngine {
             gid,
@@ -500,12 +511,31 @@ impl GroupEngine {
             pending1: None,
             pending1_entry: 0,
             inflight_cost_ms: 0.0,
-            pending: Vec::with_capacity(config.pipeline.max(1)),
+            pending: VecDeque::with_capacity(config.pipeline.max(1)),
             batch_costs: HashMap::new(),
             reconfig_queue,
             kills,
             kill_leader_at: config.kill_leader_at_round,
+            out_scratch: Vec::new(),
+            messages: 0,
         }
+    }
+
+    /// Step `node` with `input` and route the outputs, reusing the engine's
+    /// scratch buffer so the hot path performs no per-step allocation.
+    /// `route` never re-enters `step_into`, so one buffer suffices.
+    fn step_route(
+        &mut self,
+        node: NodeId,
+        input: Input,
+        extra_delay: f64,
+        q: &mut EventQueue<GroupEv>,
+    ) {
+        let mut outs = std::mem::take(&mut self.out_scratch);
+        self.nodes[node].step_into(input, &mut outs);
+        self.route(node, &mut outs, extra_delay, q);
+        outs.clear();
+        self.out_scratch = outs;
     }
 
     #[inline]
@@ -546,16 +576,14 @@ impl GroupEngine {
                     return;
                 }
                 self.nodes[node].observe_time(now);
-                let outs = self.nodes[node].step(Input::ElectionTimeout);
-                self.route(node, outs, 0.0, q);
+                self.step_route(node, Input::ElectionTimeout, 0.0, q);
             }
             Ev::HeartbeatTimer { node, generation } => {
                 if !self.alive[node] || generation != self.hb_gen[node] {
                     return;
                 }
                 self.nodes[node].observe_time(now);
-                let outs = self.nodes[node].step(Input::HeartbeatTimeout);
-                self.route(node, outs, 0.0, q);
+                self.step_route(node, Input::HeartbeatTimeout, 0.0, q);
             }
             Ev::Deliver { to, from, msg } => {
                 if !self.alive[to] {
@@ -569,9 +597,9 @@ impl GroupEngine {
                 } else {
                     self.service_ms_pipelined(to, &msg)
                 };
+                self.messages += 1;
                 self.nodes[to].observe_time(now);
-                let outs = self.nodes[to].step(Input::Receive(from, msg));
-                self.route(to, outs, service, q);
+                self.step_route(to, Input::Receive(from, msg), service, q);
             }
             Ev::ReadAt { id, node } => {
                 if !self.readctl.outstanding.contains_key(&id) {
@@ -582,8 +610,7 @@ impl GroupEngine {
                 }
                 self.nodes[node].observe_time(now);
                 let service = self.config.rpc_proc_ms / self.effective_speed(node);
-                let outs = self.nodes[node].step(Input::Read { id });
-                self.route(node, outs, service, q);
+                self.step_route(node, Input::Read { id }, service, q);
             }
             Ev::ReadRetry { id } => {
                 if let Some(req) = self.readctl.outstanding.get(&id) {
@@ -660,12 +687,10 @@ impl GroupEngine {
             return;
         }
         // scheduled reconfiguration (not counted as a round)
-        if let Some(rc) = self.reconfig_queue.first().copied() {
+        if let Some(rc) = self.reconfig_queue.front().copied() {
             if rc.round == next_round {
-                self.reconfig_queue.remove(0);
-                let outs =
-                    self.nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
-                self.route(leader, outs, 0.0, q);
+                self.reconfig_queue.pop_front();
+                self.step_route(leader, Input::Propose(Payload::Reconfig { new_t: rc.new_t }), 0.0, q);
                 self.push(q, 1.0, Ev::ProposeNext);
                 return;
             }
@@ -679,10 +704,15 @@ impl GroupEngine {
         let leader_speed = self.effective_speed_at(leader, next_round);
         let leader_apply_done = now + self.config.rpc_proc_ms / leader_speed;
         self.nodes[leader].observe_time(now);
-        let outs = self.nodes[leader].step(Input::Propose(payload));
+        // window bookkeeping must land between step and route, so this site
+        // spells out the scratch-buffer pattern `step_route` wraps
+        let mut outs = std::mem::take(&mut self.out_scratch);
+        self.nodes[leader].step_into(Input::Propose(payload), &mut outs);
         self.pending1 = Some((next_round, now, ops, leader_apply_done, batch));
         self.pending1_entry = self.nodes[leader].log().last_index();
-        self.route(leader, outs, 0.0, q);
+        self.route(leader, &mut outs, 0.0, q);
+        outs.clear();
+        self.out_scratch = outs;
         // the round's read-only ops go through the selected fast path
         if let Some(rb) = read_batch {
             self.readctl.issue_fan(self.gid, q, &self.alive, now, next_round, &rb);
@@ -736,12 +766,10 @@ impl GroupEngine {
         // scheduled reconfiguration (not counted as a round) — may land
         // while earlier rounds are still in flight; their propose-time
         // weight/CT snapshots keep them correct
-        if let Some(rc) = self.reconfig_queue.first().copied() {
+        if let Some(rc) = self.reconfig_queue.front().copied() {
             if rc.round == next_round {
-                self.reconfig_queue.remove(0);
-                let outs =
-                    self.nodes[leader].step(Input::Propose(Payload::Reconfig { new_t: rc.new_t }));
-                self.route(leader, outs, 0.0, q);
+                self.reconfig_queue.pop_front();
+                self.step_route(leader, Input::Propose(Payload::Reconfig { new_t: rc.new_t }), 0.0, q);
                 self.push(q, 1.0, Ev::ProposeNext);
                 return;
             }
@@ -752,11 +780,14 @@ impl GroupEngine {
         let leader_speed = self.effective_speed_at(leader, next_round);
         let leader_apply_done = now + self.config.rpc_proc_ms / leader_speed;
         self.nodes[leader].observe_time(now);
-        let outs = self.nodes[leader].step(Input::Propose(payload));
+        // window bookkeeping must land between step and route, so this site
+        // spells out the scratch-buffer pattern `step_route` wraps
+        let mut outs = std::mem::take(&mut self.out_scratch);
+        self.nodes[leader].step_into(Input::Propose(payload), &mut outs);
         let entry_index = self.nodes[leader].log().last_index();
         self.batch_costs.insert(entry_index, cost_ms);
         self.proposed = next_round;
-        self.pending.push(PendingRound {
+        self.pending.push_back(PendingRound {
             round: next_round,
             entry_index,
             term: self.nodes[leader].term(),
@@ -765,7 +796,9 @@ impl GroupEngine {
             leader_apply_done,
             batch,
         });
-        self.route(leader, outs, 0.0, q);
+        self.route(leader, &mut outs, 0.0, q);
+        outs.clear();
+        self.out_scratch = outs;
         // this round's read-only ops go through the selected fast path
         if let Some(rb) = read_batch {
             self.readctl.issue_fan(self.gid, q, &self.alive, now, next_round, &rb);
@@ -824,7 +857,7 @@ impl GroupEngine {
 
     /// Scheduled kills fire at the start of their round.
     fn run_scheduled_kills(&mut self, next_round: u64, leader: NodeId) {
-        while let Some(k) = self.kills.first().cloned() {
+        while let Some(k) = self.kills.front().cloned() {
             if k.round != next_round {
                 break;
             }
@@ -832,7 +865,7 @@ impl GroupEngine {
             for v in k.victims(&weights, leader, &self.alive, &mut self.kill_rng) {
                 self.alive[v] = false;
             }
-            self.kills.remove(0);
+            self.kills.pop_front();
         }
     }
 
@@ -902,17 +935,18 @@ impl GroupEngine {
     /// Route one node's outputs into the fabric; sends leave `extra_delay`
     /// ms after now (the node's service time). One implementation for both
     /// windows — only round retirement differs, and that branches on
-    /// `lockstep` (the G=1 digests pin both behaviors).
+    /// `lockstep` (the G=1 digests pin both behaviors). Drains the caller's
+    /// buffer so `step_route` can hand the same allocation to every step.
     fn route(
         &mut self,
         node: NodeId,
-        outs: Vec<Output>,
+        outs: &mut Vec<Output>,
         extra_delay: f64,
         q: &mut EventQueue<GroupEv>,
     ) {
         let n = self.config.n();
         let now = q.now();
-        for o in outs {
+        for o in outs.drain(..) {
             match o {
                 Output::Send(to, msg) => {
                     if !self.alive[to] {
@@ -1073,9 +1107,10 @@ impl GroupEngine {
         if let Some(sl) = self.safety.as_mut() {
             sl.commit_times.push((now, index));
         }
-        // retire the committed prefix of the window, in order
-        while self.pending.first().map_or(false, |p| p.entry_index <= index) {
-            let p = self.pending.remove(0);
+        // retire the committed prefix of the window, in order — pop_front
+        // is O(1) where the historical Vec::remove(0) shifted the window
+        while self.pending.front().map_or(false, |p| p.entry_index <= index) {
+            let p = self.pending.pop_front().expect("front checked");
             let commit_time = now.max(p.leader_apply_done);
             let latency = commit_time - p.start_ms;
             self.stats.push(RoundStat {
@@ -1156,6 +1191,7 @@ impl GroupEngine {
         result.terms_advanced = self.nodes.iter().map(|nd| nd.term()).max().unwrap_or(0);
         result.nemesis_stats = self.nemesis.as_ref().map(|nm| nm.stats);
         result.safety = self.safety.take();
+        result.messages_delivered = self.messages;
         // one sorted pass serves both the per-group percentiles and (moved,
         // not cloned) the multi-group merge's pooled population
         let mut read_latencies = std::mem::take(&mut self.readctl.latencies);

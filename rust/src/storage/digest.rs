@@ -69,6 +69,13 @@ fn z_coef(i: usize) -> u32 {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DigestState {
     state: Vec<u32>,
+    /// Running Σ state\[i\]·z(i): the fold is *linear* over wrapping u32
+    /// arithmetic, so each write updates it incrementally
+    /// (`digest += c·z(slot)`) bit-identically to refolding the whole
+    /// state — turning the per-batch O(slots) fold in the commit path into
+    /// O(batch). Always consistent with `state` (both private, every
+    /// mutation path maintains it), so the derived equality stays sound.
+    digest: u32,
 }
 
 impl Default for DigestState {
@@ -77,15 +84,25 @@ impl Default for DigestState {
     }
 }
 
+/// Full Σ state\[i\]·z(i) fold — used once at construction and by tests
+/// pinning the incremental digest against it.
+fn fold_state(state: &[u32]) -> u32 {
+    state
+        .iter()
+        .enumerate()
+        .fold(0u32, |acc, (i, &s)| acc.wrapping_add(s.wrapping_mul(z_coef(i))))
+}
+
 impl DigestState {
     pub fn new(n_slots: usize) -> Self {
         assert!(n_slots.is_power_of_two());
-        DigestState { state: vec![0; n_slots] }
+        DigestState { state: vec![0; n_slots], digest: 0 }
     }
 
     pub fn from_state(state: Vec<u32>) -> Self {
         assert!(state.len().is_power_of_two());
-        DigestState { state }
+        let digest = fold_state(&state);
+        DigestState { state, digest }
     }
 
     pub fn slots(&self) -> &[u32] {
@@ -102,34 +119,38 @@ impl DigestState {
         assert_eq!(ops.len(), keys.len());
         assert_eq!(ops.len(), vals.len());
         let n = self.state.len();
+        // Two passes so reads observe the pre-batch state without
+        // materializing a per-batch delta vector (the old implementation
+        // allocated O(slots) and refolded the whole state per batch).
+        // Pass 1: reads, in op order — same wrapping-add order as before,
+        // so the read digest is bit-identical.
         let mut rdig: u32 = 0;
-        // reads observe the pre-batch state: collect write deltas first
-        let mut delta = vec![0u32; n];
         for ((&op, &key), &val) in ops.iter().zip(keys).zip(vals) {
-            if op >= OP_NOP {
+            if op >= OP_NOP || !is_read(op) {
+                continue;
+            }
+            let c = op_contrib(op, key, val);
+            rdig = rdig.wrapping_add(self.state[slot_of(key, n)] ^ c);
+        }
+        // Pass 2: writes mutate the state and the running digest. Linearity
+        // of the z-fold over wrapping arithmetic makes the incremental
+        // update bit-identical to refolding: Σ(sᵢ+δᵢ)·z(i) = Σsᵢ·z(i) + Σδᵢ·z(i).
+        for ((&op, &key), &val) in ops.iter().zip(keys).zip(vals) {
+            if op >= OP_NOP || !is_write(op) {
                 continue;
             }
             let c = op_contrib(op, key, val);
             let s = slot_of(key, n);
-            if is_write(op) {
-                delta[s] = delta[s].wrapping_add(c);
-            }
-            if is_read(op) {
-                rdig = rdig.wrapping_add(self.state[s] ^ c);
-            }
+            self.state[s] = self.state[s].wrapping_add(c);
+            self.digest = self.digest.wrapping_add(c.wrapping_mul(z_coef(s)));
         }
-        for (st, d) in self.state.iter_mut().zip(&delta) {
-            *st = st.wrapping_add(*d);
-        }
-        [self.state_digest(), rdig]
+        [self.digest, rdig]
     }
 
-    /// Digest of the current state: Σ state\[i\] · z(i) (wrapping).
+    /// Digest of the current state: Σ state\[i\] · z(i) (wrapping) —
+    /// maintained incrementally, so this is O(1).
     pub fn state_digest(&self) -> u32 {
-        self.state
-            .iter()
-            .enumerate()
-            .fold(0u32, |acc, (i, &s)| acc.wrapping_add(s.wrapping_mul(z_coef(i))))
+        self.digest
     }
 }
 
@@ -240,6 +261,26 @@ mod tests {
         parts.apply_ycsb(&ops[..200], &keys[..200], &vals[..200]);
         parts.apply_ycsb(&ops[200..], &keys[200..], &vals[200..]);
         assert_eq!(whole.slots(), parts.slots());
+    }
+
+    #[test]
+    fn incremental_digest_matches_full_fold() {
+        // the cached digest must stay bit-identical to refolding the whole
+        // state after any batch mix (RMW ops exercise read+write together)
+        let mut rng = Rng::new(9);
+        let mut st = DigestState::new(512);
+        for batch in 0..4 {
+            let n = 300 + batch * 50;
+            let ops: Vec<u32> = (0..n).map(|_| rng.below(6) as u32).collect();
+            let keys: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let vals: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            st.apply_ycsb(&ops, &keys, &vals);
+            assert_eq!(st.state_digest(), fold_state(st.slots()), "batch {batch}");
+        }
+        // and from_state seeds the cache with the same fold
+        let rebuilt = DigestState::from_state(st.slots().to_vec());
+        assert_eq!(rebuilt.state_digest(), st.state_digest());
+        assert_eq!(rebuilt, st);
     }
 
     #[test]

@@ -25,7 +25,11 @@ impl Fnv64 {
     }
 
     pub fn write_u64(&mut self, v: u64) {
-        for b in v.to_le_bytes() {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
         }
@@ -54,6 +58,15 @@ mod tests {
         c.write_u64(1);
         assert_ne!(a.finish(), c.finish(), "order must matter");
         assert_ne!(Fnv64::new().finish(), a.finish());
+    }
+
+    #[test]
+    fn bytes_and_u64_folds_agree() {
+        let mut a = Fnv64::new();
+        a.write_u64(0x0123_4567_89AB_CDEF);
+        let mut b = Fnv64::new();
+        b.write_bytes(&0x0123_4567_89AB_CDEFu64.to_le_bytes());
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

@@ -1,0 +1,62 @@
+//! Schema tests for the `BENCH_<suite>.json` perf-trajectory artifacts:
+//! (1) an emitted report parses back to exactly the same report, and
+//! (2) the `sim_throughput` grid emits one record per (n, depth, G) cell
+//! with the derived rate metrics present — the figures_shape.rs-style
+//! guarantee that the artifact covers the whole grid.
+
+use std::time::Duration;
+
+use cabinet::bench::throughput::{self, Cell};
+use cabinet::bench::{BenchReport, Bencher};
+
+/// A 1-sample, no-warmup bencher so the grid test stays cheap.
+fn cheap_bencher() -> Bencher {
+    Bencher { samples: 1, warmup: 0, min_time: Duration::ZERO }
+}
+
+#[test]
+fn report_json_round_trips_through_emission() {
+    let b = cheap_bencher();
+    let mut report = BenchReport::new("schema_probe", "probe cfg v1", true);
+    let stats = b.iter("probe/a", || std::hint::black_box(41 + 1));
+    report.push("probe/a", &stats).metrics.push(("ops_per_sec".to_string(), 123.456));
+    let stats2 = b.iter("probe/b", || std::hint::black_box("x".repeat(8)));
+    report.push("probe/b", &stats2);
+
+    let json = report.to_json();
+    let parsed = BenchReport::parse(&json).expect("own emission must parse");
+    assert_eq!(parsed, report, "write -> parse must be lossless");
+    // and re-emission is byte-stable (shortest-round-trip float formatting)
+    assert_eq!(parsed.to_json(), json);
+}
+
+#[test]
+fn sim_throughput_grid_emits_one_record_per_cell() {
+    // 2 virtual rounds per cell keeps this test-suite-cheap while still
+    // executing every (n, depth, G) configuration end to end
+    let report = throughput::build_report(&cheap_bencher(), 2, true);
+    let cells = throughput::cells();
+    assert_eq!(report.records.len(), cells.len(), "one record per grid cell");
+    for cell in &cells {
+        let rec = report
+            .record(&cell.label())
+            .unwrap_or_else(|| panic!("missing record for {}", cell.label()));
+        assert!(rec.samples >= 1);
+        assert!(rec.mean_ns > 0.0);
+        for m in ["rounds_per_sec", "messages_per_sec", "ops_per_sec"] {
+            let v = rec
+                .metric(m)
+                .unwrap_or_else(|| panic!("{} missing metric {m}", cell.label()));
+            assert!(v > 0.0, "{}: {m} = {v} must be positive", cell.label());
+        }
+    }
+    // the whole report survives emission
+    let parsed = BenchReport::parse(&report.to_json()).expect("grid report parses");
+    assert_eq!(parsed.records.len(), cells.len());
+}
+
+#[test]
+fn cell_labels_match_emitted_names() {
+    let c = Cell { n: 50, t: 5, depth: 8, groups: 4 };
+    assert_eq!(c.label(), "sim/n50_d8_g4");
+}
