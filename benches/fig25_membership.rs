@@ -1,0 +1,21 @@
+//! `cargo bench` target regenerating Fig 25 — dynamic membership (quick
+//! scale; run `cargo run --release --example figures -- fig25 --paper` for
+//! the full version). A staggered schedule replaces every founding voter of
+//! a 5-voter cabinet (10 slots, cab t=1) while the client keeps proposing:
+//! join at minimum weight, warmup promotion, weight drain, joint-consensus
+//! removal. The acceptance shape: the rolling replace completes with no
+//! commit-to-commit gap longer than one election timeout, and the
+//! config-epoch / joint-quorum safety checker stays clean.
+
+use cabinet::bench::{figures, Bencher, Scale};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut last = None;
+    b.iter("fig25_membership", || {
+        last = Some(figures::fig25_membership(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -19,6 +19,15 @@
 //!    (no stale reads — the property an expired lease on a deposed leader
 //!    would break) and at most the highest index committed by the time the
 //!    read was served (no reading uncommitted futures).
+//! 5. **Weighted-rule evidence across config epochs** — every
+//!    leader-observed round commit closed strictly above the commit
+//!    threshold of the config it was proposed under, including the *old*
+//!    half when that config was joint (a commit that satisfied only one
+//!    half of C_old,new is a membership-change split brain), and the
+//!    propose-time epochs are non-decreasing along the log.
+//! 6. **Config-epoch coherence** — every committed config entry decides one
+//!    (epoch, joint) pair per log index across all observers, and epochs
+//!    never regress along the log.
 //!
 //! The checker is pure data → verdict: the simulator collects the log when
 //! `SimConfig::track_safety` is set, the chaos harness in
@@ -40,6 +49,11 @@ pub struct SafetyReport {
     pub leaders_checked: usize,
     /// Linearizable reads validated against the commit timeline.
     pub reads_checked: usize,
+    /// Per-commit quorum-evidence records validated (weighted rule, both
+    /// halves of a joint config).
+    pub evidence_checked: usize,
+    /// Distinct committed config entries validated for epoch coherence.
+    pub epochs_checked: usize,
 }
 
 impl SafetyReport {
@@ -152,6 +166,71 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         }
     }
 
+    // 5: weighted-rule evidence — every recorded commit closed strictly
+    // above its propose-time threshold, in both halves when the config was
+    // joint. Negated comparisons so a NaN accumulator fails the check
+    // instead of slipping past it.
+    let mut evidence_checked = 0usize;
+    for e in &log.commit_evidence {
+        evidence_checked += 1;
+        if !(e.acc > e.ct) {
+            violations.push(format!(
+                "index {}: committed with quorum weight {} <= threshold {} (epoch {})",
+                e.index, e.acc, e.ct, e.epoch
+            ));
+        }
+        if let Some((jacc, jct)) = e.joint {
+            if !(jacc > jct) {
+                violations.push(format!(
+                    "index {}: joint commit old-half weight {jacc} <= threshold {jct} \
+                     (epoch {})",
+                    e.index, e.epoch
+                ));
+            }
+        }
+    }
+    // propose-time epochs are non-decreasing along the log: an entry at a
+    // higher index can never have been proposed under an older config
+    let mut ev_epochs: Vec<(u64, u64)> =
+        log.commit_evidence.iter().map(|e| (e.index, e.epoch)).collect();
+    ev_epochs.sort_unstable();
+    ev_epochs.dedup();
+    for w in ev_epochs.windows(2) {
+        if w[1].0 == w[0].0 {
+            violations.push(format!(
+                "index {}: committed under two epochs ({} and {})",
+                w[0].0, w[0].1, w[1].1
+            ));
+        } else if w[1].1 < w[0].1 {
+            violations.push(format!(
+                "propose epoch regressed {} -> {} (indices {} -> {})",
+                w[0].1, w[1].1, w[0].0, w[1].0
+            ));
+        }
+    }
+
+    // 6: config-epoch coherence — one (epoch, joint) decision per config
+    // index across every observer, epochs monotone along the log.
+    let mut cfg: Vec<(u64, u64, bool)> = log.config_epochs.clone();
+    // sort by index first; identical observations from different nodes
+    // collapse to one record
+    cfg.sort_unstable_by_key(|&(epoch, index, joint)| (index, epoch, joint));
+    cfg.dedup();
+    let epochs_checked = cfg.len();
+    for w in cfg.windows(2) {
+        let (e0, i0, _) = w[0];
+        let (e1, i1, _) = w[1];
+        if i1 == i0 {
+            violations.push(format!(
+                "config index {i0}: divergent decisions (epoch {e0} vs epoch {e1})"
+            ));
+        } else if e1 < e0 {
+            violations.push(format!(
+                "config epoch regressed {e0} -> {e1} (indices {i0} -> {i1})"
+            ));
+        }
+    }
+
     // 2: single leader per term.
     let mut by_term: Vec<(u64, usize)> = Vec::new();
     for &(term, node) in &log.leaders {
@@ -172,6 +251,8 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         decisions,
         leaders_checked: log.leaders.len(),
         reads_checked,
+        evidence_checked,
+        epochs_checked,
     }
 }
 
@@ -293,5 +374,82 @@ mod tests {
         let r = check(&SafetyLog::new(3));
         assert!(r.is_clean());
         assert_eq!(r.commits_checked, 0);
+        assert_eq!(r.evidence_checked, 0);
+        assert_eq!(r.epochs_checked, 0);
+    }
+
+    fn evidence(index: u64, epoch: u64, acc: f64, ct: f64) -> crate::sim::CommitEvidence {
+        crate::sim::CommitEvidence { index, epoch, acc, ct, joint: None }
+    }
+
+    #[test]
+    fn quorum_evidence_passes_and_fails() {
+        let mut log = SafetyLog::new(2);
+        log.commit_evidence = vec![
+            evidence(1, 0, 3.0, 2.5),
+            crate::sim::CommitEvidence {
+                index: 2,
+                epoch: 1,
+                acc: 3.0,
+                ct: 2.5,
+                joint: Some((2.6, 2.5)),
+            },
+        ];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.evidence_checked, 2);
+
+        // below-threshold commit flagged
+        let mut bad = SafetyLog::new(2);
+        bad.commit_evidence = vec![evidence(1, 0, 2.0, 2.5)];
+        assert!(!check(&bad).is_clean());
+        // NaN accumulator flagged (negated comparison)
+        let mut nan = SafetyLog::new(2);
+        nan.commit_evidence = vec![evidence(1, 0, f64::NAN, 2.5)];
+        assert!(!check(&nan).is_clean());
+        // joint commit that satisfied only the new half flagged
+        let mut half = SafetyLog::new(2);
+        half.commit_evidence = vec![crate::sim::CommitEvidence {
+            index: 1,
+            epoch: 1,
+            acc: 3.0,
+            ct: 2.5,
+            joint: Some((1.0, 2.0)),
+        }];
+        let r = check(&half);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("old-half"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn propose_epoch_regression_flagged() {
+        let mut log = SafetyLog::new(2);
+        log.commit_evidence = vec![evidence(1, 2, 3.0, 2.5), evidence(5, 1, 3.0, 2.5)];
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("epoch regressed"), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn config_epochs_dedupe_and_flag_divergence() {
+        let mut log = SafetyLog::new(3);
+        // three nodes observing the same two config commits: clean, two
+        // distinct decisions
+        log.config_epochs = vec![(1, 4, true), (1, 4, true), (2, 7, false), (1, 4, true)];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.epochs_checked, 2);
+
+        let mut div = SafetyLog::new(3);
+        div.config_epochs = vec![(1, 4, true), (2, 4, true)];
+        let r = check(&div);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("divergent"), "{:?}", r.violations);
+
+        let mut reg = SafetyLog::new(3);
+        reg.config_epochs = vec![(3, 4, false), (1, 9, false)];
+        let r = check(&reg);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("config epoch regressed"), "{:?}", r.violations);
     }
 }

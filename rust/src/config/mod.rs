@@ -7,7 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
-use crate::net::nemesis::{NemesisSpec, PartitionSpec};
+use crate::net::nemesis::{MembershipEvent, MembershipSpec, NemesisSpec, PartitionSpec};
 use crate::net::topology::ZoneAlloc;
 use crate::sim::{
     DigestMode, Protocol, ReadPath, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec,
@@ -67,6 +67,14 @@ use crate::workload::{ShardBy, Workload};
 ///                            #          | split:ids | oneway:ids
 /// groups = [0, 2]            # sharded runs: restrict the schedule to these
 ///                            # group indices (default: every group)
+///
+/// [membership]
+/// members = 5                # founding voters (slots members..n join later;
+///                            # default: all n slots are founding members)
+/// drain_rounds = 4           # weight ramp-down before a leave's joint drop
+/// join_warmup = 4            # acked rounds before a joiner turns Active
+/// events = ["4=join:5", "10=leave:0", "16=replace:1>6"]
+///                            # ROUND=join:ID | leave:ID | replace:OLD>NEW
 /// ```
 pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let doc = toml::parse(text)?;
@@ -277,6 +285,44 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 bail!("[nemesis] groups must name at least one group");
             }
             config.nemesis_groups = Some(scope);
+        }
+    }
+
+    if let Some(m) = doc.get("membership") {
+        if let Some(k) = m.get("members").and_then(|v| v.as_int()) {
+            // negative values would wrap through the usize cast; the range
+            // itself (3..=n) is checked by the shared validate_membership
+            if k < 0 {
+                bail!("[membership] members must be >= 0, got {k}");
+            }
+            config.initial_members = Some(k as usize);
+        }
+        if let Some(dr) = m.get("drain_rounds").and_then(|v| v.as_int()) {
+            if dr < 1 {
+                bail!("[membership] drain_rounds must be >= 1, got {dr}");
+            }
+            config.drain_rounds = dr as usize;
+        }
+        if let Some(w) = m.get("join_warmup").and_then(|v| v.as_int()) {
+            if w < 0 {
+                bail!("[membership] join_warmup must be >= 0, got {w}");
+            }
+            config.join_warmup = w as u64;
+        }
+        if let Some(evs) = m.get("events").and_then(|v| v.as_array()) {
+            let mut spec = MembershipSpec::default();
+            for e in evs {
+                let s = e
+                    .as_str()
+                    .context("[membership] events entries must be strings")?;
+                spec.events.push(MembershipEvent::parse(s)?);
+            }
+            if !spec.is_noop() {
+                config.membership = Some(spec);
+            }
+        }
+        if let Err(e) = config.validate_membership() {
+            bail!("[membership] {e}");
         }
     }
 
@@ -563,6 +609,62 @@ partitions = ["2000..6000=leader", "8000..20000=followers:2"]
             "n = 11\n[sharding]\ngroups = 2\n[nemesis]\ndrop_p = 0.05\ngroups = []\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn membership_table_roundtrip() {
+        use crate::net::nemesis::MembershipKind;
+        let cfg = sim_config_from_toml(
+            r#"
+protocol = "cabinet"
+t = 1
+n = 7
+[membership]
+members = 5
+drain_rounds = 2
+join_warmup = 1
+events = ["4=join:5", "10=leave:0", "16=replace:1>6"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.initial_members, Some(5));
+        assert_eq!(cfg.drain_rounds, 2);
+        assert_eq!(cfg.join_warmup, 1);
+        let spec = cfg.membership.expect("membership parsed");
+        assert_eq!(spec.events.len(), 3);
+        assert_eq!(spec.events[0].round, 4);
+        assert_eq!(spec.events[0].kind, MembershipKind::Join(5));
+        assert_eq!(spec.events[2].kind, MembershipKind::Replace { leave: 1, join: 6 });
+        assert!(cfg.membership_on());
+    }
+
+    #[test]
+    fn membership_table_rejects_bad_knobs() {
+        // founding membership out of range
+        assert!(sim_config_from_toml("n = 7\n[membership]\nmembers = 2\n").is_err());
+        assert!(sim_config_from_toml("n = 7\n[membership]\nmembers = 8\n").is_err());
+        assert!(sim_config_from_toml("n = 7\n[membership]\nmembers = -1\n").is_err());
+        // drain ramp must exist
+        assert!(sim_config_from_toml("n = 7\n[membership]\ndrain_rounds = 0\n").is_err());
+        // malformed event DSL
+        assert!(sim_config_from_toml(
+            "n = 7\n[membership]\nevents = [\"4=promote:5\"]\n"
+        )
+        .is_err());
+        assert!(sim_config_from_toml("n = 7\n[membership]\nevents = [\"garbage\"]\n").is_err());
+        // event id out of the slot range
+        assert!(sim_config_from_toml("n = 5\n[membership]\nevents = [\"4=join:9\"]\n").is_err());
+        // round 0 never fires
+        assert!(sim_config_from_toml("n = 7\n[membership]\nevents = [\"0=join:5\"]\n").is_err());
+        // self-replace
+        assert!(sim_config_from_toml(
+            "n = 7\n[membership]\nevents = [\"4=replace:3>3\"]\n"
+        )
+        .is_err());
+        // empty table = membership off, defaults untouched
+        let cfg = sim_config_from_toml("n = 7\n[membership]\n").unwrap();
+        assert!(!cfg.membership_on());
+        assert!(cfg.membership.is_none() && cfg.initial_members.is_none());
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //!     (and wherever) the log was compacted — replay determinism and the
 //!     safety harness's log-matching checks survive compaction.
 
-use crate::consensus::message::{Entry, LogIndex, Term};
+use std::sync::Arc;
+
+use crate::consensus::message::{ClusterConfig, Entry, LogIndex, Payload, Term};
 use crate::util::Fnv64;
 
 /// A node's replicated log.
@@ -184,6 +186,17 @@ impl Log {
     /// Iterate the retained entries (the compacted prefix is gone).
     pub fn iter(&self) -> impl Iterator<Item = &Entry> {
         self.entries.iter()
+    }
+
+    /// The most recent membership config in the retained suffix (Raft §6:
+    /// configs are effective on append, so the latest entry wins), together
+    /// with its index. `None` when no ConfigChange entry is retained — the
+    /// caller falls back to the snapshot blob's config or the boot config.
+    pub fn latest_config(&self) -> Option<(LogIndex, Arc<ClusterConfig>)> {
+        self.entries.iter().rev().find_map(|e| match &e.payload {
+            Payload::ConfigChange(c) => Some((e.index, Arc::clone(c))),
+            _ => None,
+        })
     }
 
     /// FNV-1a fingerprint over the `(index, term, wclock)` triples of the
@@ -355,6 +368,31 @@ mod tests {
         assert_ne!(a.prefix_digest(3), b.prefix_digest(3));
         // digest over more entries than exist == digest of the whole log
         assert_eq!(a.prefix_digest(99), a.prefix_digest(3));
+    }
+
+    #[test]
+    fn latest_config_scans_backwards_and_respects_truncation() {
+        use crate::consensus::message::ClusterConfig;
+        let cfg = |epoch| {
+            let mut c = ClusterConfig::bootstrap(3);
+            c.epoch = epoch;
+            Payload::ConfigChange(Arc::new(c))
+        };
+        let mut log = Log::new();
+        assert!(log.latest_config().is_none());
+        log.append(e(1), 1.0);
+        log.append(Entry { term: 1, index: 0, payload: cfg(1), wclock: 0 }, 1.0);
+        log.append(e(1), 1.0);
+        log.append(Entry { term: 1, index: 0, payload: cfg(2), wclock: 0 }, 1.0);
+        let (idx, c) = log.latest_config().unwrap();
+        assert_eq!((idx, c.epoch), (4, 2));
+        // a conflicting splice that truncates the tail rolls the config back
+        log.splice(3, &[e(2)], 1.0);
+        let (idx, c) = log.latest_config().unwrap();
+        assert_eq!((idx, c.epoch), (2, 1));
+        // compacting past every config entry leaves nothing retained
+        log.compact_to(4);
+        assert!(log.latest_config().is_none());
     }
 
     #[test]

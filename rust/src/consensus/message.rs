@@ -21,6 +21,103 @@ pub type LogIndex = u64;
 /// Cabinet weight clock (Algorithm 1).
 pub type WClock = u64;
 
+/// Lifecycle state of a cluster member (`Joining → Active → Draining →`
+/// removed-from-config). Joining and Draining members are full voters —
+/// joint consensus already guards the membership transition itself — but
+/// the weight re-deal pins them at the minimum weight (a joiner *earns*
+/// weight through the responsiveness clock only after promotion; a leaver's
+/// weight drains to the floor before the removal config is proposed), so a
+/// half-caught-up or departing replica can never sit in the cabinet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// Recently added: votes, replicates, held at minimum weight until it
+    /// has acked enough rounds to graduate to `Active`.
+    Joining,
+    /// Normal member: weight set purely by the FIFO responsiveness re-deal.
+    Active,
+    /// Scheduled for removal: weight ramps down to the floor over the drain
+    /// window, after which the leader proposes the config that drops it.
+    Draining,
+}
+
+/// One member row of a [`ClusterConfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemberSpec {
+    pub id: NodeId,
+    pub state: MemberState,
+}
+
+/// A membership configuration, carried in the log by
+/// [`Payload::ConfigChange`] entries (Raft joint consensus, §6 of the Raft
+/// paper, adapted to Cabinet's weighted rule). `epoch` increments on every
+/// config entry; `members` is the *new* voter set (C_new) sorted by id;
+/// `joint_old` is `Some(old voter ids)` while the entry describes the joint
+/// phase C_old,new — commits proposed under it must clear the weighted rule
+/// in **both** halves — and `None` once the cluster has left the joint
+/// phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub epoch: u64,
+    pub members: Vec<MemberSpec>,
+    pub joint_old: Option<Vec<NodeId>>,
+}
+
+impl ClusterConfig {
+    /// The boot config: nodes `0..n`, all Active, epoch 0, not joint.
+    pub fn bootstrap(n: usize) -> Self {
+        ClusterConfig {
+            epoch: 0,
+            members: (0..n).map(|id| MemberSpec { id, state: MemberState::Active }).collect(),
+            joint_old: None,
+        }
+    }
+
+    /// Voter ids of the new half (C_new), in id order.
+    pub fn voters(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.members.iter().map(|m| m.id)
+    }
+
+    /// Number of voters in the new half.
+    pub fn voter_count(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_voter(&self, id: NodeId) -> bool {
+        self.members.iter().any(|m| m.id == id)
+    }
+
+    /// Lifecycle state of `id`, if it is a member of the new half.
+    pub fn state_of(&self, id: NodeId) -> Option<MemberState> {
+        self.members.iter().find(|m| m.id == id).map(|m| m.state)
+    }
+
+    /// Whether `id` participates in *either* half (votes are only exchanged
+    /// with involved nodes; a removed node's stale timers can't churn
+    /// terms).
+    pub fn involves(&self, id: NodeId) -> bool {
+        self.is_voter(id)
+            || self.joint_old.as_ref().map_or(false, |old| old.contains(&id))
+    }
+
+    /// True while the config describes the joint phase C_old,new.
+    pub fn is_joint(&self) -> bool {
+        self.joint_old.is_some()
+    }
+
+    /// True iff this is exactly the boot config for `n` nodes — the fast
+    /// path that keeps membership-off runs on the historical code path.
+    pub fn is_bootstrap(&self, n: usize) -> bool {
+        self.epoch == 0
+            && self.joint_old.is_none()
+            && self.members.len() == n
+            && self
+                .members
+                .iter()
+                .enumerate()
+                .all(|(i, m)| m.id == i && m.state == MemberState::Active)
+    }
+}
+
 /// Entry payload — what the replicated state machine applies on commit.
 #[derive(Clone, Debug)]
 pub enum Payload {
@@ -33,6 +130,10 @@ pub enum Payload {
     Tpcc(Arc<TpccBatch>),
     /// Failure-threshold reconfiguration (§4.1.4): switch to `t`.
     Reconfig { new_t: usize },
+    /// Membership change (joint consensus): the config becomes effective on
+    /// *append* (Raft §6); a joint entry's commit triggers the follow-up
+    /// C_new entry, whose commit completes the transition.
+    ConfigChange(Arc<ClusterConfig>),
     /// Opaque client bytes (quickstart / live KV example).
     Bytes(Arc<Vec<u8>>),
 }
@@ -109,6 +210,11 @@ pub struct SnapshotBlob {
     /// §4.1.4 reconfiguration compacted into the prefix still reaches the
     /// installer. `None` in Raft mode.
     pub cabinet_t: Option<usize>,
+    /// Membership config in force at the snapshot point, so a ConfigChange
+    /// compacted into the prefix still reaches the installer. `None` when
+    /// the taker was still on the boot config (the common case), keeping
+    /// membership-off blobs identical to the historical encoding.
+    pub config: Option<Arc<ClusterConfig>>,
     /// Serialized replica state.
     pub app: AppState,
 }
@@ -327,6 +433,7 @@ mod tests {
                     prefix_digest: 0,
                     wclock: 4,
                     cabinet_t: None,
+                    config: None,
                     app: AppState::None,
                 },
             },
@@ -353,6 +460,7 @@ mod tests {
                 prefix_digest: 0,
                 wclock: 1,
                 cabinet_t: Some(2),
+                config: None,
                 app,
             },
         };
@@ -393,5 +501,36 @@ mod tests {
         assert_eq!(Payload::Noop.op_count(), 0);
         assert_eq!(Payload::Reconfig { new_t: 3 }.op_count(), 0);
         assert_eq!(Payload::Bytes(Arc::new(vec![1, 2, 3])).op_count(), 1);
+        assert_eq!(
+            Payload::ConfigChange(Arc::new(ClusterConfig::bootstrap(5))).op_count(),
+            0
+        );
+    }
+
+    #[test]
+    fn cluster_config_helpers() {
+        let boot = ClusterConfig::bootstrap(5);
+        assert!(boot.is_bootstrap(5));
+        assert!(!boot.is_bootstrap(7));
+        assert!(!boot.is_joint());
+        assert_eq!(boot.voter_count(), 5);
+        assert!(boot.is_voter(4) && !boot.is_voter(5));
+        assert_eq!(boot.state_of(0), Some(MemberState::Active));
+        assert_eq!(boot.state_of(9), None);
+
+        // Joint phase replacing node 0 with node 5: C_new = {1..5 active,
+        // 5 joining}, C_old = {0..4}.
+        let mut members: Vec<_> =
+            (1..5).map(|id| MemberSpec { id, state: MemberState::Active }).collect();
+        members.push(MemberSpec { id: 5, state: MemberState::Joining });
+        let joint =
+            ClusterConfig { epoch: 1, members, joint_old: Some((0..5).collect()) };
+        assert!(joint.is_joint());
+        assert!(!joint.is_bootstrap(5));
+        assert!(!joint.is_voter(0), "0 left the new half");
+        assert!(joint.involves(0), "but still votes in the old half");
+        assert!(joint.is_voter(5) && joint.involves(5));
+        assert!(!joint.involves(6));
+        assert_eq!(joint.state_of(5), Some(MemberState::Joining));
     }
 }

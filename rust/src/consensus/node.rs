@@ -19,12 +19,14 @@
 //!   * the failure threshold can be reconfigured at runtime (§4.1.4).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::consensus::log::Log;
 use crate::consensus::message::{
-    AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock,
+    AppState, ClusterConfig, Entry, LogIndex, MemberSpec, MemberState, Message, NodeId,
+    Payload, SnapshotBlob, Term, WClock,
 };
-use crate::consensus::weights::WeightScheme;
+use crate::consensus::weights::{apply_weight_floors, drain_cap, WeightScheme};
 
 /// Raft role.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,6 +116,24 @@ pub enum Input {
     /// the configured fast path; followers forward it to their leader and
     /// serve locally once granted.
     Read { id: u64 },
+    /// An administrative membership command (leader only; ignored elsewhere —
+    /// drivers re-target the current leader). Commands serialize: one
+    /// membership operation runs to completion before the next starts.
+    Admin(AdminCmd),
+}
+
+/// Administrative membership commands. `Replace` is driver-level sugar for
+/// `Join(new)` followed by `Leave(old)` — the node itself only ever sees the
+/// two primitives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdminCmd {
+    /// Add a node: joint consensus admits it in the `Joining` state at
+    /// minimum weight; it earns full weight through the responsiveness clock
+    /// after a warmup of acked rounds promotes it to `Active`.
+    Join(NodeId),
+    /// Remove a node: its weight drains to the minimum over `drain_rounds`
+    /// re-deals, then joint consensus removes it.
+    Leave(NodeId),
 }
 
 /// Outputs produced by a step.
@@ -129,8 +149,25 @@ pub enum Output {
     StopHeartbeat,
     /// An entry is newly committed (delivered in index order).
     Commit(Entry),
-    /// Leader metrics hook: a replication round reached quorum.
-    RoundCommitted { wclock: WClock, index: LogIndex, repliers: usize, quorum_weight: f64 },
+    /// Leader metrics hook: a replication round reached quorum. `epoch`,
+    /// `ct`, and `joint` carry the round's propose-time config evidence for
+    /// the cross-epoch safety checker: the accumulated weight exceeded `ct`
+    /// in the current config, and — when the round was proposed under a
+    /// joint config — `joint = (acc_old, ct_old)` shows the old half's rule
+    /// held too.
+    RoundCommitted {
+        wclock: WClock,
+        index: LogIndex,
+        repliers: usize,
+        quorum_weight: f64,
+        epoch: u64,
+        ct: f64,
+        joint: Option<(f64, f64)>,
+    },
+    /// A `ConfigChange` entry committed on this node (any role). Drivers use
+    /// it to retire removed nodes and to record the config-epoch trajectory
+    /// for the safety checker.
+    ConfigCommitted { epoch: u64, index: LogIndex, joint: bool, voters: Vec<NodeId> },
     /// Role transitions (metrics / logging). The term is carried so drivers
     /// can record per-term leadership (the safety checker's
     /// single-leader-per-term property) without reaching into the node.
@@ -184,6 +221,46 @@ struct InflightRound {
     acked: Vec<bool>,
     /// Accumulated weight of ackers (leader included).
     acc_weight: f64,
+    /// Config epoch the round was proposed under (checker evidence).
+    epoch: u64,
+    /// Joint-config old-half accumulator: while C_old,new is in force a
+    /// round commits only when the weighted rule holds in *both* halves.
+    /// Snapshotted at propose time like `weights`/`ct`.
+    joint: Option<JointAcc>,
+}
+
+/// Old-half quorum accumulator for one round proposed under a joint config.
+#[derive(Clone, Debug)]
+struct JointAcc {
+    /// Old-config weight of every slot (0.0 for nodes outside C_old).
+    weights: Vec<f64>,
+    ct: f64,
+    acc: f64,
+}
+
+/// Leader-local state machine for the single membership operation in flight
+/// (operations serialize through `admin_queue`). The config *entries* are
+/// replicated; this overlay — drain ramps, warmup counters — is deliberately
+/// leader-local: per the consensus-free weight-reassignment results
+/// (PAPERS.md), intra-epoch weight caps need no consensus round, and a new
+/// leader reconstructs the phase from the committed config's member states.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum AdminPhase {
+    /// Leave: waiting for the Draining-mark config entry to commit.
+    MarkDraining(NodeId),
+    /// Leave: the drain ramp is running — `remaining` re-deals left before
+    /// the node reaches the weight floor and removal is proposed.
+    Draining { node: NodeId, remaining: usize, w_start: f64 },
+    /// The C_old,new entry is in flight / committed; next step proposes the
+    /// C_new entry that leaves the joint phase.
+    Joint,
+    /// Waiting for the C_new (leave-joint) entry to commit.
+    Leaving,
+    /// Join: the member is in, still `Joining` at minimum weight; counting
+    /// acked rounds until promotion.
+    Warmup { node: NodeId, acks: u64 },
+    /// Join: waiting for the `Active`-promotion config entry to commit.
+    Promoting(NodeId),
 }
 
 /// Leader-side bookkeeping for one ReadIndex leadership-confirmation round:
@@ -203,6 +280,9 @@ struct ReadConfirm {
     acked: Vec<bool>,
     acc_weight: f64,
     ct: f64,
+    /// Old-half accumulator when the probe round opened under a joint
+    /// config — leadership confirmation needs both halves, like commits.
+    joint: Option<JointAcc>,
 }
 
 /// The consensus node.
@@ -269,6 +349,36 @@ pub struct Node {
     /// initial assignment instead of being re-dealt by responsiveness.
     static_weights: bool,
 
+    // ---- dynamic membership (joint consensus + weight lifecycle) ---------
+    /// Current cluster config — effective from the moment its entry is
+    /// appended (leader: proposed). `n` stays the *slot* count; the config
+    /// says which slots are members and in what lifecycle state.
+    config: Arc<ClusterConfig>,
+    /// The config this node booted with — the fallback when every config
+    /// entry has been truncated out of the log again.
+    boot_config: Arc<ClusterConfig>,
+    /// Fast path: true while `config` is the full-slot bootstrap config.
+    /// Every membership branch is gated on this, so membership-off runs
+    /// execute the exact historical code path (bit-identical replays).
+    cfg_boot: bool,
+    /// Leader: log index of the config entry whose commit we await. Blocks
+    /// further config proposals (never client proposals) until it commits.
+    pending_config: Option<LogIndex>,
+    /// Leader: admin commands queued behind the operation in flight.
+    admin_queue: VecDeque<AdminCmd>,
+    /// Leader: phase of the membership operation in flight.
+    active_op: Option<AdminPhase>,
+    /// Leader: old-half weight assignment + CT while the config is joint
+    /// (None outside the joint phase). Rebuilt on config adoption; rounds
+    /// snapshot it like `weight_assign`.
+    joint_assign: Option<(Vec<f64>, f64)>,
+    /// Re-deals a leaving node's weight ramps over before removal.
+    drain_rounds: usize,
+    /// Rounds a Joining member must ack before promotion to Active.
+    join_warmup: u64,
+    /// Config entries committed on this node (metrics).
+    config_commits: u64,
+
     // ---- snapshot / compaction state -------------------------------------
     /// Take a snapshot (and compact the log prefix) every this many
     /// committed entries. None = never compact (unbounded log).
@@ -319,6 +429,7 @@ impl Node {
     pub fn new(id: NodeId, n: usize, mode: Mode) -> Self {
         assert!(id < n && n >= 3);
         let weight_assign = initial_assignment(id, n, &mode);
+        let boot = Arc::new(ClusterConfig::bootstrap(n));
         Node {
             id,
             n,
@@ -345,6 +456,16 @@ impl Node {
             inflight: VecDeque::new(),
             pending_reconfig: None,
             static_weights: false,
+            config: Arc::clone(&boot),
+            boot_config: boot,
+            cfg_boot: true,
+            pending_config: None,
+            admin_queue: VecDeque::new(),
+            active_op: None,
+            joint_assign: None,
+            drain_rounds: 4,
+            join_warmup: 4,
+            config_commits: 0,
             snapshot_every: None,
             snapshot_capture: SnapshotCapture::Inline,
             snapshot_pending: None,
@@ -479,9 +600,12 @@ impl Node {
         }
     }
 
-    /// Consensus threshold for the current mode.
+    /// Consensus threshold for the current mode. In Raft mode the majority
+    /// is over the *voter* count once membership is dynamic (the Cabinet
+    /// scheme is already rebuilt per config, so its CT follows for free).
     pub fn ct(&self) -> f64 {
         match &self.mode {
+            Mode::Raft if !self.cfg_boot => self.config.voter_count() as f64 / 2.0,
             Mode::Raft => self.n as f64 / 2.0,
             Mode::Cabinet { scheme } => scheme.ct(),
         }
@@ -497,6 +621,48 @@ impl Node {
     /// the leader rejects new proposals.
     pub fn reconfig_pending(&self) -> bool {
         self.pending_reconfig.is_some()
+    }
+
+    // ---- dynamic membership hooks ---------------------------------------
+
+    /// The cluster config currently in force on this node.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.config
+    }
+
+    /// Config entries committed on this node.
+    pub fn config_commits(&self) -> u64 {
+        self.config_commits
+    }
+
+    /// Is a membership operation in flight on this leader (any phase,
+    /// including queued commands)?
+    pub fn membership_active(&self) -> bool {
+        self.active_op.is_some()
+            || self.pending_config.is_some()
+            || !self.admin_queue.is_empty()
+    }
+
+    /// Install the config this cluster boots with. Must be called before any
+    /// log activity; a config smaller than the slot count `n` leaves the
+    /// remaining slots as non-members that can be admitted later via
+    /// [`AdminCmd::Join`]. Passing the full-slot bootstrap config is a no-op
+    /// that keeps the historical (membership-off) code path.
+    pub fn set_initial_config(&mut self, config: Arc<ClusterConfig>) {
+        debug_assert!(self.log.is_empty() && self.term == 0);
+        self.boot_config = Arc::clone(&config);
+        self.adopt_config(config);
+        self.weight_assign = config_assignment(self.id, &self.config, &self.mode, self.n);
+    }
+
+    /// Re-deals a leaving node's weight ramps over before removal (≥ 1).
+    pub fn set_drain_rounds(&mut self, rounds: usize) {
+        self.drain_rounds = rounds.max(1);
+    }
+
+    /// Rounds a Joining member must ack before promotion to Active.
+    pub fn set_join_warmup(&mut self, rounds: u64) {
+        self.join_warmup = rounds;
     }
 
     /// Snapshots this node has taken (threshold crossings that compacted).
@@ -571,6 +737,7 @@ impl Node {
             Input::Receive(from, msg) => self.on_receive(from, msg, out),
             Input::Propose(payload) => self.on_propose(payload, out),
             Input::Read { id } => self.on_read(id, out),
+            Input::Admin(cmd) => self.on_admin(cmd, out),
         }
     }
 
@@ -579,6 +746,11 @@ impl Node {
     fn on_election_timeout(&mut self, out: &mut Vec<Output>) {
         if self.role == Role::Leader {
             return; // stale timer
+        }
+        // A removed (or never-admitted) slot must not campaign: it could
+        // never win, and its term churn would disrupt the real members.
+        if !self.cfg_boot && !self.config.involves(self.id) {
+            return;
         }
         // a full election timeout passed without leader contact
         self.heard_from_leader = false;
@@ -638,6 +810,21 @@ impl Node {
         }
         self.broadcast_append(out);
         self.read_maintenance(out);
+        if !self.cfg_boot {
+            // Idle drain progress: with no proposals there are no re-deals
+            // to tick the ramp, so heartbeats stand in for rounds.
+            if self.inflight.is_empty() {
+                if let Some(AdminPhase::Draining { remaining, .. }) = &mut self.active_op {
+                    *remaining = remaining.saturating_sub(1);
+                }
+                if let Some(AdminPhase::Warmup { acks, .. }) = &mut self.active_op {
+                    // an idle cluster still promotes an (assumed-responsive)
+                    // joiner — there are no rounds for it to ack
+                    *acks += 1;
+                }
+            }
+            self.maybe_advance_membership(out);
+        }
         out.push(Output::StartHeartbeat);
     }
 
@@ -648,11 +835,19 @@ impl Node {
             out.push(Output::ProposalRejected(payload));
             return;
         }
+        // Membership changes only enter the log through [`Input::Admin`] —
+        // a client must not smuggle a config past the joint-consensus flow.
+        if matches!(payload, Payload::ConfigChange(_)) {
+            out.push(Output::ProposalRejected(payload));
+            return;
+        }
         // §4.1.4: the C′ round itself reaches consensus *under the new WS* —
         // switch the leader's scheme before dealing this round's weights.
         let mut reconfig = false;
         if let Payload::Reconfig { new_t } = payload {
-            match WeightScheme::geometric(self.n, new_t) {
+            let m =
+                if self.cfg_boot { self.n } else { self.config.voter_count() };
+            match WeightScheme::geometric(m, new_t) {
                 Ok(scheme) => {
                     self.mode = Mode::Cabinet { scheme };
                     reconfig = true;
@@ -681,12 +876,18 @@ impl Node {
     }
 
     /// Open per-index ack bookkeeping for a freshly proposed entry,
-    /// snapshotting this round's weight assignment and commit threshold.
+    /// snapshotting this round's weight assignment and commit threshold —
+    /// and, under a joint config, the old half's assignment and CT too.
     fn register_inflight(&mut self, index: LogIndex) {
         let weights = self.weight_assign.clone();
         let mut acked = vec![false; self.n];
         acked[self.id] = true;
         let acc_weight = weights[self.id];
+        let joint = self.joint_assign.as_ref().map(|(w, ct)| JointAcc {
+            acc: w[self.id],
+            weights: w.clone(),
+            ct: *ct,
+        });
         self.inflight.push_back(InflightRound {
             index,
             wclock: self.wclock,
@@ -694,6 +895,8 @@ impl Node {
             weights,
             acked,
             acc_weight,
+            epoch: self.config.epoch,
+            joint,
         });
     }
 
@@ -704,6 +907,10 @@ impl Node {
         if self.static_weights {
             self.reply_order.clear();
             self.replied.fill(false);
+            return;
+        }
+        if !self.cfg_boot {
+            self.start_round_configured();
             return;
         }
         if let Mode::Cabinet { scheme } = &self.mode {
@@ -738,11 +945,91 @@ impl Node {
         self.replied.fill(false); // reuse, don't reallocate (§Perf iter. 3)
     }
 
+    /// The membership-aware re-deal: the FIFO deal runs over the config's
+    /// *voters* only (non-member slots hold weight 0.0), then the lifecycle
+    /// weight floors cap Joining members at the scheme minimum and ramp a
+    /// Draining member down `drain_cap`'s schedule, redistributing the
+    /// shaved excess so the total — and invariant I2 — are preserved
+    /// (`apply_weight_floors`). This is the consensus-free intra-epoch
+    /// reassignment: no config entry is proposed for a weight change.
+    fn start_round_configured(&mut self) {
+        if let Mode::Cabinet { scheme } = &self.mode {
+            let floor = scheme.min_weight();
+            let t_eff = scheme.t();
+            let mut rank = 0usize;
+            let mut assign = vec![0.0; self.n];
+            if self.config.is_voter(self.id) {
+                assign[self.id] = scheme.weight_of_rank(rank);
+                rank += 1;
+            }
+            for &nid in &self.reply_order {
+                if nid != self.id && assign[nid] == 0.0 && self.config.is_voter(nid) {
+                    assign[nid] = scheme.weight_of_rank(rank);
+                    rank += 1;
+                }
+            }
+            let mut rest: Vec<NodeId> = self
+                .config
+                .voters()
+                .filter(|&i| i != self.id && assign[i] == 0.0)
+                .collect();
+            rest.sort_by(|&a, &b| {
+                self.weight_assign[b].total_cmp(&self.weight_assign[a])
+            });
+            for nid in rest {
+                assign[nid] = scheme.weight_of_rank(rank);
+                rank += 1;
+            }
+            let floors = self.lifecycle_floors(floor);
+            apply_weight_floors(&mut assign, &floors, t_eff);
+            self.weight_assign = assign;
+        }
+        // Warmup bookkeeping rides the round boundary: the joiner acked the
+        // round that just closed iff it sits in the outgoing reply queue.
+        if let Some(AdminPhase::Warmup { node, acks }) = &mut self.active_op {
+            if self.replied[*node] {
+                *acks += 1;
+            }
+        }
+        // One re-deal = one drain-ramp tick.
+        if let Some(AdminPhase::Draining { remaining, .. }) = &mut self.active_op {
+            *remaining = remaining.saturating_sub(1);
+        }
+        self.reply_order.clear();
+        self.replied.fill(false);
+    }
+
+    /// Weight caps for members in a lifecycle state: Joining members sit at
+    /// the scheme floor until promoted; a Draining member follows the drain
+    /// ramp (or the floor outright when this leader inherited the drain
+    /// mid-flight without a ramp of its own).
+    fn lifecycle_floors(&self, floor: f64) -> Vec<(usize, f64)> {
+        let mut floors = Vec::new();
+        for m in &self.config.members {
+            match m.state {
+                MemberState::Active => {}
+                MemberState::Joining => floors.push((m.id, floor)),
+                MemberState::Draining => {
+                    let cap = match self.active_op {
+                        Some(AdminPhase::Draining { node, remaining, w_start })
+                            if node == m.id =>
+                        {
+                            drain_cap(floor, w_start, remaining, self.drain_rounds)
+                        }
+                        _ => floor,
+                    };
+                    floors.push((m.id, cap));
+                }
+            }
+        }
+        floors
+    }
+
     fn broadcast_append(&mut self, out: &mut Vec<Output>) {
         // index loop, not peers().collect(): send_append needs &mut self,
         // and collecting allocated a peer list on every heartbeat/propose
         for peer in 0..self.n {
-            if peer != self.id {
+            if peer != self.id && (self.cfg_boot || self.config.involves(peer)) {
                 self.send_append(peer, out);
             }
         }
@@ -912,16 +1199,28 @@ impl Node {
             return;
         }
 
+        let saw_config =
+            entries.iter().any(|e| matches!(e.payload, Payload::ConfigChange(_)));
         let last = self.log.splice(prev_log_index, &entries, weight);
 
         // Followers adopt reconfigurations when they learn them (§4.1.4):
         // scan the appended suffix for a Reconfig payload.
         for e in &entries {
             if let Payload::Reconfig { new_t } = e.payload {
-                if let Ok(scheme) = WeightScheme::geometric(self.n, new_t) {
+                let m =
+                    if self.cfg_boot { self.n } else { self.config.voter_count() };
+                if let Ok(scheme) = WeightScheme::geometric(m, new_t) {
                     self.mode = Mode::Cabinet { scheme };
                 }
             }
+        }
+
+        // Membership is config-on-append (Raft §4.1): re-derive the
+        // effective config from the log whenever this append carried a
+        // config entry — or could have truncated one away. Gated so
+        // membership-off runs never pay the backward scan.
+        if saw_config || !self.cfg_boot {
+            self.refresh_config_from_log();
         }
 
         let new_commit = leader_commit.min(last);
@@ -975,6 +1274,10 @@ impl Node {
             if rec.index <= matched && !rec.acked[from] {
                 rec.acked[from] = true;
                 rec.acc_weight += rec.weights[from];
+                if let Some(j) = &mut rec.joint {
+                    // 0.0 outside C_old, so the unconditional add is exact
+                    j.acc += j.weights[from];
+                }
             }
         }
 
@@ -994,17 +1297,26 @@ impl Node {
         let mut quorum_weight = 0.0;
         let mut wclock = self.wclock;
         let mut repliers = 0;
+        let mut epoch = 0;
+        let mut ct = 0.0;
+        let mut joint_ev = None;
         for rec in self.inflight.iter().rev() {
             if rec.index <= self.commit_index {
                 continue;
             }
-            if rec.acc_weight > rec.ct {
+            // Joint phase: the weighted rule must hold in *both* configs
+            // before the round commits (Raft §4.3 adapted to weights).
+            let joint_ok = rec.joint.as_ref().map_or(true, |j| j.acc > j.ct);
+            if rec.acc_weight > rec.ct && joint_ok {
                 target = rec.index;
                 quorum_weight = rec.acc_weight;
                 wclock = rec.wclock;
                 // followers whose acks closed this round's quorum (the
                 // leader's own pre-ack excluded)
                 repliers = rec.acked.iter().filter(|&&a| a).count() - 1;
+                epoch = rec.epoch;
+                ct = rec.ct;
+                joint_ev = rec.joint.as_ref().map(|j| (j.acc, j.ct));
                 break;
             }
         }
@@ -1017,12 +1329,23 @@ impl Node {
                     self.pending_reconfig = None;
                 }
             }
+            if let Some(idx) = self.pending_config {
+                if self.commit_index >= idx {
+                    self.pending_config = None;
+                }
+            }
             out.push(Output::RoundCommitted {
                 wclock,
                 index: target,
                 repliers,
                 quorum_weight,
+                epoch,
+                ct,
+                joint: joint_ev,
             });
+            if !self.cfg_boot {
+                self.maybe_advance_membership(out);
+            }
         }
     }
 
@@ -1033,12 +1356,32 @@ impl Node {
                 // Followers complete an in-flight reconfiguration here.
                 if self.role != Role::Leader {
                     if let Payload::Reconfig { new_t } = e.payload {
-                        if let Ok(scheme) = WeightScheme::geometric(self.n, new_t) {
+                        let m = if self.cfg_boot {
+                            self.n
+                        } else {
+                            self.config.voter_count()
+                        };
+                        if let Ok(scheme) = WeightScheme::geometric(m, new_t) {
                             self.mode = Mode::Cabinet { scheme };
                         }
                     }
                 }
+                let config_event = match &e.payload {
+                    Payload::ConfigChange(c) => {
+                        self.config_commits += 1;
+                        Some(Output::ConfigCommitted {
+                            epoch: c.epoch,
+                            index: self.commit_index,
+                            joint: c.is_joint(),
+                            voters: c.voters().collect(),
+                        })
+                    }
+                    _ => None,
+                };
                 out.push(Output::Commit(e.clone()));
+                if let Some(ev) = config_event {
+                    out.push(ev);
+                }
             }
         }
         // granted reads waiting on this apply point are now servable
@@ -1091,6 +1434,9 @@ impl Node {
             prefix_digest: self.log.compacted_digest(),
             wclock: self.wclock.max(self.my_wclock),
             cabinet_t,
+            // like cabinet_t: boot-config blobs stay None so historical
+            // snapshots are byte-for-byte unchanged
+            config: (!self.cfg_boot).then(|| Arc::clone(&self.config)),
             app,
         });
         self.snapshots_taken += 1;
@@ -1144,6 +1490,14 @@ impl Node {
                     if let Ok(scheme) = WeightScheme::geometric(self.n, t) {
                         self.mode = Mode::Cabinet { scheme };
                     }
+                }
+                // Cluster config survives compaction the same way: adopt the
+                // blob's config only when no (newer-by-definition) log
+                // suffix survived the install.
+                if let Some(c) = &blob.config {
+                    self.adopt_config(Arc::clone(c));
+                } else if !self.cfg_boot {
+                    self.adopt_config(Arc::clone(&self.boot_config));
                 }
             }
             self.snapshot_pending = None;
@@ -1265,6 +1619,11 @@ impl Node {
         let mut acked = vec![false; self.n];
         acked[self.id] = true;
         let acc_weight = weights[self.id];
+        let joint = self.joint_assign.as_ref().map(|(w, ct)| JointAcc {
+            acc: w[self.id],
+            weights: w.clone(),
+            ct: *ct,
+        });
         self.pending_confirm.push(ReadConfirm {
             seq: self.read_seq,
             sent_at_ms: self.now_ms,
@@ -1274,6 +1633,7 @@ impl Node {
             acked,
             acc_weight,
             ct: self.ct(),
+            joint,
         });
         let seq = self.read_seq;
         for peer in self.peers() {
@@ -1294,7 +1654,10 @@ impl Node {
         }
         for rc in &self.pending_confirm {
             for peer in 0..self.n {
-                if peer != self.id && !rc.acked[peer] {
+                if peer != self.id
+                    && !rc.acked[peer]
+                    && (self.cfg_boot || self.config.involves(peer))
+                {
                     out.push(Output::Send(
                         peer,
                         Message::ReadIndex { term: self.term, leader: self.id, seq: rc.seq },
@@ -1352,7 +1715,13 @@ impl Node {
             }
             rc.acked[from] = true;
             rc.acc_weight += rc.weights[from];
-            if rc.acc_weight <= rc.ct {
+            if let Some(j) = &mut rc.joint {
+                j.acc += j.weights[from];
+            }
+            // joint phase: leadership must be confirmed in *both* configs
+            // before the round's reads are safe
+            let joint_ok = rc.joint.as_ref().map_or(true, |j| j.acc > j.ct);
+            if rc.acc_weight <= rc.ct || !joint_ok {
                 return;
             }
         }
@@ -1449,7 +1818,10 @@ impl Node {
         let granted = self.role != Role::Leader
             && !self.heard_from_leader
             && term > self.term
-            && up_to_date;
+            && up_to_date
+            // a candidate outside the config (removed slot) can never win —
+            // don't encourage it to campaign for real
+            && (self.cfg_boot || self.config.involves(candidate));
         out.push(Output::Send(
             candidate,
             Message::PreVoteReply { term: self.term, from: self.id, granted, for_term: term },
@@ -1472,9 +1844,11 @@ impl Node {
         if !self.prevote_active || !granted || for_term != self.term + 1 {
             return;
         }
+        if !self.cfg_boot && !self.config.involves(from) {
+            return; // a removed slot's pre-grant must not count
+        }
         self.prevotes[from] = true;
-        let have = self.prevotes.iter().filter(|&&v| v).count();
-        if have >= self.mode.election_quorum(self.n) {
+        if self.grants_meet_quorum(&self.prevotes) {
             // a full election quorum is reachable and willing: campaign for
             // real (this is the only path that increments the term)
             self.start_candidacy(out);
@@ -1498,7 +1872,11 @@ impl Node {
         // inside another grantor's lease window could commit writes a lease
         // read would then miss. The log path keeps historical vote behavior.
         let sticky = matches!(self.read_path, ReadPath::Lease) && self.heard_from_leader;
-        let granted = term >= self.term && can_vote && up_to_date && !sticky;
+        let granted = term >= self.term
+            && can_vote
+            && up_to_date
+            && !sticky
+            && (self.cfg_boot || self.config.involves(candidate));
         if granted {
             self.voted_for = Some(candidate);
             out.push(Output::ResetElectionTimer);
@@ -1522,11 +1900,49 @@ impl Node {
         if self.role != Role::Candidate || term != self.term || !granted {
             return;
         }
+        if !self.cfg_boot && !self.config.involves(from) {
+            return; // a removed slot's vote must not count
+        }
         self.votes[from] = true;
-        let have = self.votes.iter().filter(|&&v| v).count();
-        if have >= self.mode.election_quorum(self.n) {
+        if self.grants_meet_quorum(&self.votes) {
             self.become_leader(out);
         }
+    }
+
+    /// Election quorum check, config-aware: on the bootstrap config this is
+    /// the historical `election_quorum(n)` count; under dynamic membership
+    /// the quorum is over the *voter* set — and during a joint config it
+    /// must be met in both halves independently (Raft §4.3).
+    fn grants_meet_quorum(&self, grants: &[bool]) -> bool {
+        if self.cfg_boot {
+            let have = grants.iter().filter(|&&v| v).count();
+            return have >= self.mode.election_quorum(self.n);
+        }
+        let m = self.config.voter_count();
+        let have_new = self.config.voters().filter(|&v| grants[v]).count();
+        let q_new = match &self.mode {
+            Mode::Raft => m / 2 + 1,
+            // the scheme is rebuilt per config, so scheme.t() matches m
+            Mode::Cabinet { scheme } => m.saturating_sub(scheme.t()),
+        };
+        if have_new < q_new {
+            return false;
+        }
+        if let Some(old) = &self.config.joint_old {
+            let mo = old.len();
+            let have_old = old.iter().filter(|&&v| grants[v]).count();
+            let q_old = match &self.mode {
+                Mode::Raft => mo / 2 + 1,
+                Mode::Cabinet { scheme } => {
+                    let t_old = scheme.t().min(mo.saturating_sub(1) / 2).max(1);
+                    mo.saturating_sub(t_old)
+                }
+            };
+            if have_old < q_old {
+                return false;
+            }
+        }
+        true
     }
 
     fn become_leader(&mut self, out: &mut Vec<Output>) {
@@ -1538,11 +1954,46 @@ impl Node {
         // The new leader resumes from the highest weight clock it has seen
         // (Theorem 4.2: weight clocks monotonically increase).
         self.wclock = self.wclock.max(self.my_wclock);
-        self.weight_assign = initial_assignment(self.id, self.n, &self.mode);
+        self.weight_assign = if self.cfg_boot {
+            initial_assignment(self.id, self.n, &self.mode)
+        } else {
+            config_assignment(self.id, &self.config, &self.mode, self.n)
+        };
         self.reply_order.clear();
         self.replied = vec![false; self.n];
         self.inflight.clear();
         self.pending_reconfig = None;
+        if !self.cfg_boot {
+            // Membership recovery: the drain/warmup overlay died with the
+            // old leader, but the committed config's member states carry
+            // enough to resume the operation from its current phase.
+            self.refresh_joint_assign();
+            self.pending_config = None;
+            self.admin_queue.clear();
+            self.active_op = if self.config.is_joint() {
+                Some(AdminPhase::Joint)
+            } else if let Some(m) =
+                self.config.members.iter().find(|m| m.state == MemberState::Draining)
+            {
+                Some(AdminPhase::Draining {
+                    node: m.id,
+                    remaining: self.drain_rounds,
+                    w_start: self.weight_assign[m.id],
+                })
+            } else if let Some(m) =
+                self.config.members.iter().find(|m| m.state == MemberState::Joining)
+            {
+                Some(AdminPhase::Warmup { node: m.id, acks: 0 })
+            } else {
+                None
+            };
+            // an inherited, still-uncommitted config entry gates the next
+            // phase exactly like one we proposed ourselves
+            self.pending_config = self
+                .log
+                .latest_config()
+                .and_then(|(i, _)| (i > self.commit_index).then_some(i));
+        }
         // read state: a new regime re-earns its lease and starts its own
         // confirmation rounds from scratch
         self.pending_confirm.clear();
@@ -1585,6 +2036,12 @@ impl Node {
             }
         }
         self.lease_until_ms = 0.0;
+        // leader-local membership overlay dies with the leadership; the new
+        // leader reconstructs it from the committed config
+        self.pending_config = None;
+        self.active_op = None;
+        self.admin_queue.clear();
+        self.joint_assign = None;
         if was_leader {
             out.push(Output::StopHeartbeat);
             out.push(Output::SteppedDown);
@@ -1593,7 +2050,275 @@ impl Node {
     }
 
     fn peers(&self) -> impl Iterator<Item = NodeId> + '_ {
-        (0..self.n).filter(move |&p| p != self.id)
+        (0..self.n)
+            .filter(move |&p| p != self.id && (self.cfg_boot || self.config.involves(p)))
+    }
+
+    // ---- dynamic membership internals ------------------------------------
+
+    /// Make `cfg` the effective config on this node (leader: at propose;
+    /// follower: at append — Raft's config-on-append rule). Rebuilds the
+    /// Cabinet scheme for the new voter count, and on leaders re-deals the
+    /// weight assignment and the joint old-half snapshot.
+    fn adopt_config(&mut self, cfg: Arc<ClusterConfig>) {
+        self.cfg_boot = cfg.is_bootstrap(self.n);
+        if let Mode::Cabinet { scheme } = &self.mode {
+            let m = cfg.voter_count();
+            if m != scheme.n() && m >= 3 {
+                let t = scheme.t().min(m.saturating_sub(1) / 2).max(1);
+                if let Ok(s) = WeightScheme::geometric(m, t) {
+                    self.mode = Mode::Cabinet { scheme: s };
+                }
+            }
+        }
+        self.config = cfg;
+        if self.role == Role::Leader {
+            self.weight_assign =
+                config_assignment(self.id, &self.config, &self.mode, self.n);
+            self.refresh_joint_assign();
+        }
+    }
+
+    /// Recompute the leader's old-half weight snapshot for the joint phase.
+    /// The old half gets its own geometric deal (leader first when it is an
+    /// old voter, then ascending id); it only ever feeds acc-vs-CT checks,
+    /// so responsiveness re-dealing it would add nothing.
+    fn refresh_joint_assign(&mut self) {
+        let Some(old) = self.config.joint_old.clone() else {
+            self.joint_assign = None;
+            return;
+        };
+        let mo = old.len();
+        let mut w = vec![0.0; self.n];
+        let ct = match &self.mode {
+            Mode::Raft => {
+                for &v in &old {
+                    w[v] = 1.0;
+                }
+                mo as f64 / 2.0
+            }
+            Mode::Cabinet { scheme } => {
+                let t_old = scheme.t().min(mo.saturating_sub(1) / 2).max(1);
+                match WeightScheme::geometric(mo, t_old) {
+                    Ok(s) => {
+                        let mut rank = 0usize;
+                        if old.contains(&self.id) {
+                            w[self.id] = s.weight_of_rank(0);
+                            rank = 1;
+                        }
+                        for &v in &old {
+                            if v != self.id {
+                                w[v] = s.weight_of_rank(rank);
+                                rank += 1;
+                            }
+                        }
+                        s.ct()
+                    }
+                    Err(_) => {
+                        // degenerate old half (< 3 voters): unweighted
+                        for &v in &old {
+                            w[v] = 1.0;
+                        }
+                        mo as f64 / 2.0
+                    }
+                }
+            }
+        };
+        self.joint_assign = Some((w, ct));
+    }
+
+    /// Re-derive the effective config after a log splice: the latest config
+    /// entry still in the log wins; failing that, the snapshot's; failing
+    /// that, the boot config (a conflicting splice rolled every config
+    /// entry back — the Raft config-on-append rule demands the rollback).
+    fn refresh_config_from_log(&mut self) {
+        let cfg = self
+            .log
+            .latest_config()
+            .map(|(_, c)| c)
+            .or_else(|| self.snapshot.as_ref().and_then(|b| b.config.clone()))
+            .unwrap_or_else(|| Arc::clone(&self.boot_config));
+        if cfg != self.config {
+            self.adopt_config(cfg);
+        }
+    }
+
+    /// Driver-facing admin entry point (leader only).
+    fn on_admin(&mut self, cmd: AdminCmd, out: &mut Vec<Output>) {
+        if self.role != Role::Leader {
+            return;
+        }
+        self.admin_queue.push_back(cmd);
+        self.maybe_advance_membership(out);
+    }
+
+    /// Advance the membership state machine one phase. Called whenever the
+    /// gate that was holding it may have opened: a config entry committed, a
+    /// heartbeat fired (drain/warmup progress), or a command arrived.
+    /// `pending_config == None` is the proof that the previous config entry
+    /// committed, so each arm below runs exactly once per phase.
+    fn maybe_advance_membership(&mut self, out: &mut Vec<Output>) {
+        if self.role != Role::Leader || self.pending_config.is_some() {
+            return;
+        }
+        match self.active_op {
+            Some(AdminPhase::MarkDraining(node)) => {
+                // the Draining mark committed: run the ramp
+                self.active_op = Some(AdminPhase::Draining {
+                    node,
+                    remaining: self.drain_rounds,
+                    w_start: self.weight_assign[node],
+                });
+            }
+            Some(AdminPhase::Draining { node, remaining: 0, .. }) => {
+                // drained to the floor: joint-remove it
+                let members: Vec<MemberSpec> = self
+                    .config
+                    .members
+                    .iter()
+                    .filter(|m| m.id != node)
+                    .copied()
+                    .collect();
+                let cfg = ClusterConfig {
+                    epoch: self.config.epoch + 1,
+                    members,
+                    joint_old: Some(self.config.voters().collect()),
+                };
+                self.active_op = Some(AdminPhase::Joint);
+                self.propose_config(cfg, out);
+            }
+            Some(AdminPhase::Draining { .. }) => {} // ramp still running
+            Some(AdminPhase::Joint) => {
+                // C_old,new committed under both halves: leave the joint
+                let cfg = ClusterConfig {
+                    epoch: self.config.epoch + 1,
+                    members: self.config.members.clone(),
+                    joint_old: None,
+                };
+                self.active_op = Some(AdminPhase::Leaving);
+                self.propose_config(cfg, out);
+            }
+            Some(AdminPhase::Leaving) => {
+                // C_new committed alone
+                if let Some(m) =
+                    self.config.members.iter().find(|m| m.state == MemberState::Joining)
+                {
+                    self.active_op = Some(AdminPhase::Warmup { node: m.id, acks: 0 });
+                } else {
+                    self.active_op = None;
+                    if !self.config.is_voter(self.id) {
+                        // The removed leader led through the joint phase
+                        // (Raft §4.3) and now steps down — clearing its
+                        // lease *before* the remaining voters can elect.
+                        self.become_follower(self.term, out);
+                        return;
+                    }
+                }
+            }
+            Some(AdminPhase::Warmup { node, acks }) if acks >= self.join_warmup => {
+                // the joiner proved responsive: promote to Active
+                let members: Vec<MemberSpec> = self
+                    .config
+                    .members
+                    .iter()
+                    .map(|m| {
+                        if m.id == node {
+                            MemberSpec { id: m.id, state: MemberState::Active }
+                        } else {
+                            *m
+                        }
+                    })
+                    .collect();
+                let cfg = ClusterConfig {
+                    epoch: self.config.epoch + 1,
+                    members,
+                    joint_old: None,
+                };
+                self.active_op = Some(AdminPhase::Promoting(node));
+                self.propose_config(cfg, out);
+            }
+            Some(AdminPhase::Warmup { .. }) => {} // still earning weight
+            Some(AdminPhase::Promoting(_)) => {
+                self.active_op = None;
+            }
+            None => {}
+        }
+        if self.active_op.is_none() && self.pending_config.is_none() {
+            if let Some(cmd) = self.admin_queue.pop_front() {
+                self.start_admin(cmd, out);
+            }
+        }
+    }
+
+    /// Begin a queued admin command. Invalid commands (unknown slot, already
+    /// a member, would shrink the voter set below the scheme minimum) are
+    /// dropped — drivers validate schedules up front.
+    fn start_admin(&mut self, cmd: AdminCmd, out: &mut Vec<Output>) {
+        match cmd {
+            AdminCmd::Join(node) => {
+                if node >= self.n || self.config.involves(node) {
+                    return;
+                }
+                let mut members = self.config.members.clone();
+                members.push(MemberSpec { id: node, state: MemberState::Joining });
+                members.sort_by_key(|m| m.id);
+                let cfg = ClusterConfig {
+                    epoch: self.config.epoch + 1,
+                    members,
+                    joint_old: Some(self.config.voters().collect()),
+                };
+                self.active_op = Some(AdminPhase::Joint);
+                self.propose_config(cfg, out);
+            }
+            AdminCmd::Leave(node) => {
+                // keep ≥ 3 voters after removal (geometric scheme minimum)
+                if !self.config.is_voter(node) || self.config.voter_count() <= 3 {
+                    return;
+                }
+                let members: Vec<MemberSpec> = self
+                    .config
+                    .members
+                    .iter()
+                    .map(|m| {
+                        if m.id == node {
+                            MemberSpec { id: m.id, state: MemberState::Draining }
+                        } else {
+                            *m
+                        }
+                    })
+                    .collect();
+                let cfg = ClusterConfig {
+                    epoch: self.config.epoch + 1,
+                    members,
+                    joint_old: None,
+                };
+                self.active_op = Some(AdminPhase::MarkDraining(node));
+                self.propose_config(cfg, out);
+            }
+        }
+    }
+
+    /// Propose a config entry. The config takes effect immediately on this
+    /// leader (config-on-append), so the entry's own round already runs
+    /// under the new rule — in particular a C_old,new entry must commit
+    /// under *both* halves, and the C_new entry that leaves the joint phase
+    /// commits under C_new alone.
+    fn propose_config(&mut self, cfg: ClusterConfig, out: &mut Vec<Output>) {
+        let cfg = Arc::new(cfg);
+        self.adopt_config(Arc::clone(&cfg));
+        self.start_round();
+        let entry = Entry {
+            term: self.term,
+            index: 0,
+            payload: Payload::ConfigChange(Arc::clone(&cfg)),
+            wclock: self.wclock,
+        };
+        let my_w = self.weight_assign[self.id];
+        let idx = self.log.append(entry, my_w);
+        self.match_index[self.id] = idx;
+        self.register_inflight(idx);
+        self.pending_config = Some(idx);
+        self.broadcast_append(out);
     }
 }
 
@@ -1615,6 +2340,40 @@ fn initial_assignment(id: NodeId, n: usize, mode: &Mode) -> Vec<f64> {
             assign
         }
     }
+}
+
+/// Config-aware initial assignment over `n_slots` slots: the scheme deals
+/// over the config's *voters* only (the given node first, then ascending
+/// id), every non-member slot holds weight 0.0. Reduces to
+/// [`initial_assignment`] on the bootstrap config.
+fn config_assignment(
+    id: NodeId,
+    config: &ClusterConfig,
+    mode: &Mode,
+    n_slots: usize,
+) -> Vec<f64> {
+    let mut assign = vec![0.0; n_slots];
+    match mode {
+        Mode::Raft => {
+            for v in config.voters() {
+                assign[v] = 1.0;
+            }
+        }
+        Mode::Cabinet { scheme } => {
+            let mut rank = 0usize;
+            if config.is_voter(id) {
+                assign[id] = scheme.weight_of_rank(rank);
+                rank += 1;
+            }
+            for v in config.voters() {
+                if v != id {
+                    assign[v] = scheme.weight_of_rank(rank);
+                    rank += 1;
+                }
+            }
+        }
+    }
+    assign
 }
 
 #[cfg(test)]
@@ -2388,6 +3147,7 @@ mod tests {
                     prefix_digest: digest_at_2,
                     wclock: 2,
                     cabinet_t: Some(3), // the pre-reconfig threshold
+                    config: None,
                     app: AppState::None,
                 },
             },
@@ -2852,5 +3612,326 @@ mod tests {
         // after the pump, node 1 must have caught up fully
         assert_eq!(c.nodes[1].log().last_index(), c.nodes[0].log().last_index());
         assert_eq!(c.nodes[1].commit_index(), c.nodes[0].commit_index());
+    }
+
+    // ---- dynamic membership -------------------------------------------
+
+    /// A Cabinet cluster with `slots` node slots of which `founding` are
+    /// initial members (the rest join later via `AdminCmd::Join`).
+    fn membership_cluster(slots: usize, founding: usize, t: usize) -> TestCluster {
+        let mut c = TestCluster::new(slots, |_| Mode::cabinet(slots, t));
+        let cfg = Arc::new(ClusterConfig {
+            epoch: 0,
+            members: (0..founding)
+                .map(|id| MemberSpec { id, state: MemberState::Active })
+                .collect(),
+            joint_old: None,
+        });
+        for node in &mut c.nodes {
+            node.set_initial_config(Arc::clone(&cfg));
+        }
+        c
+    }
+
+    #[test]
+    fn join_flow_admits_warms_up_and_promotes() {
+        let mut c = membership_cluster(6, 5, 2);
+        for node in &mut c.nodes {
+            node.set_join_warmup(2);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Bytes(Arc::new(vec![1])));
+        assert_eq!(c.nodes[0].config().voter_count(), 5);
+
+        // Join slot 5: the synchronous pump commits the C_old,new entry and
+        // the C_new entry back-to-back (commit → auto-propose next phase).
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Join(5)));
+        c.pump(0, outs);
+        let cfg = c.nodes[0].config();
+        assert!(!cfg.is_joint(), "joint phase must auto-complete");
+        assert_eq!(cfg.state_of(5), Some(MemberState::Joining));
+        assert_eq!(cfg.voter_count(), 6);
+
+        // While Joining, every re-deal pins the newcomer at the scheme floor.
+        c.propose(0, Payload::Bytes(Arc::new(vec![2])));
+        let scheme = match c.nodes[0].mode() {
+            Mode::Cabinet { scheme } => scheme.clone(),
+            Mode::Raft => unreachable!(),
+        };
+        assert_eq!(scheme.n(), 6, "scheme rebuilt for the joined voter set");
+        let w5 = c.nodes[0].weight_assignment()[5];
+        assert!(
+            (w5 - scheme.min_weight()).abs() < 1e-9,
+            "joining member at the floor, got {w5}"
+        );
+
+        // Two acked rounds satisfy the warmup; the promotion entry commits
+        // on the round after (proposed from the commit hook).
+        for k in 0..4u8 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![10 + k])));
+        }
+        c.heartbeat(0);
+        assert_eq!(c.nodes[0].config().state_of(5), Some(MemberState::Active));
+        // join = enter-joint + leave-joint + promote
+        assert_eq!(c.nodes[0].config().epoch, 3);
+        // every node converged on the same config
+        for node in &c.nodes {
+            assert_eq!(node.config().epoch, 3, "node {}", node.id());
+        }
+        assert!(c.nodes[0].config_commits() >= 3);
+    }
+
+    #[test]
+    fn leave_flow_drains_to_floor_then_removes() {
+        let mut c = membership_cluster(5, 5, 1);
+        for node in &mut c.nodes {
+            node.set_drain_rounds(2);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Leave(4)));
+        c.pump(0, outs);
+        // the Draining mark committed; the ramp holds the node as a voter
+        assert_eq!(c.nodes[0].config().state_of(4), Some(MemberState::Draining));
+        assert_eq!(c.nodes[0].config().epoch, 1);
+
+        // each proposal ticks the ramp; after it hits the floor the next
+        // commit proposes C_old,new and then C_new
+        for k in 0..6u8 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+        }
+        c.heartbeat(0);
+        let cfg = c.nodes[0].config();
+        assert!(!cfg.is_voter(4), "drained node removed");
+        assert!(!cfg.is_joint());
+        // leave = mark-draining + enter-joint + leave-joint
+        assert_eq!(cfg.epoch, 3);
+        assert_eq!(cfg.voter_count(), 4);
+        assert_eq!(c.nodes[0].weight_assignment()[4], 0.0);
+        match c.nodes[0].mode() {
+            Mode::Cabinet { scheme } => assert_eq!(scheme.n(), 4),
+            Mode::Raft => unreachable!(),
+        }
+        // proposals keep committing among the surviving four
+        let before = c.commits[1].len();
+        c.propose(0, Payload::Bytes(Arc::new(vec![99])));
+        c.heartbeat(0);
+        assert!(c.commits[1].len() > before);
+    }
+
+    #[test]
+    fn removed_leader_steps_down_and_survivors_elect() {
+        let mut c = membership_cluster(5, 5, 1);
+        for node in &mut c.nodes {
+            node.set_drain_rounds(1);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Leave(0)));
+        c.pump(0, outs);
+        for k in 0..4u8 {
+            let outs = c.nodes[0].step(Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+            c.pump(0, outs);
+            if c.nodes[0].role() != Role::Leader {
+                break;
+            }
+        }
+        // the leader led through the joint phase, then stepped down when the
+        // C_new excluding it committed (lease cleared with the leadership)
+        assert_eq!(c.nodes[0].role(), Role::Follower);
+        assert!(!c.nodes[0].config().is_voter(0));
+        // a surviving voter takes over and the cluster keeps committing
+        c.elect(1);
+        let before = c.commits[2].len();
+        c.propose(1, Payload::Bytes(Arc::new(vec![7])));
+        c.heartbeat(1);
+        assert!(c.commits[2].len() > before);
+        // the removed slot must never campaign again
+        let outs = c.nodes[0].step(Input::ElectionTimeout);
+        assert!(outs.is_empty(), "removed node ignores its election timer");
+    }
+
+    #[test]
+    fn joint_round_requires_both_halves() {
+        // Leader of 4 founding members (slots 0..4) admits slot 4. The
+        // C_old,new round must NOT commit on new-half weight alone: the old
+        // half (0..4) has to clear its own CT too.
+        let slots = 5;
+        let mut leader = Node::new(0, slots, Mode::cabinet(slots, 1));
+        let cfg = Arc::new(ClusterConfig {
+            epoch: 0,
+            members: (0..4).map(|id| MemberSpec { id, state: MemberState::Active }).collect(),
+            joint_old: None,
+        });
+        leader.set_initial_config(Arc::clone(&cfg));
+        let _ = leader.step(Input::ElectionTimeout);
+        for p in 1..4 {
+            let _ = leader.step(Input::Receive(
+                p,
+                Message::RequestVoteReply { term: 1, from: p, granted: true },
+            ));
+            if leader.role() == Role::Leader {
+                break;
+            }
+        }
+        assert_eq!(leader.role(), Role::Leader);
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        ack(&mut leader, 2, noop, leader.wclock());
+        assert_eq!(leader.commit_index(), noop);
+
+        let _ = leader.step(Input::Admin(AdminCmd::Join(4)));
+        let joint_idx = leader.log().last_index();
+        assert!(leader.config().is_joint());
+        assert_eq!(leader.inflight_len(), 1);
+
+        // acks from the joiner and one old voter; top-2 weight (I1) clears
+        // the new half, and leader + rank-1 clears the old half too — if
+        // either half were still short, an extra old voter closes it
+        let wc = leader.wclock();
+        ack(&mut leader, 4, joint_idx, wc);
+        ack(&mut leader, 1, joint_idx, wc);
+        if leader.commit_index() < joint_idx {
+            ack(&mut leader, 2, joint_idx, wc);
+        }
+        assert!(leader.commit_index() >= joint_idx, "joint entry commits");
+        // after the joint entry commits the leader auto-proposes C_new
+        assert!(leader.log().last_index() > joint_idx, "auto LeaveJoint proposed");
+    }
+
+    #[test]
+    fn joint_old_half_blocks_commit_without_old_voters() {
+        // Directly exercise the both-halves rule: build a joint round where
+        // only new-half-exclusive voters ack. Old half = {0,1,2}; new half
+        // adds 3 and 4 as instant voters via a handcrafted joint config.
+        let slots = 5;
+        let mut leader = Node::new(0, slots, Mode::cabinet(slots, 1));
+        let boot = Arc::new(ClusterConfig {
+            epoch: 0,
+            members: (0..3).map(|id| MemberSpec { id, state: MemberState::Active }).collect(),
+            joint_old: None,
+        });
+        leader.set_initial_config(boot);
+        let _ = leader.step(Input::ElectionTimeout);
+        for p in 1..3 {
+            let _ = leader.step(Input::Receive(
+                p,
+                Message::RequestVoteReply { term: 1, from: p, granted: true },
+            ));
+            if leader.role() == Role::Leader {
+                break;
+            }
+        }
+        assert_eq!(leader.role(), Role::Leader);
+        let noop = leader.log().last_index();
+        ack(&mut leader, 1, noop, leader.wclock());
+        assert_eq!(leader.commit_index(), noop);
+
+        let _ = leader.step(Input::Admin(AdminCmd::Join(3)));
+        let joint_idx = leader.log().last_index();
+        assert!(leader.config().is_joint());
+
+        // Only the joiner acks. The joiner is outside C_old, so the old
+        // half holds the leader's pre-ack alone — and I2 (heaviest t < CT,
+        // here t = 1) guarantees a lone weight can never clear the old CT.
+        // Without the both-halves rule, leader + joiner could already close
+        // the new half; the old half must block the commit.
+        let wc = leader.wclock();
+        ack(&mut leader, 3, joint_idx, wc);
+        assert!(
+            leader.commit_index() < joint_idx,
+            "old half unsatisfied: the joint entry must not commit"
+        );
+        // an Active old-half voter closes both halves (I1: top-2 > CT)
+        ack(&mut leader, 1, joint_idx, wc);
+        assert!(leader.commit_index() >= joint_idx);
+    }
+
+    #[test]
+    fn snapshot_blob_carries_config_and_install_adopts_it() {
+        let mut c = membership_cluster(5, 4, 1);
+        for node in &mut c.nodes {
+            node.set_snapshot_every(Some(4));
+            node.set_drain_rounds(1);
+        }
+        c.elect(0);
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Join(4)));
+        c.pump(0, outs);
+        for k in 0..8u8 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+        }
+        c.heartbeat(0);
+        let blob = c.nodes[0].snapshot().expect("threshold crossed").clone();
+        let cfg = blob.config.as_ref().expect("membership snapshot carries config");
+        assert!(cfg.is_voter(4));
+
+        // a blank slot catching up purely from the snapshot adopts it
+        let mut fresh = Node::new(2, 5, Mode::cabinet(5, 1));
+        fresh.set_initial_config(Arc::new(ClusterConfig {
+            epoch: 0,
+            members: (0..4).map(|id| MemberSpec { id, state: MemberState::Active }).collect(),
+            joint_old: None,
+        }));
+        let _ = fresh.step(Input::Receive(
+            0,
+            Message::InstallSnapshot {
+                term: c.nodes[0].term(),
+                leader: 0,
+                snapshot: blob.clone(),
+            },
+        ));
+        assert_eq!(fresh.commit_index(), blob.last_index);
+        assert_eq!(fresh.config().epoch, cfg.epoch);
+        assert!(fresh.config().is_voter(4));
+    }
+
+    #[test]
+    fn nonmember_slots_get_no_appends_until_joined() {
+        let mut c = membership_cluster(6, 5, 1);
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        assert_eq!(c.nodes[5].log().last_index(), 0, "non-member got replicated to");
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Join(5)));
+        c.pump(0, outs);
+        c.propose(0, Payload::Noop);
+        assert!(c.nodes[5].log().last_index() > 0, "joined slot catches up");
+    }
+
+    #[test]
+    fn config_change_rejected_via_client_propose() {
+        let mut c = membership_cluster(5, 5, 1);
+        c.elect(0);
+        let cfg = Arc::new(ClusterConfig::bootstrap(5));
+        let outs = c.nodes[0].step(Input::Propose(Payload::ConfigChange(cfg)));
+        assert!(
+            matches!(outs[0], Output::ProposalRejected(_)),
+            "configs only enter the log through Input::Admin"
+        );
+    }
+
+    #[test]
+    fn admin_commands_serialize_through_the_queue() {
+        let mut c = membership_cluster(7, 5, 2);
+        for node in &mut c.nodes {
+            node.set_join_warmup(0);
+            node.set_drain_rounds(1);
+        }
+        c.elect(0);
+        c.propose(0, Payload::Noop);
+        // replace = join(5) then leave(4), queued back to back
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Join(5)));
+        c.pump(0, outs);
+        let outs = c.nodes[0].step(Input::Admin(AdminCmd::Leave(4)));
+        c.pump(0, outs);
+        for k in 0..10u8 {
+            c.propose(0, Payload::Bytes(Arc::new(vec![k])));
+            c.heartbeat(0);
+        }
+        let cfg = c.nodes[0].config();
+        assert!(cfg.is_voter(5) && !cfg.is_voter(4), "rolling replace completed");
+        assert_eq!(cfg.state_of(5), Some(MemberState::Active));
+        assert_eq!(cfg.voter_count(), 5);
+        assert!(!c.nodes[0].membership_active(), "queue drained");
     }
 }

@@ -161,6 +161,12 @@ impl WeightScheme {
     pub fn lightest_survivor_weight(&self) -> f64 {
         self.weights[self.t..].iter().sum()
     }
+
+    /// The scheme's minimum weight (rank n−1) — the entry weight for a
+    /// `Joining` member and the drain floor for a `Draining` one.
+    pub fn min_weight(&self) -> f64 {
+        *self.weights.last().expect("schemes are non-empty")
+    }
 }
 
 impl fmt::Display for WeightScheme {
@@ -228,6 +234,119 @@ pub fn ratio_bounds(n: usize, t: usize) -> (f64, f64) {
 /// The paper's evaluation thresholds: t = pct% of n, clamped to [1, ⌊(n−1)/2⌋].
 pub fn threshold_pct(n: usize, pct: usize) -> usize {
     ((n * pct) / 100).clamp(1, (n - 1).max(2) / 2)
+}
+
+// ---------------------------------------------------------------------------
+// Intra-epoch weight floors — dynamic membership's drain/entry schedule
+// ---------------------------------------------------------------------------
+
+/// Weight cap for a `Draining` member, `remaining` re-deals before its
+/// removal config is proposed out of a `total`-round drain window. Ramps
+/// linearly from `w_start` (the weight it held when the drain began) down to
+/// `w_floor` (the scheme minimum). A NaN or already-at-floor start collapses
+/// to the floor immediately — drains never *raise* a weight.
+pub fn drain_cap(w_floor: f64, w_start: f64, remaining: usize, total: usize) -> f64 {
+    if total == 0 || !(w_start > w_floor) {
+        return w_floor;
+    }
+    w_floor + (w_start - w_floor) * remaining as f64 / total as f64
+}
+
+/// Apply per-member weight caps (`floors` = `(slot, cap)` for each Joining /
+/// Draining member) to a freshly dealt assignment, redistributing the shaved
+/// excess by *waterfill* over the lightest uncapped members.
+///
+/// This is the consensus-free intra-epoch reassignment: no config entry is
+/// replicated, the leader just deals the next round under the capped
+/// weights. The weight-reassignment papers (PAPERS.md: "Efficient
+/// Consensus-Free Weight Reassignment for Atomic Storage", "How Hard is
+/// Asynchronous Weight Reassignment?") license exactly this — weights may
+/// change freely between rounds provided (a) the total (and hence CT = Σ/2,
+/// so any two quorums still intersect) is conserved, and (b) every
+/// t-subset stays below CT so t failures cannot stall the system. Waterfill
+/// raises only the lightest members toward a common level, so it perturbs
+/// the heaviest-t sum as little as any redistribution can; both conditions
+/// are checked as debug assertions below (skipped when a NaN weight is in
+/// play — NaN assignments must degrade, not panic).
+///
+/// `assign` is the per-slot weight array (non-member slots hold exactly
+/// 0.0 and are never donors or receivers — scheme weights are ≥ 1 so
+/// `w > 0.0` distinguishes members). `t` is the failure threshold the
+/// liveness bound is asserted against.
+pub fn apply_weight_floors(assign: &mut [f64], floors: &[(usize, f64)], t: usize) {
+    let total_before: f64 = assign.iter().sum();
+
+    // Shave every capped member down to its cap.
+    let mut excess = 0.0;
+    for &(slot, cap) in floors {
+        let w = assign[slot];
+        if w.is_finite() && cap.is_finite() && w > cap {
+            excess += w - cap;
+            assign[slot] = cap;
+        }
+    }
+    if excess <= 0.0 {
+        return;
+    }
+
+    // Waterfill the excess over the finite, positive, uncapped slots.
+    let mut idx: Vec<usize> = (0..assign.len())
+        .filter(|&i| {
+            assign[i].is_finite()
+                && assign[i] > 0.0
+                && !floors.iter().any(|&(s, _)| s == i)
+        })
+        .collect();
+    if idx.is_empty() {
+        // No receiver (degenerate: everyone floored) — hand the shave back
+        // equally so the total stays conserved rather than silently
+        // shrinking CT.
+        let share = excess / floors.len() as f64;
+        for &(slot, _) in floors {
+            if assign[slot].is_finite() {
+                assign[slot] += share;
+            }
+        }
+        return;
+    }
+    idx.sort_by(|&a, &b| assign[a].total_cmp(&assign[b]));
+    let mut level = assign[idx[0]];
+    let mut pool = 1usize;
+    let mut rem = excess;
+    while pool < idx.len() {
+        let next = assign[idx[pool]];
+        let need = (next - level) * pool as f64;
+        if need >= rem {
+            break;
+        }
+        rem -= need;
+        level = next;
+        pool += 1;
+    }
+    level += rem / pool as f64;
+    for &i in &idx[..pool] {
+        assign[i] = level;
+    }
+
+    // The papers' bound, as debug assertions (NaN runs skip — comparisons
+    // with NaN are false and would trip the asserts spuriously).
+    if assign.iter().all(|w| w.is_finite()) {
+        let total_after: f64 = assign.iter().sum();
+        debug_assert!(
+            (total_after - total_before).abs() <= 1e-9 * total_before.abs().max(1.0),
+            "re-deal must conserve total weight: {total_before} -> {total_after}"
+        );
+        if t > 0 {
+            let mut sorted: Vec<f64> = assign.iter().copied().collect();
+            sorted.sort_by(|a, b| b.total_cmp(a));
+            let top_t: f64 = sorted[..t.min(sorted.len())].iter().sum();
+            let ct = total_after / 2.0;
+            debug_assert!(
+                top_t < ct,
+                "heaviest-t must stay below CT after flooring (L3.2): {top_t} vs {ct}"
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -383,5 +502,135 @@ mod tests {
             assert!(ws.non_cabinet_weight() < ws.ct(), "L3.1 n={n} t={t}");
             assert!(ws.lightest_survivor_weight() > ws.ct(), "L3.2 n={n} t={t}");
         }
+    }
+
+    // ---- drain/entry schedule (dynamic membership) -----------------------
+
+    /// Deal the scheme over `n` slots by rank permutation: slot `perm[k]`
+    /// gets rank k's weight. `perm` is a deterministic rotation so every
+    /// slot cycles through every rank across test iterations.
+    fn deal(ws: &WeightScheme, rot: usize) -> Vec<f64> {
+        let n = ws.n();
+        let mut assign = vec![0.0; n];
+        for k in 0..n {
+            assign[(k + rot) % n] = ws.weight_of_rank(k);
+        }
+        assign
+    }
+
+    #[test]
+    fn floors_conserve_total_weight() {
+        for (n, t) in [(5usize, 1usize), (7, 2), (9, 3), (11, 4)] {
+            let ws = WeightScheme::geometric(n, t).unwrap();
+            let total: f64 = ws.weights().iter().sum();
+            for rot in 0..n {
+                for floored in 0..n {
+                    let mut assign = deal(&ws, rot);
+                    apply_weight_floors(
+                        &mut assign,
+                        &[(floored, ws.min_weight())],
+                        t,
+                    );
+                    let after: f64 = assign.iter().sum();
+                    assert!(
+                        (after - total).abs() < 1e-9 * total,
+                        "n={n} t={t} rot={rot} floored={floored}: {total} -> {after}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn floors_pin_joining_and_draining_members_at_the_cap() {
+        let ws = WeightScheme::geometric(7, 2).unwrap();
+        let floor = ws.min_weight();
+        for rot in 0..7 {
+            let mut assign = deal(&ws, rot);
+            // slot 3 joining (cap = floor), slot 5 draining mid-ramp
+            let mid = drain_cap(floor, assign[5], 2, 4);
+            let caps = [(3, floor), (5, mid)];
+            let before3 = assign[3];
+            let before5 = assign[5];
+            apply_weight_floors(&mut assign, &caps, 2);
+            assert!(
+                assign[3] <= before3.min(floor) + 1e-12,
+                "joining member capped at the scheme minimum"
+            );
+            assert!(assign[5] <= before5.min(mid.max(floor)) + 1e-12);
+            // caps never raise a weight
+            assert!(assign[3] <= before3 + 1e-12 && assign[5] <= before5 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn heaviest_t_stays_below_ct_across_every_redeal_and_mid_drain() {
+        // L3.2 / the reassignment papers' liveness bound: for every rank
+        // rotation and every step of the drain ramp — including draining the
+        // *heaviest* member from full weight — the heaviest t members sum to
+        // less than CT, so any t failures leave a live quorum.
+        for (n, t) in [(5usize, 2usize), (7, 2), (9, 4), (11, 3)] {
+            let ws = WeightScheme::geometric(n, t).unwrap();
+            let total: f64 = ws.weights().iter().sum();
+            let ct = total / 2.0;
+            let drain_rounds = 4;
+            for rot in 0..n {
+                for victim in 0..n {
+                    let w_start = deal(&ws, rot)[victim];
+                    for remaining in (0..=drain_rounds).rev() {
+                        let mut assign = deal(&ws, rot);
+                        let cap =
+                            drain_cap(ws.min_weight(), w_start, remaining, drain_rounds);
+                        apply_weight_floors(&mut assign, &[(victim, cap)], t);
+                        let mut sorted = assign.clone();
+                        sorted.sort_by(|a, b| b.total_cmp(a));
+                        let top_t: f64 = sorted[..t].iter().sum();
+                        assert!(
+                            top_t < ct,
+                            "n={n} t={t} rot={rot} victim={victim} rem={remaining}: \
+                             top_t={top_t} ct={ct}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drain_cap_ramps_monotonically_to_the_floor() {
+        let (floor, start) = (1.0, 2.5);
+        let mut prev = f64::INFINITY;
+        for remaining in (0..=6).rev() {
+            let c = drain_cap(floor, start, remaining, 6);
+            assert!(c <= prev + 1e-12, "ramp is non-increasing");
+            assert!(c >= floor - 1e-12 && c <= start + 1e-12);
+            prev = c;
+        }
+        assert_eq!(drain_cap(floor, start, 0, 6), floor);
+        assert_eq!(drain_cap(floor, start, 6, 6), start);
+        // degenerate inputs collapse to the floor instead of misbehaving
+        assert_eq!(drain_cap(floor, f64::NAN, 3, 6), floor);
+        assert_eq!(drain_cap(floor, 0.5, 3, 6), floor);
+        assert_eq!(drain_cap(floor, start, 3, 0), floor);
+    }
+
+    #[test]
+    fn nan_weight_member_survives_join_and_leave_floors() {
+        // A NaN weight must degrade (skipped by the waterfill, asserts
+        // muted), never panic — mirrors the node-level NaN regression tests.
+        let mut assign = vec![2.0, f64::NAN, 1.4, 1.2, 1.0];
+        apply_weight_floors(&mut assign, &[(4, 1.0), (0, 1.5)], 2);
+        assert!(assign[1].is_nan(), "NaN member untouched");
+        assert!(assign[0] <= 1.5 + 1e-12, "finite members still capped");
+        // NaN *cap* (drain of a NaN-weight member) is likewise a no-op
+        let mut assign = vec![2.0, f64::NAN, 1.4, 1.2, 1.0];
+        apply_weight_floors(&mut assign, &[(1, f64::NAN)], 2);
+        assert!(assign[1].is_nan());
+        assert_eq!(assign[0], 2.0);
+        // all-floored degenerate case conserves the total
+        let mut assign = vec![2.0, 1.0];
+        apply_weight_floors(&mut assign, &[(0, 1.0), (1, 0.5)], 0);
+        let total: f64 = assign.iter().sum();
+        assert!((total - 3.0).abs() < 1e-12);
     }
 }

@@ -18,8 +18,10 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::consensus::message::{AppState, Entry, Envelope, GroupId, LogIndex, NodeId, Payload};
-use crate::consensus::node::{Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
+use crate::consensus::message::{
+    AppState, ClusterConfig, Entry, Envelope, GroupId, LogIndex, NodeId, Payload,
+};
+use crate::consensus::node::{AdminCmd, Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 use crate::live::apply::{empty_state, ApplyReq};
 use crate::net::rng::Rng;
 use crate::workload::YcsbBatch;
@@ -113,6 +115,9 @@ pub enum LiveIn {
     Read { group: GroupId, id: u64 },
     /// Fire the group's election timer immediately (bootstrap).
     ForceElection(GroupId),
+    /// A membership command for the group's leader replica on this thread
+    /// (silently dropped at followers — re-issue at the current leader).
+    Admin { group: GroupId, cmd: AdminCmd },
     /// Applier → node: captured replica state for a pending snapshot
     /// (completes the `Output::SnapshotRequest` handshake).
     SnapshotReady { group: GroupId, through: LogIndex, state: Vec<u32> },
@@ -131,6 +136,17 @@ pub enum LiveEvent {
     /// A read could not be served at `node` (no leader known / leadership
     /// lost) — re-issue it.
     ReadFailed { group: GroupId, node: NodeId, id: u64 },
+    /// A cluster-config entry committed at `node`: one phase of a
+    /// join/leave op. `joint = true` is the transitional C_old,new config;
+    /// the following `joint = false` event carries the settled voter set.
+    ConfigCommitted {
+        group: GroupId,
+        node: NodeId,
+        epoch: u64,
+        index: LogIndex,
+        joint: bool,
+        voters: Vec<NodeId>,
+    },
 }
 
 /// Timer configuration for live nodes.
@@ -149,6 +165,18 @@ impl Default for LiveTimers {
             heartbeat: Duration::from_millis(40),
         }
     }
+}
+
+/// Dynamic-membership bring-up for a live cluster: `initial_members` of the
+/// `n` spawned threads form the founding voter set (the rest idle as
+/// non-members — they never campaign — until [`LiveCluster::add_node`]
+/// admits them); `drain_rounds` / `join_warmup` tune the weight re-deal
+/// ramps around every join/leave (see `consensus::node`).
+#[derive(Clone, Copy, Debug)]
+pub struct LiveMembership {
+    pub initial_members: usize,
+    pub drain_rounds: usize,
+    pub join_warmup: u64,
 }
 
 /// Link filter between node threads — the live runtime's nemesis hook.
@@ -294,6 +322,50 @@ impl LiveCluster {
         read_path: ReadPath,
         lease_drift_ms: f64,
     ) -> LiveCluster {
+        Self::start_inner(
+            n, groups, mode, timers, apply_tx, seed, snapshot_every, pre_vote, read_path,
+            lease_drift_ms, None,
+        )
+    }
+
+    /// Start a cluster with dynamic membership: `membership.initial_members`
+    /// of the `n` threads form the founding voter set, and the cluster can
+    /// be reshaped while running via [`LiveCluster::add_node`] /
+    /// [`LiveCluster::remove_node`] (joint consensus + weight re-deal; the
+    /// resulting config epochs surface as [`LiveEvent::ConfigCommitted`]).
+    pub fn start_membership(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        seed: u64,
+        pre_vote: bool,
+        membership: LiveMembership,
+    ) -> LiveCluster {
+        assert!(
+            (3..=n).contains(&membership.initial_members),
+            "initial_members must be in 3..=n"
+        );
+        assert!(membership.drain_rounds >= 1, "drain_rounds must be >= 1");
+        Self::start_inner(
+            n, 1, mode, timers, None, seed, None, pre_vote, ReadPath::Log, 40.0,
+            Some(membership),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_inner(
+        n: usize,
+        groups: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+        snapshot_every: Option<u64>,
+        pre_vote: bool,
+        read_path: ReadPath,
+        lease_drift_ms: f64,
+        membership: Option<LiveMembership>,
+    ) -> LiveCluster {
         assert!(groups >= 1 && groups <= n, "groups must be in 1..=n");
         let (event_tx, event_rx) = channel::<LiveEvent>();
         let mut inbox_txs = Vec::with_capacity(n);
@@ -317,7 +389,7 @@ impl LiveCluster {
                 .spawn(move || {
                     node_loop(
                         id, n, groups, mode, timers, rx, peers, links, event_tx, apply_tx,
-                        seed, snapshot_every, pre_vote, read_path, lease_drift_ms,
+                        seed, snapshot_every, pre_vote, read_path, lease_drift_ms, membership,
                     )
                 })
                 .expect("spawn node");
@@ -410,6 +482,57 @@ impl LiveCluster {
     pub fn read_in(&self, group: GroupId, node: NodeId, id: u64) {
         self.check_group(group);
         let _ = self.inboxes[node].send(LiveIn::Read { group, id });
+    }
+
+    // ---- dynamic membership ----------------------------------------------
+
+    /// Ask `leader` to admit `joining` to group 0's voter set (joint
+    /// consensus; the joiner enters at minimum weight and is promoted to
+    /// Active after `join_warmup` acked rounds). Dropped silently at a
+    /// non-leader — watch [`LiveEvent::ConfigCommitted`] for progress and
+    /// re-issue at the current leader on leadership change.
+    pub fn add_node(&self, leader: NodeId, joining: NodeId) {
+        self.add_node_in(0, leader, joining);
+    }
+
+    /// [`LiveCluster::add_node`] for `leader`'s replica of `group`.
+    pub fn add_node_in(&self, group: GroupId, leader: NodeId, joining: NodeId) {
+        self.check_group(group);
+        let _ = self.inboxes[leader].send(LiveIn::Admin { group, cmd: AdminCmd::Join(joining) });
+    }
+
+    /// Ask `leader` to remove `leaving` from group 0's voter set (weight
+    /// drains to the floor first, then joint consensus drops it; a leader
+    /// removing itself steps down once the final config commits). Dropped
+    /// silently at a non-leader, like [`LiveCluster::add_node`].
+    pub fn remove_node(&self, leader: NodeId, leaving: NodeId) {
+        self.remove_node_in(0, leader, leaving);
+    }
+
+    /// [`LiveCluster::remove_node`] for `leader`'s replica of `group`.
+    pub fn remove_node_in(&self, group: GroupId, leader: NodeId, leaving: NodeId) {
+        self.check_group(group);
+        let _ = self.inboxes[leader].send(LiveIn::Admin { group, cmd: AdminCmd::Leave(leaving) });
+    }
+
+    /// Wait until a settled (non-joint) config with epoch >= `epoch`
+    /// commits at some node (any group); returns its voter set. Like the
+    /// other single-consumer waiters, this consumes and discards unrelated
+    /// events from the shared stream.
+    pub fn wait_for_config(&self, epoch: u64, timeout: Duration) -> Option<Vec<NodeId>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.checked_duration_since(Instant::now())?;
+            match self.events.recv_timeout(remaining) {
+                Ok(LiveEvent::ConfigCommitted { epoch: e, joint: false, voters, .. })
+                    if e >= epoch =>
+                {
+                    return Some(voters)
+                }
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
     }
 
     /// Wait until read `id` is served; returns (read index, via lease).
@@ -637,6 +760,7 @@ fn node_loop(
     pre_vote: bool,
     read_path: ReadPath,
     lease_drift_ms: f64,
+    membership: Option<LiveMembership>,
 ) -> Vec<NodeReport> {
     // one replica per group, all hosted on this thread (Multi-Raft layout)
     let mut nodes: Vec<Node> = (0..groups)
@@ -652,6 +776,17 @@ fn node_loop(
                 // replica state lives on the applier thread — capture goes
                 // through the SnapshotRequest / SnapshotReady handshake
                 node.set_snapshot_capture(SnapshotCapture::Driver);
+            }
+            if let Some(m) = membership {
+                node.set_drain_rounds(m.drain_rounds);
+                node.set_join_warmup(m.join_warmup);
+                if m.initial_members < n {
+                    // every thread learns the founding config — non-members
+                    // idle (they never campaign) until a Join admits them
+                    node.set_initial_config(Arc::new(ClusterConfig::bootstrap(
+                        m.initial_members,
+                    )));
+                }
             }
             node
         })
@@ -757,6 +892,16 @@ fn node_loop(
                     let _ =
                         events.send(LiveEvent::ReadFailed { group: g, node: id, id: rid });
                 }
+                Output::ConfigCommitted { epoch, index, joint, voters } => {
+                    let _ = events.send(LiveEvent::ConfigCommitted {
+                        group: g,
+                        node: id,
+                        epoch,
+                        index,
+                        joint,
+                        voters,
+                    });
+                }
                 Output::SteppedDown | Output::ProposalRejected(_) => {}
             }
         }
@@ -811,6 +956,13 @@ fn node_loop(
             }
             Ok(LiveIn::ForceElection(group)) => {
                 let outs = nodes[group].step(Input::ElectionTimeout);
+                handle_outputs(
+                    group, outs, &appliers, &mut committed,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                );
+            }
+            Ok(LiveIn::Admin { group, cmd }) => {
+                let outs = nodes[group].step(Input::Admin(cmd));
                 handle_outputs(
                     group, outs, &appliers, &mut committed,
                     &mut election_deadline, &mut heartbeat_deadline, &mut rng,
@@ -1100,6 +1252,71 @@ mod tests {
         }
         assert!(lease_served, "no read was served via the lease fast path");
         cluster.shutdown();
+    }
+
+    #[test]
+    fn live_membership_join_then_remove() {
+        // Dynamic membership end-to-end over real threads: 5 node threads,
+        // 4 founding voters. Admit the idle fifth thread (joint consensus +
+        // warmup promotion), then drain a founding follower out, and the
+        // reshaped cluster keeps committing.
+        let cluster = LiveCluster::start_membership(
+            5,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            91,
+            false,
+            LiveMembership { initial_members: 4, drain_rounds: 2, join_warmup: 1 },
+        );
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![1])));
+        assert!(cluster.wait_for_round(2, Duration::from_secs(5)).is_some());
+
+        // join: EnterJoint (epoch 1) → LeaveJoint (epoch 2) → promotion
+        cluster.add_node(leader, 4);
+        let voters = cluster
+            .wait_for_config(2, Duration::from_secs(10))
+            .expect("join never settled");
+        assert!(voters.contains(&4), "joiner must be admitted: {voters:?}");
+
+        // remove a founding follower: drain → joint-drop → settled config.
+        // (Queued behind the join's warmup promotion; the admin queue
+        // serializes the two ops.)
+        let victim = (0..4).find(|&x| x != leader).unwrap();
+        cluster.remove_node(leader, victim);
+        let deadline = Instant::now() + Duration::from_secs(15);
+        let final_voters = loop {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .expect("remove never settled");
+            match cluster.events.recv_timeout(remaining) {
+                Ok(LiveEvent::ConfigCommitted { joint: false, voters, .. })
+                    if !voters.contains(&victim) =>
+                {
+                    break voters;
+                }
+                Ok(_) => continue,
+                Err(e) => panic!("remove never settled: {e}"),
+            }
+        };
+        assert_eq!(final_voters.len(), 4, "4 voters after join+leave: {final_voters:?}");
+        assert!(final_voters.contains(&4) && !final_voters.contains(&victim));
+
+        // the reshaped cluster still commits: noop(1) + entry(2) + join's 3
+        // config entries + leave's 3 → the next proposal lands at index >= 9
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![2])));
+        assert!(
+            cluster.wait_for_round(9, Duration::from_secs(10)).is_some(),
+            "post-reshape proposal must commit"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        let caught_up = reports
+            .iter()
+            .filter(|r| final_voters.contains(&r.id) && r.commit_index >= 9)
+            .count();
+        assert!(caught_up >= 3, "new voter set must converge: {reports:?}");
     }
 
     #[test]

@@ -62,6 +62,8 @@ USAGE:
               [--nemesis \"2000..6000=leader;8000..20000=followers:2\"]
               [--nemesis-drop P] [--nemesis-dup P] [--nemesis-reorder P]
               [--nemesis-reorder-ms M]
+              [--members K] [--drain-rounds D] [--join-warmup W]
+              [--join R=ID]... [--leave R=ID]... [--replace R=OLD>NEW]...
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts
@@ -109,6 +111,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig22" => vec![figures::fig22_partitions(scale)],
         "fig23" => vec![figures::fig23_read_paths(scale)],
         "fig24" => vec![figures::fig24_sharding(scale)],
+        "fig25" => vec![figures::fig25_membership(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -226,6 +229,39 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
                 other => bail!("unknown delay {other}"),
             };
         }
+        {
+            use cabinet::net::nemesis::{MembershipEvent, MembershipSpec};
+            if let Some(k) = flag(&mut args, "--members") {
+                c.initial_members = Some(k.parse()?);
+            }
+            if let Some(d) = flag(&mut args, "--drain-rounds") {
+                c.drain_rounds = d.parse()?;
+            }
+            if let Some(w) = flag(&mut args, "--join-warmup") {
+                c.join_warmup = w.parse()?;
+            }
+            // --join 4=5 / --leave 8=0 / --replace 12=1>6, each repeatable:
+            // sugar over the config-file DSL (ROUND=join:ID etc.)
+            let mut spec = MembershipSpec::default();
+            for (flag_name, verb) in
+                [("--join", "join"), ("--leave", "leave"), ("--replace", "replace")]
+            {
+                while let Some(v) = flag(&mut args, flag_name) {
+                    let (round, arg) = v.split_once('=').with_context(|| {
+                        format!("{flag_name} {v:?}: expected ROUND=ARG")
+                    })?;
+                    spec.events.push(MembershipEvent::parse(&format!(
+                        "{round}={verb}:{arg}"
+                    ))?);
+                }
+            }
+            if !spec.is_noop() {
+                c.membership = Some(spec);
+            }
+            if let Err(e) = c.validate_membership() {
+                bail!("{e}");
+            }
+        }
         // sharding cross-checks — the one shared implementation, run after
         // --groups/--shard-by/--workload/--proto are all settled
         if let Err(e) = c.validate_sharding() {
@@ -235,8 +271,12 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         c
     };
     // every nemesis run self-checks safety — TOML-configured ones included —
-    // and every fast-read-path run self-checks read linearizability
-    if config.nemesis.is_some() || !matches!(config.read_path, ReadPath::Log) {
+    // every fast-read-path run self-checks read linearizability, and every
+    // membership run self-checks config-epoch coherence
+    if config.nemesis.is_some()
+        || !matches!(config.read_path, ReadPath::Log)
+        || config.membership_on()
+    {
         config.track_safety = true;
     }
     let pipeline = config.pipeline;
@@ -290,6 +330,9 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
             stats.cut, stats.dropped, stats.duplicated, stats.reordered
         );
     }
+    if r.config_commits > 0 {
+        println!("membership: {} config commits observed", r.config_commits);
+    }
     for (group, log) in r.safety_logs() {
         let report = cabinet::bench::safety_check(log);
         let scope = match group {
@@ -304,6 +347,12 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
                 report.leaders_checked,
                 report.reads_checked
             );
+            if report.epochs_checked > 0 {
+                println!(
+                    "            {scope} config epochs coherent ({} decisions, {} weighted-evidence commits)",
+                    report.epochs_checked, report.evidence_checked
+                );
+            }
         } else {
             for v in &report.violations {
                 eprintln!("SAFETY VIOLATION [{scope}]: {v}");

@@ -215,6 +215,114 @@ impl NemesisSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Membership schedule (composable with partition windows)
+// ---------------------------------------------------------------------------
+
+/// What one scheduled membership event does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipKind {
+    /// Admit the node in an empty slot via joint consensus.
+    Join(NodeId),
+    /// Drain a current voter's weight to the floor, then remove it.
+    Leave(NodeId),
+    /// `Join(join)` then `Leave(leave)` in one schedule slot — the rolling
+    /// replace primitive (fig25 cycles it over the whole cluster).
+    Replace { leave: NodeId, join: NodeId },
+}
+
+/// One membership change keyed to the simulator's round counter — the same
+/// axis [`crate::sim::ReconfigSpec`] schedules on, so a join/leave/replace
+/// composes with a partition window that spans the same rounds (e.g. a
+/// replace whose draining node is inside the cut group).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipEvent {
+    pub round: u64,
+    pub kind: MembershipKind,
+}
+
+impl MembershipEvent {
+    /// Parse the config/CLI mini-DSL: `ROUND=join:ID`, `ROUND=leave:ID`,
+    /// `ROUND=replace:OLD>NEW`.
+    ///
+    /// ```text
+    /// 4=join:5        admit node 5 at the start of round 4
+    /// 8=leave:0       drain and remove node 0
+    /// 6=replace:1>6   admit node 6, then drain and remove node 1
+    /// ```
+    pub fn parse(s: &str) -> Result<MembershipEvent> {
+        let (round, action) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("membership {s:?}: expected ROUND=KIND:arg"))?;
+        let round: u64 = round
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("membership {s:?}: bad round {round:?}"))?;
+        let (name, arg) = action
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("membership {s:?}: expected KIND:arg"))?;
+        let parse_id = |a: &str| -> Result<NodeId> {
+            a.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("membership {s:?}: bad node id {a:?}"))
+        };
+        let kind = match name.trim() {
+            "join" => MembershipKind::Join(parse_id(arg)?),
+            "leave" => MembershipKind::Leave(parse_id(arg)?),
+            "replace" => {
+                let (old, new) = arg.split_once('>').ok_or_else(|| {
+                    anyhow::anyhow!("membership {s:?}: replace wants OLD>NEW")
+                })?;
+                MembershipKind::Replace { leave: parse_id(old)?, join: parse_id(new)? }
+            }
+            other => bail!(
+                "membership {s:?}: unknown kind {other:?} (join:ID | leave:ID | replace:OLD>NEW)"
+            ),
+        };
+        Ok(MembershipEvent { round, kind })
+    }
+}
+
+/// A full membership schedule for one consensus group. `Default` is empty.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipSpec {
+    pub events: Vec<MembershipEvent>,
+}
+
+impl MembershipSpec {
+    pub fn is_noop(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate against a cluster of `n` slots: ids in range, replace pairs
+    /// distinct, rounds at least 1 (round 0 never starts). Whether a join
+    /// target is actually empty depends on the founding membership and the
+    /// schedule order, so that is enforced at run time by the leader's
+    /// admission guards (an invalid command is dropped, never unsafe).
+    pub fn validate(&self, n: usize) -> Result<()> {
+        for ev in &self.events {
+            if ev.round == 0 {
+                bail!("membership: event at round 0 can never fire");
+            }
+            let ids: [NodeId; 2] = match ev.kind {
+                MembershipKind::Join(id) | MembershipKind::Leave(id) => [id, id],
+                MembershipKind::Replace { leave, join } => {
+                    if leave == join {
+                        bail!("membership: replace {leave}>{join} maps a node to itself");
+                    }
+                    [leave, join]
+                }
+            };
+            for id in ids {
+                if id >= n {
+                    bail!("membership: node {id} out of range (n = {n})");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// The decided fate of one message: how many copies to deliver (0 = dropped)
 /// and the extra delay each copy picks up on top of the link latency.
 #[derive(Clone, Copy, Debug)]
@@ -491,6 +599,56 @@ mod tests {
             ..Default::default()
         };
         assert!(ok.validate(5).is_ok());
+    }
+
+    #[test]
+    fn membership_dsl_parses_and_rejects() {
+        let e = MembershipEvent::parse("4=join:5").unwrap();
+        assert_eq!(e, MembershipEvent { round: 4, kind: MembershipKind::Join(5) });
+        let e = MembershipEvent::parse("8=leave:0").unwrap();
+        assert_eq!(e.kind, MembershipKind::Leave(0));
+        let e = MembershipEvent::parse("6=replace:1>6").unwrap();
+        assert_eq!(e.kind, MembershipKind::Replace { leave: 1, join: 6 });
+        for bad in [
+            "nonsense",
+            "4",
+            "4=join",
+            "4=join:x",
+            "x=join:1",
+            "4=grow:1",
+            "4=replace:1",
+            "4=replace:a>b",
+        ] {
+            assert!(MembershipEvent::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn membership_spec_validation() {
+        let ok = MembershipSpec {
+            events: vec![
+                MembershipEvent { round: 2, kind: MembershipKind::Join(5) },
+                MembershipEvent { round: 6, kind: MembershipKind::Replace { leave: 0, join: 4 } },
+            ],
+        };
+        assert!(ok.validate(6).is_ok());
+        assert!(!ok.is_noop());
+        assert!(MembershipSpec::default().is_noop());
+        let oob = MembershipSpec {
+            events: vec![MembershipEvent { round: 1, kind: MembershipKind::Leave(9) }],
+        };
+        assert!(oob.validate(5).is_err());
+        let self_replace = MembershipSpec {
+            events: vec![MembershipEvent {
+                round: 1,
+                kind: MembershipKind::Replace { leave: 2, join: 2 },
+            }],
+        };
+        assert!(self_replace.validate(5).is_err());
+        let round0 = MembershipSpec {
+            events: vec![MembershipEvent { round: 0, kind: MembershipKind::Join(1) }],
+        };
+        assert!(round0.validate(5).is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::consensus::message::NodeId;
 pub use crate::consensus::node::ReadPath;
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec};
-use crate::net::nemesis::{NemesisSpec, NemesisStats};
+use crate::net::nemesis::{MembershipSpec, NemesisSpec, NemesisStats};
 use crate::net::rng::Rng;
 use crate::net::topology::ZoneAlloc;
 use crate::sim::event::EventQueue;
@@ -186,6 +186,20 @@ pub struct SimConfig {
     /// ([`WorkloadSpec::default_shard_by`]); a mismatched explicit choice is
     /// rejected at config parse.
     pub shard_by: Option<ShardBy>,
+    /// Dynamic-membership schedule (joins/leaves/replaces on the round
+    /// axis, driven in every group). None = fixed membership — bit-for-bit
+    /// the historical behavior.
+    pub membership: Option<MembershipSpec>,
+    /// Founding membership: the first this-many slots boot as voters, the
+    /// rest stay empty until a scheduled join admits them. None = all `n`
+    /// slots are founding members (the historical fixed cluster).
+    pub initial_members: Option<usize>,
+    /// Weight re-deals a leaving node's weight ramps down over before joint
+    /// consensus removes it.
+    pub drain_rounds: usize,
+    /// Rounds a joining node must ack (at minimum weight) before promotion
+    /// to `Active`.
+    pub join_warmup: u64,
 }
 
 /// One linearizable read served through a non-log read path — the evidence
@@ -206,6 +220,25 @@ pub struct ReadRecord {
     pub lease: bool,
 }
 
+/// The quorum evidence one leader-observed round commit leaves behind — the
+/// config-epoch checker validates that every commit satisfied the weighted
+/// rule of every config it was proposed under (both halves of a joint one).
+#[derive(Clone, Copy, Debug)]
+pub struct CommitEvidence {
+    /// Log index the round committed at.
+    pub index: u64,
+    /// Config epoch the round was proposed under.
+    pub epoch: u64,
+    /// Accumulated quorum weight when the commit rule closed.
+    pub acc: f64,
+    /// The commit threshold of the propose-time config (CT, or the Raft
+    /// majority count).
+    pub ct: f64,
+    /// Joint-phase evidence: (accumulated weight, threshold) of the *old*
+    /// half, when the round was proposed under a joint config.
+    pub joint: Option<(f64, f64)>,
+}
+
 /// Evidence collected for the deterministic safety checker
 /// (`bench::safety::check`): every `Output::Commit` each node emitted, in
 /// emission order, every `Output::BecameLeader` observation, the
@@ -223,6 +256,13 @@ pub struct SafetyLog {
     pub commit_times: Vec<(f64, u64)>,
     /// Every read served through a non-log read path.
     pub reads: Vec<ReadRecord>,
+    /// Per-commit quorum evidence (leader-observed, commit order) — empty
+    /// on fixed-membership runs unless the driver records it anyway.
+    pub commit_evidence: Vec<CommitEvidence>,
+    /// Every committed config entry any node observed: (epoch, log index,
+    /// joint). Sorted by index, epochs must be non-decreasing and each
+    /// index must decide one (epoch, joint) pair.
+    pub config_epochs: Vec<(u64, u64, bool)>,
 }
 
 impl SafetyLog {
@@ -232,6 +272,8 @@ impl SafetyLog {
             leaders: Vec::new(),
             commit_times: Vec::new(),
             reads: Vec::new(),
+            commit_evidence: Vec::new(),
+            config_epochs: Vec::new(),
         }
     }
 }
@@ -270,7 +312,39 @@ impl SimConfig {
             lease_drift_ms: 50.0,
             groups: 1,
             shard_by: None,
+            membership: None,
+            initial_members: None,
+            drain_rounds: 4,
+            join_warmup: 4,
         }
+    }
+
+    /// Does this run exercise dynamic membership at all?
+    pub fn membership_on(&self) -> bool {
+        self.initial_members.is_some()
+            || self.membership.as_ref().map_or(false, |m| !m.is_noop())
+    }
+
+    /// Validate the membership knobs. One implementation for both front
+    /// ends (TOML parser and CLI), like [`SimConfig::validate_sharding`].
+    /// Call after `membership`, `initial_members` and `zones` are settled.
+    pub fn validate_membership(&self) -> Result<(), String> {
+        if let Some(m) = self.initial_members {
+            if m < 3 || m > self.n() {
+                return Err(format!(
+                    "initial_members ({m}) must be in 3..=n ({}) — the weighted scheme \
+                     needs at least 3 founding voters",
+                    self.n()
+                ));
+            }
+        }
+        if let Some(spec) = &self.membership {
+            spec.validate(self.n()).map_err(|e| e.to_string())?;
+        }
+        if self.membership_on() && self.drain_rounds == 0 {
+            return Err("membership.drain_rounds must be >= 1".into());
+        }
+        Ok(())
     }
 
     pub fn n(&self) -> usize {
@@ -445,6 +519,10 @@ pub struct SimResult {
     /// [`SimResult::metrics_digest`]: it is host-profiling telemetry, and
     /// folding it in would break digest parity with pre-counter builds.
     pub messages_delivered: u64,
+    /// Config (membership) entries the leaders observed committing, summed
+    /// across groups — 0 on fixed-membership runs, and then excluded from
+    /// the metrics digest (the replay-determinism guardrail).
+    pub config_commits: u64,
 }
 
 impl SimResult {
@@ -491,6 +569,7 @@ impl SimResult {
             read_p99_ms: 0.0,
             read_done_ms: 0.0,
             messages_delivered: 0,
+            config_commits: 0,
         }
     }
 
@@ -606,6 +685,12 @@ impl SimResult {
             h.write_u64(self.read_mean_ms.to_bits());
             h.write_u64(self.read_p99_ms.to_bits());
             h.write_u64(self.read_done_ms.to_bits());
+        }
+        // Membership evidence folds in only when config entries actually
+        // committed, so fixed-membership digests stay bit-identical to
+        // pre-membership builds (the replay-determinism guardrail).
+        if self.config_commits > 0 {
+            h.write_u64(self.config_commits);
         }
         // Per-group rollups fold in only on sharded runs (`group_stats` is
         // empty for `groups = 1`), so single-group digests stay bit-identical
@@ -752,6 +837,7 @@ fn merge_sharded(config: &SimConfig, outcomes: Vec<GroupOutcome>) -> SimResult {
         agg.read_failures += r.read_failures;
         agg.read_done_ms = agg.read_done_ms.max(r.read_done_ms);
         agg.messages_delivered += r.messages_delivered;
+        agg.config_commits += r.config_commits;
     }
     read_latencies.sort_by(|a, b| a.total_cmp(b));
     crate::sim::group::fold_read_latencies(&mut agg, &read_latencies);
@@ -1255,6 +1341,106 @@ mod tests {
         let r = run(&c);
         assert_eq!(r.rounds.len(), 2 * 4);
         assert_eq!(r.digests_match, Some(true), "per-group replicas must converge");
+    }
+
+    // -- dynamic membership runs --------------------------------------------
+
+    use crate::net::nemesis::{MembershipEvent, MembershipKind};
+
+    fn membership_cfg(events: Vec<MembershipEvent>, rounds: u64, seed: u64) -> SimConfig {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 7, true);
+        c.rounds = rounds;
+        c.seed = seed;
+        c.initial_members = Some(5);
+        c.drain_rounds = 2;
+        c.join_warmup = 1;
+        c.track_safety = true;
+        c.membership = Some(MembershipSpec { events });
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+        c
+    }
+
+    #[test]
+    fn membership_join_leave_completes_and_checks_clean() {
+        let r = run(&membership_cfg(
+            vec![
+                MembershipEvent { round: 3, kind: MembershipKind::Join(5) },
+                MembershipEvent { round: 8, kind: MembershipKind::Leave(0) },
+            ],
+            16,
+            42,
+        ));
+        assert_eq!(r.rounds.len(), 16, "rounds must continue through join and leave");
+        // join = enter-joint + leave-joint + promotion; leave = draining mark
+        // + enter-joint + leave-joint — allow an edge miss around failover
+        assert!(r.config_commits >= 5, "config entries committed: {}", r.config_commits);
+        let report = crate::bench::safety::check(r.safety.as_ref().unwrap());
+        assert!(report.is_clean(), "{:?}", report.violations);
+        assert!(report.epochs_checked > 0, "config-epoch evidence must be recorded");
+        assert!(report.evidence_checked > 0, "quorum evidence must be recorded");
+    }
+
+    #[test]
+    fn membership_replace_swaps_voter_and_continues() {
+        let r = run(&membership_cfg(
+            vec![MembershipEvent { round: 4, kind: MembershipKind::Replace { leave: 1, join: 5 } }],
+            14,
+            11,
+        ));
+        assert_eq!(r.rounds.len(), 14);
+        assert!(r.config_commits >= 5, "replace = join + leave entries: {}", r.config_commits);
+        let report = crate::bench::safety::check(r.safety.as_ref().unwrap());
+        assert!(report.is_clean(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn membership_pipelined_run_checks_clean() {
+        let mut c = membership_cfg(
+            vec![MembershipEvent { round: 3, kind: MembershipKind::Replace { leave: 2, join: 6 } }],
+            12,
+            23,
+        );
+        c.pipeline = 4;
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 12, "the window must ride through the joint phase");
+        let report = crate::bench::safety::check(r.safety.as_ref().unwrap());
+        assert!(report.is_clean(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn membership_off_keeps_digests_bit_identical() {
+        // the drain/warmup knobs alone (no schedule, no initial_members)
+        // must leave the trajectory untouched — every membership branch is
+        // gated off, so this pins the replay-determinism guardrail
+        let mk = |drain: usize, warm: u64| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+            c.rounds = 8;
+            c.drain_rounds = drain;
+            c.join_warmup = warm;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+            run(&c)
+        };
+        let a = mk(4, 4);
+        let b = mk(9, 0);
+        assert_eq!(a.metrics_digest(), b.metrics_digest());
+        assert_eq!(a.commit_sequence_digest(), b.commit_sequence_digest());
+        assert_eq!(a.config_commits, 0);
+    }
+
+    #[test]
+    fn membership_validation_rejects_bad_knobs() {
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+        c.initial_members = Some(2);
+        assert!(c.validate_membership().is_err(), "fewer than 3 founding voters");
+        c.initial_members = Some(9);
+        assert!(c.validate_membership().is_err(), "founding beyond the slot count");
+        c.initial_members = Some(4);
+        assert!(c.validate_membership().is_ok());
+        c.membership = Some(MembershipSpec {
+            events: vec![MembershipEvent { round: 1, kind: MembershipKind::Join(7) }],
+        });
+        assert!(c.validate_membership().is_err(), "join target beyond the slot count");
     }
 
     #[test]

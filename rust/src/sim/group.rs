@@ -24,14 +24,14 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::consensus::message::{GroupId, Message, NodeId, Payload};
-use crate::consensus::node::{Input, Mode, Node, Output, ReadPath, Role};
+use crate::consensus::message::{ClusterConfig, GroupId, Message, NodeId, Payload};
+use crate::consensus::node::{AdminCmd, Input, Mode, Node, Output, ReadPath, Role};
 use crate::net::fault::KillSpec;
-use crate::net::nemesis::{Fate, Nemesis};
+use crate::net::nemesis::{Fate, MembershipEvent, MembershipKind, Nemesis};
 use crate::net::rng::Rng;
 use crate::sim::cluster::{
-    Protocol, ReadRecord, ReconfigSpec, RestartSpec, RoundStat, SafetyLog, SimConfig,
-    SimResult, WorkloadSpec,
+    CommitEvidence, Protocol, ReadRecord, ReconfigSpec, RestartSpec, RoundStat, SafetyLog,
+    SimConfig, SimResult, WorkloadSpec,
 };
 use crate::sim::event::EventQueue;
 use crate::storage::{DocStore, RelStore};
@@ -404,6 +404,21 @@ pub(crate) struct GroupEngine {
     kills: VecDeque<KillSpec>,
     kill_leader_at: Option<u64>,
 
+    /// Dynamic membership (all fields inert on fixed-membership runs).
+    membership_on: bool,
+    /// Founding voter count: slots `founding..n` boot empty.
+    founding: usize,
+    membership_queue: VecDeque<MembershipEvent>,
+    /// The engine's view of the current voter set — updated from committed
+    /// config entries, used to retire removed slots (power off) without
+    /// touching slots that merely have not joined yet.
+    members: Vec<bool>,
+    /// Highest config epoch applied to `members`/`alive` — a re-commit of
+    /// older config entries after a failover must not resurrect slots.
+    max_config_epoch: u64,
+    /// Leader-observed config-entry commits.
+    config_commits: u64,
+
     /// Reusable output buffer for `Node::step_into` — one allocation per
     /// engine instead of one `Vec<Output>` per step (the routing hot path).
     out_scratch: Vec<Output>,
@@ -445,6 +460,15 @@ impl GroupEngine {
         };
         let safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
 
+        let membership_on = config.membership_on();
+        let founding = config.initial_members.unwrap_or(n).min(n);
+        if let Some(spec) = &config.membership {
+            spec.validate(n).expect("invalid membership spec");
+        }
+        // the founding config: slots `founding..n` are non-members a later
+        // join can admit (shared Arc — every node adopts the same one)
+        let founding_cfg = Arc::new(ClusterConfig::bootstrap(founding));
+
         let nodes: Vec<Node> = (0..n)
             .map(|i| {
                 let mut node = Node::new(i, n, mode.clone());
@@ -453,6 +477,13 @@ impl GroupEngine {
                 node.set_pre_vote(config.pre_vote);
                 node.set_read_path(config.read_path);
                 node.set_lease_duration_ms(config.lease_duration_ms());
+                if membership_on {
+                    node.set_drain_rounds(config.drain_rounds);
+                    node.set_join_warmup(config.join_warmup);
+                    if founding < n {
+                        node.set_initial_config(Arc::clone(&founding_cfg));
+                    }
+                }
                 node
             })
             .collect();
@@ -477,6 +508,20 @@ impl GroupEngine {
         let mut kills = config.kills.clone();
         kills.sort_by_key(|k| k.round);
         let (reconfig_queue, kills) = (VecDeque::from(reconfig_queue), VecDeque::from(kills));
+        let mut membership_events: Vec<MembershipEvent> =
+            config.membership.as_ref().map(|m| m.events.clone()).unwrap_or_default();
+        membership_events.sort_by_key(|e| e.round);
+        let membership_queue = VecDeque::from(membership_events);
+
+        // empty slots boot powered off: no timers, no deliveries, no reads
+        let mut alive = vec![true; n];
+        let mut members = vec![true; n];
+        if membership_on {
+            for slot in founding..n {
+                alive[slot] = false;
+                members[slot] = false;
+            }
+        }
 
         GroupEngine {
             gid,
@@ -485,7 +530,7 @@ impl GroupEngine {
             depth: config.pipeline.max(1),
             lockstep: config.pipeline <= 1,
             nodes,
-            alive: vec![true; n],
+            alive,
             el_gen: vec![0u64; n],
             hb_gen: vec![0u64; n],
             net_rng,
@@ -516,6 +561,12 @@ impl GroupEngine {
             reconfig_queue,
             kills,
             kill_leader_at: config.kill_leader_at_round,
+            membership_on,
+            founding,
+            membership_queue,
+            members,
+            max_config_epoch: 0,
+            config_commits: 0,
             out_scratch: Vec::new(),
             messages: 0,
         }
@@ -549,8 +600,19 @@ impl GroupEngine {
     /// everyone else arms a randomized election timer.
     pub(crate) fn bootstrap(&mut self, q: &mut EventQueue<GroupEv>) {
         let n = self.config.n();
-        let first = self.gid % n;
+        // empty slots draw no timers (membership-off: every slot is alive,
+        // so the draw sequence is bit-identical to the historical one)
+        let mut first = self.gid % n;
+        if !self.alive[first] {
+            first = (0..n)
+                .map(|d| (first + d) % n)
+                .find(|&i| self.alive[i])
+                .expect("at least one founding member");
+        }
         for node in 0..n {
+            if !self.alive[node] {
+                continue;
+            }
             let delay = if node == first {
                 0.0
             } else {
@@ -696,6 +758,17 @@ impl GroupEngine {
             }
         }
 
+        // scheduled membership change (not counted as a round) — the
+        // leader's admin queue serializes overlapping operations
+        if let Some(me) = self.membership_queue.front().copied() {
+            if me.round == next_round {
+                self.membership_queue.pop_front();
+                self.fire_membership(me, leader, now, q);
+                self.push(q, 1.0, Ev::ProposeNext);
+                return;
+            }
+        }
+
         let (payload, batch, cost_ms, ops, read_batch) =
             next_round_batch(&mut self.driver, self.config.read_path);
         self.inflight_cost_ms = cost_ms;
@@ -775,6 +848,18 @@ impl GroupEngine {
             }
         }
 
+        // scheduled membership change (not counted as a round) — may land
+        // while earlier rounds are still in flight; their propose-time
+        // config/weight snapshots keep them correct
+        if let Some(me) = self.membership_queue.front().copied() {
+            if me.round == next_round {
+                self.membership_queue.pop_front();
+                self.fire_membership(me, leader, now, q);
+                self.push(q, 1.0, Ev::ProposeNext);
+                return;
+            }
+        }
+
         let (payload, batch, cost_ms, ops, read_batch) =
             next_round_batch(&mut self.driver, self.config.read_path);
         let leader_speed = self.effective_speed_at(leader, next_round);
@@ -833,6 +918,17 @@ impl GroupEngine {
                 fresh.set_pre_vote(self.config.pre_vote);
                 fresh.set_read_path(self.config.read_path);
                 fresh.set_lease_duration_ms(self.config.lease_duration_ms());
+                if self.membership_on {
+                    fresh.set_drain_rounds(self.config.drain_rounds);
+                    fresh.set_join_warmup(self.config.join_warmup);
+                    if self.founding < n {
+                        // catch-up replays or snapshot-installs the current
+                        // config; the founding one is only the fallback
+                        fresh.set_initial_config(Arc::new(ClusterConfig::bootstrap(
+                            self.founding,
+                        )));
+                    }
+                }
                 if matches!(self.config.read_path, ReadPath::Lease) {
                     // a restarted voter may have acked a probe whose lease is
                     // still live — hold its vote for one full election timeout
@@ -866,6 +962,66 @@ impl GroupEngine {
                 self.alive[v] = false;
             }
             self.kills.pop_front();
+        }
+    }
+
+    /// Fire one scheduled membership event at the current leader. A joining
+    /// slot powers on here — it can arm timers and receive appends from now
+    /// on — while the consensus-side admission (joint config, minimum
+    /// weight, warmup) is driven entirely by the leader's admin queue.
+    /// Removal powers a slot off only when its `LeaveJoint` config commits
+    /// (see the `ConfigCommitted` arm in `route`).
+    fn fire_membership(
+        &mut self,
+        ev: MembershipEvent,
+        leader: NodeId,
+        now: f64,
+        q: &mut EventQueue<GroupEv>,
+    ) {
+        let cmds: [Option<AdminCmd>; 2] = match ev.kind {
+            MembershipKind::Join(id) => [Some(AdminCmd::Join(id)), None],
+            MembershipKind::Leave(id) => [Some(AdminCmd::Leave(id)), None],
+            // join first: the replacement is admitted before the old node
+            // drains, so capacity never dips below the founding size
+            MembershipKind::Replace { leave, join } => {
+                [Some(AdminCmd::Join(join)), Some(AdminCmd::Leave(leave))]
+            }
+        };
+        for cmd in cmds.into_iter().flatten() {
+            if let AdminCmd::Join(id) = cmd {
+                if id < self.nodes.len() && !self.alive[id] && !self.members[id] {
+                    self.alive[id] = true;
+                    self.el_gen[id] += 1;
+                    let d = self.timer_rng.range_f64(
+                        self.config.election_timeout_ms.0,
+                        self.config.election_timeout_ms.1,
+                    );
+                    self.push(q, d, Ev::ElectionTimer { node: id, generation: self.el_gen[id] });
+                }
+            }
+            self.nodes[leader].observe_time(now);
+            self.step_route(leader, Input::Admin(cmd), 0.0, q);
+        }
+    }
+
+    /// Apply a committed (non-joint) config to the engine's power state:
+    /// newly removed voters power off, newly admitted ones are confirmed.
+    /// Epoch-guarded so a failover replaying older config commits cannot
+    /// resurrect a removed slot.
+    fn apply_committed_config(&mut self, epoch: u64, voters: &[NodeId]) {
+        if epoch < self.max_config_epoch {
+            return;
+        }
+        self.max_config_epoch = epoch;
+        for slot in 0..self.members.len() {
+            let is_voter = voters.contains(&slot);
+            if self.members[slot] && !is_voter {
+                self.members[slot] = false;
+                self.alive[slot] = false;
+            } else if !self.members[slot] && is_voter {
+                self.members[slot] = true;
+                self.alive[slot] = true;
+            }
         }
     }
 
@@ -1015,11 +1171,40 @@ impl GroupEngine {
                         self.current_leader = None;
                     }
                 }
-                Output::RoundCommitted { index, repliers, .. } => {
+                Output::RoundCommitted {
+                    index, repliers, quorum_weight, epoch, ct, joint, ..
+                } => {
+                    // leader-observed quorum evidence for the config-epoch
+                    // checker: the commit rule this round actually closed
+                    // under (both halves when it was proposed mid-joint)
+                    if Some(node) == self.current_leader {
+                        if let Some(sl) = self.safety.as_mut() {
+                            sl.commit_evidence.push(CommitEvidence {
+                                index,
+                                epoch,
+                                acc: quorum_weight,
+                                ct,
+                                joint,
+                            });
+                        }
+                    }
                     if self.lockstep {
                         self.round_committed_lockstep(node, index, repliers, now, q);
                     } else {
                         self.round_committed_pipelined(node, index, repliers, now, q);
+                    }
+                }
+                Output::ConfigCommitted { epoch, index, joint, voters } => {
+                    if Some(node) == self.current_leader {
+                        self.config_commits += 1;
+                    }
+                    if let Some(sl) = self.safety.as_mut() {
+                        sl.config_epochs.push((epoch, index, joint));
+                    }
+                    // only a completed (non-joint) config changes the power
+                    // state: the old half of a joint config still votes
+                    if !joint && self.membership_on {
+                        self.apply_committed_config(epoch, &voters);
                     }
                 }
                 Output::Commit(e) => {
@@ -1192,6 +1377,7 @@ impl GroupEngine {
         result.nemesis_stats = self.nemesis.as_ref().map(|nm| nm.stats);
         result.safety = self.safety.take();
         result.messages_delivered = self.messages;
+        result.config_commits = self.config_commits;
         // one sorted pass serves both the per-group percentiles and (moved,
         // not cloned) the multi-group merge's pooled population
         let mut read_latencies = std::mem::take(&mut self.readctl.latencies);

@@ -27,7 +27,7 @@ pub mod event;
 pub(crate) mod group;
 
 pub use cluster::{
-    run, DigestMode, GroupStat, Protocol, ReadPath, ReadRecord, ReconfigSpec, RestartSpec,
-    RoundStat, SafetyLog, SimConfig, SimResult, WorkloadSpec,
+    run, CommitEvidence, DigestMode, GroupStat, Protocol, ReadPath, ReadRecord, ReconfigSpec,
+    RestartSpec, RoundStat, SafetyLog, SimConfig, SimResult, WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

@@ -494,6 +494,66 @@ fn fig24_sharding_shape() {
     }
 }
 
+/// Fig. 25 acceptance shape: the rolling replace of every founding voter
+/// completes (all 30 config entries commit), the cluster never stalls
+/// longer than one election timeout between commits — replaced leaders
+/// cost one failover each, never more — and the config-epoch /
+/// joint-quorum-evidence checker stays clean on both rows.
+#[test]
+fn fig25_membership_shape() {
+    let t = figures::fig25_membership(Scale::Quick);
+    assert_eq!(t.rows.len(), 2);
+    for i in 0..2 {
+        assert_eq!(
+            t.num(i, "committed").unwrap(),
+            60.0,
+            "every client round must commit: {:?}",
+            t.rows[i]
+        );
+        assert!(
+            t.rows[i][6].starts_with("OK"),
+            "safety checker must stay clean: {:?}",
+            t.rows[i]
+        );
+    }
+    // steady row: zero config traffic; rolling row: 5 replaces × 6 config
+    // entries (join: enter/leave/promote + leave: mark/enter/leave) — at
+    // least, since failover re-observations can count entries again
+    assert_eq!(t.num(0, "cfg_commits").unwrap(), 0.0);
+    assert!(
+        t.num(1, "cfg_commits").unwrap() >= 30.0,
+        "rolling replace did not complete: {:?}",
+        t.rows[1]
+    );
+    // availability: no commit-to-commit gap beyond one election timeout
+    // (the 2500–4000 ms draw) plus commit slack
+    let gap = t.num(1, "max_gap_ms").unwrap();
+    assert!(gap <= 5000.0, "availability gap {gap} ms exceeds one election timeout");
+}
+
+/// The `[membership]` table round-trips through the TOML config path into a
+/// running simulation: the scheduled join commits, epochs advance, and the
+/// checker validates the config decisions it recorded.
+#[test]
+fn membership_config_roundtrip_runs_clean() {
+    let mut cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 1\nn = 7\nrounds = 14\n\
+         [workload]\nkind = \"ycsb\"\nworkload = \"A\"\nbatch = 300\n\
+         [membership]\nmembers = 5\ndrain_rounds = 2\njoin_warmup = 1\n\
+         events = [\"3=join:5\", \"8=leave:0\"]\n",
+    )
+    .unwrap();
+    assert!(cfg.membership_on());
+    cfg.track_safety = true;
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 14, "TOML-built membership config must complete");
+    assert!(r.config_commits >= 6, "join + leave must both settle: {}", r.config_commits);
+    let report = cabinet::bench::safety_check(r.safety.as_ref().unwrap());
+    assert!(report.is_clean(), "{:?}", report.violations);
+    assert!(report.epochs_checked >= 6);
+    assert!(report.evidence_checked > 0);
+}
+
 /// The `[sharding]` table round-trips through the TOML config path, a
 /// TOML-built sharded run completes with per-group rollups, and invalid
 /// layouts are rejected.

@@ -1,0 +1,149 @@
+//! Randomized membership-under-chaos sweep: join/leave/replace schedules
+//! layered over rotating nemesis partition kinds in the deterministic sim,
+//! with PreVote on half the schedules and a fast linearizable read path on
+//! half. Every schedule runs the full `bench::safety` checker — prefix
+//! consistency, single leader per term, monotone commits, read
+//! linearizability, weighted-quorum commit evidence (both halves during
+//! joint phases), and config-epoch coherence by log index.
+//!
+//! Membership ops are best-effort under chaos (an op fired into a window
+//! with no reachable leader is dropped, never retried), so the hard
+//! per-seed criterion is checker cleanliness + every client round
+//! committing; epoch progress is asserted in aggregate across the sweep.
+
+use cabinet::net::nemesis::{
+    MembershipEvent, MembershipKind, MembershipSpec, NemesisSpec, PartitionKind, PartitionSpec,
+};
+use cabinet::net::rng::splitmix64;
+use cabinet::sim::{run, Protocol, ReadPath, SimConfig, WorkloadSpec};
+use cabinet::workload::Workload;
+
+/// One randomized schedule: returns this seed's config-entry commit count
+/// (0 when chaos swallowed the admin ops — legal, checked in aggregate).
+fn membership_schedule(seed: u64) -> u64 {
+    // Decorrelated schedule dimensions (same idiom as the consensus_safety
+    // sweep): interacting dimensions each take independent bits of a hashed
+    // seed so every op × partition-kind × PreVote combination appears.
+    let mut h = seed ^ 0x5EED_0F_CAB1_2357;
+    let bits = splitmix64(&mut h);
+    let pre_vote_on = bits & 1 == 1;
+    let kind_sel = (bits >> 1) & 3;
+    // half the schedules run a fast read path (25% readindex, 25% lease) —
+    // reads must stay linearizable across config epochs too
+    let read_path = match (bits >> 3) & 3 {
+        2 => ReadPath::ReadIndex,
+        3 => ReadPath::Lease,
+        _ => ReadPath::Log,
+    };
+    let op_sel = (bits >> 5) & 3;
+    let pipeline = 1 + ((bits >> 7) & 3) as usize;
+    // leave/replace always target a founding voter (slots 5–6 boot empty)
+    let victim = ((bits >> 9) % 5) as usize;
+
+    let n = 7;
+    let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, n, true);
+    c.rounds = 24;
+    c.seed = seed;
+    c.pipeline = pipeline;
+    c.pre_vote = pre_vote_on;
+    c.read_path = read_path;
+    c.initial_members = Some(5);
+    c.drain_rounds = 1 + (seed % 3) as usize;
+    c.join_warmup = seed % 3;
+    c.track_safety = true;
+    c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 300, records: 10_000 };
+
+    let first = 3 + (seed % 3);
+    let events = match op_sel {
+        0 => vec![MembershipEvent { round: first, kind: MembershipKind::Join(5) }],
+        1 => vec![MembershipEvent { round: first, kind: MembershipKind::Leave(victim) }],
+        2 => vec![MembershipEvent {
+            round: first,
+            kind: MembershipKind::Replace { leave: victim, join: 5 },
+        }],
+        // depth-2 schedule: a join settling while a leave starts exercises
+        // the admin queue's serialization under chaos
+        _ => vec![
+            MembershipEvent { round: first, kind: MembershipKind::Join(5) },
+            MembershipEvent { round: first + 6, kind: MembershipKind::Leave(victim) },
+        ],
+    };
+    c.membership = Some(MembershipSpec { events });
+    c.validate_membership().expect("sweep membership spec must be valid");
+
+    // rotating partition kind over a mid-run window, always among the
+    // founding voters so the cut actually bites
+    let kind = match kind_sel {
+        0 => PartitionKind::LeaderIsolation,
+        1 => PartitionKind::Followers { count: 2 },
+        2 => PartitionKind::Split { group: vec![4] },
+        _ => PartitionKind::OneWay { group: vec![3] },
+    };
+    let spec = NemesisSpec {
+        partitions: vec![PartitionSpec::new(1500.0, 4500.0, kind)],
+        drop_p: 0.01 + (seed % 5) as f64 * 0.01,
+        dup_p: 0.01 + (seed % 3) as f64 * 0.01,
+        reorder_p: 0.0,
+        reorder_max_ms: 0.0,
+    };
+    spec.validate(n).expect("sweep nemesis spec must be valid");
+    c.nemesis = Some(spec);
+
+    let r = run(&c);
+    assert_eq!(
+        r.rounds.len(),
+        c.rounds as usize,
+        "seed {seed}: every client round must commit through the chaos"
+    );
+    for (group, log) in r.safety_logs() {
+        let report = cabinet::bench::safety_check(log);
+        assert!(
+            report.is_clean(),
+            "seed {seed} (group {group:?}): {:?}",
+            report.violations
+        );
+        if r.config_commits > 0 {
+            assert!(
+                report.epochs_checked > 0,
+                "seed {seed}: config commits observed but no epoch evidence recorded"
+            );
+        }
+    }
+    r.config_commits
+}
+
+fn sweep(seeds: u64) {
+    let mut seeds_advanced = 0u64;
+    let mut total_commits = 0u64;
+    for seed in 0..seeds {
+        let commits = membership_schedule(seed);
+        if commits > 0 {
+            seeds_advanced += 1;
+        }
+        total_commits += commits;
+    }
+    // aggregate progress: chaos may swallow individual admin ops, but the
+    // sweep as a whole must actually exercise config changes — a floor far
+    // below the expected ~all-seeds rate, so only wholesale breakage trips
+    assert!(
+        seeds_advanced >= seeds / 4,
+        "only {seeds_advanced}/{seeds} schedules advanced a config epoch"
+    );
+    assert!(
+        total_commits >= seeds,
+        "too little config traffic across the sweep: {total_commits} commits"
+    );
+}
+
+#[test]
+fn randomized_membership_safety_sweep() {
+    sweep(128);
+}
+
+/// The long membership sweep for the scheduled CI `chaos` job:
+/// `cargo test --release -- --ignored membership_long_sweep`.
+#[test]
+#[ignore = "long membership sweep (512 seeds) — run by the scheduled CI chaos job"]
+fn membership_long_sweep() {
+    sweep(512);
+}

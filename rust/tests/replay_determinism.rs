@@ -170,6 +170,67 @@ fn sharded_different_seeds_diverge() {
 }
 
 #[test]
+fn membership_replay_bit_identical_at_both_depths() {
+    // Dynamic membership rides the same deterministic machinery: a run
+    // with a join/leave schedule (depth 1 and 4) replays bit-for-bit,
+    // including the config-entry commits interleaved with client rounds.
+    use cabinet::net::nemesis::{MembershipEvent, MembershipKind, MembershipSpec};
+    for depth in [1usize, 4] {
+        let mut c = base(Protocol::Cabinet { t: 1 }, 7, depth, 13);
+        c.rounds = 16;
+        c.initial_members = Some(5);
+        c.drain_rounds = 2;
+        c.join_warmup = 1;
+        c.membership = Some(MembershipSpec {
+            events: vec![
+                MembershipEvent { round: 3, kind: MembershipKind::Join(5) },
+                MembershipEvent { round: 9, kind: MembershipKind::Leave(1) },
+            ],
+        });
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.rounds.len(), 16, "depth {depth}");
+        assert!(a.config_commits > 0, "depth {depth}: schedule must commit configs");
+        assert_eq!(a.config_commits, b.config_commits, "depth {depth}");
+        assert_bit_identical(&a, &b, &format!("membership depth {depth}"));
+
+        // the schedule is a real knob: the same seed without it must take a
+        // different trajectory
+        let mut off = c.clone();
+        off.membership = None;
+        off.initial_members = None;
+        let plain = run(&off);
+        assert_ne!(
+            a.metrics_digest(),
+            plain.metrics_digest(),
+            "depth {depth}: membership schedule must change the trajectory"
+        );
+    }
+}
+
+#[test]
+fn membership_off_is_bitwise_the_fixed_cluster_driver() {
+    // The determinism guardrail for the membership refactor: with no
+    // founding restriction and no schedule, every membership branch is
+    // behind `cfg_boot` fast paths, so the default-config digests — the
+    // digests the whole pre-membership suite pins — must be reproduced
+    // bit-for-bit whatever the (then-inert) drain/warmup knobs hold.
+    for depth in [1usize, 4] {
+        let mut c = base(Protocol::Cabinet { t: 2 }, 11, depth, 7);
+        c.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+        c.kills = vec![KillSpec::new(4, 2, KillStrategy::Random)];
+        let stock = run(&c);
+        let mut knobbed_cfg = c.clone();
+        knobbed_cfg.drain_rounds = 9;
+        knobbed_cfg.join_warmup = 0;
+        let knobbed = run(&knobbed_cfg);
+        assert_bit_identical(&stock, &knobbed, &format!("membership-off depth {depth}"));
+        assert_eq!(stock.config_commits, 0);
+        assert_eq!(knobbed.config_commits, 0);
+    }
+}
+
+#[test]
 fn depth_changes_the_trajectory_but_not_the_commit_count() {
     // Depth is a real knob: depth 4 must take a different virtual-time
     // trajectory than depth 1 (same seed) while still committing every
