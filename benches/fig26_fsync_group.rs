@@ -1,0 +1,35 @@
+//! `cargo bench` target regenerating Fig 26 — the durable-WAL group-commit
+//! sweep (quick scale; run `cargo run --release --example figures -- fig26
+//! --paper` for the full version). Each row runs the pipelined driver with
+//! every node appending HardState + entry frames to its simulated segmented
+//! WAL, entry appends fsyncing once per `fsync_group`; a mid-run follower
+//! kill + restart recovers from the WAL instead of rebooting amnesiac. The
+//! acceptance shape: fsync_group=1 pays the full synchronous-write cost and
+//! the sweep buys the latency back, at identical committed rounds. Emits
+//! `BENCH_fig26_fsync_group.json` for the CI bench-check job.
+
+use cabinet::bench::{figures, quick_requested, BenchReport, Bencher, Scale};
+
+fn main() {
+    let quick = quick_requested();
+    let b = Bencher::quick();
+    let mut report = BenchReport::new(
+        "fig26_fsync_group",
+        "WAL group-commit sweep: off + fsync_group {1,8,64}; n=11 cab f20%, depth 4, kill+restart",
+        quick,
+    );
+    let mut last = None;
+    b.iter_rec(&mut report, "fig26_fsync_group", || {
+        last = Some(figures::fig26_fsync_group(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+    match report.write_to_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write bench report: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -28,6 +28,10 @@
 //! 6. **Config-epoch coherence** — every committed config entry decides one
 //!    (epoch, joint) pair per log index across all observers, and epochs
 //!    never regress along the log.
+//! 7. **One vote per term** — a voter grants at most one candidate in any
+//!    term (Raft's vote-persistence invariant). An amnesiac restart that
+//!    forgets `voted_for` and re-grants the same term to a second candidate
+//!    is exactly the double-vote the durable WAL (`storage::wal`) closes.
 //!
 //! The checker is pure data → verdict: the simulator collects the log when
 //! `SimConfig::track_safety` is set, the chaos harness in
@@ -54,6 +58,8 @@ pub struct SafetyReport {
     pub evidence_checked: usize,
     /// Distinct committed config entries validated for epoch coherence.
     pub epochs_checked: usize,
+    /// Vote grants validated for one-candidate-per-(term, voter).
+    pub votes_checked: usize,
 }
 
 impl SafetyReport {
@@ -231,6 +237,24 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         }
     }
 
+    // 7: one vote per term — each (term, voter) pair grants at most one
+    // candidate. Re-granting the *same* candidate is a legitimate reply
+    // retransmit; a different candidate is the restart-amnesia double vote.
+    let votes_checked = log.votes.len();
+    let mut granted: Vec<(u64, usize, usize)> = Vec::new();
+    for &(term, voter, candidate) in &log.votes {
+        match granted.iter().find(|(t, v, _)| *t == term && *v == voter) {
+            Some(&(_, _, prev)) if prev != candidate => {
+                violations.push(format!(
+                    "term {term}: node {voter} voted for both node {prev} and node \
+                     {candidate} (double vote — amnesiac restart?)"
+                ));
+            }
+            Some(_) => {} // duplicate grant to the same candidate is fine
+            None => granted.push((term, voter, candidate)),
+        }
+    }
+
     // 2: single leader per term.
     let mut by_term: Vec<(u64, usize)> = Vec::new();
     for &(term, node) in &log.leaders {
@@ -253,6 +277,7 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
         reads_checked,
         evidence_checked,
         epochs_checked,
+        votes_checked,
     }
 }
 
@@ -376,6 +401,30 @@ mod tests {
         assert_eq!(r.commits_checked, 0);
         assert_eq!(r.evidence_checked, 0);
         assert_eq!(r.epochs_checked, 0);
+        assert_eq!(r.votes_checked, 0);
+    }
+
+    #[test]
+    fn double_vote_in_one_term_flagged() {
+        // the restart-amnesia scenario: node 2 grants term 5 to candidate 0,
+        // reboots with voted_for forgotten, grants term 5 to candidate 1
+        let mut log = SafetyLog::new(3);
+        log.votes = vec![(5, 2, 0), (5, 2, 1)];
+        let r = check(&log);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("double vote"), "{:?}", r.violations);
+        assert_eq!(r.votes_checked, 2);
+    }
+
+    #[test]
+    fn repeated_grant_to_same_candidate_is_clean() {
+        // a retransmitted RequestVote legitimately re-grants the same
+        // candidate; distinct terms are independent decisions
+        let mut log = SafetyLog::new(3);
+        log.votes = vec![(5, 2, 0), (5, 2, 0), (6, 2, 1), (5, 1, 0)];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.votes_checked, 4);
     }
 
     fn evidence(index: u64, epoch: u64, acc: f64, ct: f64) -> crate::sim::CommitEvidence {

@@ -10,7 +10,8 @@ use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
 use crate::net::nemesis::{MembershipEvent, MembershipSpec, NemesisSpec, PartitionSpec};
 use crate::net::topology::ZoneAlloc;
 use crate::sim::{
-    DigestMode, Protocol, ReadPath, ReconfigSpec, RestartSpec, SimConfig, WorkloadSpec,
+    DigestMode, Protocol, ReadPath, ReconfigSpec, RestartSpec, SimConfig, StorageSpec,
+    WorkloadSpec,
 };
 use crate::workload::{ShardBy, Workload};
 
@@ -75,6 +76,14 @@ use crate::workload::{ShardBy, Workload};
 /// join_warmup = 4            # acked rounds before a joiner turns Active
 /// events = ["4=join:5", "10=leave:0", "16=replace:1>6"]
 ///                            # ROUND=join:ID | leave:ID | replace:OLD>NEW
+///
+/// [storage]
+/// wal = true                 # durable segmented WAL per node (off = the
+///                            # historical amnesiac restarts)
+/// fsync_group = 8            # entry appends per group-commit fsync (>= 1;
+///                            # HardState records always sync)
+/// fsync_ms = 0.5             # simulated fsync latency charged to the node
+/// torn_writes = false        # crash faults keep a corrupted partial tail
 /// ```
 pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
     let doc = toml::parse(text)?;
@@ -326,6 +335,33 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
         }
     }
 
+    if let Some(s) = doc.get("storage") {
+        let on = s.get("wal").and_then(|v| v.as_bool()).unwrap_or(true);
+        if on {
+            let mut spec = StorageSpec::default();
+            if let Some(g) = s.get("fsync_group").and_then(|v| v.as_int()) {
+                if g < 1 {
+                    bail!("[storage] fsync_group must be >= 1, got {g}");
+                }
+                spec.fsync_group = g as usize;
+            }
+            if let Some(ms) = s.get("fsync_ms").and_then(|v| v.as_float()) {
+                if !(ms >= 0.0) {
+                    bail!("[storage] fsync_ms must be >= 0, got {ms}");
+                }
+                spec.fsync_ms = ms;
+            }
+            spec.torn_writes =
+                s.get("torn_writes").and_then(|v| v.as_bool()).unwrap_or(false);
+            config.storage = Some(spec);
+        } else if s.get("fsync_group").is_some()
+            || s.get("fsync_ms").is_some()
+            || s.get("torn_writes").is_some()
+        {
+            bail!("[storage] wal = false cannot be combined with other storage knobs");
+        }
+    }
+
     if let Some(r) = doc.get("reconfig") {
         let rounds = r.get("rounds").and_then(|v| v.as_array());
         let ts = r.get("thresholds").and_then(|v| v.as_array());
@@ -386,6 +422,10 @@ restart_round = 22
 [reconfig]
 rounds = [20, 25]
 thresholds = [3, 1]
+
+[storage]
+fsync_group = 64
+fsync_ms = 0.25
 "#,
         )
         .unwrap();
@@ -402,6 +442,10 @@ thresholds = [3, 1]
         assert!(cfg.contention.is_some());
         assert_eq!(cfg.reconfigs.len(), 2);
         assert_eq!(cfg.digest_mode, DigestMode::Sample);
+        let st = cfg.storage.expect("storage spec parsed");
+        assert_eq!(st.fsync_group, 64);
+        assert_eq!(st.fsync_ms, 0.25);
+        assert!(!st.torn_writes);
     }
 
     #[test]
@@ -437,6 +481,30 @@ thresholds = [3, 1]
             "[faults]\nrestart_kill_round = 9\nrestart_round = 4\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn storage_table_roundtrip_and_validation() {
+        let cfg = sim_config_from_toml(
+            "[storage]\nfsync_group = 1\nfsync_ms = 2\ntorn_writes = true\n",
+        )
+        .unwrap();
+        let st = cfg.storage.expect("storage parsed");
+        assert_eq!(st.fsync_group, 1);
+        assert_eq!(st.fsync_ms, 2.0);
+        assert!(st.torn_writes);
+        // a bare table turns the WAL on with the stock group-commit knobs
+        let st = sim_config_from_toml("[storage]\n").unwrap().storage.expect("defaults");
+        assert_eq!(st.fsync_group, 8);
+        assert!(!st.torn_writes);
+        // wal = false is an explicit off switch — stray knobs under it are a
+        // config bug, not a silent no-op
+        assert!(sim_config_from_toml("[storage]\nwal = false\n").unwrap().storage.is_none());
+        assert!(sim_config_from_toml("[storage]\nwal = false\nfsync_group = 8\n").is_err());
+        assert!(sim_config_from_toml("[storage]\nfsync_group = 0\n").is_err());
+        assert!(sim_config_from_toml("[storage]\nfsync_ms = -0.5\n").is_err());
+        // no table at all = amnesiac restarts, preserving historical digests
+        assert!(sim_config_from_toml("rounds = 5\n").unwrap().storage.is_none());
     }
 
     #[test]

@@ -141,7 +141,15 @@ impl Log {
     /// retransmission can race a just-installed snapshot). Returns the new
     /// last index.
     pub fn splice(&mut self, prev_index: LogIndex, entries: &[Entry], weight: f64) -> LogIndex {
-        debug_assert!(prev_index <= self.last_index());
+        // A prev_index past our tail would push entries with gapped
+        // indices. The RPC path can't reach here (`matches()` gates it),
+        // but WAL replay calls `splice` on raw recovered records where a
+        // torn tail can orphan a later record's prefix — refuse the record
+        // instead of corrupting the log. (A debug_assert! compiles out in
+        // release, which is exactly the build recovery runs under.)
+        if prev_index > self.last_index() {
+            return self.last_index();
+        }
         let skip = (self.compacted_index.saturating_sub(prev_index) as usize).min(entries.len());
         let mut insert_at =
             (prev_index.max(self.compacted_index) - self.compacted_index) as usize;
@@ -325,6 +333,18 @@ mod tests {
         assert_eq!(last, 2);
         assert_eq!(log.term_at(2), Some(3));
         assert_eq!(log.term_at(3), None);
+    }
+
+    #[test]
+    fn splice_rejects_gapped_prev_index() {
+        let mut log = Log::new();
+        log.append(e(1), 1.0);
+        // prev_index=5 with last_index=1 would create indices 6.. over a
+        // hole — the guard must refuse it (release builds included)
+        let last = log.splice(5, &[e(2), e(2)], 1.0);
+        assert_eq!(last, 1, "gapped splice is a no-op");
+        assert_eq!(log.last_index(), 1);
+        assert_eq!(log.term_at(2), None);
     }
 
     #[test]

@@ -189,6 +189,17 @@ pub enum Output {
     /// A read could not be served here (no leader known, leadership lost
     /// mid-confirmation, or no committed term barrier yet) — retry.
     ReadFailed { id: u64 },
+    /// Durable mode only ([`Node::set_durable`]): `HardState{term,
+    /// voted_for}` changed. The driver must make it durable **before**
+    /// releasing any `Send` later in this step's output batch — a vote or
+    /// term adoption must never outrun its own durability (Raft §5.1), or
+    /// a restart re-grants the same term to a second candidate.
+    PersistHardState { term: Term, voted_for: Option<NodeId> },
+    /// Durable mode only: `entries` were appended after `prev_index` (a
+    /// follower splice or a leader self-append); `weight` is this node's
+    /// stored weight for the shipping round. Persist before releasing the
+    /// acknowledging `Send`s that follow in the batch.
+    PersistEntries { prev_index: LogIndex, weight: f64, entries: Vec<Entry> },
 }
 
 /// How a node obtains the replica-state payload when it takes a snapshot.
@@ -423,6 +434,14 @@ pub struct Node {
     lease_reads: u64,
     /// ReadIndex confirmation rounds this node closed as leader.
     readindex_rounds: u64,
+
+    // ---- durability (WAL-backed drivers) ---------------------------------
+    /// When true the node emits [`Output::PersistHardState`] /
+    /// [`Output::PersistEntries`] and the driver must complete them before
+    /// releasing any `Send` that follows in the same output batch
+    /// (persist-before-reply). Off by default — the historical in-memory
+    /// behavior, bit-identical outputs.
+    durable: bool,
 }
 
 impl Node {
@@ -483,6 +502,7 @@ impl Node {
             barrier_index: 0,
             lease_reads: 0,
             readindex_rounds: 0,
+            durable: false,
         }
     }
 
@@ -514,6 +534,100 @@ impl Node {
     /// leaves every historical code path untouched).
     pub fn set_read_path(&mut self, path: ReadPath) {
         self.read_path = path;
+    }
+
+    /// Enable durable (WAL-backed) mode: the node emits
+    /// [`Output::PersistHardState`] / [`Output::PersistEntries`] and the
+    /// driver must complete each before releasing any `Send` that follows
+    /// it in the same output batch (persist-before-reply). Off by default —
+    /// the historical in-memory behavior with bit-identical outputs.
+    pub fn set_durable(&mut self, on: bool) {
+        self.durable = on;
+    }
+
+    fn emit_hard_state(&mut self, out: &mut Vec<Output>) {
+        if self.durable {
+            out.push(Output::PersistHardState { term: self.term, voted_for: self.voted_for });
+        }
+    }
+
+    // ---- restart recovery (WAL replay) -----------------------------------
+    //
+    // The restore_* methods rebuild a freshly constructed node from its
+    // recovered WAL, in order: hard state, then the snapshot (if any), then
+    // every splice record oldest-first. They write nothing back to the WAL
+    // and emit no outputs — recovery is silent; the node re-enters the
+    // cluster as a follower and catches up through the normal protocol.
+
+    /// Adopt the durable `HardState{term, voted_for}`. Must run on a fresh
+    /// node, before any step — this is what closes the restart-amnesia
+    /// double-vote window.
+    pub fn restore_hard_state(&mut self, term: Term, voted_for: Option<NodeId>) {
+        debug_assert!(self.term == 0 && self.log.last_index() == 0, "restore on a fresh node");
+        self.term = term;
+        self.voted_for = voted_for;
+    }
+
+    /// Adopt a durable snapshot — the same state transition an incoming
+    /// `InstallSnapshot` applies, minus the RPC framing. Entries it covers
+    /// are *not* re-emitted as commits; the blob's `AppState` stands in.
+    pub fn restore_snapshot(&mut self, blob: SnapshotBlob) {
+        if blob.last_index <= self.log.last_compacted_index() {
+            return;
+        }
+        self.log.install_snapshot(blob.last_index, blob.last_term, blob.prefix_digest);
+        self.commit_index = self.commit_index.max(blob.last_index);
+        if blob.wclock >= self.my_wclock {
+            self.my_wclock = blob.wclock;
+        }
+        if self.log.is_empty() {
+            if let Some(t) = blob.cabinet_t {
+                if let Ok(scheme) = WeightScheme::geometric(self.n, t) {
+                    self.mode = Mode::Cabinet { scheme };
+                }
+            }
+            if let Some(c) = &blob.config {
+                self.adopt_config(Arc::clone(c));
+            } else if !self.cfg_boot {
+                self.adopt_config(Arc::clone(&self.boot_config));
+            }
+        }
+        self.snapshot = Some(blob);
+    }
+
+    /// Replay one durable splice record. `Log::splice` is idempotent and
+    /// conflict-truncating, so replaying the record sequence oldest-first
+    /// reconstructs exactly the log the pre-crash sequence built; a record
+    /// orphaned by a torn tail (gapped `prev_index`) is refused by the
+    /// splice guard and skipped here.
+    pub fn restore_entries(&mut self, prev_index: LogIndex, weight: f64, entries: &[Entry]) {
+        if entries.is_empty() || prev_index > self.log.last_index() {
+            return;
+        }
+        let saw_config =
+            entries.iter().any(|e| matches!(e.payload, Payload::ConfigChange(_)));
+        self.log.splice(prev_index, entries, weight);
+        // mirror the follower append path: Reconfig adopts on append...
+        for e in entries {
+            if let Payload::Reconfig { new_t } = e.payload {
+                let m = if self.cfg_boot { self.n } else { self.config.voter_count() };
+                if let Ok(scheme) = WeightScheme::geometric(m, new_t) {
+                    self.mode = Mode::Cabinet { scheme };
+                }
+            }
+        }
+        // ...and so do membership configs (config-on-append, Raft §4.1)
+        if saw_config || !self.cfg_boot {
+            self.refresh_config_from_log();
+        }
+        // the record's round weight/clock is the freshest NewWeight this
+        // node had durably learned when it crashed
+        if let Some(last) = entries.last() {
+            if last.wclock >= self.my_wclock {
+                self.my_wclock = last.wclock;
+                self.my_weight = weight;
+            }
+        }
     }
 
     /// Lease length one confirmed probe round grants. Drivers must keep this
@@ -559,6 +673,9 @@ impl Node {
     }
     pub fn commit_index(&self) -> LogIndex {
         self.commit_index
+    }
+    pub fn voted_for(&self) -> Option<NodeId> {
+        self.voted_for
     }
     pub fn log(&self) -> &Log {
         &self.log
@@ -787,6 +904,9 @@ impl Node {
         self.term += 1;
         self.elections_started += 1;
         self.voted_for = Some(self.id);
+        // the self-vote must be durable before any RequestVote leaves, or
+        // a restarted candidate could vote for someone else in this term
+        self.emit_hard_state(out);
         self.votes.fill(false); // reuse, don't reallocate
         self.votes[self.id] = true;
         for peer in self.peers() {
@@ -866,6 +986,16 @@ impl Node {
             Entry { term: self.term, index: 0, payload: payload.clone(), wclock };
         let my_w = self.weight_assign[self.id];
         let idx = self.log.append(entry, my_w);
+        // the leader's own ack rides every AppendEntries it sends — its
+        // self-append must be durable before the broadcast below releases
+        if self.durable {
+            let e = self.log.get(idx).cloned().expect("entry just appended");
+            out.push(Output::PersistEntries {
+                prev_index: idx - 1,
+                weight: my_w,
+                entries: vec![e],
+            });
+        }
         self.match_index[self.id] = idx;
         self.register_inflight(idx);
         if reconfig {
@@ -1221,6 +1351,13 @@ impl Node {
         // membership-off runs never pay the backward scan.
         if saw_config || !self.cfg_boot {
             self.refresh_config_from_log();
+        }
+
+        // Persist-before-reply: the splice must be durable before the
+        // success ack below releases — the leader counts this node toward
+        // the commit quorum on that ack.
+        if self.durable && !entries.is_empty() {
+            out.push(Output::PersistEntries { prev_index: prev_log_index, weight, entries });
         }
 
         let new_commit = leader_commit.min(last);
@@ -1879,6 +2016,11 @@ impl Node {
             && (self.cfg_boot || self.config.involves(candidate));
         if granted {
             self.voted_for = Some(candidate);
+            // persist-before-reply: the grant must be durable before the
+            // reply below releases — this is the restart-amnesia
+            // double-vote window (lose the vote, restart, grant the same
+            // term to a second candidate, elect two leaders)
+            self.emit_hard_state(out);
             out.push(Output::ResetElectionTimer);
         }
         out.push(Output::Send(
@@ -2008,6 +2150,14 @@ impl Node {
             Entry { term: self.term, index: 0, payload: Payload::Noop, wclock: self.wclock },
             my_w,
         );
+        if self.durable {
+            let e = self.log.get(idx).cloned().expect("barrier just appended");
+            out.push(Output::PersistEntries {
+                prev_index: idx - 1,
+                weight: my_w,
+                entries: vec![e],
+            });
+        }
         self.match_index[self.id] = idx;
         self.register_inflight(idx);
         // ReadIndex is only valid once this barrier commits (§6.4 step 1)
@@ -2017,12 +2167,18 @@ impl Node {
 
     fn become_follower(&mut self, term: Term, out: &mut Vec<Output>) {
         let was_leader = self.role == Role::Leader;
-        if term > self.term {
+        let adopted_term = term > self.term;
+        if adopted_term {
             self.voted_for = None;
         }
         self.term = term;
         self.role = Role::Follower;
         self.prevote_active = false;
+        if adopted_term {
+            // the adopted term gates which votes we may grant — it must be
+            // durable before any reply the caller pushes after us
+            self.emit_hard_state(out);
+        }
         // retreat-on-conflict: any in-flight rounds die with the leadership
         self.inflight.clear();
         // ... and so do outstanding read-confirmation rounds and the lease:

@@ -13,8 +13,9 @@
 //! Reports are per (group, node): [`NodeReport::group`].
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -24,6 +25,7 @@ use crate::consensus::message::{
 use crate::consensus::node::{AdminCmd, Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 use crate::live::apply::{empty_state, ApplyReq};
 use crate::net::rng::Rng;
+use crate::storage::wal::{FsDisk, HardState, Wal, WalConfig};
 use crate::workload::YcsbBatch;
 
 /// Work items for an applier thread, processed strictly in commit order.
@@ -179,6 +181,21 @@ pub struct LiveMembership {
     pub join_warmup: u64,
 }
 
+/// Durable storage for a live cluster: every (node, group) replica keeps a
+/// segmented WAL (`storage::wal`) under `dir/node-<id>/g<group>/` on real
+/// files, recovered at thread start. A cluster restarted over the same
+/// directory comes back with its `HardState{term, voted_for}`, log and
+/// latest snapshot intact — the kill-and-recover path. Thread exit never
+/// issues a final fsync: any exit is modeled as `kill -9`, so durability
+/// comes only from the persist-before-reply fsyncs on the hot path
+/// (HardState records always sync; entry appends group-commit every
+/// `fsync_group` records).
+#[derive(Clone, Debug)]
+pub struct LiveStorage {
+    pub dir: PathBuf,
+    pub fsync_group: usize,
+}
+
 /// Link filter between node threads — the live runtime's nemesis hook.
 /// Every `Output::Send` (from every group — links are physical) consults it
 /// before crossing a channel; a blocked link silently drops the message,
@@ -195,12 +212,16 @@ impl LinkTable {
         LinkTable { n, blocked: RwLock::new(vec![false; n * n]) }
     }
 
+    // A panicking node thread poisons the lock it held; the flag matrix is
+    // plain bools (every interleaving leaves it valid), so surviving threads
+    // recover the guard instead of cascading the panic across the cluster.
     fn allowed(&self, from: NodeId, to: NodeId) -> bool {
-        !self.blocked.read().expect("link table poisoned")[from * self.n + to]
+        !self.blocked.read().unwrap_or_else(PoisonError::into_inner)[from * self.n + to]
     }
 
     fn set(&self, from: NodeId, to: NodeId, blocked: bool) {
-        self.blocked.write().expect("link table poisoned")[from * self.n + to] = blocked;
+        self.blocked.write().unwrap_or_else(PoisonError::into_inner)[from * self.n + to] =
+            blocked;
     }
 }
 
@@ -324,7 +345,25 @@ impl LiveCluster {
     ) -> LiveCluster {
         Self::start_inner(
             n, groups, mode, timers, apply_tx, seed, snapshot_every, pre_vote, read_path,
-            lease_drift_ms, None,
+            lease_drift_ms, None, None,
+        )
+    }
+
+    /// Start a cluster with durable storage: every replica journals
+    /// `HardState` and log entries to a segmented WAL under `storage.dir`
+    /// before replying, and recovers from it at start. Starting a second
+    /// cluster over the same directory is the crash-recovery path — nodes
+    /// come back remembering their term, vote and log instead of amnesiac.
+    pub fn start_durable(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        seed: u64,
+        storage: LiveStorage,
+    ) -> LiveCluster {
+        Self::start_inner(
+            n, 1, mode, timers, None, seed, None, false, ReadPath::Log, 40.0, None,
+            Some(storage),
         )
     }
 
@@ -348,7 +387,7 @@ impl LiveCluster {
         assert!(membership.drain_rounds >= 1, "drain_rounds must be >= 1");
         Self::start_inner(
             n, 1, mode, timers, None, seed, None, pre_vote, ReadPath::Log, 40.0,
-            Some(membership),
+            Some(membership), None,
         )
     }
 
@@ -365,6 +404,7 @@ impl LiveCluster {
         read_path: ReadPath,
         lease_drift_ms: f64,
         membership: Option<LiveMembership>,
+        storage: Option<LiveStorage>,
     ) -> LiveCluster {
         assert!(groups >= 1 && groups <= n, "groups must be in 1..=n");
         let (event_tx, event_rx) = channel::<LiveEvent>();
@@ -384,12 +424,14 @@ impl LiveCluster {
             let event_tx = event_tx.clone();
             let apply_tx = apply_tx.clone();
             let mode = mode.clone();
+            let storage = storage.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("node-{id}"))
                 .spawn(move || {
                     node_loop(
                         id, n, groups, mode, timers, rx, peers, links, event_tx, apply_tx,
                         seed, snapshot_every, pre_vote, read_path, lease_drift_ms, membership,
+                        storage,
                     )
                 })
                 .expect("spawn node");
@@ -435,7 +477,8 @@ impl LiveCluster {
 
     /// Restore every link.
     pub fn heal(&self) {
-        let mut blocked = self.links.blocked.write().expect("link table poisoned");
+        let mut blocked =
+            self.links.blocked.write().unwrap_or_else(PoisonError::into_inner);
         blocked.fill(false);
     }
 
@@ -761,6 +804,7 @@ fn node_loop(
     read_path: ReadPath,
     lease_drift_ms: f64,
     membership: Option<LiveMembership>,
+    storage: Option<LiveStorage>,
 ) -> Vec<NodeReport> {
     // one replica per group, all hosted on this thread (Multi-Raft layout)
     let mut nodes: Vec<Node> = (0..groups)
@@ -791,6 +835,29 @@ fn node_loop(
             node
         })
         .collect();
+    // durable storage: one WAL per hosted replica, recovered before the
+    // loop starts — restarting a cluster over the same directory is the
+    // crash-recovery path (HardState, snapshot and log come back)
+    let mut wals: Vec<Option<Wal<FsDisk>>> = (0..groups)
+        .map(|g| {
+            storage.as_ref().map(|s| {
+                let dir = s.dir.join(format!("node-{id}")).join(format!("g{g}"));
+                let disk = FsDisk::open(dir).expect("open wal dir");
+                let cfg = WalConfig { fsync_group: s.fsync_group, ..WalConfig::default() };
+                let (wal, rec) = Wal::open(disk, cfg);
+                let node = &mut nodes[g];
+                node.set_durable(true);
+                node.restore_hard_state(rec.hard_state.term, rec.hard_state.voted_for);
+                if let Some(blob) = rec.snapshot.clone() {
+                    node.restore_snapshot(blob);
+                }
+                for (prev, w, es) in &rec.splices {
+                    node.restore_entries(*prev, *w, es);
+                }
+                wal
+            })
+        })
+        .collect();
     // the node's sans-io clock: ms since this thread started (all lease
     // decisions are relative, so per-node epochs are fine)
     let epoch = Instant::now();
@@ -819,7 +886,8 @@ fn node_loop(
                               committed: &mut [usize],
                               election_deadline: &mut [Instant],
                               heartbeat_deadline: &mut [Option<Instant>],
-                              rng: &mut Rng| {
+                              rng: &mut Rng,
+                              wals: &mut [Option<Wal<FsDisk>>]| {
         for o in outs {
             match o {
                 Output::Send(to, msg) => {
@@ -902,6 +970,20 @@ fn node_loop(
                         voters,
                     });
                 }
+                // Persist-before-reply on real files: outputs are handled
+                // in emission order and the node emits persist records
+                // before the replies they guard, so the append (and any
+                // fsync it triggers) lands before the Send crosses a channel
+                Output::PersistHardState { term, voted_for } => {
+                    if let Some(w) = wals[g].as_mut() {
+                        w.append_hard_state(HardState { term, voted_for });
+                    }
+                }
+                Output::PersistEntries { prev_index, weight, entries } => {
+                    if let Some(w) = wals[g].as_mut() {
+                        w.append_splice(prev_index, weight, &entries);
+                    }
+                }
                 Output::SteppedDown | Output::ProposalRejected(_) => {}
             }
         }
@@ -936,14 +1018,14 @@ fn node_loop(
                 let outs = nodes[g].step(Input::Receive(from, env.msg));
                 handle_outputs(
                     g, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
                 );
             }
             Ok(LiveIn::Propose { group, payload }) => {
                 let outs = nodes[group].step(Input::Propose(payload));
                 handle_outputs(
                     group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
                 );
             }
             Ok(LiveIn::Read { group, id: rid }) => {
@@ -951,21 +1033,21 @@ fn node_loop(
                 let outs = nodes[group].step(Input::Read { id: rid });
                 handle_outputs(
                     group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
                 );
             }
             Ok(LiveIn::ForceElection(group)) => {
                 let outs = nodes[group].step(Input::ElectionTimeout);
                 handle_outputs(
                     group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
                 );
             }
             Ok(LiveIn::Admin { group, cmd }) => {
                 let outs = nodes[group].step(Input::Admin(cmd));
                 handle_outputs(
                     group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
                 );
             }
             Ok(LiveIn::SnapshotReady { group, through, state }) => {
@@ -983,6 +1065,7 @@ fn node_loop(
                             handle_outputs(
                                 g, outs, &appliers, &mut committed,
                                 &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                                &mut wals,
                             );
                         }
                     }
@@ -992,6 +1075,7 @@ fn node_loop(
                         handle_outputs(
                             g, outs, &appliers, &mut committed,
                             &mut election_deadline, &mut heartbeat_deadline, &mut rng,
+                            &mut wals,
                         );
                     } else if now >= election_deadline[g] {
                         // leaders don't run election timers; push it out
@@ -1000,6 +1084,11 @@ fn node_loop(
                 }
             }
             Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // persist any freshly captured snapshot and re-append the retained
+        // log tail so the prune loses nothing (no-op when storage is off)
+        for g in 0..groups {
+            persist_snapshot_fs(&nodes[g], &mut wals[g]);
         }
     }
 
@@ -1030,6 +1119,23 @@ fn node_loop(
             }
         })
         .collect()
+}
+
+/// Persist a freshly captured snapshot to this replica's WAL: the blob file
+/// goes down durably, older segments are pruned, and the log tail the node
+/// still retains past the snapshot is re-appended so the prune loses
+/// nothing. No-op when storage is off or no new snapshot exists.
+fn persist_snapshot_fs(node: &Node, wal: &mut Option<Wal<FsDisk>>) {
+    let Some(w) = wal.as_mut() else { return };
+    let Some(blob) = node.snapshot() else { return };
+    if blob.last_index <= w.snapshot_index() {
+        return;
+    }
+    w.record_snapshot(blob);
+    let tail = node.log().slice(blob.last_index, node.log().last_index());
+    if !tail.is_empty() {
+        w.append_splice(blob.last_index, node.my_weight(), &tail);
+    }
 }
 
 /// Convenience: map of per-(group, node) final digests (for convergence
@@ -1317,6 +1423,53 @@ mod tests {
             .filter(|r| final_voters.contains(&r.id) && r.commit_index >= 9)
             .count();
         assert!(caught_up >= 3, "new voter set must converge: {reports:?}");
+    }
+
+    #[test]
+    fn live_kill_and_recover_from_wal() {
+        // Kill-and-recover on real files: commit through a WAL-backed
+        // cluster, tear it down (thread exit never syncs — any exit is
+        // kill -9; fsync_group = 1 makes every append durable), then start
+        // a second cluster over the same directory. Recovery must bring
+        // the log back — the new leader's noop barrier lands *above* it —
+        // and the recovered HardState keeps terms monotonic instead of
+        // resetting to the amnesiac zero.
+        let dir = std::env::temp_dir().join(format!("cabinet-live-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let storage = LiveStorage { dir: dir.clone(), fsync_group: 1 };
+
+        let cluster =
+            LiveCluster::start_durable(3, Mode::Raft, LiveTimers::default(), 13, storage.clone());
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        for i in 0..3u8 {
+            cluster.propose(leader, Payload::Bytes(Arc::new(vec![i])));
+        }
+        // noop barrier (1) + 3 entries → index 4
+        assert!(cluster.wait_for_round(4, Duration::from_secs(5)).is_some());
+        std::thread::sleep(Duration::from_millis(200));
+        let reports = cluster.shutdown();
+        let pre_crash_term = reports.iter().map(|r| r.term).max().unwrap();
+        assert!(pre_crash_term >= 1);
+
+        let cluster =
+            LiveCluster::start_durable(3, Mode::Raft, LiveTimers::default(), 14, storage);
+        cluster.force_election(1);
+        cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader after recovery");
+        // an amnesiac reboot would place the barrier at index 1; recovery
+        // places it at recovered-last-index + 1 = 5
+        assert!(
+            cluster.wait_for_round(5, Duration::from_secs(10)).is_some(),
+            "post-recovery barrier must commit above the recovered log"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+        let reports = cluster.shutdown();
+        assert!(
+            reports.iter().map(|r| r.term).max().unwrap() > pre_crash_term,
+            "recovered terms must advance past the pre-crash term, not reset: {reports:?}"
+        );
+        assert!(reports.iter().any(|r| r.commit_index >= 5), "{reports:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

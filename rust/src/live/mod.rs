@@ -27,4 +27,6 @@ pub mod apply;
 pub mod cluster;
 
 pub use apply::{ApplyService, Backend};
-pub use cluster::{digest_map, LiveCluster, LiveEvent, LiveMembership, LiveTimers, NodeReport};
+pub use cluster::{
+    digest_map, LiveCluster, LiveEvent, LiveMembership, LiveStorage, LiveTimers, NodeReport,
+};

@@ -64,6 +64,7 @@ USAGE:
               [--nemesis-reorder-ms M]
               [--members K] [--drain-rounds D] [--join-warmup W]
               [--join R=ID]... [--leave R=ID]... [--replace R=OLD>NEW]...
+              [--wal] [--fsync-group G] [--fsync-ms M] [--torn-writes]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts
@@ -112,6 +113,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig23" => vec![figures::fig23_read_paths(scale)],
         "fig24" => vec![figures::fig24_sharding(scale)],
         "fig25" => vec![figures::fig25_membership(scale)],
+        "fig26" => vec![figures::fig26_fsync_group(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -157,6 +159,30 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         }
         if has_flag(&mut args, "--pre-vote") {
             c.pre_vote = true;
+        }
+        {
+            use cabinet::sim::StorageSpec;
+            let wal = has_flag(&mut args, "--wal");
+            let group = flag(&mut args, "--fsync-group");
+            let fsync_ms = flag(&mut args, "--fsync-ms");
+            let torn = has_flag(&mut args, "--torn-writes");
+            if wal || group.is_some() || fsync_ms.is_some() || torn {
+                let mut spec = StorageSpec::default();
+                if let Some(g) = group {
+                    spec.fsync_group = g.parse()?;
+                    if spec.fsync_group < 1 {
+                        bail!("--fsync-group must be >= 1");
+                    }
+                }
+                if let Some(ms) = fsync_ms {
+                    spec.fsync_ms = ms.parse()?;
+                    if spec.fsync_ms < 0.0 {
+                        bail!("--fsync-ms must be >= 0");
+                    }
+                }
+                spec.torn_writes = torn;
+                c.storage = Some(spec);
+            }
         }
         if let Some(g) = flag(&mut args, "--groups") {
             // validated below (with --shard-by and --workload settled) via
@@ -276,6 +302,7 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
     if config.nemesis.is_some()
         || !matches!(config.read_path, ReadPath::Log)
         || config.membership_on()
+        || config.storage.map_or(false, |s| s.torn_writes)
     {
         config.track_safety = true;
     }
@@ -364,6 +391,12 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         println!(
             "snapshots:  taken {}  installed {}  max retained log {}",
             r.snapshots_taken, r.snapshots_installed, r.max_retained_log
+        );
+    }
+    if config.storage.is_some() {
+        println!(
+            "wal:        {} appends  {} fsyncs  {} recoveries ({} entries replayed)",
+            r.wal_appends, r.wal_fsyncs, r.wal_recoveries, r.wal_recovered_entries
         );
     }
     if let Some(ok) = r.digests_match {

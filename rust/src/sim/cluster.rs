@@ -119,6 +119,34 @@ pub struct RestartSpec {
     pub restart_round: u64,
 }
 
+/// Durable-storage model (`[storage]` in the TOML config): every node
+/// writes a segmented WAL (`storage::wal`) on a simulated per-node disk.
+/// Restarts then recover `HardState{term, voted_for}`, the log and the
+/// latest snapshot from that disk instead of booting fresh — closing the
+/// restart-amnesia double-vote window [`RestartSpec`] documents. `None` =
+/// the historical in-memory behavior, bit-identical digests.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageSpec {
+    /// Entry appends batched per group-commit fsync (1 = sync every
+    /// append; HardState records always sync). Swept 1/8/64 by fig 26.
+    pub fsync_group: usize,
+    /// Simulated fsync latency (ms) charged to the persisting node: every
+    /// `Send` released after a synced persist in the same step is delayed
+    /// by this much (persist-before-reply).
+    pub fsync_ms: f64,
+    /// Crash faults: a killed node's unsynced WAL tail is partially kept —
+    /// possibly with a corrupted byte — instead of cleanly dropped, so
+    /// recovery must truncate a torn tail (drawn from a dedicated forked
+    /// RNG stream; off = clean power cuts).
+    pub torn_writes: bool,
+}
+
+impl Default for StorageSpec {
+    fn default() -> Self {
+        StorageSpec { fsync_group: 8, fsync_ms: 0.5, torn_writes: false }
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -152,6 +180,9 @@ pub struct SimConfig {
     /// Optional kill-and-restart of one follower (Fig. 21 scenario),
     /// applied in every group.
     pub restart: Option<RestartSpec>,
+    /// Durable-storage model: per-node simulated WAL + crash recovery.
+    /// None = the historical in-memory behavior (restarts are amnesiac).
+    pub storage: Option<StorageSpec>,
     /// Adversarial network schedule (partitions, loss, duplication,
     /// reordering). None = the historical clean network. Each affected
     /// group's nemesis draws from its own forked RNG stream, so enabling it
@@ -263,6 +294,11 @@ pub struct SafetyLog {
     /// joint). Sorted by index, epochs must be non-decreasing and each
     /// index must decide one (epoch, joint) pair.
     pub config_epochs: Vec<(u64, u64, bool)>,
+    /// Every vote grant observed on the wire: (term, voter, candidate).
+    /// The double-vote checker demands one candidate per (term, voter) —
+    /// an amnesiac restart (no WAL) that re-grants the same term to a
+    /// different candidate is a safety violation.
+    pub votes: Vec<(u64, NodeId, NodeId)>,
 }
 
 impl SafetyLog {
@@ -274,6 +310,7 @@ impl SafetyLog {
             reads: Vec::new(),
             commit_evidence: Vec::new(),
             config_epochs: Vec::new(),
+            votes: Vec::new(),
         }
     }
 }
@@ -304,6 +341,7 @@ impl SimConfig {
             pipeline: 1,
             snapshot_every: None,
             restart: None,
+            storage: None,
             nemesis: None,
             nemesis_groups: None,
             pre_vote: false,
@@ -523,6 +561,17 @@ pub struct SimResult {
     /// across groups — 0 on fixed-membership runs, and then excluded from
     /// the metrics digest (the replay-determinism guardrail).
     pub config_commits: u64,
+    /// WAL records appended across all nodes (0 unless `storage` is set,
+    /// and then excluded from the metrics digest — the same guardrail).
+    pub wal_appends: u64,
+    /// fsyncs the WALs issued (group commit batches entry appends; every
+    /// HardState append forces one).
+    pub wal_fsyncs: u64,
+    /// Restarts that recovered from the simulated disk instead of booting
+    /// amnesiac.
+    pub wal_recoveries: u64,
+    /// Log entries replayed from recovered WAL splice records.
+    pub wal_recovered_entries: u64,
 }
 
 impl SimResult {
@@ -570,6 +619,10 @@ impl SimResult {
             read_done_ms: 0.0,
             messages_delivered: 0,
             config_commits: 0,
+            wal_appends: 0,
+            wal_fsyncs: 0,
+            wal_recoveries: 0,
+            wal_recovered_entries: 0,
         }
     }
 
@@ -691,6 +744,14 @@ impl SimResult {
         // pre-membership builds (the replay-determinism guardrail).
         if self.config_commits > 0 {
             h.write_u64(self.config_commits);
+        }
+        // WAL counters fold in only when a WAL actually ran, so storage-off
+        // digests stay bit-identical to pre-WAL builds (same guardrail).
+        if self.wal_appends > 0 {
+            h.write_u64(self.wal_appends);
+            h.write_u64(self.wal_fsyncs);
+            h.write_u64(self.wal_recoveries);
+            h.write_u64(self.wal_recovered_entries);
         }
         // Per-group rollups fold in only on sharded runs (`group_stats` is
         // empty for `groups = 1`), so single-group digests stay bit-identical
@@ -838,6 +899,10 @@ fn merge_sharded(config: &SimConfig, outcomes: Vec<GroupOutcome>) -> SimResult {
         agg.read_done_ms = agg.read_done_ms.max(r.read_done_ms);
         agg.messages_delivered += r.messages_delivered;
         agg.config_commits += r.config_commits;
+        agg.wal_appends += r.wal_appends;
+        agg.wal_fsyncs += r.wal_fsyncs;
+        agg.wal_recoveries += r.wal_recoveries;
+        agg.wal_recovered_entries += r.wal_recovered_entries;
     }
     read_latencies.sort_by(|a, b| a.total_cmp(b));
     crate::sim::group::fold_read_latencies(&mut agg, &read_latencies);

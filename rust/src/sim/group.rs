@@ -34,6 +34,7 @@ use crate::sim::cluster::{
     SimConfig, SimResult, WorkloadSpec,
 };
 use crate::sim::event::EventQueue;
+use crate::storage::wal::{HardState, MemDisk, Wal, WalConfig};
 use crate::storage::{DocStore, RelStore};
 use crate::workload::shard::warehouse_range;
 use crate::workload::ycsb::{OP_READ, OP_SCAN};
@@ -367,6 +368,18 @@ pub(crate) struct GroupEngine {
     restart_victim: Option<NodeId>,
     max_retained: u64,
 
+    /// Per-node simulated WALs (`SimConfig::storage`): every slot holds a
+    /// `Wal<MemDisk>` when durable storage is on, `None` otherwise. A
+    /// restarted node recovers from its entry instead of booting amnesiac.
+    wals: Vec<Option<Wal<MemDisk>>>,
+    /// Torn-write fault stream (fork 8g+6) — forked only when
+    /// `storage.torn_writes` is set, so fault-free runs draw nothing new.
+    wal_fault_rng: Option<Rng>,
+    wal_appends: u64,
+    wal_fsyncs: u64,
+    wal_recoveries: u64,
+    wal_recovered_entries: u64,
+
     /// Digest-tracked replica stores (one shard's state per group).
     tracked: Vec<usize>,
     doc_stores: Vec<DocStore>,
@@ -459,6 +472,20 @@ impl GroupEngine {
             None
         };
         let safety = if config.track_safety { Some(SafetyLog::new(n)) } else { None };
+        // stream 6 exists only when crash faults can tear a WAL tail — a
+        // fresh stream must never perturb the historical draw sequence
+        let wal_fault_rng = match &config.storage {
+            Some(s) if s.torn_writes => Some(root_rng.fork(base + 6)),
+            _ => None,
+        };
+        let wals: Vec<Option<Wal<MemDisk>>> = (0..n)
+            .map(|_| {
+                config.storage.as_ref().map(|s| {
+                    let cfg = WalConfig { fsync_group: s.fsync_group, ..WalConfig::default() };
+                    Wal::open(MemDisk::new(), cfg).0
+                })
+            })
+            .collect();
 
         let membership_on = config.membership_on();
         let founding = config.initial_members.unwrap_or(n).min(n);
@@ -477,6 +504,7 @@ impl GroupEngine {
                 node.set_pre_vote(config.pre_vote);
                 node.set_read_path(config.read_path);
                 node.set_lease_duration_ms(config.lease_duration_ms());
+                node.set_durable(config.storage.is_some());
                 if membership_on {
                     node.set_drain_rounds(config.drain_rounds);
                     node.set_join_warmup(config.join_warmup);
@@ -543,6 +571,12 @@ impl GroupEngine {
             restart_pending: config.restart,
             restart_victim: None,
             max_retained: 0,
+            wals,
+            wal_fault_rng,
+            wal_appends: 0,
+            wal_fsyncs: 0,
+            wal_recoveries: 0,
+            wal_recovered_entries: 0,
             tracked,
             doc_stores,
             rel_stores,
@@ -934,6 +968,31 @@ impl GroupEngine {
                     // still live — hold its vote for one full election timeout
                     fresh.hold_votes_until_timeout();
                 }
+                // Durable storage: crash the simulated disk (unsynced tail
+                // lost; torn-write faults may keep a corrupted partial
+                // tail), recover the WAL, and replay HardState + snapshot +
+                // log into the fresh node — the double-vote fix. Storage
+                // off keeps the historical amnesiac reboot, draw-for-draw.
+                if let Some(wal) = self.wals[v].take() {
+                    let cfg = WalConfig {
+                        fsync_group: self.config.storage.map_or(8, |s| s.fsync_group),
+                        ..WalConfig::default()
+                    };
+                    let mut disk = wal.into_disk();
+                    disk.crash(self.wal_fault_rng.as_mut());
+                    let (wal, rec) = Wal::open(disk, cfg);
+                    fresh.set_durable(true);
+                    fresh.restore_hard_state(rec.hard_state.term, rec.hard_state.voted_for);
+                    if let Some(blob) = rec.snapshot.clone() {
+                        fresh.restore_snapshot(blob);
+                    }
+                    for (prev, w, es) in &rec.splices {
+                        fresh.restore_entries(*prev, *w, es);
+                    }
+                    self.wal_recoveries += 1;
+                    self.wal_recovered_entries += rec.entries() as u64;
+                    self.wals[v] = Some(wal);
+                }
                 self.nodes[v] = fresh;
                 // a fresh node legitimately re-commits from the bottom of
                 // the log — restart its safety-evidence stream with it, or
@@ -1088,6 +1147,33 @@ impl GroupEngine {
         speed
     }
 
+    /// Persist a freshly captured snapshot to `node`'s WAL (storage on):
+    /// the blob goes down durably, segments older than the current one are
+    /// pruned, and the log tail the node retains past the snapshot is
+    /// re-appended so the prune loses nothing. Returns the fsync latency
+    /// to charge this step (0 when storage is off or nothing new).
+    fn persist_snapshot(&mut self, node: NodeId) -> f64 {
+        let Some(wal) = self.wals[node].as_mut() else { return 0.0 };
+        let nd = &self.nodes[node];
+        let Some(blob) = nd.snapshot() else { return 0.0 };
+        if blob.last_index <= wal.snapshot_index() {
+            return 0.0;
+        }
+        let fsync_ms = self.config.storage.map_or(0.0, |s| s.fsync_ms);
+        wal.record_snapshot(blob);
+        self.wal_fsyncs += 1;
+        let mut charge = fsync_ms;
+        let tail = nd.log().slice(blob.last_index, nd.log().last_index());
+        if !tail.is_empty() {
+            self.wal_appends += 1;
+            if wal.append_splice(blob.last_index, nd.my_weight(), &tail) {
+                self.wal_fsyncs += 1;
+                charge += fsync_ms;
+            }
+        }
+        charge
+    }
+
     /// Route one node's outputs into the fabric; sends leave `extra_delay`
     /// ms after now (the node's service time). One implementation for both
     /// windows — only round retirement differs, and that branches on
@@ -1102,11 +1188,42 @@ impl GroupEngine {
     ) {
         let n = self.config.n();
         let now = q.now();
+        // Persist-before-reply: fsync latency accrued by this step's persist
+        // outputs (emitted before the replies they guard) delays every
+        // subsequent Send in the same batch. Zero when storage is off, so
+        // send delays are bit-identical to the historical ones.
+        let mut pdelay = self.persist_snapshot(node);
+        let fsync_ms = self.config.storage.map_or(0.0, |s| s.fsync_ms);
         for o in outs.drain(..) {
             match o {
+                Output::PersistHardState { term, voted_for } => {
+                    if let Some(wal) = self.wals[node].as_mut() {
+                        self.wal_appends += 1;
+                        if wal.append_hard_state(HardState { term, voted_for }) {
+                            self.wal_fsyncs += 1;
+                            pdelay += fsync_ms;
+                        }
+                    }
+                }
+                Output::PersistEntries { prev_index, weight, entries } => {
+                    if let Some(wal) = self.wals[node].as_mut() {
+                        self.wal_appends += 1;
+                        if wal.append_splice(prev_index, weight, &entries) {
+                            self.wal_fsyncs += 1;
+                            pdelay += fsync_ms;
+                        }
+                    }
+                }
                 Output::Send(to, msg) => {
                     if !self.alive[to] {
                         continue;
+                    }
+                    // wire-level vote-grant evidence for the double-vote
+                    // checker (informational — no timing effect)
+                    if let Message::RequestVoteReply { term, granted: true, .. } = msg {
+                        if let Some(sl) = self.safety.as_mut() {
+                            sl.votes.push((term, node, to));
+                        }
                     }
                     // link delay is sampled on the non-leader endpoint (the
                     // paper's netem delays are installed on follower nodes)
@@ -1130,13 +1247,13 @@ impl GroupEngine {
                     if fate.copies > 1 {
                         self.push(
                             q,
-                            extra_delay + lat + fate.extra_delay_ms[1],
+                            extra_delay + pdelay + lat + fate.extra_delay_ms[1],
                             Ev::Deliver { to, from: node, msg: msg.clone() },
                         );
                     }
                     self.push(
                         q,
-                        extra_delay + lat + fate.extra_delay_ms[0],
+                        extra_delay + pdelay + lat + fate.extra_delay_ms[0],
                         Ev::Deliver { to, from: node, msg },
                     );
                 }
@@ -1378,6 +1495,10 @@ impl GroupEngine {
         result.safety = self.safety.take();
         result.messages_delivered = self.messages;
         result.config_commits = self.config_commits;
+        result.wal_appends = self.wal_appends;
+        result.wal_fsyncs = self.wal_fsyncs;
+        result.wal_recoveries = self.wal_recoveries;
+        result.wal_recovered_entries = self.wal_recovered_entries;
         // one sorted pass serves both the per-group percentiles and (moved,
         // not cloned) the multi-group merge's pooled population
         let mut read_latencies = std::mem::take(&mut self.readctl.latencies);

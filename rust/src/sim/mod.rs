@@ -18,8 +18,10 @@
 //! heterogeneous zones, the adversarial nemesis layer (`SimConfig::nemesis`
 //! — partitions, loss, duplication, reordering; per-group or all-group
 //! scope via `SimConfig::nemesis_groups`), PreVote elections
-//! (`SimConfig::pre_vote`), and safety-evidence recording
-//! (`SimConfig::track_safety` → [`SafetyLog`], validated by
+//! (`SimConfig::pre_vote`), durable storage (`SimConfig::storage` →
+//! [`StorageSpec`]: per-node simulated WAL with group-commit fsync,
+//! torn-write faults and crash recovery on restart), and safety-evidence
+//! recording (`SimConfig::track_safety` → [`SafetyLog`], validated by
 //! `bench::safety::check` — per group on sharded runs).
 
 pub mod cluster;
@@ -28,6 +30,6 @@ pub(crate) mod group;
 
 pub use cluster::{
     run, CommitEvidence, DigestMode, GroupStat, Protocol, ReadPath, ReadRecord, ReconfigSpec,
-    RestartSpec, RoundStat, SafetyLog, SimConfig, SimResult, WorkloadSpec,
+    RestartSpec, RoundStat, SafetyLog, SimConfig, SimResult, StorageSpec, WorkloadSpec,
 };
 pub use event::{EventQueue, SimTime};

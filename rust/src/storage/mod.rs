@@ -1,14 +1,17 @@
 //! Follower state machines: the document store (MongoDB stand-in), the
-//! relational store (PostgreSQL stand-in), and the shared digest spec that
-//! ties the native mirrors to the AOT Pallas kernels bit-for-bit.
+//! relational store (PostgreSQL stand-in), the shared digest spec that
+//! ties the native mirrors to the AOT Pallas kernels bit-for-bit, and the
+//! durable segmented WAL ([`wal`]) behind `Node::set_durable`.
 
 pub mod digest;
 pub mod doc;
 pub mod rel;
+pub mod wal;
 
 pub use digest::DigestState;
 pub use doc::{ApplyResult, DocStore};
 pub use rel::{RelStore, TpccApplyResult};
+pub use wal::{Disk, FsDisk, HardState, MemDisk, Recovered, Wal, WalConfig};
 
 /// Little-endian wire helpers shared by the store snapshot codecs
 /// (`DocStore::to_snapshot_bytes` / `RelStore::to_snapshot_bytes`): the

@@ -531,6 +531,71 @@ fn fig25_membership_shape() {
     assert!(gap <= 5000.0, "availability gap {gap} ms exceeds one election timeout");
 }
 
+/// Fig. 26 acceptance shape: every row commits all 16 rounds through the
+/// mid-run kill + recovery; the WAL-off baseline touches no WAL; every
+/// WAL row recovers entries at the restart instead of rebooting amnesiac;
+/// and group commit is visible — fsync_group 64 issues strictly fewer
+/// fsyncs than syncing every append, and never pays a higher p99.
+#[test]
+fn fig26_fsync_group_shape() {
+    let t = figures::fig26_fsync_group(Scale::Quick);
+    assert_eq!(t.rows.len(), 4); // off, 1, 8, 64
+    for i in 0..4 {
+        assert_eq!(
+            t.num(i, "committed").unwrap(),
+            16.0,
+            "every round must commit through recovery: {:?}",
+            t.rows[i]
+        );
+    }
+    assert_eq!(t.num(0, "appends").unwrap(), 0.0, "WAL-off row must not append");
+    assert_eq!(t.num(0, "recovered").unwrap(), 0.0);
+    for i in 1..4 {
+        assert!(t.num(i, "appends").unwrap() > 0.0, "row {i} must append");
+        assert!(t.num(i, "fsyncs").unwrap() > 0.0, "row {i} must fsync");
+    }
+    // per-append durability recovers every committed entry at the restart;
+    // larger groups may legitimately lose the unsynced tail (the batching
+    // trade-off the figure exists to show) but never recover more
+    let r1 = t.num(1, "recovered").unwrap();
+    assert!(r1 > 0.0, "fsync_group 1 restart must replay entries: {:?}", t.rows[1]);
+    assert!(t.num(3, "recovered").unwrap() <= r1, "batching cannot recover more than group 1");
+    let every = t.num(1, "fsyncs").unwrap();
+    let batched = t.num(3, "fsyncs").unwrap();
+    assert!(
+        batched < every,
+        "group commit must batch fsyncs: {batched} at group 64 vs {every} at group 1"
+    );
+    assert!(
+        t.num(1, "p99_ms").unwrap() >= t.num(3, "p99_ms").unwrap(),
+        "per-append fsync must not beat group commit on p99: {:?} vs {:?}",
+        t.rows[1],
+        t.rows[3]
+    );
+}
+
+/// The `[storage]` table round-trips through the TOML config path into a
+/// running simulation: the WAL runs, the scheduled kill + restart recovers
+/// from the simulated disk, and every round still commits.
+#[test]
+fn storage_config_roundtrip_runs_and_recovers() {
+    let cfg = cabinet::config::sim_config_from_toml(
+        "protocol = \"cabinet\"\nt = 1\nn = 7\nrounds = 14\n\
+         [workload]\nkind = \"ycsb\"\nworkload = \"A\"\nbatch = 300\n\
+         [faults]\nrestart_kill_round = 3\nrestart_round = 8\n\
+         [storage]\nfsync_group = 1\nfsync_ms = 0.4\n",
+    )
+    .unwrap();
+    let st = cfg.storage.expect("storage spec parsed");
+    assert_eq!(st.fsync_group, 1);
+    assert!(!st.torn_writes);
+    let r = run(&cfg);
+    assert_eq!(r.rounds.len(), 14, "TOML-built storage config must complete");
+    assert!(r.wal_appends > 0 && r.wal_fsyncs > 0);
+    assert!(r.wal_recoveries >= 1, "the restart must recover from the WAL");
+    assert!(r.wal_recovered_entries > 0);
+}
+
 /// The `[membership]` table round-trips through the TOML config path into a
 /// running simulation: the scheduled join commits, epochs advance, and the
 /// checker validates the config decisions it recorded.

@@ -1,0 +1,230 @@
+//! Durable-WAL regression tests: the restart-amnesia double-vote bug, the
+//! persist-before-reply contract, crash recovery (clean and torn tails),
+//! and the determinism guardrails — a WAL-off run keeps the historical
+//! commit sequence bit-for-bit, and a WAL-on run replays bit-identically
+//! through kill + recover.
+
+use cabinet::bench::safety_check;
+use cabinet::consensus::message::Message;
+use cabinet::consensus::node::{Input, Mode, Node, Output};
+use cabinet::net::delay::DelayModel;
+use cabinet::sim::{
+    run, Protocol, RestartSpec, SafetyLog, SimConfig, SimResult, StorageSpec, WorkloadSpec,
+};
+use cabinet::storage::{HardState, MemDisk, Wal, WalConfig};
+use cabinet::workload::Workload;
+
+fn base(n: usize, depth: usize, seed: u64) -> SimConfig {
+    let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, n, true);
+    c.rounds = 12;
+    c.pipeline = depth;
+    c.seed = seed;
+    c.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+    c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 400, records: 10_000 };
+    c
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.commit_sequence_digest(), b.commit_sequence_digest(), "{what}: commit seq");
+    assert_eq!(a.metrics_digest(), b.metrics_digest(), "{what}: metrics");
+    let bits = |r: &SimResult| -> Vec<(u64, u64, u64, u64)> {
+        r.rounds
+            .iter()
+            .map(|s| (s.round, s.entry_index, s.start_ms.to_bits(), s.latency_ms.to_bits()))
+            .collect()
+    };
+    assert_eq!(bits(a), bits(b), "{what}: per-round bits");
+}
+
+/// First RequestVoteReply in an output batch, as (term, granted).
+fn vote_reply(outs: &[Output]) -> Option<(u64, bool)> {
+    outs.iter().find_map(|o| match o {
+        Output::Send(_, Message::RequestVoteReply { term, granted, .. }) => {
+            Some((*term, *granted))
+        }
+        _ => None,
+    })
+}
+
+/// The bug this PR exists for, at the node level. A voter grants term 5 to
+/// candidate 0 and crashes. Rebooting amnesiac (the pre-WAL behavior), it
+/// happily grants term 5 to candidate 1 as well — the double-vote checker
+/// must flag that (red). Recovering the same vote from the WAL instead, the
+/// reboot rejects the second candidate and the checker stays clean (green).
+#[test]
+fn double_vote_red_under_amnesia_green_with_wal_recovery() {
+    let n = 3;
+    let ask = |candidate: usize| {
+        Input::Receive(
+            candidate,
+            Message::RequestVote { term: 5, candidate, last_log_index: 0, last_log_term: 0 },
+        )
+    };
+
+    // -- before the crash: a durable voter grants term 5 to candidate 0
+    let mut voter = Node::new(2, n, Mode::Raft);
+    voter.set_durable(true);
+    let outs = voter.step(ask(0));
+    assert_eq!(vote_reply(&outs), Some((5, true)));
+    // persist-before-reply: the HardState record precedes the grant Send
+    let persist_at = outs
+        .iter()
+        .position(|o| {
+            matches!(o, Output::PersistHardState { term: 5, voted_for: Some(0) })
+        })
+        .expect("vote grant must emit its HardState record");
+    let send_at = outs
+        .iter()
+        .position(|o| matches!(o, Output::Send(_, Message::RequestVoteReply { .. })))
+        .unwrap();
+    assert!(persist_at < send_at, "HardState must be persisted before the reply is released");
+
+    // the driver's side of the contract: complete the persist in a WAL
+    let cfg = || WalConfig { fsync_group: 1, ..WalConfig::default() };
+    let (mut wal, _) = Wal::open(MemDisk::new(), cfg());
+    for o in &outs {
+        if let Output::PersistHardState { term, voted_for } = o {
+            wal.append_hard_state(HardState { term: *term, voted_for: *voted_for });
+        }
+    }
+    let mut votes = vec![(5u64, 2usize, 0usize)]; // wire evidence: term, voter, candidate
+
+    // -- amnesiac reboot (no WAL): the same term is re-granted to candidate 1
+    let mut amnesiac = Node::new(2, n, Mode::Raft);
+    let outs = amnesiac.step(ask(1));
+    assert_eq!(vote_reply(&outs), Some((5, true)), "amnesiac reboot re-grants term 5");
+    votes.push((5, 2, 1));
+    let mut log = SafetyLog::new(n);
+    log.votes = votes.clone();
+    let report = safety_check(&log);
+    assert!(
+        report.violations.iter().any(|v| v.contains("double vote")),
+        "checker must flag the amnesiac double vote, got {:?}",
+        report.violations
+    );
+
+    // -- WAL reboot: crash the disk, recover, and ask again
+    let mut disk = wal.into_disk();
+    disk.crash(None);
+    let (_, rec) = Wal::open(disk, cfg());
+    assert_eq!((rec.hard_state.term, rec.hard_state.voted_for), (5, Some(0)));
+    let mut recovered = Node::new(2, n, Mode::Raft);
+    recovered.set_durable(true);
+    recovered.restore_hard_state(rec.hard_state.term, rec.hard_state.voted_for);
+    let outs = recovered.step(ask(1));
+    assert_eq!(
+        vote_reply(&outs),
+        Some((5, false)),
+        "recovered voter must remember its term-5 vote"
+    );
+    let mut log = SafetyLog::new(n);
+    log.votes = vec![(5, 2, 0)]; // only the pre-crash grant ever hit the wire
+    assert!(safety_check(&log).is_clean(), "recovery keeps the vote history clean");
+}
+
+/// The compatibility guardrail: with fsync cost zeroed out the WAL is pure
+/// bookkeeping, so the commit sequence and every per-round bit must match
+/// the WAL-off run exactly — the persistence layer may not perturb the
+/// virtual-time trajectory the whole historical suite pins.
+#[test]
+fn zero_cost_wal_keeps_the_commit_sequence_bit_identical() {
+    for depth in [1usize, 4] {
+        let off_cfg = base(11, depth, 7);
+        let mut on_cfg = off_cfg.clone();
+        on_cfg.storage =
+            Some(StorageSpec { fsync_group: 8, fsync_ms: 0.0, torn_writes: false });
+        let off = run(&off_cfg);
+        let on = run(&on_cfg);
+        assert_eq!(off.wal_appends, 0, "depth {depth}: WAL-off run must not touch a WAL");
+        assert!(on.wal_appends > 0, "depth {depth}: WAL-on run must append");
+        assert_eq!(
+            off.commit_sequence_digest(),
+            on.commit_sequence_digest(),
+            "depth {depth}: zero-cost WAL changed the commit sequence"
+        );
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.rounds.iter().map(|s| (s.start_ms.to_bits(), s.latency_ms.to_bits())).collect()
+        };
+        assert_eq!(bits(&off), bits(&on), "depth {depth}: zero-cost WAL moved round timing");
+    }
+}
+
+/// A WAL-on run through kill + recover is still a pure function of
+/// (config, seed): bit-identical replay, every round commits, and the
+/// restarted node actually recovered entries from its log instead of
+/// rebooting blank.
+#[test]
+fn wal_restart_recovery_replays_bit_identical() {
+    for depth in [1usize, 4] {
+        let mut c = base(11, depth, 17);
+        c.rounds = 16;
+        // group 1 = every append durable, so the restarted node is
+        // guaranteed to have committed entries on disk to replay
+        c.storage = Some(StorageSpec { fsync_group: 1, fsync_ms: 0.5, torn_writes: false });
+        c.restart = Some(RestartSpec { kill_round: 3, restart_round: 8 });
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.rounds.len(), 16, "depth {depth}: every round commits through recovery");
+        assert!(a.wal_recoveries >= 1, "depth {depth}: restart must recover from the WAL");
+        assert!(a.wal_recovered_entries > 0, "depth {depth}: recovery must replay entries");
+        assert!(a.wal_fsyncs > 0, "depth {depth}");
+        assert_bit_identical(&a, &b, &format!("wal restart depth {depth}"));
+    }
+}
+
+/// Torn-write chaos: the crash keeps a corrupted partial tail on the
+/// simulated disk, recovery truncates to the last valid frame, and the run
+/// still commits every round with a clean safety report (single leader per
+/// term, no double votes, prefix-consistent commits) — deterministically.
+#[test]
+fn torn_write_crash_recovery_stays_safe() {
+    for seed in [5u64, 23] {
+        let mut c = base(7, 2, seed);
+        c.rounds = 16;
+        // group 8 leaves entry appends unsynced at the crash point — the
+        // torn fault has a real tail to corrupt
+        c.storage = Some(StorageSpec { fsync_group: 8, fsync_ms: 0.3, torn_writes: true });
+        c.restart = Some(RestartSpec { kill_round: 3, restart_round: 8 });
+        c.track_safety = true;
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.rounds.len(), 16, "seed {seed}: torn recovery must not stall commits");
+        assert!(a.wal_recoveries >= 1, "seed {seed}");
+        for (_, log) in a.safety_logs() {
+            let report = safety_check(log);
+            assert!(
+                report.is_clean(),
+                "seed {seed}: torn-write recovery violated safety: {:?}",
+                report.violations
+            );
+            assert!(report.votes_checked > 0, "seed {seed}: vote evidence must be recorded");
+        }
+        assert_bit_identical(&a, &b, &format!("torn writes seed {seed}"));
+    }
+}
+
+/// Group commit is a real knob: batching 64 appends per fsync must issue
+/// strictly fewer fsyncs than syncing every append, and the saved 0.5 ms
+/// charges must show up as a different virtual-time trajectory.
+#[test]
+fn group_commit_batches_fsyncs() {
+    let mut every = base(11, 4, 9);
+    every.storage = Some(StorageSpec { fsync_group: 1, fsync_ms: 0.5, torn_writes: false });
+    let mut batched = every.clone();
+    batched.storage = Some(StorageSpec { fsync_group: 64, fsync_ms: 0.5, torn_writes: false });
+    let a = run(&every);
+    let b = run(&batched);
+    assert_eq!(a.rounds.len(), 12);
+    assert_eq!(b.rounds.len(), 12);
+    assert!(
+        b.wal_fsyncs < a.wal_fsyncs,
+        "group commit must batch: {} fsyncs at group 64 vs {} at group 1",
+        b.wal_fsyncs,
+        a.wal_fsyncs
+    );
+    assert_ne!(
+        a.metrics_digest(),
+        b.metrics_digest(),
+        "the fsync-group knob must change the trajectory"
+    );
+}
