@@ -1,0 +1,450 @@
+//! The one effect interpreter: a sans-io `ReplicaHost` shared by every
+//! driver of the consensus state machine.
+//!
+//! [`crate::consensus::node::Node`] emits a `Vec<Output>` per step; what
+//! those outputs *mean* — send an RPC, fsync a WAL record, (re)arm a timer,
+//! hand a committed batch to the applier — used to be interpreted twice, in
+//! two hand-maintained loops: the simulator's arm-by-arm match in
+//! `sim::group` and the live runtime's `handle_outputs` closure in
+//! `live::cluster`. Every protocol extension (snapshots, reads, membership,
+//! the WAL) had to patch both in lockstep, and each new [`Output`] arm was
+//! a chance for the two to drift.
+//!
+//! [`ReplicaHost::drive`] is the single interpretation now. It consumes a
+//! step's outputs **in emission order** and translates each into one call
+//! on the [`Effects`] trait — the narrow waist a driver implements against
+//! its own fabric:
+//!
+//! * the simulator's adapter maps effects onto the virtual [`EventQueue`]
+//!   (latency models, nemesis fates, fork-ordered RNG streams), a
+//!   `Wal<MemDisk>` with virtual fsync latency, and the harness-level
+//!   safety/metrics bookkeeping;
+//! * the live runtime's adapter maps the same effects onto real channels
+//!   behind the link table, `Instant` deadlines, the applier thread, and a
+//!   `Wal<FsDisk>` whose appends block until durable.
+//!
+//! [`EventQueue`]: crate::sim::event::EventQueue
+//!
+//! Two invariants live *here*, not in the drivers:
+//!
+//! 1. **Persist-before-reply** (Raft §5.1). The node emits
+//!    `PersistHardState`/`PersistEntries` before the `Send`s they guard;
+//!    the host checks that ordering on every batch (debug assertion backed
+//!    by [`check_persist_order`]) and completes each persist effect before
+//!    forwarding any later `Send`. Persist effects return their completion
+//!    latency in virtual ms — the host accumulates it as `persist_lag_ms`
+//!    on every subsequent send, so a simulated fsync delays exactly the
+//!    replies it guards. Drivers whose persist call blocks (real files)
+//!    simply return 0.
+//! 2. **No silently dropped events.** Observer-style effects (leader /
+//!    commit / read / config notifications) return `false` when their
+//!    consumer is gone — a disconnected event channel, a dead applier. The
+//!    host counts those into [`ReplicaHost::dropped_events`], surfaced in
+//!    the live runtime's `NodeReport`, so a wedged event pipe is a visible
+//!    number instead of a scattering of `let _ =`.
+//!
+//! Adding a protocol feature that needs a new [`Output`] arm is now a
+//! one-site change: extend the enum, give [`Effects`] a (possibly
+//! defaulted) method, add the match arm below — both runtimes pick it up.
+
+use crate::consensus::message::{
+    Entry, Envelope, GroupId, LogIndex, NodeId, Payload, SnapshotBlob, Term, WClock,
+};
+use crate::consensus::node::Output;
+use crate::storage::wal::HardState;
+
+/// Evidence of a committed replication round, bundled from
+/// [`Output::RoundCommitted`] — propose-time quorum evidence for checkers
+/// plus the index/replier counts the metrics hooks want.
+#[derive(Clone, Debug)]
+pub struct RoundCommit {
+    pub wclock: WClock,
+    pub index: LogIndex,
+    pub repliers: usize,
+    pub quorum_weight: f64,
+    pub epoch: u64,
+    pub ct: f64,
+    /// `(acc_old, ct_old)` when the round was proposed under a joint
+    /// config and the old half's rule held too.
+    pub joint: Option<(f64, f64)>,
+}
+
+/// The effect surface one replica needs from its runtime. Implemented once
+/// per driver (`sim::group`'s adapter against the virtual fabric,
+/// `live::cluster`'s against threads and channels); [`ReplicaHost::drive`]
+/// is the only caller.
+///
+/// Conventions:
+/// * **Durability effects** (`persist_*`) return the virtual latency (ms)
+///   until the record is durable — 0.0 when the call itself blocked until
+///   durable, or when nothing was synced. The host adds it to the
+///   `persist_lag_ms` of every *later* send in the same batch.
+/// * **Observer effects** return `true` if the notification reached its
+///   consumer; `false` feeds [`ReplicaHost::dropped_events`]. A driver
+///   with in-process consumers just returns `true`.
+/// * **Timer effects** are generation-style: `arm_election` supersedes any
+///   previously armed election timer for this replica.
+pub trait Effects {
+    /// Forward an RPC. `persist_lag_ms` is the accumulated completion
+    /// latency of every persist effect earlier in this batch — virtual
+    /// fabrics delay delivery by it; blocking fabrics ignore it.
+    fn send(&mut self, to: NodeId, env: Envelope, persist_lag_ms: f64);
+
+    /// (Re)arm the randomized election timer, superseding the old one.
+    fn arm_election(&mut self);
+    /// Start (or re-arm) the periodic leader heartbeat.
+    fn arm_heartbeat(&mut self);
+    /// Stop the heartbeat (stepped down).
+    fn disarm_heartbeat(&mut self);
+
+    /// Make `HardState{term, voted_for}` durable. Returns fsync latency to
+    /// charge this batch's later sends (see trait docs).
+    fn persist_hard_state(&mut self, hs: HardState) -> f64;
+    /// Make an entry splice durable: `entries` appended after `prev_index`
+    /// with this node's stored `weight`. Returns fsync latency like
+    /// [`Effects::persist_hard_state`].
+    fn persist_entries(&mut self, prev_index: LogIndex, weight: f64, entries: &[Entry]) -> f64;
+
+    /// Driver-capture handshake: capture replica state through `through`
+    /// and answer with `Node::complete_snapshot`. Inline-capture drivers
+    /// return `true` without doing anything.
+    fn capture_snapshot(&mut self, through: LogIndex) -> bool;
+    /// A leader snapshot was installed over the local log — restore the
+    /// carried replica state before later commits apply.
+    fn install_snapshot(&mut self, blob: SnapshotBlob) -> bool;
+
+    /// A newly committed entry, in index order — apply it / record it.
+    fn apply_batch(&mut self, entry: &Entry) -> bool;
+
+    /// A linearizable read is servable from local state at `index`.
+    fn read_ready(&mut self, id: u64, index: LogIndex, lease: bool) -> bool;
+    /// A read could not be served here — the client should retry.
+    fn read_failed(&mut self, id: u64) -> bool;
+
+    /// This replica won an election for `term`.
+    fn became_leader(&mut self, term: Term) -> bool;
+    /// This replica lost leadership (role transition, not an event pipe —
+    /// no drop accounting).
+    fn stepped_down(&mut self);
+    /// A replication round reached quorum at this (leader) replica.
+    fn round_committed(&mut self, rc: RoundCommit) -> bool;
+    /// A `ConfigChange` entry committed here (any role).
+    fn config_committed(
+        &mut self,
+        epoch: u64,
+        index: LogIndex,
+        joint: bool,
+        voters: Vec<NodeId>,
+    ) -> bool;
+
+    /// A proposal was rejected (not leader / reconfig in flight). Most
+    /// drivers ignore it.
+    fn proposal_rejected(&mut self, payload: Payload) {
+        let _ = payload;
+    }
+}
+
+/// Where a batch broke the persist-before-reply ordering: the first `Send`
+/// and the offending persist output that trails it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PersistOrderViolation {
+    /// Position of the first `Send` in the batch.
+    pub send_pos: usize,
+    /// Position of a `PersistHardState`/`PersistEntries` after that send.
+    pub persist_pos: usize,
+}
+
+/// Check one step's output batch for the persist-before-reply invariant:
+/// every `PersistHardState`/`PersistEntries` must precede every `Send` in
+/// the batch, because the sends it guards — vote grants, append acks —
+/// follow it in emission order and a driver interpreting in order would
+/// otherwise release an acknowledgement before its durability record.
+///
+/// This is the exact property [`ReplicaHost::drive`] debug-asserts on
+/// every batch, exported so property tests can drive it directly against
+/// randomized `Node` schedules (see `rust/tests/host_interpreter.rs`).
+pub fn check_persist_order(outs: &[Output]) -> Result<(), PersistOrderViolation> {
+    let mut first_send = None;
+    for (pos, o) in outs.iter().enumerate() {
+        match o {
+            Output::Send(..) => {
+                if first_send.is_none() {
+                    first_send = Some(pos);
+                }
+            }
+            Output::PersistHardState { .. } | Output::PersistEntries { .. } => {
+                if let Some(send_pos) = first_send {
+                    return Err(PersistOrderViolation { send_pos, persist_pos: pos });
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// The shared sans-io interpreter: one per (driver, group-replica). Holds
+/// only fabric-independent state — the group id every outbound [`Envelope`]
+/// is stamped with, and the dropped-event counter the observer effects
+/// feed. Everything else lives behind [`Effects`].
+#[derive(Clone, Debug)]
+pub struct ReplicaHost {
+    group: GroupId,
+    dropped_events: u64,
+}
+
+impl ReplicaHost {
+    pub fn new(group: GroupId) -> Self {
+        ReplicaHost { group, dropped_events: 0 }
+    }
+
+    pub fn group(&self) -> GroupId {
+        self.group
+    }
+
+    /// Observer-effect notifications whose consumer was gone (`false`
+    /// returns from [`Effects`]) — a wedged event channel or dead applier
+    /// made visible instead of silently discarded.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    /// Interpret one step's outputs in emission order. Drains `outs` so
+    /// callers can hand the same scratch allocation to every step.
+    pub fn drive<E: Effects>(&mut self, outs: &mut Vec<Output>, fx: &mut E) {
+        self.drive_with_lag(outs, 0.0, fx);
+    }
+
+    /// [`ReplicaHost::drive`] with an initial persist lag — latency of
+    /// durability work the driver already performed for this step (the
+    /// simulator persists freshly captured snapshots before scanning
+    /// outputs, and charges their fsyncs to the step's sends too).
+    pub fn drive_with_lag<E: Effects>(
+        &mut self,
+        outs: &mut Vec<Output>,
+        initial_lag_ms: f64,
+        fx: &mut E,
+    ) {
+        #[cfg(debug_assertions)]
+        if let Err(v) = check_persist_order(outs) {
+            panic!(
+                "persist-before-reply violated: Send at {} precedes persist at {} \
+                 in a {}-output batch — a durability record must never trail the \
+                 acknowledgement it guards",
+                v.send_pos,
+                v.persist_pos,
+                outs.len()
+            );
+        }
+        let mut lag = initial_lag_ms;
+        for o in outs.drain(..) {
+            match o {
+                Output::PersistHardState { term, voted_for } => {
+                    lag += fx.persist_hard_state(HardState { term, voted_for });
+                }
+                Output::PersistEntries { prev_index, weight, entries } => {
+                    lag += fx.persist_entries(prev_index, weight, &entries);
+                }
+                Output::Send(to, msg) => {
+                    fx.send(to, Envelope::new(self.group, msg), lag);
+                }
+                Output::ResetElectionTimer => fx.arm_election(),
+                Output::StartHeartbeat => fx.arm_heartbeat(),
+                Output::StopHeartbeat => fx.disarm_heartbeat(),
+                Output::BecameLeader { term } => self.observe(fx.became_leader(term)),
+                Output::SteppedDown => fx.stepped_down(),
+                Output::Commit(e) => self.observe(fx.apply_batch(&e)),
+                Output::RoundCommitted {
+                    wclock,
+                    index,
+                    repliers,
+                    quorum_weight,
+                    epoch,
+                    ct,
+                    joint,
+                } => self.observe(fx.round_committed(RoundCommit {
+                    wclock,
+                    index,
+                    repliers,
+                    quorum_weight,
+                    epoch,
+                    ct,
+                    joint,
+                })),
+                Output::ConfigCommitted { epoch, index, joint, voters } => {
+                    self.observe(fx.config_committed(epoch, index, joint, voters));
+                }
+                Output::SnapshotRequest { through } => {
+                    self.observe(fx.capture_snapshot(through));
+                }
+                Output::SnapshotInstalled(blob) => self.observe(fx.install_snapshot(blob)),
+                Output::ReadReady { id, index, lease } => {
+                    self.observe(fx.read_ready(id, index, lease));
+                }
+                Output::ReadFailed { id } => self.observe(fx.read_failed(id)),
+                Output::ProposalRejected(p) => fx.proposal_rejected(p),
+            }
+        }
+    }
+
+    fn observe(&mut self, delivered: bool) {
+        if !delivered {
+            self.dropped_events += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::message::Message;
+
+    /// A minimal recorder for the in-module sanity tests (the full
+    /// differential harness lives in `rust/tests/host_interpreter.rs`).
+    struct Probe {
+        trace: Vec<String>,
+        fsync_ms: f64,
+        deliver: bool,
+    }
+
+    impl Probe {
+        fn new(fsync_ms: f64, deliver: bool) -> Self {
+            Probe { trace: Vec::new(), fsync_ms, deliver }
+        }
+    }
+
+    impl Effects for Probe {
+        fn send(&mut self, to: NodeId, env: Envelope, persist_lag_ms: f64) {
+            self.trace.push(format!(
+                "send g{} to={} {} lag={persist_lag_ms}",
+                env.group,
+                to,
+                env.msg.kind()
+            ));
+        }
+        fn arm_election(&mut self) {
+            self.trace.push("arm_election".into());
+        }
+        fn arm_heartbeat(&mut self) {
+            self.trace.push("arm_heartbeat".into());
+        }
+        fn disarm_heartbeat(&mut self) {
+            self.trace.push("disarm_heartbeat".into());
+        }
+        fn persist_hard_state(&mut self, hs: HardState) -> f64 {
+            self.trace.push(format!("persist_hs term={}", hs.term));
+            self.fsync_ms
+        }
+        fn persist_entries(&mut self, prev_index: LogIndex, _w: f64, entries: &[Entry]) -> f64 {
+            self.trace.push(format!("persist_entries prev={prev_index} n={}", entries.len()));
+            self.fsync_ms
+        }
+        fn capture_snapshot(&mut self, through: LogIndex) -> bool {
+            self.trace.push(format!("capture through={through}"));
+            self.deliver
+        }
+        fn install_snapshot(&mut self, blob: SnapshotBlob) -> bool {
+            self.trace.push(format!("install last={}", blob.last_index));
+            self.deliver
+        }
+        fn apply_batch(&mut self, entry: &Entry) -> bool {
+            self.trace.push(format!("apply idx={}", entry.index));
+            self.deliver
+        }
+        fn read_ready(&mut self, id: u64, index: LogIndex, lease: bool) -> bool {
+            self.trace.push(format!("read_ready id={id} idx={index} lease={lease}"));
+            self.deliver
+        }
+        fn read_failed(&mut self, id: u64) -> bool {
+            self.trace.push(format!("read_failed id={id}"));
+            self.deliver
+        }
+        fn became_leader(&mut self, term: Term) -> bool {
+            self.trace.push(format!("became_leader term={term}"));
+            self.deliver
+        }
+        fn stepped_down(&mut self) {
+            self.trace.push("stepped_down".into());
+        }
+        fn round_committed(&mut self, rc: RoundCommit) -> bool {
+            self.trace.push(format!("round_committed idx={}", rc.index));
+            self.deliver
+        }
+        fn config_committed(
+            &mut self,
+            epoch: u64,
+            _index: LogIndex,
+            joint: bool,
+            _voters: Vec<NodeId>,
+        ) -> bool {
+            self.trace.push(format!("config epoch={epoch} joint={joint}"));
+            self.deliver
+        }
+    }
+
+    fn vote_reply(granted: bool) -> Message {
+        Message::RequestVoteReply { term: 3, from: 1, granted }
+    }
+
+    #[test]
+    fn persist_lag_accumulates_onto_later_sends() {
+        let mut host = ReplicaHost::new(2);
+        let mut fx = Probe::new(1.5, true);
+        let mut outs = vec![
+            Output::PersistHardState { term: 3, voted_for: Some(0) },
+            Output::Send(0, vote_reply(true)),
+            Output::ResetElectionTimer,
+        ];
+        host.drive_with_lag(&mut outs, 0.5, &mut fx);
+        assert!(outs.is_empty(), "drive drains the batch");
+        assert_eq!(
+            fx.trace,
+            vec![
+                "persist_hs term=3".to_string(),
+                "send g2 to=0 RequestVoteReply lag=2".to_string(),
+                "arm_election".to_string(),
+            ]
+        );
+        assert_eq!(host.dropped_events(), 0);
+    }
+
+    #[test]
+    fn dropped_observer_effects_are_counted() {
+        let mut host = ReplicaHost::new(0);
+        let mut fx = Probe::new(0.0, false);
+        let mut outs = vec![
+            Output::BecameLeader { term: 1 },
+            Output::ReadFailed { id: 9 },
+            Output::StopHeartbeat,
+            Output::SteppedDown,
+        ];
+        host.drive(&mut outs, &mut fx);
+        // BecameLeader + ReadFailed dropped; timer/role effects are not
+        // observer notifications and never count
+        assert_eq!(host.dropped_events(), 2);
+    }
+
+    #[test]
+    fn persist_order_checker_flags_trailing_persists() {
+        let ok = vec![
+            Output::PersistHardState { term: 1, voted_for: None },
+            Output::PersistEntries { prev_index: 0, weight: 1.0, entries: vec![] },
+            Output::Send(1, vote_reply(true)),
+            Output::Send(2, vote_reply(true)),
+        ];
+        assert_eq!(check_persist_order(&ok), Ok(()));
+
+        let bad = vec![
+            Output::Send(1, vote_reply(true)),
+            Output::PersistHardState { term: 1, voted_for: None },
+        ];
+        assert_eq!(
+            check_persist_order(&bad),
+            Err(PersistOrderViolation { send_pos: 0, persist_pos: 1 })
+        );
+
+        // sends with no persists at all are trivially fine
+        assert_eq!(check_persist_order(&[Output::Send(1, vote_reply(false))]), Ok(()));
+        assert_eq!(check_persist_order(&[]), Ok(()));
+    }
+}

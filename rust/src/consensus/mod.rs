@@ -1,14 +1,17 @@
 //! The paper's Layer-3 contribution: Raft, Cabinet weighted consensus
 //! (Algorithm 1), and the HQC baseline — all as sans-io state machines
 //! driven by either the deterministic simulator (`sim::`) or the live
-//! std-thread runtime (`live::`).
+//! std-thread runtime (`live::`), both through the one shared effect
+//! interpreter in [`host`] ([`ReplicaHost`] + the [`Effects`] trait).
 
+pub mod host;
 pub mod hqc;
 pub mod log;
 pub mod message;
 pub mod node;
 pub mod weights;
 
+pub use host::{check_persist_order, Effects, PersistOrderViolation, ReplicaHost, RoundCommit};
 pub use message::{AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock};
 pub use node::{Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 pub use weights::{ratio_bounds, threshold_pct, WeightScheme};

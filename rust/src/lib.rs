@@ -15,11 +15,14 @@
 //!
 //! [`consensus`] holds pure state machines: inputs are delivered RPCs, fired
 //! timers and client proposals; outputs are RPCs to send, timer (re)arms and
-//! committed entries. Three drivers own the I/O: [`sim`] (deterministic
-//! virtual-time event queue — every paper figure in [`bench`] is re-runnable
-//! from a seed), [`live`] (one OS thread per node, channel transport,
-//! wall-clock timers, PJRT apply service), and the adversarial-schedule
-//! harnesses in `rust/tests/`. [`workload`] generates YCSB/TPC-C batches,
+//! committed entries. Every output batch is interpreted by the one shared
+//! sans-io host ([`consensus::ReplicaHost`] driving the
+//! [`consensus::Effects`] trait — persist-before-reply and dropped-event
+//! accounting live there, not per driver). Three drivers own the I/O:
+//! [`sim`] (deterministic virtual-time event queue — every paper figure in
+//! [`bench`] is re-runnable from a seed), [`live`] (one OS thread per node,
+//! channel transport, wall-clock timers, PJRT apply service), and the
+//! adversarial-schedule harnesses in `rust/tests/`. [`workload`] generates YCSB/TPC-C batches,
 //! [`storage`] applies them (with digests that tie replicas — and the
 //! [`runtime`] AOT kernels — together bit-for-bit), and [`net`] models
 //! delays, zones and faults — including the adversarial nemesis layer

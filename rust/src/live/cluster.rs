@@ -19,8 +19,10 @@ use std::sync::{Arc, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::consensus::host::{Effects, ReplicaHost, RoundCommit};
 use crate::consensus::message::{
-    AppState, ClusterConfig, Entry, Envelope, GroupId, LogIndex, NodeId, Payload,
+    AppState, ClusterConfig, Entry, Envelope, GroupId, LogIndex, NodeId, Payload, SnapshotBlob,
+    Term,
 };
 use crate::consensus::node::{AdminCmd, Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 use crate::live::apply::{empty_state, ApplyReq};
@@ -256,6 +258,12 @@ pub struct NodeReport {
     /// Real (term-incrementing) candidacies this node started — with
     /// PreVote on, a partitioned minority reports zero.
     pub elections_started: u64,
+    /// Observer-effect notifications (leader / commit / read / config
+    /// events, applier handoffs) whose consumer was gone — a disconnected
+    /// event channel or a dead applier thread, counted by the shared
+    /// [`ReplicaHost`]. Non-zero mid-run means the harness stopped
+    /// listening while this replica was still producing.
+    pub dropped_events: u64,
 }
 
 impl LiveCluster {
@@ -838,7 +846,7 @@ fn node_loop(
     // durable storage: one WAL per hosted replica, recovered before the
     // loop starts — restarting a cluster over the same directory is the
     // crash-recovery path (HardState, snapshot and log come back)
-    let mut wals: Vec<Option<Wal<FsDisk>>> = (0..groups)
+    let wals: Vec<Option<Wal<FsDisk>>> = (0..groups)
         .map(|g| {
             storage.as_ref().map(|s| {
                 let dir = s.dir.join(format!("node-{id}")).join(format!("g{g}"));
@@ -863,142 +871,44 @@ fn node_loop(
     let epoch = Instant::now();
     let my_inbox = peers[id].clone();
     let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
-    let rand_election = |rng: &mut Rng| {
-        let lo = timers.election_lo.as_secs_f64();
-        let hi = timers.election_hi.as_secs_f64();
-        Duration::from_secs_f64(rng.range_f64(lo, hi))
-    };
 
-    let mut election_deadline: Vec<Instant> =
-        (0..groups).map(|_| Instant::now() + rand_election(&mut rng)).collect();
-    let mut heartbeat_deadline: Vec<Option<Instant>> = vec![None; groups];
+    let election_deadline: Vec<Instant> =
+        (0..groups).map(|_| Instant::now() + rand_election(&mut rng, &timers)).collect();
 
     // committed batches are applied off-thread, in commit order, one
     // applier (and one replica state) per group
     let appliers: Vec<Option<Applier>> = (0..groups)
         .map(|g| apply_tx.clone().map(|service| Applier::spawn(id, g, service)))
         .collect();
-    let mut committed = vec![0usize; groups];
 
-    let handle_outputs = |g: GroupId,
-                              outs: Vec<Output>,
-                              appliers: &[Option<Applier>],
-                              committed: &mut [usize],
-                              election_deadline: &mut [Instant],
-                              heartbeat_deadline: &mut [Option<Instant>],
-                              rng: &mut Rng,
-                              wals: &mut [Option<Wal<FsDisk>>]| {
-        for o in outs {
-            match o {
-                Output::Send(to, msg) => {
-                    // the live nemesis hook: a cut (physical) link swallows
-                    // the message whichever group it belongs to
-                    if links.allowed(id, to) {
-                        let _ = peers[to].send(LiveIn::Rpc(id, Envelope::new(g, msg)));
-                    }
-                }
-                Output::ResetElectionTimer => {
-                    election_deadline[g] = Instant::now() + rand_election(rng);
-                }
-                Output::StartHeartbeat => {
-                    heartbeat_deadline[g] = Some(Instant::now() + timers.heartbeat);
-                }
-                Output::StopHeartbeat => {
-                    heartbeat_deadline[g] = None;
-                }
-                Output::BecameLeader { term } => {
-                    let _ =
-                        events.send(LiveEvent::BecameLeader { group: g, node: id, term });
-                }
-                Output::RoundCommitted { index, repliers, .. } => {
-                    let _ = events.send(LiveEvent::RoundCommitted {
-                        group: g,
-                        node: id,
-                        index,
-                        repliers,
-                    });
-                }
-                Output::Commit(Entry { index, payload, .. }) => {
-                    committed[g] += 1;
-                    if let (Payload::Ycsb(batch), Some(a)) = (&payload, &appliers[g]) {
-                        let _ = a.tx.send(ApplierMsg::Batch(Arc::clone(batch)));
-                    }
-                    let _ = events.send(LiveEvent::Committed {
-                        group: g,
-                        node: id,
-                        index,
-                        digest: None,
-                    });
-                }
-                Output::SnapshotRequest { through } => {
-                    // Driver capture: ride the applier queue so the state is
-                    // captured exactly after the commits the blob covers —
-                    // the consensus thread never waits.
-                    if let Some(a) = &appliers[g] {
-                        let _ = a.tx.send(ApplierMsg::Capture {
-                            group: g,
-                            through,
-                            reply: my_inbox.clone(),
-                        });
-                    }
-                }
-                Output::SnapshotInstalled(blob) => {
-                    if let (AppState::Slots(s), Some(a)) = (&blob.app, &appliers[g]) {
-                        let _ = a.tx.send(ApplierMsg::Install(s.to_vec()));
-                    }
-                }
-                Output::ReadReady { id: rid, index, lease } => {
-                    let _ = events.send(LiveEvent::ReadReady {
-                        group: g,
-                        node: id,
-                        id: rid,
-                        index,
-                        lease,
-                    });
-                }
-                Output::ReadFailed { id: rid } => {
-                    let _ =
-                        events.send(LiveEvent::ReadFailed { group: g, node: id, id: rid });
-                }
-                Output::ConfigCommitted { epoch, index, joint, voters } => {
-                    let _ = events.send(LiveEvent::ConfigCommitted {
-                        group: g,
-                        node: id,
-                        epoch,
-                        index,
-                        joint,
-                        voters,
-                    });
-                }
-                // Persist-before-reply on real files: outputs are handled
-                // in emission order and the node emits persist records
-                // before the replies they guard, so the append (and any
-                // fsync it triggers) lands before the Send crosses a channel
-                Output::PersistHardState { term, voted_for } => {
-                    if let Some(w) = wals[g].as_mut() {
-                        w.append_hard_state(HardState { term, voted_for });
-                    }
-                }
-                Output::PersistEntries { prev_index, weight, entries } => {
-                    if let Some(w) = wals[g].as_mut() {
-                        w.append_splice(prev_index, weight, &entries);
-                    }
-                }
-                Output::SteppedDown | Output::ProposalRejected(_) => {}
-            }
-        }
+    let mut reps = Replicas {
+        id,
+        nodes,
+        hosts: (0..groups).map(ReplicaHost::new).collect(),
+        out_scratch: Vec::new(),
+        committed: vec![0usize; groups],
+        election_deadline,
+        heartbeat_deadline: vec![None; groups],
+        rng,
+        wals,
+        appliers,
+        peers,
+        links,
+        events,
+        my_inbox,
+        timers,
     };
 
     loop {
         // next wakeup: the earliest election / heartbeat deadline across
         // every hosted group
         let now = Instant::now();
-        let mut next = election_deadline[0];
+        let mut next = reps.election_deadline[0];
         for g in 0..groups {
-            if election_deadline[g] < next {
-                next = election_deadline[g];
+            if reps.election_deadline[g] < next {
+                next = reps.election_deadline[g];
             }
-            if let Some(hb) = heartbeat_deadline[g] {
+            if let Some(hb) = reps.heartbeat_deadline[g] {
                 if hb < next {
                     next = hb;
                 }
@@ -1006,7 +916,7 @@ fn node_loop(
         }
         let wait = next.saturating_duration_since(now);
         let now_ms = epoch.elapsed().as_secs_f64() * 1000.0;
-        for node in nodes.iter_mut() {
+        for node in reps.nodes.iter_mut() {
             node.observe_time(now_ms);
         }
         match rx.recv_timeout(wait) {
@@ -1014,72 +924,43 @@ fn node_loop(
             Ok(LiveIn::Rpc(from, env)) => {
                 let g = env.group;
                 debug_assert!(g < groups, "envelope for unhosted group {g}");
-                nodes[g].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
-                let outs = nodes[g].step(Input::Receive(from, env.msg));
-                handle_outputs(
-                    g, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
-                );
+                reps.nodes[g].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
+                reps.step(g, Input::Receive(from, env.msg));
             }
             Ok(LiveIn::Propose { group, payload }) => {
-                let outs = nodes[group].step(Input::Propose(payload));
-                handle_outputs(
-                    group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
-                );
+                reps.step(group, Input::Propose(payload));
             }
             Ok(LiveIn::Read { group, id: rid }) => {
-                nodes[group].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
-                let outs = nodes[group].step(Input::Read { id: rid });
-                handle_outputs(
-                    group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
-                );
+                reps.nodes[group].observe_time(epoch.elapsed().as_secs_f64() * 1000.0);
+                reps.step(group, Input::Read { id: rid });
             }
             Ok(LiveIn::ForceElection(group)) => {
-                let outs = nodes[group].step(Input::ElectionTimeout);
-                handle_outputs(
-                    group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
-                );
+                reps.step(group, Input::ElectionTimeout);
             }
             Ok(LiveIn::Admin { group, cmd }) => {
-                let outs = nodes[group].step(Input::Admin(cmd));
-                handle_outputs(
-                    group, outs, &appliers, &mut committed,
-                    &mut election_deadline, &mut heartbeat_deadline, &mut rng, &mut wals,
-                );
+                reps.step(group, Input::Admin(cmd));
             }
             Ok(LiveIn::SnapshotReady { group, through, state }) => {
-                nodes[group].complete_snapshot(through, AppState::Slots(Arc::new(state)));
+                reps.nodes[group].complete_snapshot(through, AppState::Slots(Arc::new(state)));
             }
             Err(RecvTimeoutError::Timeout) => {
                 let now = Instant::now();
                 let now_ms = epoch.elapsed().as_secs_f64() * 1000.0;
                 for g in 0..groups {
-                    nodes[g].observe_time(now_ms);
-                    if let Some(hb) = heartbeat_deadline[g] {
+                    reps.nodes[g].observe_time(now_ms);
+                    if let Some(hb) = reps.heartbeat_deadline[g] {
                         if now >= hb {
-                            heartbeat_deadline[g] = Some(now + timers.heartbeat);
-                            let outs = nodes[g].step(Input::HeartbeatTimeout);
-                            handle_outputs(
-                                g, outs, &appliers, &mut committed,
-                                &mut election_deadline, &mut heartbeat_deadline, &mut rng,
-                                &mut wals,
-                            );
+                            reps.heartbeat_deadline[g] = Some(now + timers.heartbeat);
+                            reps.step(g, Input::HeartbeatTimeout);
                         }
                     }
-                    if now >= election_deadline[g] && nodes[g].role() != Role::Leader {
-                        election_deadline[g] = now + rand_election(&mut rng);
-                        let outs = nodes[g].step(Input::ElectionTimeout);
-                        handle_outputs(
-                            g, outs, &appliers, &mut committed,
-                            &mut election_deadline, &mut heartbeat_deadline, &mut rng,
-                            &mut wals,
-                        );
-                    } else if now >= election_deadline[g] {
+                    if now >= reps.election_deadline[g] && reps.nodes[g].role() != Role::Leader
+                    {
+                        reps.election_deadline[g] = now + rand_election(&mut reps.rng, &timers);
+                        reps.step(g, Input::ElectionTimeout);
+                    } else if now >= reps.election_deadline[g] {
                         // leaders don't run election timers; push it out
-                        election_deadline[g] = now + rand_election(&mut rng);
+                        reps.election_deadline[g] = now + rand_election(&mut reps.rng, &timers);
                     }
                 }
             }
@@ -1088,17 +969,19 @@ fn node_loop(
         // persist any freshly captured snapshot and re-append the retained
         // log tail so the prune loses nothing (no-op when storage is off)
         for g in 0..groups {
-            persist_snapshot_fs(&nodes[g], &mut wals[g]);
+            persist_snapshot_fs(&reps.nodes[g], &mut reps.wals[g]);
         }
     }
 
     // drain the appliers: close their queues and collect the final digests
+    let Replicas { nodes, hosts, committed, appliers, .. } = reps;
     nodes
         .into_iter()
+        .zip(hosts)
         .zip(appliers)
         .zip(committed)
         .enumerate()
-        .map(|(g, ((node, applier), committed))| {
+        .map(|(g, (((node, host), applier), committed))| {
             let (applies, final_digest) = match applier {
                 Some(Applier { tx, handle }) => {
                     drop(tx);
@@ -1116,9 +999,223 @@ fn node_loop(
                 last_compacted: node.log().last_compacted_index(),
                 term: node.term(),
                 elections_started: node.elections_started(),
+                dropped_events: host.dropped_events(),
             }
         })
         .collect()
+}
+
+/// Draw one randomized election timeout from `[election_lo, election_hi)`.
+fn rand_election(rng: &mut Rng, timers: &LiveTimers) -> Duration {
+    let lo = timers.election_lo.as_secs_f64();
+    let hi = timers.election_hi.as_secs_f64();
+    Duration::from_secs_f64(rng.range_f64(lo, hi))
+}
+
+/// Per-thread replica state: every group-replica this node thread hosts
+/// (Multi-Raft layout) plus the fabric handles the [`Effects`] adapter
+/// needs. Bundling them lets [`Replicas::step`] hand the shared
+/// [`ReplicaHost`] interpreter disjoint per-group borrows — this replaces
+/// the 8-parameter per-arm `Output` closure the live runtime used to
+/// maintain in parallel with the simulator's match.
+struct Replicas {
+    id: NodeId,
+    nodes: Vec<Node>,
+    /// One shared interpreter per hosted group-replica (stamps outbound
+    /// envelopes with the group id, counts dropped observer events).
+    hosts: Vec<ReplicaHost>,
+    /// Reusable output buffer: one per thread, handed to every step.
+    out_scratch: Vec<Output>,
+    committed: Vec<usize>,
+    election_deadline: Vec<Instant>,
+    heartbeat_deadline: Vec<Option<Instant>>,
+    rng: Rng,
+    wals: Vec<Option<Wal<FsDisk>>>,
+    appliers: Vec<Option<Applier>>,
+    peers: Arc<Vec<Sender<LiveIn>>>,
+    links: Arc<LinkTable>,
+    events: Sender<LiveEvent>,
+    my_inbox: Sender<LiveIn>,
+    timers: LiveTimers,
+}
+
+impl Replicas {
+    /// Step group `g`'s replica with `input` and drive the outputs through
+    /// the shared interpreter against this thread's fabric.
+    fn step(&mut self, g: GroupId, input: Input) {
+        let mut outs = std::mem::take(&mut self.out_scratch);
+        self.nodes[g].step_into(input, &mut outs);
+        let mut fx = LiveEffects {
+            id: self.id,
+            g,
+            peers: &self.peers[..],
+            links: &*self.links,
+            events: &self.events,
+            applier: self.appliers[g].as_ref(),
+            committed: &mut self.committed[g],
+            election_deadline: &mut self.election_deadline[g],
+            heartbeat_deadline: &mut self.heartbeat_deadline[g],
+            rng: &mut self.rng,
+            wal: &mut self.wals[g],
+            my_inbox: &self.my_inbox,
+            timers: &self.timers,
+        };
+        self.hosts[g].drive(&mut outs, &mut fx);
+        self.out_scratch = outs;
+    }
+}
+
+/// The live runtime's [`Effects`] adapter: maps each interpreter callback
+/// onto real channels behind the link table, `Instant` deadlines, the
+/// per-group applier thread, and a `Wal<FsDisk>` whose appends block until
+/// durable. Observer effects report channel health back to the host — a
+/// `false` return feeds [`ReplicaHost::dropped_events`] instead of being a
+/// silent `let _ =`.
+struct LiveEffects<'a> {
+    id: NodeId,
+    g: GroupId,
+    peers: &'a [Sender<LiveIn>],
+    links: &'a LinkTable,
+    events: &'a Sender<LiveEvent>,
+    applier: Option<&'a Applier>,
+    committed: &'a mut usize,
+    election_deadline: &'a mut Instant,
+    heartbeat_deadline: &'a mut Option<Instant>,
+    rng: &'a mut Rng,
+    wal: &'a mut Option<Wal<FsDisk>>,
+    my_inbox: &'a Sender<LiveIn>,
+    timers: &'a LiveTimers,
+}
+
+impl Effects for LiveEffects<'_> {
+    fn send(&mut self, to: NodeId, env: Envelope, _persist_lag_ms: f64) {
+        // the live nemesis hook: a cut (physical) link swallows the message
+        // whichever group it belongs to. A dead peer channel is a crashed
+        // node — intentional, so no drop accounting on RPCs.
+        if self.links.allowed(self.id, to) {
+            let _ = self.peers[to].send(LiveIn::Rpc(self.id, env));
+        }
+    }
+
+    fn arm_election(&mut self) {
+        *self.election_deadline = Instant::now() + rand_election(self.rng, self.timers);
+    }
+
+    fn arm_heartbeat(&mut self) {
+        *self.heartbeat_deadline = Some(Instant::now() + self.timers.heartbeat);
+    }
+
+    fn disarm_heartbeat(&mut self) {
+        *self.heartbeat_deadline = None;
+    }
+
+    // Persist-before-reply on real files: the host completes each persist
+    // effect before it forwards any later Send, and these appends (plus any
+    // fsync they trigger) block right here — so the returned extra lag is 0.
+    fn persist_hard_state(&mut self, hs: HardState) -> f64 {
+        if let Some(w) = self.wal.as_mut() {
+            w.append_hard_state(hs);
+        }
+        0.0
+    }
+
+    fn persist_entries(&mut self, prev_index: LogIndex, weight: f64, entries: &[Entry]) -> f64 {
+        if let Some(w) = self.wal.as_mut() {
+            w.append_splice(prev_index, weight, entries);
+        }
+        0.0
+    }
+
+    fn capture_snapshot(&mut self, through: LogIndex) -> bool {
+        // Driver capture: ride the applier queue so the state is captured
+        // exactly after the commits the blob covers — the consensus thread
+        // never waits.
+        match self.applier {
+            Some(a) => a
+                .tx
+                .send(ApplierMsg::Capture {
+                    group: self.g,
+                    through,
+                    reply: self.my_inbox.clone(),
+                })
+                .is_ok(),
+            None => true,
+        }
+    }
+
+    fn install_snapshot(&mut self, blob: SnapshotBlob) -> bool {
+        if let (AppState::Slots(s), Some(a)) = (&blob.app, self.applier) {
+            a.tx.send(ApplierMsg::Install(s.to_vec())).is_ok()
+        } else {
+            true
+        }
+    }
+
+    fn apply_batch(&mut self, entry: &Entry) -> bool {
+        *self.committed += 1;
+        let applier_ok = match (&entry.payload, self.applier) {
+            (Payload::Ycsb(batch), Some(a)) => {
+                a.tx.send(ApplierMsg::Batch(Arc::clone(batch))).is_ok()
+            }
+            _ => true,
+        };
+        let event_ok = self
+            .events
+            .send(LiveEvent::Committed {
+                group: self.g,
+                node: self.id,
+                index: entry.index,
+                digest: None,
+            })
+            .is_ok();
+        applier_ok && event_ok
+    }
+
+    fn read_ready(&mut self, id: u64, index: LogIndex, lease: bool) -> bool {
+        self.events
+            .send(LiveEvent::ReadReady { group: self.g, node: self.id, id, index, lease })
+            .is_ok()
+    }
+
+    fn read_failed(&mut self, id: u64) -> bool {
+        self.events.send(LiveEvent::ReadFailed { group: self.g, node: self.id, id }).is_ok()
+    }
+
+    fn became_leader(&mut self, term: Term) -> bool {
+        self.events.send(LiveEvent::BecameLeader { group: self.g, node: self.id, term }).is_ok()
+    }
+
+    fn stepped_down(&mut self) {}
+
+    fn round_committed(&mut self, rc: RoundCommit) -> bool {
+        self.events
+            .send(LiveEvent::RoundCommitted {
+                group: self.g,
+                node: self.id,
+                index: rc.index,
+                repliers: rc.repliers,
+            })
+            .is_ok()
+    }
+
+    fn config_committed(
+        &mut self,
+        epoch: u64,
+        index: LogIndex,
+        joint: bool,
+        voters: Vec<NodeId>,
+    ) -> bool {
+        self.events
+            .send(LiveEvent::ConfigCommitted {
+                group: self.g,
+                node: self.id,
+                epoch,
+                index,
+                joint,
+                voters,
+            })
+            .is_ok()
+    }
 }
 
 /// Persist a freshly captured snapshot to this replica's WAL: the blob file

@@ -24,7 +24,11 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
-use crate::consensus::message::{ClusterConfig, GroupId, Message, NodeId, Payload};
+use crate::consensus::host::{Effects, ReplicaHost, RoundCommit};
+use crate::consensus::message::{
+    ClusterConfig, Entry, Envelope, GroupId, LogIndex, Message, NodeId, Payload, SnapshotBlob,
+    Term,
+};
 use crate::consensus::node::{AdminCmd, Input, Mode, Node, Output, ReadPath, Role};
 use crate::net::fault::KillSpec;
 use crate::net::nemesis::{Fate, MembershipEvent, MembershipKind, Nemesis};
@@ -435,6 +439,10 @@ pub(crate) struct GroupEngine {
     /// Reusable output buffer for `Node::step_into` — one allocation per
     /// engine instead of one `Vec<Output>` per step (the routing hot path).
     out_scratch: Vec<Output>,
+    /// The shared sans-io effect interpreter (`consensus::host`): `route`
+    /// drives every step's outputs through it, with [`SimEffects`] mapping
+    /// the effect calls onto the virtual fabric.
+    host: ReplicaHost,
     /// Messages delivered to live nodes (host-profiling telemetry for the
     /// `sim_throughput` bench; never folded into the metrics digest).
     messages: u64,
@@ -602,6 +610,7 @@ impl GroupEngine {
             max_config_epoch: 0,
             config_commits: 0,
             out_scratch: Vec::new(),
+            host: ReplicaHost::new(gid),
             messages: 0,
         }
     }
@@ -1029,7 +1038,7 @@ impl GroupEngine {
     /// on — while the consensus-side admission (joint config, minimum
     /// weight, warmup) is driven entirely by the leader's admin queue.
     /// Removal powers a slot off only when its `LeaveJoint` config commits
-    /// (see the `ConfigCommitted` arm in `route`).
+    /// (see [`SimEffects::config_committed`]).
     fn fire_membership(
         &mut self,
         ev: MembershipEvent,
@@ -1174,11 +1183,12 @@ impl GroupEngine {
         charge
     }
 
-    /// Route one node's outputs into the fabric; sends leave `extra_delay`
-    /// ms after now (the node's service time). One implementation for both
-    /// windows — only round retirement differs, and that branches on
-    /// `lockstep` (the G=1 digests pin both behaviors). Drains the caller's
-    /// buffer so `step_route` can hand the same allocation to every step.
+    /// Route one node's outputs into the fabric through the shared
+    /// [`ReplicaHost`] interpreter (`consensus::host`); sends leave
+    /// `extra_delay` ms after now (the node's service time). What each
+    /// effect *does* here lives in [`SimEffects`] — the engine keeps no
+    /// per-arm `Output` match of its own. Drains the caller's buffer so
+    /// `step_route` can hand the same allocation to every step.
     fn route(
         &mut self,
         node: NodeId,
@@ -1186,164 +1196,22 @@ impl GroupEngine {
         extra_delay: f64,
         q: &mut EventQueue<GroupEv>,
     ) {
+        // Persist-before-reply: fsync latency accrued by durability work —
+        // this pre-step snapshot persist plus the batch's persist outputs,
+        // accumulated by the host — delays every subsequent Send in the
+        // same batch. Zero when storage is off, so send delays are
+        // bit-identical to the historical ones.
+        let initial_lag = self.persist_snapshot(node);
         let n = self.config.n();
         let now = q.now();
-        // Persist-before-reply: fsync latency accrued by this step's persist
-        // outputs (emitted before the replies they guard) delays every
-        // subsequent Send in the same batch. Zero when storage is off, so
-        // send delays are bit-identical to the historical ones.
-        let mut pdelay = self.persist_snapshot(node);
         let fsync_ms = self.config.storage.map_or(0.0, |s| s.fsync_ms);
-        for o in outs.drain(..) {
-            match o {
-                Output::PersistHardState { term, voted_for } => {
-                    if let Some(wal) = self.wals[node].as_mut() {
-                        self.wal_appends += 1;
-                        if wal.append_hard_state(HardState { term, voted_for }) {
-                            self.wal_fsyncs += 1;
-                            pdelay += fsync_ms;
-                        }
-                    }
-                }
-                Output::PersistEntries { prev_index, weight, entries } => {
-                    if let Some(wal) = self.wals[node].as_mut() {
-                        self.wal_appends += 1;
-                        if wal.append_splice(prev_index, weight, &entries) {
-                            self.wal_fsyncs += 1;
-                            pdelay += fsync_ms;
-                        }
-                    }
-                }
-                Output::Send(to, msg) => {
-                    if !self.alive[to] {
-                        continue;
-                    }
-                    // wire-level vote-grant evidence for the double-vote
-                    // checker (informational — no timing effect)
-                    if let Message::RequestVoteReply { term, granted: true, .. } = msg {
-                        if let Some(sl) = self.safety.as_mut() {
-                            sl.votes.push((term, node, to));
-                        }
-                    }
-                    // link delay is sampled on the non-leader endpoint (the
-                    // paper's netem delays are installed on follower nodes)
-                    let shaped_end =
-                        if node == self.current_leader.unwrap_or(usize::MAX) { to } else { node };
-                    let lat = self.config.delay.link_latency(
-                        shaped_end,
-                        n,
-                        now,
-                        self.round,
-                        msg.wire_size(),
-                        &mut self.net_rng,
-                    );
-                    let fate = match self.nemesis.as_mut() {
-                        Some(nm) => nm.fate(now, node, to, self.current_leader),
-                        None => Fate::deliver(),
-                    };
-                    if fate.copies == 0 {
-                        continue; // partitioned or lost
-                    }
-                    if fate.copies > 1 {
-                        self.push(
-                            q,
-                            extra_delay + pdelay + lat + fate.extra_delay_ms[1],
-                            Ev::Deliver { to, from: node, msg: msg.clone() },
-                        );
-                    }
-                    self.push(
-                        q,
-                        extra_delay + pdelay + lat + fate.extra_delay_ms[0],
-                        Ev::Deliver { to, from: node, msg },
-                    );
-                }
-                Output::ResetElectionTimer => {
-                    self.el_gen[node] += 1;
-                    let d = self.timer_rng.range_f64(
-                        self.config.election_timeout_ms.0,
-                        self.config.election_timeout_ms.1,
-                    );
-                    self.push(q, d, Ev::ElectionTimer { node, generation: self.el_gen[node] });
-                }
-                Output::StartHeartbeat => {
-                    self.hb_gen[node] += 1;
-                    self.push(
-                        q,
-                        self.config.heartbeat_ms,
-                        Ev::HeartbeatTimer { node, generation: self.hb_gen[node] },
-                    );
-                }
-                Output::StopHeartbeat => {
-                    self.hb_gen[node] += 1;
-                }
-                Output::BecameLeader { term } => {
-                    self.current_leader = Some(node);
-                    self.elections += 1;
-                    if let Some(sl) = self.safety.as_mut() {
-                        sl.leaders.push((term, node));
-                    }
-                }
-                Output::SteppedDown => {
-                    if self.current_leader == Some(node) {
-                        self.current_leader = None;
-                    }
-                }
-                Output::RoundCommitted {
-                    index, repliers, quorum_weight, epoch, ct, joint, ..
-                } => {
-                    // leader-observed quorum evidence for the config-epoch
-                    // checker: the commit rule this round actually closed
-                    // under (both halves when it was proposed mid-joint)
-                    if Some(node) == self.current_leader {
-                        if let Some(sl) = self.safety.as_mut() {
-                            sl.commit_evidence.push(CommitEvidence {
-                                index,
-                                epoch,
-                                acc: quorum_weight,
-                                ct,
-                                joint,
-                            });
-                        }
-                    }
-                    if self.lockstep {
-                        self.round_committed_lockstep(node, index, repliers, now, q);
-                    } else {
-                        self.round_committed_pipelined(node, index, repliers, now, q);
-                    }
-                }
-                Output::ConfigCommitted { epoch, index, joint, voters } => {
-                    if Some(node) == self.current_leader {
-                        self.config_commits += 1;
-                    }
-                    if let Some(sl) = self.safety.as_mut() {
-                        sl.config_epochs.push((epoch, index, joint));
-                    }
-                    // only a completed (non-joint) config changes the power
-                    // state: the old half of a joint config still votes
-                    if !joint && self.membership_on {
-                        self.apply_committed_config(epoch, &voters);
-                    }
-                }
-                Output::Commit(e) => {
-                    // per-node commit evidence for the bench::safety checker
-                    if let Some(sl) = self.safety.as_mut() {
-                        sl.commits[node].push((e.index, e.term));
-                    }
-                }
-                Output::ProposalRejected(_) => {}
-                // nodes snapshot inline (SnapshotCapture::Inline) — these
-                // are informational; installs are counted via node counters
-                Output::SnapshotRequest { .. } | Output::SnapshotInstalled(_) => {}
-                Output::ReadReady { id, index, lease } => {
-                    self.serve_read(node, id, index, lease, now);
-                }
-                Output::ReadFailed { id } => {
-                    if self.readctl.outstanding.contains_key(&id) {
-                        self.readctl.failures += 1; // the standing retry re-drives it
-                    }
-                }
-            }
-        }
+        // the host is taken out for the drive so the adapter can borrow
+        // the rest of the engine mutably (it is two words — a swap, not an
+        // allocation)
+        let mut host = std::mem::replace(&mut self.host, ReplicaHost::new(self.gid));
+        let mut fx = SimEffects { eng: self, q, node, extra_delay, now, fsync_ms, n };
+        host.drive_with_lag(outs, initial_lag, &mut fx);
+        self.host = host;
     }
 
     /// Lock-step retirement: only the harness round (pending batch) counts.
@@ -1505,6 +1373,214 @@ impl GroupEngine {
         read_latencies.sort_by(|a, b| a.total_cmp(b));
         finish_reads(&mut result, &self.readctl, &read_latencies, &self.nodes);
         GroupOutcome { result, read_latencies, final_leader: self.current_leader }
+    }
+}
+
+/// The simulator's [`Effects`] adapter: maps each interpreter callback onto
+/// the virtual fabric — `EventQueue` pushes for sends and timers, `MemDisk`
+/// WALs with fsync-delay accounting for persists, and the engine's safety /
+/// read / round bookkeeping for the observer effects. One step's worth of
+/// context (`node`, `now`, service-time `extra_delay`) is captured at
+/// construction in [`GroupEngine::route`]; the persist lag the host
+/// accumulates arrives per-send as `persist_lag_ms`.
+struct SimEffects<'a> {
+    eng: &'a mut GroupEngine,
+    q: &'a mut EventQueue<GroupEv>,
+    /// The node whose outputs are being interpreted.
+    node: NodeId,
+    /// Service time already charged to this step (added to every send).
+    extra_delay: f64,
+    /// Virtual time at route entry, captured once for determinism.
+    now: f64,
+    /// Per-fsync latency charge (0 when storage is off).
+    fsync_ms: f64,
+    /// Founding cluster size (link-latency shaping needs it).
+    n: usize,
+}
+
+impl Effects for SimEffects<'_> {
+    fn send(&mut self, to: NodeId, env: Envelope, persist_lag_ms: f64) {
+        let eng = &mut *self.eng;
+        if !eng.alive[to] {
+            return;
+        }
+        // wire-level vote-grant evidence for the double-vote checker
+        // (informational — no timing effect)
+        if let Message::RequestVoteReply { term, granted: true, .. } = &env.msg {
+            if let Some(sl) = eng.safety.as_mut() {
+                sl.votes.push((*term, self.node, to));
+            }
+        }
+        // link delay is sampled on the non-leader endpoint (the paper's
+        // netem delays are installed on follower nodes)
+        let shaped_end =
+            if self.node == eng.current_leader.unwrap_or(usize::MAX) { to } else { self.node };
+        let lat = eng.config.delay.link_latency(
+            shaped_end,
+            self.n,
+            self.now,
+            eng.round,
+            env.msg.wire_size(),
+            &mut eng.net_rng,
+        );
+        let fate = match eng.nemesis.as_mut() {
+            Some(nm) => nm.fate(self.now, self.node, to, eng.current_leader),
+            None => Fate::deliver(),
+        };
+        if fate.copies == 0 {
+            return; // partitioned or lost
+        }
+        if fate.copies > 1 {
+            eng.push(
+                self.q,
+                self.extra_delay + persist_lag_ms + lat + fate.extra_delay_ms[1],
+                Ev::Deliver { to, from: self.node, msg: env.msg.clone() },
+            );
+        }
+        eng.push(
+            self.q,
+            self.extra_delay + persist_lag_ms + lat + fate.extra_delay_ms[0],
+            Ev::Deliver { to, from: self.node, msg: env.msg },
+        );
+    }
+
+    fn arm_election(&mut self) {
+        let eng = &mut *self.eng;
+        eng.el_gen[self.node] += 1;
+        let d = eng
+            .timer_rng
+            .range_f64(eng.config.election_timeout_ms.0, eng.config.election_timeout_ms.1);
+        eng.push(
+            self.q,
+            d,
+            Ev::ElectionTimer { node: self.node, generation: eng.el_gen[self.node] },
+        );
+    }
+
+    fn arm_heartbeat(&mut self) {
+        let eng = &mut *self.eng;
+        eng.hb_gen[self.node] += 1;
+        eng.push(
+            self.q,
+            eng.config.heartbeat_ms,
+            Ev::HeartbeatTimer { node: self.node, generation: eng.hb_gen[self.node] },
+        );
+    }
+
+    fn disarm_heartbeat(&mut self) {
+        self.eng.hb_gen[self.node] += 1;
+    }
+
+    fn persist_hard_state(&mut self, hs: HardState) -> f64 {
+        let eng = &mut *self.eng;
+        let Some(wal) = eng.wals[self.node].as_mut() else { return 0.0 };
+        eng.wal_appends += 1;
+        if wal.append_hard_state(hs) {
+            eng.wal_fsyncs += 1;
+            self.fsync_ms
+        } else {
+            0.0
+        }
+    }
+
+    fn persist_entries(&mut self, prev_index: LogIndex, weight: f64, entries: &[Entry]) -> f64 {
+        let eng = &mut *self.eng;
+        let Some(wal) = eng.wals[self.node].as_mut() else { return 0.0 };
+        eng.wal_appends += 1;
+        if wal.append_splice(prev_index, weight, entries) {
+            eng.wal_fsyncs += 1;
+            self.fsync_ms
+        } else {
+            0.0
+        }
+    }
+
+    // nodes snapshot inline in the sim (`SnapshotCapture::Inline`) — these
+    // are informational; installs are counted via node counters
+    fn capture_snapshot(&mut self, _through: LogIndex) -> bool {
+        true
+    }
+
+    fn install_snapshot(&mut self, _blob: SnapshotBlob) -> bool {
+        true
+    }
+
+    fn apply_batch(&mut self, entry: &Entry) -> bool {
+        // per-node commit evidence for the bench::safety checker
+        if let Some(sl) = self.eng.safety.as_mut() {
+            sl.commits[self.node].push((entry.index, entry.term));
+        }
+        true
+    }
+
+    fn read_ready(&mut self, id: u64, index: LogIndex, lease: bool) -> bool {
+        self.eng.serve_read(self.node, id, index, lease, self.now);
+        true
+    }
+
+    fn read_failed(&mut self, id: u64) -> bool {
+        let eng = &mut *self.eng;
+        if eng.readctl.outstanding.contains_key(&id) {
+            eng.readctl.failures += 1; // the standing retry re-drives it
+        }
+        true
+    }
+
+    fn became_leader(&mut self, term: Term) -> bool {
+        let eng = &mut *self.eng;
+        eng.current_leader = Some(self.node);
+        eng.elections += 1;
+        if let Some(sl) = eng.safety.as_mut() {
+            sl.leaders.push((term, self.node));
+        }
+        true
+    }
+
+    fn stepped_down(&mut self) {
+        let eng = &mut *self.eng;
+        if eng.current_leader == Some(self.node) {
+            eng.current_leader = None;
+        }
+    }
+
+    fn round_committed(&mut self, rc: RoundCommit) -> bool {
+        let eng = &mut *self.eng;
+        // leader-observed quorum evidence for the config-epoch checker: the
+        // commit rule this round actually closed under (both halves when it
+        // was proposed mid-joint)
+        if Some(self.node) == eng.current_leader {
+            if let Some(sl) = eng.safety.as_mut() {
+                sl.commit_evidence.push(CommitEvidence {
+                    index: rc.index,
+                    epoch: rc.epoch,
+                    acc: rc.quorum_weight,
+                    ct: rc.ct,
+                    joint: rc.joint,
+                });
+            }
+        }
+        if eng.lockstep {
+            eng.round_committed_lockstep(self.node, rc.index, rc.repliers, self.now, self.q);
+        } else {
+            eng.round_committed_pipelined(self.node, rc.index, rc.repliers, self.now, self.q);
+        }
+        true
+    }
+
+    fn config_committed(&mut self, epoch: u64, index: LogIndex, joint: bool, voters: Vec<NodeId>) -> bool {
+        let eng = &mut *self.eng;
+        if Some(self.node) == eng.current_leader {
+            eng.config_commits += 1;
+        }
+        if let Some(sl) = eng.safety.as_mut() {
+            sl.config_epochs.push((epoch, index, joint));
+        }
+        // only a completed (non-joint) config changes the power state: the
+        // old half of a joint config still votes
+        if !joint && eng.membership_on {
+            eng.apply_committed_config(epoch, &voters);
+        }
+        true
     }
 }
 

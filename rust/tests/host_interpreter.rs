@@ -1,0 +1,444 @@
+//! Differential + property tests for the shared effect interpreter
+//! (`consensus::host`): the one `ReplicaHost` both the simulator and the
+//! live runtime drive their `Output` batches through.
+//!
+//! Three layers:
+//!
+//! 1. **Differential traces.** A `RecordingEffects` mock replays canned
+//!    `Output` scripts — persist/send interleavings, the snapshot
+//!    handshake, read grant/fail, config commits — once through a
+//!    sim-shaped host drive (`drive_with_lag`, virtual fsync latencies)
+//!    and once through a live-shaped drive (`drive`, blocking persists
+//!    returning 0 lag). The *effect call sequence* must be identical:
+//!    that is the unification this PR pins, and what catches a future
+//!    `Output` arm added to one runtime but not the other.
+//! 2. **Persist-before-reply property.** Seeded-chaos schedules over real
+//!    durable `consensus::node::Node`s assert that every step's output
+//!    batch satisfies `check_persist_order` — no `PersistHardState` /
+//!    `PersistEntries` ever trails a `Send` it guards — and a
+//!    deliberately reordered batch turns the checker (and, under debug
+//!    assertions, the host itself) red.
+//! 3. **Dropped-event accounting.** Observer effects returning `false`
+//!    (a wedged event channel, a dead applier) are counted on the host;
+//!    fire-and-forget effects are not.
+
+use std::sync::Arc;
+
+use cabinet::consensus::host::{
+    check_persist_order, Effects, PersistOrderViolation, ReplicaHost, RoundCommit,
+};
+use cabinet::consensus::message::{
+    AppState, ClusterConfig, Entry, Envelope, LogIndex, Message, NodeId, Payload, SnapshotBlob,
+    Term,
+};
+use cabinet::consensus::node::{Input, Mode, Node, Output};
+use cabinet::net::rng::Rng;
+use cabinet::storage::wal::HardState;
+
+// ---- the recording mock --------------------------------------------------
+
+/// Records every effect call as a normalized `(op, lag)` pair. `fsync_ms`
+/// is what the persist effects report back (the sim adapter returns the
+/// virtual fsync latency; the live adapter blocks and returns 0.0), and
+/// `deliver` is what the observer effects answer (false = consumer gone).
+struct RecordingEffects {
+    trace: Vec<(String, f64)>,
+    fsync_ms: f64,
+    deliver: bool,
+}
+
+impl RecordingEffects {
+    fn new(fsync_ms: f64, deliver: bool) -> Self {
+        RecordingEffects { trace: Vec::new(), fsync_ms, deliver }
+    }
+
+    fn op(&mut self, s: String) {
+        self.trace.push((s, 0.0));
+    }
+
+    /// The effect call sequence with send lags erased — the shape both
+    /// runtime adapters must share.
+    fn ops(&self) -> Vec<String> {
+        self.trace.iter().map(|(s, _)| s.clone()).collect()
+    }
+}
+
+impl Effects for RecordingEffects {
+    fn send(&mut self, to: NodeId, env: Envelope, persist_lag_ms: f64) {
+        self.trace
+            .push((format!("send g{} to={to} {}", env.group, env.msg.kind()), persist_lag_ms));
+    }
+    fn arm_election(&mut self) {
+        self.op("arm_election".into());
+    }
+    fn arm_heartbeat(&mut self) {
+        self.op("arm_heartbeat".into());
+    }
+    fn disarm_heartbeat(&mut self) {
+        self.op("disarm_heartbeat".into());
+    }
+    fn persist_hard_state(&mut self, hs: HardState) -> f64 {
+        self.op(format!("persist_hs term={} voted={:?}", hs.term, hs.voted_for));
+        self.fsync_ms
+    }
+    fn persist_entries(&mut self, prev_index: LogIndex, weight: f64, entries: &[Entry]) -> f64 {
+        self.op(format!("persist_entries prev={prev_index} w={weight} n={}", entries.len()));
+        self.fsync_ms
+    }
+    fn capture_snapshot(&mut self, through: LogIndex) -> bool {
+        self.op(format!("capture through={through}"));
+        self.deliver
+    }
+    fn install_snapshot(&mut self, blob: SnapshotBlob) -> bool {
+        self.op(format!("install last={} term={}", blob.last_index, blob.last_term));
+        self.deliver
+    }
+    fn apply_batch(&mut self, entry: &Entry) -> bool {
+        self.op(format!("apply idx={} term={}", entry.index, entry.term));
+        self.deliver
+    }
+    fn read_ready(&mut self, id: u64, index: LogIndex, lease: bool) -> bool {
+        self.op(format!("read_ready id={id} idx={index} lease={lease}"));
+        self.deliver
+    }
+    fn read_failed(&mut self, id: u64) -> bool {
+        self.op(format!("read_failed id={id}"));
+        self.deliver
+    }
+    fn became_leader(&mut self, term: Term) -> bool {
+        self.op(format!("became_leader term={term}"));
+        self.deliver
+    }
+    fn stepped_down(&mut self) {
+        self.op("stepped_down".into());
+    }
+    fn round_committed(&mut self, rc: RoundCommit) -> bool {
+        self.op(format!(
+            "round_committed idx={} repliers={} epoch={}",
+            rc.index, rc.repliers, rc.epoch
+        ));
+        self.deliver
+    }
+    fn config_committed(
+        &mut self,
+        epoch: u64,
+        index: LogIndex,
+        joint: bool,
+        voters: Vec<NodeId>,
+    ) -> bool {
+        self.op(format!("config epoch={epoch} idx={index} joint={joint} voters={voters:?}"));
+        self.deliver
+    }
+    fn proposal_rejected(&mut self, _payload: Payload) {
+        self.op("proposal_rejected".into());
+    }
+}
+
+// ---- canned scripts ------------------------------------------------------
+
+fn entry(index: u64, term: u64) -> Entry {
+    Entry { term, index, payload: Payload::Noop, wclock: 0 }
+}
+
+fn blob(last_index: u64) -> SnapshotBlob {
+    SnapshotBlob {
+        last_index,
+        last_term: 2,
+        prefix_digest: 0xDEAD_BEEF,
+        wclock: 3,
+        cabinet_t: Some(1),
+        config: None,
+        app: AppState::Slots(Arc::new(vec![1, 2, 3])),
+    }
+}
+
+fn vote_reply(from: NodeId, granted: bool) -> Message {
+    Message::RequestVoteReply { term: 4, from, granted }
+}
+
+fn ack(from: NodeId, match_index: u64) -> Message {
+    Message::AppendEntriesReply { term: 4, from, success: true, match_index, wclock: 1 }
+}
+
+/// Persist + send interleaving: the durable follower path — HardState and a
+/// splice land before the acks that acknowledge them, then a timer re-arm.
+fn script_persist_send() -> Vec<Output> {
+    vec![
+        Output::PersistHardState { term: 4, voted_for: Some(2) },
+        Output::PersistEntries { prev_index: 7, weight: 1.25, entries: vec![entry(8, 4)] },
+        Output::Send(2, ack(1, 8)),
+        Output::Send(0, vote_reply(1, true)),
+        Output::ResetElectionTimer,
+    ]
+}
+
+/// Snapshot handshake: capture request, a follower-side install, and the
+/// reply that reports the new match index.
+fn script_snapshot_handshake() -> Vec<Output> {
+    vec![
+        Output::SnapshotRequest { through: 30 },
+        Output::SnapshotInstalled(blob(30)),
+        Output::Send(0, Message::InstallSnapshotReply { term: 4, from: 1, match_index: 30 }),
+    ]
+}
+
+/// Read grant / fail pair plus the leader's grant RPC to a forwarder.
+fn script_reads() -> Vec<Output> {
+    vec![
+        Output::ReadReady { id: 11, index: 9, lease: true },
+        Output::Send(2, Message::ReadGrant { term: 4, leader: 1, id: 12, read_index: 9 }),
+        Output::ReadFailed { id: 13 },
+    ]
+}
+
+/// Commit-side observers: a joint + settled config commit, the round that
+/// carried them, applied entries, and the leadership lifecycle around it.
+fn script_commits_and_config() -> Vec<Output> {
+    vec![
+        Output::BecameLeader { term: 4 },
+        Output::StartHeartbeat,
+        Output::Commit(entry(9, 4)),
+        Output::RoundCommitted {
+            wclock: 1,
+            index: 9,
+            repliers: 3,
+            quorum_weight: 2.5,
+            epoch: 1,
+            ct: 2.0,
+            joint: Some((1.5, 1.0)),
+        },
+        Output::ConfigCommitted { epoch: 1, index: 9, joint: true, voters: vec![0, 1, 2, 3] },
+        Output::ConfigCommitted { epoch: 2, index: 10, joint: false, voters: vec![0, 1, 3] },
+        Output::ProposalRejected(Payload::Noop),
+        Output::StopHeartbeat,
+        Output::SteppedDown,
+    ]
+}
+
+fn scripts() -> Vec<(&'static str, Vec<Output>)> {
+    vec![
+        ("persist_send", script_persist_send()),
+        ("snapshot_handshake", script_snapshot_handshake()),
+        ("reads", script_reads()),
+        ("commits_and_config", script_commits_and_config()),
+    ]
+}
+
+// ---- differential traces -------------------------------------------------
+
+/// The tentpole pin: a script driven the way the simulator drives the host
+/// (initial persist lag, virtual fsync latencies) and the way the live
+/// runtime does (no initial lag, blocking persists returning 0) produces
+/// the *same effect call sequence*. Only the send lag annotations — the
+/// sim's virtual-time bookkeeping — may differ.
+#[test]
+fn sim_and_live_shaped_drives_produce_identical_effect_sequences() {
+    for (name, script) in scripts() {
+        // sim-shaped: snapshot-persist lag charged up front, 2ms per fsync
+        let mut sim_host = ReplicaHost::new(5);
+        let mut sim_fx = RecordingEffects::new(2.0, true);
+        let mut outs = script.clone();
+        sim_host.drive_with_lag(&mut outs, 0.5, &mut sim_fx);
+        assert!(outs.is_empty(), "{name}: drive must drain the batch");
+
+        // live-shaped: appends block until durable, so zero reported lag
+        let mut live_host = ReplicaHost::new(5);
+        let mut live_fx = RecordingEffects::new(0.0, true);
+        let mut outs = script.clone();
+        live_host.drive(&mut outs, &mut live_fx);
+        assert!(outs.is_empty(), "{name}: drive must drain the batch");
+
+        assert_eq!(
+            sim_fx.ops(),
+            live_fx.ops(),
+            "{name}: the two runtime shapes must interpret outputs identically"
+        );
+        // every live send carries zero lag (blocking persists report none)
+        for (op, lag) in &live_fx.trace {
+            if op.starts_with("send ") {
+                assert_eq!(*lag, 0.0, "{name}: live-shaped sends never see persist lag");
+            }
+        }
+        assert_eq!(sim_host.dropped_events(), 0);
+        assert_eq!(live_host.dropped_events(), 0);
+    }
+}
+
+/// Golden trace for the richest script: pins emission-order interpretation,
+/// group stamping on every envelope, and lag accumulation across persists.
+#[test]
+fn persist_send_script_golden_trace() {
+    let mut host = ReplicaHost::new(3);
+    let mut fx = RecordingEffects::new(2.0, true);
+    let mut outs = script_persist_send();
+    host.drive_with_lag(&mut outs, 0.5, &mut fx);
+    let expected_ops = vec![
+        "persist_hs term=4 voted=Some(2)".to_string(),
+        "persist_entries prev=7 w=1.25 n=1".to_string(),
+        "send g3 to=2 AppendEntriesReply".to_string(),
+        "send g3 to=0 RequestVoteReply".to_string(),
+        "arm_election".to_string(),
+    ];
+    assert_eq!(fx.ops(), expected_ops);
+    // 0.5 initial + 2.0 (HardState fsync) + 2.0 (splice fsync) on both sends
+    assert_eq!(fx.trace[2].1, 4.5);
+    assert_eq!(fx.trace[3].1, 4.5);
+}
+
+// ---- dropped-event accounting --------------------------------------------
+
+#[test]
+fn dropped_observer_events_are_counted_per_host() {
+    // Every observer effect answers "consumer gone": each counts once.
+    // Sends, timers, persists and role transitions never do.
+    let mut host = ReplicaHost::new(0);
+    let mut fx = RecordingEffects::new(0.0, false);
+    for (_, script) in scripts() {
+        let mut outs = script;
+        host.drive(&mut outs, &mut fx);
+    }
+    // observer outputs across the four scripts: capture + install (snapshot
+    // handshake), read_ready + read_failed (reads), became_leader + apply +
+    // round_committed + 2×config_committed (commits_and_config)
+    assert_eq!(host.dropped_events(), 9);
+
+    // the same scripts with a healthy consumer count nothing
+    let mut healthy = ReplicaHost::new(0);
+    let mut fx = RecordingEffects::new(0.0, true);
+    for (_, script) in scripts() {
+        let mut outs = script;
+        healthy.drive(&mut outs, &mut fx);
+    }
+    assert_eq!(healthy.dropped_events(), 0);
+}
+
+// ---- persist-before-reply property ---------------------------------------
+
+/// Seeded-chaos schedule over a durable 3-node cluster: random deliveries,
+/// timer fires, proposals and reads — asserting every single step's output
+/// batch keeps its persists ahead of its sends. This is the invariant the
+/// host's debug assertion enforces centrally; here it is checked against
+/// the real `Node` emission sites.
+#[test]
+fn node_output_batches_keep_persists_before_sends() {
+    for seed in [7u64, 23, 99, 1234] {
+        for mode in [Mode::Raft, Mode::cabinet(3, 1)] {
+            chaos_persist_order(3, mode, seed, 2500);
+        }
+    }
+}
+
+fn chaos_persist_order(n: usize, mode: Mode, seed: u64, steps: u64) {
+    let mut nodes: Vec<Node> = (0..n)
+        .map(|i| {
+            let mut nd = Node::new(i, n, mode.clone());
+            nd.set_durable(true);
+            nd
+        })
+        .collect();
+    let mut rng = Rng::new(seed);
+    let mut queue: Vec<(NodeId, NodeId, Message)> = Vec::new();
+    let mut batches_checked = 0u64;
+    // bootstrap: node 0 campaigns first
+    let mut pending: Vec<(NodeId, Input)> = vec![(0, Input::ElectionTimeout)];
+    for step in 0..steps {
+        let (node, input) = match pending.pop() {
+            Some(p) => p,
+            None => {
+                let roll = rng.next_u64() % 100;
+                if roll < 60 && !queue.is_empty() {
+                    // deliver a random queued message (reordering included)
+                    let i = (rng.next_u64() as usize) % queue.len();
+                    let (from, to, msg) = queue.swap_remove(i);
+                    (to, Input::Receive(from, msg))
+                } else if roll < 75 {
+                    let node = (rng.next_u64() as usize) % n;
+                    (node, Input::HeartbeatTimeout)
+                } else if roll < 85 {
+                    let node = (rng.next_u64() as usize) % n;
+                    (node, Input::ElectionTimeout)
+                } else if roll < 95 {
+                    let node = (rng.next_u64() as usize) % n;
+                    (node, Input::Propose(Payload::Bytes(Arc::new(vec![step as u8]))))
+                } else {
+                    let node = (rng.next_u64() as usize) % n;
+                    (node, Input::Read { id: step })
+                }
+            }
+        };
+        nodes[node].observe_time(step as f64);
+        let outs = nodes[node].step(input);
+        assert_eq!(
+            check_persist_order(&outs),
+            Ok(()),
+            "node {node} step {step} (seed {seed}): a persist trailed a send in {outs:?}"
+        );
+        batches_checked += 1;
+        for o in outs {
+            if let Output::Send(to, msg) = o {
+                queue.push((node, to, msg));
+            }
+        }
+    }
+    assert!(batches_checked == steps, "every step produced a checked batch");
+}
+
+/// Red case: a deliberately reordered batch — the ack released before the
+/// splice that guards it — is flagged with exact positions.
+#[test]
+fn reordered_batch_is_rejected_by_the_checker() {
+    let bad = vec![
+        Output::Send(2, ack(1, 8)),
+        Output::PersistEntries { prev_index: 7, weight: 1.0, entries: vec![entry(8, 4)] },
+    ];
+    assert_eq!(
+        check_persist_order(&bad),
+        Err(PersistOrderViolation { send_pos: 0, persist_pos: 1 })
+    );
+
+    // and with the persist ahead of the send, the same batch is fine
+    let good = vec![bad[1].clone(), bad[0].clone()];
+    assert_eq!(check_persist_order(&good), Ok(()));
+}
+
+/// The host turns the same violation into a loud failure under debug
+/// assertions (how both runtimes run the tier-1 suite) instead of quietly
+/// releasing an un-persisted acknowledgement.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "persist-before-reply violated")]
+fn host_debug_asserts_on_reordered_batch() {
+    let mut host = ReplicaHost::new(0);
+    let mut fx = RecordingEffects::new(0.0, true);
+    let mut outs = vec![
+        Output::Send(2, ack(1, 8)),
+        Output::PersistHardState { term: 4, voted_for: None },
+    ];
+    host.drive(&mut outs, &mut fx);
+}
+
+// ---- host equivalence with a real config-change payload -------------------
+
+/// ConfigChange voters arrive by value through the one interpreter — drive
+/// the same settled-config commit through two hosts and confirm byte-equal
+/// observer arguments (guards against one runtime reordering or rewriting
+/// config commits during future membership work).
+#[test]
+fn config_commit_arguments_are_stable_across_hosts() {
+    let cfg = Arc::new(ClusterConfig::bootstrap(4));
+    let script = vec![
+        Output::Commit(Entry {
+            term: 2,
+            index: 5,
+            payload: Payload::ConfigChange(cfg),
+            wclock: 1,
+        }),
+        Output::ConfigCommitted { epoch: 3, index: 5, joint: false, voters: vec![0, 1, 2, 3] },
+    ];
+    let mut a = RecordingEffects::new(0.0, true);
+    let mut b = RecordingEffects::new(0.0, true);
+    ReplicaHost::new(1).drive(&mut script.clone(), &mut a);
+    ReplicaHost::new(1).drive(&mut script.clone(), &mut b);
+    assert_eq!(a.ops(), b.ops());
+    assert_eq!(a.ops()[1], "config epoch=3 idx=5 joint=false voters=[0, 1, 2, 3]");
+}
