@@ -1,0 +1,35 @@
+//! `cargo bench` target regenerating Fig 27 — payload-adaptive coded
+//! replication vs value size (quick scale; run `cargo run --release
+//! --example figures -- fig27 --paper` for the full version). Each cell
+//! runs YCSB-A with 1 KiB–256 KiB values on 25 MB/s links, full-copy vs
+//! coded (k=3 + XOR parity, adaptive cutover) for Raft and cab f20%. The
+//! acceptance shape: below the cutover both variants are bit-for-bit; at
+//! 64 KiB+ the coded variant wins on bytes/op and committed wall-clock
+//! throughput. Emits `BENCH_fig27_value_size.json` for the CI bench-check
+//! job.
+
+use cabinet::bench::{figures, quick_requested, BenchReport, Bencher, Scale};
+
+fn main() {
+    let quick = quick_requested();
+    let b = Bencher::quick();
+    let mut report = BenchReport::new(
+        "fig27_value_size",
+        "coded replication vs value size: full vs coded (k=3, adaptive cutover); n=7, 25 MB/s links",
+        quick,
+    );
+    let mut last = None;
+    b.iter_rec(&mut report, "fig27_value_size", || {
+        last = Some(figures::fig27_value_size(Scale::Quick));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+    match report.write_to_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write bench report: {e}");
+            std::process::exit(1);
+        }
+    }
+}

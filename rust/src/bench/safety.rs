@@ -32,6 +32,12 @@
 //!    term (Raft's vote-persistence invariant). An amnesiac restart that
 //!    forgets `voted_for` and re-grants the same term to a second candidate
 //!    is exactly the double-vote the durable WAL (`storage::wal`) closes.
+//! 8. **Coded reconstruction** — every commit of a coded round carries a
+//!    shard set of at least `k` distinct shards (`consensus::coding`'s
+//!    k-of-m property). A coded round that closed its weighted quorum with
+//!    only `k − 1` distinct shards committed an entry no follower set can
+//!    reconstruct — durability theater, flagged even though the weight
+//!    cleared CT.
 //!
 //! The checker is pure data → verdict: the simulator collects the log when
 //! `SimConfig::track_safety` is set, the chaos harness in
@@ -190,6 +196,17 @@ pub fn check(log: &SafetyLog) -> SafetyReport {
                 violations.push(format!(
                     "index {}: joint commit old-half weight {jacc} <= threshold {jct} \
                      (epoch {})",
+                    e.index, e.epoch
+                ));
+            }
+        }
+        // 8: coded reconstruction — a coded round's acked shard set must
+        // reach k distinct shards or the committed entry is unrecoverable
+        if let Some((distinct, k)) = e.coded {
+            if distinct < k {
+                violations.push(format!(
+                    "index {}: coded commit with only {distinct} distinct shard(s) \
+                     acked < k = {k} — entry cannot be reconstructed (epoch {})",
                     e.index, e.epoch
                 ));
             }
@@ -428,7 +445,7 @@ mod tests {
     }
 
     fn evidence(index: u64, epoch: u64, acc: f64, ct: f64) -> crate::sim::CommitEvidence {
-        crate::sim::CommitEvidence { index, epoch, acc, ct, joint: None }
+        crate::sim::CommitEvidence { index, epoch, acc, ct, joint: None, coded: None }
     }
 
     #[test]
@@ -442,6 +459,7 @@ mod tests {
                 acc: 3.0,
                 ct: 2.5,
                 joint: Some((2.6, 2.5)),
+                coded: None,
             },
         ];
         let r = check(&log);
@@ -464,10 +482,46 @@ mod tests {
             acc: 3.0,
             ct: 2.5,
             joint: Some((1.0, 2.0)),
+            coded: None,
         }];
         let r = check(&half);
         assert!(!r.is_clean());
         assert!(r.violations[0].contains("old-half"), "{:?}", r.violations);
+    }
+
+    fn coded_evidence(index: u64, distinct: u32, k: u32) -> crate::sim::CommitEvidence {
+        crate::sim::CommitEvidence {
+            index,
+            epoch: 0,
+            acc: 3.0,
+            ct: 2.5,
+            joint: None,
+            coded: Some((distinct, k)),
+        }
+    }
+
+    #[test]
+    fn coded_commit_requires_reconstructing_shard_set() {
+        // healthy coded commits: exactly k and more-than-k distinct shards
+        let mut log = SafetyLog::new(2);
+        log.commit_evidence = vec![coded_evidence(1, 3, 3), coded_evidence(2, 4, 3)];
+        let r = check(&log);
+        assert!(r.is_clean(), "{:?}", r.violations);
+        assert_eq!(r.evidence_checked, 2);
+
+        // the red case: the weighted quorum cleared CT (acc > ct above) but
+        // only k − 1 distinct shards were acked — no follower set can
+        // reconstruct the entry, so the commit is a durability violation
+        let mut bad = SafetyLog::new(2);
+        bad.commit_evidence = vec![coded_evidence(1, 2, 3)];
+        let r = check(&bad);
+        assert!(!r.is_clean());
+        assert!(r.violations[0].contains("cannot be reconstructed"), "{:?}", r.violations);
+
+        // full-copy rounds (coded: None) are exempt from the shard conjunct
+        let mut plain = SafetyLog::new(2);
+        plain.commit_evidence = vec![evidence(1, 0, 3.0, 2.5)];
+        assert!(check(&plain).is_clean());
     }
 
     #[test]

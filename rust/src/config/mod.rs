@@ -5,6 +5,7 @@ pub mod toml;
 
 use anyhow::{bail, Context, Result};
 
+use crate::consensus::coding::CodingConfig;
 use crate::net::delay::DelayModel;
 use crate::net::fault::{ContentionSpec, KillSpec, KillStrategy};
 use crate::net::nemesis::{MembershipEvent, MembershipSpec, NemesisSpec, PartitionSpec};
@@ -30,18 +31,35 @@ use crate::workload::{ShardBy, Workload};
 /// pre_vote = true        # PreVote elections (Raft §9.6, n − t quorum); default off
 /// read_path = "lease"    # linearizable reads: log (default) | readindex | lease
 /// lease_drift_ms = 50    # clock-drift margin under the lease bound
+/// max_batch_bytes = 1048576  # leader-side adaptive batching: coalesce queued
+///                            # ops into one AppendEntries per follower per
+///                            # tick, up to this many payload bytes (omit =
+///                            # the historical one-round-per-tick proposer)
 ///
 /// [workload]
 /// kind = "ycsb"          # ycsb | tpcc
 /// workload = "A"         # ycsb only
 /// batch = 5000
 /// records = 100000       # ycsb only: keyspace size
+/// value_size = 65536     # ycsb only: modeled bytes per written value, up to
+///                        # 16 MiB (0 = the historical 12-byte-op wire model)
 ///
 /// [delay]
 /// model = "d0"           # d0 | d1 | d2 | d3 | d4
 /// mean_ms = 100          # d1 only
 /// spread_ms = 20         # d1 only
 /// period_rounds = 10     # d3 only
+/// bandwidth_bytes_per_ms = 25000  # per-link bandwidth for the transfer term
+///                                 # (default: the ≈400 MB/s testbed NIC)
+///
+/// [coding]
+/// k = 3                  # payload-adaptive coded replication: entries at or
+///                        # above the cutover ship as k data + 1 XOR parity
+///                        # shards (needs k >= 2 and k + 1 <= n - 1)
+/// cutover_bytes = 65536  # code entries at/above this payload size (omit =
+///                        # adaptive from the link bandwidth)
+/// enabled = true         # explicit off switch; stray knobs under
+///                        # enabled = false are a config error
 ///
 /// [faults]
 /// kill_round = 20
@@ -117,6 +135,12 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
         }
         config.pipeline = depth as usize;
     }
+    if let Some(mb) = root.get("max_batch_bytes").and_then(|v| v.as_int()) {
+        if mb < 1 {
+            bail!("max_batch_bytes must be >= 1, got {mb}");
+        }
+        config.max_batch_bytes = Some(mb as u64);
+    }
     if let Some(every) = root.get("snapshot_every").and_then(|v| v.as_int()) {
         if every < 0 {
             bail!("snapshot_every must be >= 0, got {every}");
@@ -161,8 +185,17 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
                 }
                 config.workload =
                     WorkloadSpec::Ycsb { workload: wl, batch, records: records as u64 };
+                if let Some(vs) = w.get("value_size").and_then(|v| v.as_int()) {
+                    if vs < 0 {
+                        bail!("value_size must be >= 0, got {vs}");
+                    }
+                    config.value_size = vs as u64;
+                }
             }
             "tpcc" => {
+                if w.get("value_size").is_some() {
+                    bail!("value_size applies to YCSB only (TPC-C's wire model is op-count based)");
+                }
                 let wh = w.get("warehouses").and_then(|v| v.as_int()).unwrap_or(10);
                 // parse-time validation, not a construction-site .max(1)
                 // patch-up: a zero-warehouse experiment is a config error
@@ -210,6 +243,32 @@ pub fn sim_config_from_toml(text: &str) -> Result<SimConfig> {
             "d4" => DelayModel::Bursting,
             other => bail!("unknown delay model {other}"),
         };
+        if let Some(b) = d.get("bandwidth_bytes_per_ms").and_then(|v| v.as_float()) {
+            config.bandwidth_bytes_per_ms = Some(b);
+        }
+    }
+
+    if let Some(c) = doc.get("coding") {
+        let on = c.get("enabled").and_then(|v| v.as_bool()).unwrap_or(true);
+        if on {
+            let k = c.get("k").and_then(|v| v.as_int()).unwrap_or(3);
+            if k < 2 {
+                bail!("[coding] k must be >= 2, got {k}");
+            }
+            let cutover = match c.get("cutover_bytes").and_then(|v| v.as_int()) {
+                Some(b) if b < 1 => bail!("[coding] cutover_bytes must be >= 1, got {b}"),
+                Some(b) => Some(b as u64),
+                None => None,
+            };
+            config.coding = Some(CodingConfig { k: k as u32, cutover_bytes: cutover });
+        } else if c.get("k").is_some() || c.get("cutover_bytes").is_some() {
+            bail!("[coding] enabled = false cannot be combined with other coding knobs");
+        }
+    }
+    // one shared validator covers the coding table plus the batching /
+    // bandwidth / value-size knobs parsed above
+    if let Err(e) = config.validate_coding() {
+        bail!("{e}");
     }
 
     if let Some(f) = doc.get("faults") {
@@ -733,6 +792,59 @@ events = ["4=join:5", "10=leave:0", "16=replace:1>6"]
         let cfg = sim_config_from_toml("n = 7\n[membership]\n").unwrap();
         assert!(!cfg.membership_on());
         assert!(cfg.membership.is_none() && cfg.initial_members.is_none());
+    }
+
+    #[test]
+    fn coding_and_batching_knobs_roundtrip() {
+        let cfg = sim_config_from_toml(
+            "protocol = \"cabinet\"\nt = 2\nn = 11\nmax_batch_bytes = 1048576\n\
+             [workload]\nkind = \"ycsb\"\nvalue_size = 65536\n\
+             [delay]\nmodel = \"d0\"\nbandwidth_bytes_per_ms = 25000\n\
+             [coding]\nk = 3\ncutover_bytes = 4096\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.max_batch_bytes, Some(1_048_576));
+        assert_eq!(cfg.value_size, 65_536);
+        assert_eq!(cfg.bandwidth_bytes_per_ms, Some(25_000.0));
+        let c = cfg.coding.expect("coding parsed");
+        assert_eq!((c.k, c.cutover_bytes), (3, Some(4096)));
+        assert_eq!(cfg.coding_params(), Some((3, 4096)));
+        // omitted cutover resolves adaptively from the constrained bandwidth
+        let cfg = sim_config_from_toml(
+            "n = 11\n[delay]\nbandwidth_bytes_per_ms = 25000\n[coding]\nk = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.coding_params(), Some((3, 35_000)));
+        // a bare table turns coding on with the stock k
+        let cfg = sim_config_from_toml("n = 11\n[coding]\n").unwrap();
+        assert_eq!(cfg.coding.map(|c| c.k), Some(3));
+        // enabled = false is an explicit off switch; stray knobs are an error
+        assert!(sim_config_from_toml("[coding]\nenabled = false\n").unwrap().coding.is_none());
+        assert!(sim_config_from_toml("[coding]\nenabled = false\nk = 3\n").is_err());
+        // no table at all = full-copy replication, knobs at their defaults
+        let cfg = sim_config_from_toml("rounds = 5\n").unwrap();
+        assert!(cfg.coding.is_none() && cfg.max_batch_bytes.is_none());
+        assert_eq!(cfg.value_size, 0);
+        assert!(cfg.bandwidth_bytes_per_ms.is_none());
+        // rejected: k out of range for n, degenerate k, non-positive
+        // bandwidth, zero batch budget, oversized values, value_size under
+        // TPC-C, coding under HQC
+        assert!(sim_config_from_toml("n = 4\n[coding]\nk = 4\n").is_err());
+        assert!(sim_config_from_toml("[coding]\nk = 1\n").is_err());
+        assert!(sim_config_from_toml("[delay]\nbandwidth_bytes_per_ms = 0\n").is_err());
+        assert!(sim_config_from_toml("max_batch_bytes = 0\n").is_err());
+        assert!(sim_config_from_toml(
+            "[workload]\nkind = \"ycsb\"\nvalue_size = 999999999\n"
+        )
+        .is_err());
+        assert!(sim_config_from_toml(
+            "[workload]\nkind = \"tpcc\"\nvalue_size = 1024\n"
+        )
+        .is_err());
+        assert!(sim_config_from_toml(
+            "protocol = \"hqc\"\nn = 9\nsizes = [3, 3, 3]\n[coding]\nk = 3\n"
+        )
+        .is_err());
     }
 
     #[test]

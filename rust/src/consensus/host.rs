@@ -67,6 +67,10 @@ pub struct RoundCommit {
     /// `(acc_old, ct_old)` when the round was proposed under a joint
     /// config and the old half's rule held too.
     pub joint: Option<(f64, f64)>,
+    /// `(distinct acked shards, k)` when the round's entry shipped coded —
+    /// the acked shard set's reconstruction evidence. `None` for full-copy
+    /// rounds (every coded-off run).
+    pub coded: Option<(u32, u32)>,
 }
 
 /// The effect surface one replica needs from its runtime. Implemented once
@@ -262,6 +266,7 @@ impl ReplicaHost {
                     epoch,
                     ct,
                     joint,
+                    coded,
                 } => self.observe(fx.round_committed(RoundCommit {
                     wclock,
                     index,
@@ -270,6 +275,7 @@ impl ReplicaHost {
                     epoch,
                     ct,
                     joint,
+                    coded,
                 })),
                 Output::ConfigCommitted { epoch, index, joint, voters } => {
                     self.observe(fx.config_committed(epoch, index, joint, voters));

@@ -118,6 +118,26 @@ impl ClusterConfig {
     }
 }
 
+/// One erasure-coded shard of a large entry's payload (coded replication —
+/// see `consensus::coding`). A follower stores the shard at the entry's
+/// `(index, term)` log slot while the leader keeps the full payload;
+/// `Log::prefix_digest` hashes only `(index, term, wclock)`, so the
+/// substitution is invisible to log matching. Shard `k` is the XOR parity;
+/// any `k` distinct shards of the `k + 1` reconstruct the canonical bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardData {
+    /// Which of the `k + 1` shards this is (0-based; shard `k` = parity).
+    pub shard_id: u32,
+    /// Data shards needed to reconstruct the payload.
+    pub k: u32,
+    /// Modeled wire size of the *original* payload in bytes — the shard's
+    /// own wire cost is `ceil(total_bytes / k)` plus a small header.
+    pub total_bytes: u64,
+    /// Coded bytes of the payload's canonical serialization
+    /// (`coding::payload_bytes`).
+    pub data: Arc<Vec<u8>>,
+}
+
 /// Entry payload — what the replicated state machine applies on commit.
 #[derive(Clone, Debug)]
 pub enum Payload {
@@ -136,6 +156,11 @@ pub enum Payload {
     ConfigChange(Arc<ClusterConfig>),
     /// Opaque client bytes (quickstart / live KV example).
     Bytes(Arc<Vec<u8>>),
+    /// A follower-side stand-in for a coded entry: one shard of the
+    /// original payload. Applying a shard is a no-op — only the leader
+    /// (holding the full payload) applies coded entries; followers hold the
+    /// durability evidence.
+    Shard(Arc<ShardData>),
 }
 
 impl Payload {
@@ -224,6 +249,25 @@ pub struct SnapshotBlob {
 #[derive(Clone, Debug)]
 pub enum Message {
     AppendEntries {
+        term: Term,
+        leader: NodeId,
+        prev_log_index: LogIndex,
+        prev_log_term: Term,
+        entries: Vec<Entry>,
+        leader_commit: LogIndex,
+        /// Cabinet: weight clock for this round (Algorithm 1, Line 2).
+        wclock: WClock,
+        /// Cabinet: the receiver's weight under `wclock` (Line 3).
+        weight: f64,
+    },
+    /// AppendEntries whose large entries carry [`Payload::Shard`] stand-ins
+    /// instead of full payloads (coded replication). Semantically identical
+    /// to `AppendEntries` on the receiver — the shard entries splice into
+    /// the log at the same `(index, term)` slots — but kept as its own
+    /// variant so the wire model, nemesis schedules, and RPC accounting can
+    /// target shard-bearing links, and so full-copy runs never construct
+    /// it (bit-identical coded-off behavior).
+    AppendEntriesShard {
         term: Term,
         leader: NodeId,
         prev_log_index: LogIndex,
@@ -342,10 +386,28 @@ impl Envelope {
     }
 }
 
+/// Modeled wire size of one entry payload. YCSB carries the value-size
+/// dimension (`value_size = 0` reproduces the historical `12·len + 16`
+/// model byte-for-byte); a shard ships `ceil(total / k)` of its original
+/// payload plus a 24-byte shard header.
+pub fn payload_wire(p: &Payload) -> usize {
+    match p {
+        Payload::Ycsb(b) => (12 + b.value_size as usize) * b.len() + 16,
+        Payload::Tpcc(b) => 12 * b.len() + 16,
+        Payload::Bytes(b) => b.len() + 16,
+        Payload::Shard(s) => {
+            let k = (s.k as usize).max(1);
+            (s.total_bytes as usize + k - 1) / k + 24
+        }
+        _ => 16,
+    }
+}
+
 impl Message {
     pub fn term(&self) -> Term {
         match self {
             Message::AppendEntries { term, .. }
+            | Message::AppendEntriesShard { term, .. }
             | Message::AppendEntriesReply { term, .. }
             | Message::RequestVote { term, .. }
             | Message::RequestVoteReply { term, .. }
@@ -363,6 +425,7 @@ impl Message {
     pub fn kind(&self) -> &'static str {
         match self {
             Message::AppendEntries { .. } => "AppendEntries",
+            Message::AppendEntriesShard { .. } => "AppendEntriesShard",
             Message::AppendEntriesReply { .. } => "AppendEntriesReply",
             Message::RequestVote { .. } => "RequestVote",
             Message::RequestVoteReply { .. } => "RequestVoteReply",
@@ -381,16 +444,9 @@ impl Message {
     /// transfer time with batch size).
     pub fn wire_size(&self) -> usize {
         match self {
-            Message::AppendEntries { entries, .. } => {
-                64 + entries
-                    .iter()
-                    .map(|e| match &e.payload {
-                        Payload::Ycsb(b) => 12 * b.len() + 16,
-                        Payload::Tpcc(b) => 12 * b.len() + 16,
-                        Payload::Bytes(b) => b.len() + 16,
-                        _ => 16,
-                    })
-                    .sum::<usize>()
+            Message::AppendEntries { entries, .. }
+            | Message::AppendEntriesShard { entries, .. } => {
+                64 + entries.iter().map(|e| payload_wire(&e.payload)).sum::<usize>()
             }
             Message::InstallSnapshot { snapshot, .. } => 96 + snapshot.app.wire_size(),
             _ => 48,
@@ -406,6 +462,16 @@ mod tests {
     fn term_accessor_covers_all_variants() {
         let msgs = [
             Message::AppendEntries {
+                term: 3,
+                leader: 0,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: vec![],
+                leader_commit: 0,
+                wclock: 1,
+                weight: 1.0,
+            },
+            Message::AppendEntriesShard {
                 term: 3,
                 leader: 0,
                 prev_log_index: 0,
@@ -445,8 +511,47 @@ mod tests {
         ];
         assert_eq!(
             msgs.iter().map(Message::term).collect::<Vec<_>>(),
-            vec![3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+            vec![3, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
         );
+    }
+
+    #[test]
+    fn value_size_scales_ycsb_wire_model() {
+        use crate::workload::{Workload, YcsbGen};
+        let mut b = YcsbGen::new(Workload::A, 100, 1).batch(10);
+        assert_eq!(payload_wire(&Payload::Ycsb(Arc::new(b.clone()))), 12 * 10 + 16);
+        b.value_size = 65_536;
+        assert_eq!(
+            payload_wire(&Payload::Ycsb(Arc::new(b))),
+            (12 + 65_536) * 10 + 16
+        );
+    }
+
+    #[test]
+    fn shard_wire_size_is_a_k_th_of_the_payload() {
+        let full = Payload::Bytes(Arc::new(vec![7u8; 300_000]));
+        let shard = Payload::Shard(Arc::new(ShardData {
+            shard_id: 1,
+            k: 3,
+            total_bytes: payload_wire(&full) as u64,
+            data: Arc::new(vec![0u8; 100_006]),
+        }));
+        let fw = payload_wire(&full);
+        let sw = payload_wire(&shard);
+        assert!(sw < fw / 2, "shard {sw} vs full {fw}");
+        assert!(sw >= fw / 3, "shard must still pay ceil(total/k): {sw} vs {fw}");
+        // a shard-bearing AppendEntries is proportionally cheaper
+        let mk = |p: Payload| Message::AppendEntriesShard {
+            term: 1,
+            leader: 0,
+            prev_log_index: 0,
+            prev_log_term: 0,
+            entries: vec![Entry { term: 1, index: 1, payload: p, wclock: 1 }],
+            leader_commit: 0,
+            wclock: 1,
+            weight: 1.0,
+        };
+        assert!(mk(shard).wire_size() < mk(full).wire_size() / 2);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! std-thread runtime (`live::`), both through the one shared effect
 //! interpreter in [`host`] ([`ReplicaHost`] + the [`Effects`] trait).
 
+pub mod coding;
 pub mod host;
 pub mod hqc;
 pub mod log;
@@ -11,7 +12,10 @@ pub mod message;
 pub mod node;
 pub mod weights;
 
+pub use coding::CodingConfig;
 pub use host::{check_persist_order, Effects, PersistOrderViolation, ReplicaHost, RoundCommit};
-pub use message::{AppState, Entry, LogIndex, Message, NodeId, Payload, SnapshotBlob, Term, WClock};
+pub use message::{
+    AppState, Entry, LogIndex, Message, NodeId, Payload, ShardData, SnapshotBlob, Term, WClock,
+};
 pub use node::{Input, Mode, Node, Output, ReadPath, Role, SnapshotCapture};
 pub use weights::{ratio_bounds, threshold_pct, WeightScheme};

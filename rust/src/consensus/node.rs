@@ -21,6 +21,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::consensus::coding;
 use crate::consensus::log::Log;
 use crate::consensus::message::{
     AppState, ClusterConfig, Entry, LogIndex, MemberSpec, MemberState, Message, NodeId,
@@ -163,6 +164,11 @@ pub enum Output {
         epoch: u64,
         ct: f64,
         joint: Option<(f64, f64)>,
+        /// `(distinct acked shards, k)` when the round's entry shipped
+        /// coded — reconstruction evidence for the safety checker (the
+        /// commit rule requires `distinct >= k`). `None` for full-copy
+        /// rounds, i.e. every coded-off run.
+        coded: Option<(u32, u32)>,
     },
     /// A `ConfigChange` entry committed on this node (any role). Drivers use
     /// it to retire removed nodes and to record the config-epoch trajectory
@@ -238,6 +244,32 @@ struct InflightRound {
     /// round commits only when the weighted rule holds in *both* halves.
     /// Snapshotted at propose time like `weights`/`ct`.
     joint: Option<JointAcc>,
+    /// Shard-ack accumulator when this round's entry ships coded (None for
+    /// full-copy entries — every historical round).
+    coded: Option<CodedAcc>,
+}
+
+/// Shard-ack accumulator for one coded round. The leader keeps the full
+/// payload and never occupies a shard slot; bit `s` of `acked_shards` is
+/// set once any follower assigned shard `s` acks the round. The round's
+/// commit rule gains the conjunct `distinct() >= k` — the acked shard set
+/// must reconstruct the entry (any k of the k+1 XOR shards do).
+#[derive(Clone, Copy, Debug)]
+struct CodedAcc {
+    k: u32,
+    /// Total shards (k + 1).
+    m: u32,
+    /// Bitmask over shard ids 0..m.
+    acked_shards: u64,
+}
+
+impl CodedAcc {
+    fn distinct(&self) -> u32 {
+        self.acked_shards.count_ones()
+    }
+    fn reconstructs(&self) -> bool {
+        self.distinct() >= self.k
+    }
 }
 
 /// Old-half quorum accumulator for one round proposed under a joint config.
@@ -359,6 +391,11 @@ pub struct Node {
     /// Ablation switch (Property P2): when true, weights stay at their
     /// initial assignment instead of being re-dealt by responsiveness.
     static_weights: bool,
+    /// Coded replication (leader side): `(k, cutover_bytes)` — entries
+    /// whose payload wire size reaches the cutover ship as k-of-(k+1)
+    /// shards instead of full copies. `None` (default) keeps every
+    /// historical code path bit-for-bit.
+    coding: Option<(u32, u64)>,
 
     // ---- dynamic membership (joint consensus + weight lifecycle) ---------
     /// Current cluster config — effective from the moment its entry is
@@ -475,6 +512,7 @@ impl Node {
             inflight: VecDeque::new(),
             pending_reconfig: None,
             static_weights: false,
+            coding: None,
             config: Arc::clone(&boot),
             boot_config: boot,
             cfg_boot: true,
@@ -534,6 +572,19 @@ impl Node {
     /// leaves every historical code path untouched).
     pub fn set_read_path(&mut self, path: ReadPath) {
         self.read_path = path;
+    }
+
+    /// Enable payload-adaptive coded replication: an entry whose payload
+    /// wire size reaches `cutover_bytes` is shipped to each follower as
+    /// its assigned shard (k data shards + 1 XOR parity, any k
+    /// reconstruct) inside `Message::AppendEntriesShard`, and the round
+    /// commits only when acked weight clears CT **and** the acked shard
+    /// set covers at least k distinct shards. Entries below the cutover —
+    /// and every entry when this is `None` (the default) — keep the
+    /// full-copy path bit-for-bit.
+    pub fn set_coding(&mut self, coding: Option<(u32, u64)>) {
+        debug_assert!(coding.map_or(true, |(k, _)| k >= 2 && (k as usize) + 1 <= self.n - 1));
+        self.coding = coding;
     }
 
     /// Enable durable (WAL-backed) mode: the node emits
@@ -1005,9 +1056,78 @@ impl Node {
         self.broadcast_append(out);
     }
 
+    /// Leader-side adaptive batching: propose several data payloads as ONE
+    /// replication round — a single weight-clock bump and re-deal, one
+    /// durability record, and one AppendEntries (or AppendEntriesShard)
+    /// per follower carrying all the entries. Each entry still gets its
+    /// own in-flight ack record, so commit advancement and the coded
+    /// reconstruction rule work per entry exactly as for singleton rounds.
+    ///
+    /// Drivers coalesce queued client ops through this under load, bounded
+    /// by their `max_batch_bytes` knob; a one-element batch takes exactly
+    /// the historical `Input::Propose` path. Control payloads
+    /// (Reconfig / ConfigChange) never batch — they are rejected here like
+    /// a config smuggled through `Input::Propose`.
+    pub fn propose_all(&mut self, payloads: Vec<Payload>, out: &mut Vec<Output>) {
+        if payloads.is_empty() {
+            return;
+        }
+        if payloads.len() == 1 {
+            let p = payloads.into_iter().next().expect("len checked");
+            self.on_propose(p, out);
+            return;
+        }
+        if self.role != Role::Leader || self.pending_reconfig.is_some() {
+            for p in payloads {
+                out.push(Output::ProposalRejected(p));
+            }
+            return;
+        }
+        let mut data = Vec::with_capacity(payloads.len());
+        for p in payloads {
+            if matches!(p, Payload::ConfigChange(_) | Payload::Reconfig { .. }) {
+                out.push(Output::ProposalRejected(p));
+            } else {
+                data.push(p);
+            }
+        }
+        if data.is_empty() {
+            return;
+        }
+        self.start_round();
+        let wclock = self.wclock;
+        let my_w = self.weight_assign[self.id];
+        let first = self.log.last_index() + 1;
+        for payload in data {
+            let entry = Entry { term: self.term, index: 0, payload, wclock };
+            let idx = self.log.append(entry, my_w);
+            self.match_index[self.id] = idx;
+            self.register_inflight(idx);
+        }
+        // one durability record covers the whole batch (group commit) —
+        // and precedes the broadcast, like the singleton path
+        if self.durable {
+            let entries = self.log.slice(first - 1, self.log.last_index());
+            out.push(Output::PersistEntries { prev_index: first - 1, weight: my_w, entries });
+        }
+        self.broadcast_append(out);
+    }
+
+    /// Does this payload ship coded under the current coding config?
+    fn payload_coded(&self, payload: &Payload) -> bool {
+        match self.coding {
+            None => false,
+            Some((_, cutover)) => {
+                coding::payload_codes(payload)
+                    && coding::payload_wire_bytes(payload) >= cutover
+            }
+        }
+    }
+
     /// Open per-index ack bookkeeping for a freshly proposed entry,
     /// snapshotting this round's weight assignment and commit threshold —
     /// and, under a joint config, the old half's assignment and CT too.
+    /// A coded entry additionally opens its shard-ack accumulator.
     fn register_inflight(&mut self, index: LogIndex) {
         let weights = self.weight_assign.clone();
         let mut acked = vec![false; self.n];
@@ -1018,6 +1138,14 @@ impl Node {
             weights: w.clone(),
             ct: *ct,
         });
+        let coded = self
+            .log
+            .get(index)
+            .filter(|e| self.payload_coded(&e.payload))
+            .map(|_| {
+                let (k, _) = self.coding.expect("payload_coded implies coding on");
+                CodedAcc { k, m: coding::shard_count(k), acked_shards: 0 }
+            });
         self.inflight.push_back(InflightRound {
             index,
             wclock: self.wclock,
@@ -1027,6 +1155,7 @@ impl Node {
             acc_weight,
             epoch: self.config.epoch,
             joint,
+            coded,
         });
     }
 
@@ -1188,6 +1317,42 @@ impl Node {
         let prev = self.next_index[peer] - 1;
         let prev_term = self.log.term_at(prev).unwrap_or(0);
         let entries = self.log.slice(prev, self.log.last_index());
+        // Coded replication: when any entry in the slice clears the size
+        // cutover, substitute each such payload with this peer's assigned
+        // shard and ship the shard-bearing variant. `prefix_digest` hashes
+        // only (index, term, wclock), so the follower's shard entry matches
+        // the leader's full entry for all log-consistency purposes.
+        if self.coding.is_some() && entries.iter().any(|e| self.payload_coded(&e.payload)) {
+            let (k, _) = self.coding.expect("checked above");
+            let m = coding::shard_count(k);
+            let sid = coding::shard_for_peer(peer, m) as usize;
+            let entries = entries
+                .into_iter()
+                .map(|e| {
+                    if self.payload_coded(&e.payload) {
+                        let shards = coding::encode_payload(&e.payload, k)
+                            .expect("payload_coded implies a canonical serialization");
+                        Entry { payload: shards[sid].clone(), ..e }
+                    } else {
+                        e
+                    }
+                })
+                .collect();
+            out.push(Output::Send(
+                peer,
+                Message::AppendEntriesShard {
+                    term: self.term,
+                    leader: self.id,
+                    prev_log_index: prev,
+                    prev_log_term: prev_term,
+                    entries,
+                    leader_commit: self.commit_index,
+                    wclock: self.wclock,
+                    weight: self.weight_assign[peer],
+                },
+            ));
+            return;
+        }
         out.push(Output::Send(
             peer,
             Message::AppendEntries {
@@ -1216,6 +1381,30 @@ impl Node {
         }
         match msg {
             Message::AppendEntries {
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                wclock,
+                weight,
+            } => self.on_append_entries(
+                term,
+                leader,
+                prev_log_index,
+                prev_log_term,
+                entries,
+                leader_commit,
+                wclock,
+                weight,
+                out,
+            ),
+            // Shard-bearing variant: identical follower semantics — the
+            // shard entries splice into the same (index, term) slots and
+            // the ack is an ordinary AppendEntriesReply (the leader derives
+            // the acked shard id from the replier's identity).
+            Message::AppendEntriesShard {
                 term,
                 leader,
                 prev_log_index,
@@ -1415,6 +1604,11 @@ impl Node {
                     // 0.0 outside C_old, so the unconditional add is exact
                     j.acc += j.weights[from];
                 }
+                // Coded round: this follower's ack vouches for exactly the
+                // shard the deterministic assignment gave it.
+                if let Some(c) = &mut rec.coded {
+                    c.acked_shards |= 1u64 << coding::shard_for_peer(from, c.m);
+                }
             }
         }
 
@@ -1437,8 +1631,24 @@ impl Node {
         let mut epoch = 0;
         let mut ct = 0.0;
         let mut joint_ev = None;
+        let mut coded_ev = None;
+        // Coded rounds gate advancement: committing index N drags every
+        // earlier in-flight round with it, and N's weight quorum proves
+        // those rounds durable only *as shards* — so no round at or above
+        // the first coded round that cannot yet reconstruct (fewer than k
+        // distinct shards acked) may become the target. Acked sets only
+        // grow towards the window head (a follower matching N holds the
+        // whole prefix), so one forward scan finds the barrier.
+        let coded_barrier = self
+            .inflight
+            .iter()
+            .find(|r| r.coded.map_or(false, |c| !c.reconstructs()))
+            .map(|r| r.index);
         for rec in self.inflight.iter().rev() {
             if rec.index <= self.commit_index {
+                continue;
+            }
+            if coded_barrier.map_or(false, |b| rec.index >= b) {
                 continue;
             }
             // Joint phase: the weighted rule must hold in *both* configs
@@ -1454,6 +1664,7 @@ impl Node {
                 epoch = rec.epoch;
                 ct = rec.ct;
                 joint_ev = rec.joint.as_ref().map(|j| (j.acc, j.ct));
+                coded_ev = rec.coded.map(|c| (c.distinct(), c.k));
                 break;
             }
         }
@@ -1479,6 +1690,7 @@ impl Node {
                 epoch,
                 ct,
                 joint: joint_ev,
+                coded: coded_ev,
             });
             if !self.cfg_boot {
                 self.maybe_advance_membership(out);
@@ -2635,6 +2847,126 @@ mod tests {
             assert_eq!(commits.len(), 6); // noop + 5
         }
         assert_eq!(c.nodes[0].wclock(), 6);
+    }
+
+    #[test]
+    fn coding_cutover_boundary_picks_the_path() {
+        let mut c = TestCluster::raft(5);
+        c.elect(0);
+        c.nodes[0].set_coding(Some((2, 100)));
+        // 83-byte value ⇒ 99 wire bytes: one below the cutover, full copy.
+        let outs = c.nodes[0].step(Input::Propose(Payload::Bytes(Arc::new(vec![0; 83]))));
+        assert!(outs
+            .iter()
+            .any(|o| matches!(o, Output::Send(_, Message::AppendEntries { .. }))));
+        assert!(outs
+            .iter()
+            .all(|o| !matches!(o, Output::Send(_, Message::AppendEntriesShard { .. }))));
+        c.pump(0, outs);
+        // 84-byte value ⇒ exactly 100 wire bytes: at the cutover, coded.
+        let outs = c.nodes[0].step(Input::Propose(Payload::Bytes(Arc::new(vec![0; 84]))));
+        assert!(outs
+            .iter()
+            .any(|o| matches!(o, Output::Send(_, Message::AppendEntriesShard { .. }))));
+        assert!(outs
+            .iter()
+            .all(|o| !matches!(o, Output::Send(_, Message::AppendEntries { .. }))));
+        c.pump(0, outs);
+        c.heartbeat(0);
+        for commits in &c.commits {
+            assert_eq!(commits.len(), 3); // noop + full-copy + coded
+        }
+        // the leader keeps the full payload; followers hold shards
+        assert!(matches!(c.commits[0][2].payload, Payload::Bytes(_)));
+        for commits in &c.commits[1..] {
+            assert!(matches!(commits[2].payload, Payload::Shard(_)));
+        }
+    }
+
+    #[test]
+    fn coded_commit_requires_k_distinct_shards() {
+        let mut c = TestCluster::raft(5);
+        c.elect(0);
+        c.nodes[0].set_coding(Some((2, 64)));
+        let outs = c.nodes[0].step(Input::Propose(Payload::Bytes(Arc::new(vec![7; 256]))));
+        let sends: Vec<(NodeId, Message)> = outs
+            .into_iter()
+            .filter_map(|o| match o {
+                Output::Send(dst, m) => Some((dst, m)),
+                _ => None,
+            })
+            .collect();
+        // Peers 1 and 4 hold the same shard slot (peer % 3 = 1): with the
+        // leader that is a Raft count majority, but only ONE distinct shard
+        // of the k = 2 needed — the weight rule alone would commit here.
+        let mut deliver = |c: &mut TestCluster, dst: NodeId| {
+            let msg = sends.iter().find(|(d, _)| *d == dst).unwrap().1.clone();
+            let replies = c.nodes[dst].step(Input::Receive(0, msg));
+            for r in replies {
+                if let Output::Send(0, m) = r {
+                    let outs = c.nodes[0].step(Input::Receive(dst, m));
+                    c.collect(0, outs, &mut Vec::new());
+                }
+            }
+        };
+        deliver(&mut c, 1);
+        deliver(&mut c, 4);
+        assert_eq!(
+            c.nodes[0].commit_index(),
+            1,
+            "weight majority with an unreconstructable shard set must not commit"
+        );
+        // A second distinct shard (peer 2 ⇒ slot 2) completes the set.
+        deliver(&mut c, 2);
+        assert_eq!(c.nodes[0].commit_index(), 2);
+        assert_eq!(c.commits[0].len(), 2);
+    }
+
+    #[test]
+    fn propose_all_coalesces_one_round() {
+        let mut c = TestCluster::cabinet(5, 1);
+        c.elect(0);
+        let w0 = c.nodes[0].wclock();
+        let mut outs = Vec::new();
+        c.nodes[0].propose_all(
+            (0..3u8).map(|i| Payload::Bytes(Arc::new(vec![i]))).collect(),
+            &mut outs,
+        );
+        assert_eq!(c.nodes[0].wclock(), w0 + 1, "one round for the whole batch");
+        for dst in 1..5usize {
+            let appends: Vec<usize> = outs
+                .iter()
+                .filter_map(|o| match o {
+                    Output::Send(d, Message::AppendEntries { entries, .. }) if *d == dst => {
+                        Some(entries.len())
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(appends, vec![3], "peer {dst} gets one AppendEntries with 3 entries");
+        }
+        c.pump(0, outs);
+        c.heartbeat(0);
+        for commits in &c.commits {
+            assert_eq!(commits.len(), 4); // noop + batch of 3
+        }
+        // all batch entries share the round's wclock
+        let ws: Vec<u64> = c.commits[0][1..].iter().map(|e| e.wclock).collect();
+        assert_eq!(ws, vec![w0 + 1, w0 + 1, w0 + 1]);
+    }
+
+    #[test]
+    fn propose_all_rejects_control_payloads() {
+        let mut c = TestCluster::raft(3);
+        c.elect(0);
+        let mut outs = Vec::new();
+        c.nodes[0].propose_all(vec![Payload::Noop, Payload::Reconfig { new_t: 2 }], &mut outs);
+        assert!(outs
+            .iter()
+            .any(|o| matches!(o, Output::ProposalRejected(Payload::Reconfig { .. }))));
+        c.pump(0, outs);
+        c.heartbeat(0);
+        assert_eq!(c.commits[0].len(), 2); // noop + the Noop from the batch
     }
 
     #[test]

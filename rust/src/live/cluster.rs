@@ -353,7 +353,26 @@ impl LiveCluster {
     ) -> LiveCluster {
         Self::start_inner(
             n, groups, mode, timers, apply_tx, seed, snapshot_every, pre_vote, read_path,
-            lease_drift_ms, None, None,
+            lease_drift_ms, None, None, None,
+        )
+    }
+
+    /// Everything `start` offers plus payload-adaptive coded replication:
+    /// `coding = Some((k, cutover_bytes))` makes every leader ship entries at
+    /// or above the cutover as k-of-(k+1) XOR shards instead of full copies
+    /// (the commit rule then additionally requires k distinct acked shards).
+    /// `None` is exactly `start`.
+    pub fn start_coded(
+        n: usize,
+        mode: Mode,
+        timers: LiveTimers,
+        apply_tx: Option<Sender<ApplyReq>>,
+        seed: u64,
+        coding: Option<(u32, u64)>,
+    ) -> LiveCluster {
+        Self::start_inner(
+            n, 1, mode, timers, apply_tx, seed, None, false, ReadPath::Log, 40.0, None, None,
+            coding,
         )
     }
 
@@ -371,7 +390,7 @@ impl LiveCluster {
     ) -> LiveCluster {
         Self::start_inner(
             n, 1, mode, timers, None, seed, None, false, ReadPath::Log, 40.0, None,
-            Some(storage),
+            Some(storage), None,
         )
     }
 
@@ -395,7 +414,7 @@ impl LiveCluster {
         assert!(membership.drain_rounds >= 1, "drain_rounds must be >= 1");
         Self::start_inner(
             n, 1, mode, timers, None, seed, None, pre_vote, ReadPath::Log, 40.0,
-            Some(membership), None,
+            Some(membership), None, None,
         )
     }
 
@@ -413,6 +432,7 @@ impl LiveCluster {
         lease_drift_ms: f64,
         membership: Option<LiveMembership>,
         storage: Option<LiveStorage>,
+        coding: Option<(u32, u64)>,
     ) -> LiveCluster {
         assert!(groups >= 1 && groups <= n, "groups must be in 1..=n");
         let (event_tx, event_rx) = channel::<LiveEvent>();
@@ -439,7 +459,7 @@ impl LiveCluster {
                     node_loop(
                         id, n, groups, mode, timers, rx, peers, links, event_tx, apply_tx,
                         seed, snapshot_every, pre_vote, read_path, lease_drift_ms, membership,
-                        storage,
+                        storage, coding,
                     )
                 })
                 .expect("spawn node");
@@ -813,6 +833,7 @@ fn node_loop(
     lease_drift_ms: f64,
     membership: Option<LiveMembership>,
     storage: Option<LiveStorage>,
+    coding: Option<(u32, u64)>,
 ) -> Vec<NodeReport> {
     // one replica per group, all hosted on this thread (Multi-Raft layout)
     let mut nodes: Vec<Node> = (0..groups)
@@ -824,6 +845,7 @@ fn node_loop(
             node.set_lease_duration_ms(
                 (timers.election_lo.as_secs_f64() * 1000.0 - lease_drift_ms).max(0.0),
             );
+            node.set_coding(coding);
             if apply_tx.is_some() {
                 // replica state lives on the applier thread — capture goes
                 // through the SnapshotRequest / SnapshotReady handshake
@@ -1258,6 +1280,34 @@ mod tests {
         let reports = cluster.shutdown();
         assert!(reports.iter().any(|r| r.commit_index >= 2));
         assert!(reports.iter().all(|r| r.group == 0), "unsharded runs report group 0");
+    }
+
+    #[test]
+    fn live_coded_replication_commits_large_payloads() {
+        // Coded path over real threads: a 64 KB entry crosses the cutover,
+        // travels as k-of-(k+1) shards, and still commits — the weighted
+        // quorum plus k distinct acked shards clears on a healthy cluster.
+        let cluster = LiveCluster::start_coded(
+            5,
+            Mode::cabinet(5, 1),
+            LiveTimers::default(),
+            None,
+            19,
+            Some((2, 4096)),
+        );
+        cluster.force_election(0);
+        let leader = cluster.wait_for_leader(Duration::from_secs(5)).expect("no leader");
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![0xCD; 65_536])));
+        cluster.propose(leader, Payload::Bytes(Arc::new(vec![1]))); // below cutover
+        // noop barrier (1) + coded entry (2) + small entry (3)
+        assert!(
+            cluster.wait_for_round(3, Duration::from_secs(10)).is_some(),
+            "coded + plain proposals must both commit"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let reports = cluster.shutdown();
+        let caught_up = reports.iter().filter(|r| r.commit_index >= 3).count();
+        assert!(caught_up >= 3, "quorum must commit the coded round: {reports:?}");
     }
 
     #[test]

@@ -65,6 +65,8 @@ USAGE:
               [--members K] [--drain-rounds D] [--join-warmup W]
               [--join R=ID]... [--leave R=ID]... [--replace R=OLD>NEW]...
               [--wal] [--fsync-group G] [--fsync-ms M] [--torn-writes]
+              [--coding-k K] [--coding-cutover BYTES] [--bandwidth BYTES_PER_MS]
+              [--max-batch-bytes B] [--value-size BYTES]
   cabinet weights --n N --t T
   cabinet live [--n N] [--t T] [--rounds R] [--batch B]
   cabinet check-artifacts
@@ -114,6 +116,7 @@ fn cmd_figures(mut args: VecDeque<String>) -> Result<()> {
         "fig24" => vec![figures::fig24_sharding(scale)],
         "fig25" => vec![figures::fig25_membership(scale)],
         "fig26" => vec![figures::fig26_fsync_group(scale)],
+        "fig27" => vec![figures::fig27_value_size(scale)],
         other => bail!("unknown figure {other}"),
     };
     for t in tables {
@@ -256,6 +259,26 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
             };
         }
         {
+            use cabinet::consensus::coding::CodingConfig;
+            let k = flag(&mut args, "--coding-k");
+            let cut = flag(&mut args, "--coding-cutover");
+            if let Some(k) = k {
+                let cutover_bytes = cut.map(|v| v.parse::<u64>()).transpose()?;
+                c.coding = Some(CodingConfig { k: k.parse()?, cutover_bytes });
+            } else if cut.is_some() {
+                bail!("--coding-cutover requires --coding-k");
+            }
+            if let Some(b) = flag(&mut args, "--bandwidth") {
+                c.bandwidth_bytes_per_ms = Some(b.parse()?);
+            }
+            if let Some(mb) = flag(&mut args, "--max-batch-bytes") {
+                c.max_batch_bytes = Some(mb.parse()?);
+            }
+            if let Some(vs) = flag(&mut args, "--value-size") {
+                c.value_size = vs.parse()?;
+            }
+        }
+        {
             use cabinet::net::nemesis::{MembershipEvent, MembershipSpec};
             if let Some(k) = flag(&mut args, "--members") {
                 c.initial_members = Some(k.parse()?);
@@ -293,6 +316,9 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         if let Err(e) = c.validate_sharding() {
             bail!("{e}");
         }
+        if let Err(e) = c.validate_coding() {
+            bail!("{e}");
+        }
         c.digest_mode = DigestMode::Sample;
         c
     };
@@ -315,6 +341,9 @@ fn cmd_sim(mut args: VecDeque<String>) -> Result<()> {
         println!("wall tput:  {} ops/s", cabinet::bench::fmt_tps(r.wall_tput_ops_s()));
     }
     println!("throughput: {} ops/s", cabinet::bench::fmt_tps(r.tput_ops_s));
+    if r.bytes_sent > 0 {
+        println!("bytes:      {} sent   {:.0} B/op", r.bytes_sent, r.bytes_per_op);
+    }
     println!(
         "latency:    mean {:.1} ms   p50 {:.1} ms   p99 {:.1} ms",
         r.mean_latency_ms, r.p50_latency_ms, r.p99_latency_ms

@@ -120,8 +120,26 @@ impl DelayModel {
         wire_bytes: usize,
         rng: &mut Rng,
     ) -> f64 {
+        self.link_latency_bw(node, n, now_ms, round, wire_bytes, BANDWIDTH_BYTES_PER_MS, rng)
+    }
+
+    /// `link_latency` with an explicit per-link bandwidth (bytes/ms). The
+    /// transfer term `bytes / bandwidth` is what makes large payloads pay
+    /// for full-copy replication and is the input to the coding cutover.
+    /// RNG draw order matches `link_latency` exactly, so runs that leave
+    /// bandwidth at `BANDWIDTH_BYTES_PER_MS` are bit-identical.
+    pub fn link_latency_bw(
+        &self,
+        node: usize,
+        n: usize,
+        now_ms: f64,
+        round: u64,
+        wire_bytes: usize,
+        bandwidth_bytes_per_ms: f64,
+        rng: &mut Rng,
+    ) -> f64 {
         let base = rng.normal_pos(LAN_BASE_MS, LAN_JITTER_MS);
-        let transfer = wire_bytes as f64 / BANDWIDTH_BYTES_PER_MS;
+        let transfer = wire_bytes as f64 / bandwidth_bytes_per_ms.max(1.0);
         base + transfer + self.sample(node, n, now_ms, round, rng)
     }
 }
@@ -216,5 +234,33 @@ mod tests {
         // small control message ⇒ sub-ms
         let lat2 = DelayModel::None.link_latency(1, 5, 0.0, 0, 48, &mut rng);
         assert!(lat2 < 1.5, "{lat2}");
+    }
+
+    #[test]
+    fn constrained_bandwidth_stretches_transfer() {
+        // 64 KB at 400 MB/s ≈ 0.16 ms; at 25 MB/s ≈ 2.6 ms.
+        let mut a = Rng::new(8);
+        let mut b = Rng::new(8);
+        let fast = DelayModel::None.link_latency_bw(1, 5, 0.0, 0, 65_536, 400_000.0, &mut a);
+        let slow = DelayModel::None.link_latency_bw(1, 5, 0.0, 0, 65_536, 25_000.0, &mut b);
+        assert!((slow - fast - (65_536.0 / 25_000.0 - 65_536.0 / 400_000.0)).abs() < 1e-9);
+        assert!(slow > fast + 2.0, "{slow} vs {fast}");
+    }
+
+    #[test]
+    fn default_bandwidth_delegation_is_bit_identical() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let x = DelayModel::Bursting.link_latency(2, 7, 12_000.0, 3, 4096, &mut a);
+        let y = DelayModel::Bursting.link_latency_bw(
+            2,
+            7,
+            12_000.0,
+            3,
+            4096,
+            BANDWIDTH_BYTES_PER_MS,
+            &mut b,
+        );
+        assert_eq!(x.to_bits(), y.to_bits());
     }
 }

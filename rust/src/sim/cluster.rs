@@ -231,6 +231,24 @@ pub struct SimConfig {
     /// Rounds a joining node must ack (at minimum weight) before promotion
     /// to `Active`.
     pub join_warmup: u64,
+    /// Coded replication: entries whose wire size clears the cutover ship
+    /// as k-of-m XOR shards (one per follower slot) instead of full copies,
+    /// and the commit rule additionally requires k distinct acked shards.
+    /// None = full-copy replication everywhere — bit-identical digests.
+    pub coding: Option<crate::consensus::coding::CodingConfig>,
+    /// Leader-side adaptive batching: coalesce up to this many wire bytes
+    /// of queued workload batches into one replication round per tick.
+    /// None = one batch per round (the historical behavior).
+    pub max_batch_bytes: Option<u64>,
+    /// Per-link bandwidth (bytes/ms) for the transfer term of the delay
+    /// model. None = the testbed NIC (`delay::BANDWIDTH_BYTES_PER_MS`),
+    /// bit-identical; Some(b) models a constrained link, which is what
+    /// makes full-copy replication of large values expensive (Fig. 27).
+    pub bandwidth_bytes_per_ms: Option<f64>,
+    /// Modeled per-op value size (bytes) for YCSB payloads: stamped onto
+    /// generated batches so the wire model charges `12 + value_size` per op.
+    /// 0 = the historical 12-byte ops, bit-identical.
+    pub value_size: u64,
 }
 
 /// One linearizable read served through a non-log read path — the evidence
@@ -268,6 +286,10 @@ pub struct CommitEvidence {
     /// Joint-phase evidence: (accumulated weight, threshold) of the *old*
     /// half, when the round was proposed under a joint config.
     pub joint: Option<(f64, f64)>,
+    /// Coded-replication evidence: (distinct acked shards, k) when the
+    /// entry shipped as shards — the reconstruction checker demands
+    /// distinct >= k for every coded commit.
+    pub coded: Option<(u32, u32)>,
 }
 
 /// Evidence collected for the deterministic safety checker
@@ -354,7 +376,54 @@ impl SimConfig {
             initial_members: None,
             drain_rounds: 4,
             join_warmup: 4,
+            coding: None,
+            max_batch_bytes: None,
+            bandwidth_bytes_per_ms: None,
+            value_size: 0,
         }
+    }
+
+    /// Validate the coding/batching/bandwidth knobs. One implementation for
+    /// both front ends, like [`SimConfig::validate_sharding`]. Call after
+    /// `coding`, `protocol` and `zones` are settled.
+    pub fn validate_coding(&self) -> Result<(), String> {
+        if let Some(c) = &self.coding {
+            if matches!(self.protocol, Protocol::Hqc { .. }) {
+                return Err("coding requires protocol raft or cabinet".into());
+            }
+            c.validate(self.n())?;
+        }
+        if let Some(b) = self.bandwidth_bytes_per_ms {
+            if !(b > 0.0) {
+                return Err(format!("bandwidth_bytes_per_ms must be > 0, got {b}"));
+            }
+        }
+        if let Some(mb) = self.max_batch_bytes {
+            if mb == 0 {
+                return Err("max_batch_bytes must be >= 1 when set".into());
+            }
+        }
+        if self.value_size > (1 << 24) {
+            return Err(format!(
+                "value_size ({}) exceeds the 16 MiB per-op cap",
+                self.value_size
+            ));
+        }
+        Ok(())
+    }
+
+    /// The effective per-link bandwidth (bytes/ms) of this run.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.bandwidth_bytes_per_ms
+            .unwrap_or(crate::net::delay::BANDWIDTH_BYTES_PER_MS)
+    }
+
+    /// The node-facing coding parameters: (k, cutover bytes), with the
+    /// adaptive cutover resolved against this run's link bandwidth.
+    pub fn coding_params(&self) -> Option<(u32, u64)> {
+        self.coding
+            .as_ref()
+            .map(|c| (c.k, c.resolve_cutover(self.effective_bandwidth())))
     }
 
     /// Does this run exercise dynamic membership at all?
@@ -557,6 +626,15 @@ pub struct SimResult {
     /// [`SimResult::metrics_digest`]: it is host-profiling telemetry, and
     /// folding it in would break digest parity with pre-counter builds.
     pub messages_delivered: u64,
+    /// Wire bytes shipped to live nodes across the run (same accounting
+    /// point as `messages_delivered`, summed over groups on sharded runs).
+    /// Like that counter it is host-profiling telemetry and deliberately
+    /// NOT folded into [`SimResult::metrics_digest`] — it is how fig 27
+    /// shows coded replication cutting replication traffic.
+    pub bytes_sent: u64,
+    /// `bytes_sent` per committed live op (0 when no ops committed) — the
+    /// normalized network-cost metric of the value-size sweep.
+    pub bytes_per_op: f64,
     /// Config (membership) entries the leaders observed committing, summed
     /// across groups — 0 on fixed-membership runs, and then excluded from
     /// the metrics digest (the replay-determinism guardrail).
@@ -618,6 +696,8 @@ impl SimResult {
             read_p99_ms: 0.0,
             read_done_ms: 0.0,
             messages_delivered: 0,
+            bytes_sent: 0,
+            bytes_per_op: 0.0,
             config_commits: 0,
             wal_appends: 0,
             wal_fsyncs: 0,
@@ -898,12 +978,16 @@ fn merge_sharded(config: &SimConfig, outcomes: Vec<GroupOutcome>) -> SimResult {
         agg.read_failures += r.read_failures;
         agg.read_done_ms = agg.read_done_ms.max(r.read_done_ms);
         agg.messages_delivered += r.messages_delivered;
+        agg.bytes_sent += r.bytes_sent;
         agg.config_commits += r.config_commits;
         agg.wal_appends += r.wal_appends;
         agg.wal_fsyncs += r.wal_fsyncs;
         agg.wal_recoveries += r.wal_recoveries;
         agg.wal_recovered_entries += r.wal_recovered_entries;
     }
+    let total_ops: u64 = agg.rounds.iter().map(|r| r.ops as u64).sum();
+    agg.bytes_per_op =
+        if total_ops > 0 { agg.bytes_sent as f64 / total_ops as f64 } else { 0.0 };
     read_latencies.sort_by(|a, b| a.total_cmp(b));
     crate::sim::group::fold_read_latencies(&mut agg, &read_latencies);
     for o in outcomes {
@@ -1058,6 +1142,97 @@ mod tests {
         let la: Vec<f64> = a.rounds.iter().map(|r| r.latency_ms).collect();
         let lb: Vec<f64> = b.rounds.iter().map(|r| r.latency_ms).collect();
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn inert_coding_knobs_keep_digests_bit_identical() {
+        // bandwidth pinned to the default constant, value_size 0, coding
+        // and batching off must reproduce the knob-free trajectory exactly
+        let base = quick(Protocol::Cabinet { t: 1 }, 5, true, 6);
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, true);
+        c.rounds = 6;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 500, records: 10_000 };
+        c.bandwidth_bytes_per_ms = Some(crate::net::delay::BANDWIDTH_BYTES_PER_MS);
+        c.value_size = 0;
+        c.coding = None;
+        c.max_batch_bytes = None;
+        let r = run(&c);
+        assert_eq!(base.metrics_digest(), r.metrics_digest());
+        assert_eq!(base.bytes_sent, r.bytes_sent);
+    }
+
+    #[test]
+    fn coded_replication_cuts_bytes_on_constrained_links() {
+        use crate::consensus::coding::CodingConfig;
+        let mk = |coded: bool| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, false);
+            c.rounds = 8;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 16, records: 10_000 };
+            c.value_size = 65_536;
+            c.bandwidth_bytes_per_ms = Some(25_000.0); // 25 MB/s constrained link
+            if coded {
+                c.coding = Some(CodingConfig { k: 3, cutover_bytes: None });
+            }
+            c.validate_coding().unwrap();
+            run(&c)
+        };
+        let full = mk(false);
+        let coded = mk(true);
+        assert_eq!(coded.rounds.len(), 8);
+        assert!(
+            (coded.bytes_sent as f64) < 0.7 * full.bytes_sent as f64,
+            "coded {} vs full-copy {} bytes",
+            coded.bytes_sent,
+            full.bytes_sent
+        );
+        assert!(
+            coded.tput_ops_s > full.tput_ops_s,
+            "coded {} vs full-copy {} ops/s",
+            coded.tput_ops_s,
+            full.tput_ops_s
+        );
+        assert!(coded.bytes_per_op > 0.0 && full.bytes_per_op > coded.bytes_per_op);
+    }
+
+    #[test]
+    fn adaptive_batching_coalesces_rounds() {
+        let mk = |mb: Option<u64>| {
+            let mut c = SimConfig::new(Protocol::Cabinet { t: 1 }, 5, false);
+            c.rounds = 12;
+            c.pipeline = 8;
+            c.max_batch_bytes = mb;
+            c.workload =
+                WorkloadSpec::Ycsb { workload: Workload::A, batch: 200, records: 10_000 };
+            run(&c)
+        };
+        let single = mk(None);
+        let batched = mk(Some(1 << 20));
+        assert_eq!(batched.rounds.len(), 12, "all rounds must still commit");
+        assert_eq!(single.commit_sequence_digest(), batched.commit_sequence_digest());
+        assert!(
+            batched.messages_delivered < single.messages_delivered,
+            "coalesced rounds must ride fewer messages: batched {} vs single {}",
+            batched.messages_delivered,
+            single.messages_delivered
+        );
+    }
+
+    #[test]
+    fn coded_run_converges_replicas() {
+        // digest tracking applies the engine-side full batch, so replica
+        // convergence is checkable even when followers only hold shards
+        use crate::consensus::coding::CodingConfig;
+        let mut c = SimConfig::new(Protocol::Cabinet { t: 2 }, 7, true);
+        c.rounds = 8;
+        c.digest_mode = DigestMode::All;
+        c.workload = WorkloadSpec::Ycsb { workload: Workload::A, batch: 16, records: 10_000 };
+        c.value_size = 65_536;
+        c.bandwidth_bytes_per_ms = Some(25_000.0);
+        c.coding = Some(CodingConfig { k: 3, cutover_bytes: None });
+        let r = run(&c);
+        assert_eq!(r.rounds.len(), 8);
+        assert_eq!(r.digests_match, Some(true));
     }
 
     #[test]

@@ -146,6 +146,7 @@ fn split_ycsb(b: &YcsbBatch) -> (YcsbBatch, YcsbBatch) {
         ops: Vec::new(),
         keys: Vec::new(),
         vals: Vec::new(),
+        value_size: b.value_size,
     };
     let (mut writes, mut reads) = (empty.clone(), empty);
     for i in 0..b.ops.len() {
@@ -198,6 +199,9 @@ pub(crate) struct WorkloadDriver {
     tpcc: Option<TpccGen>,
     pub(crate) batch_size: usize,
     pub(crate) warehouses: u32,
+    /// Modeled per-op value size stamped onto generated YCSB batches
+    /// (0 = the historical 12-byte wire ops, bit-identical).
+    pub(crate) value_size: u64,
     group: usize,
     groups: usize,
     /// TPC-C: the warehouse range this group owns.
@@ -227,6 +231,7 @@ impl WorkloadDriver {
                     tpcc: None,
                     batch_size: *batch,
                     warehouses: 0,
+                    value_size: 0,
                     group,
                     groups,
                     wh_range: (0, 0),
@@ -244,6 +249,7 @@ impl WorkloadDriver {
                     tpcc: Some(TpccGen::new(*warehouses, seed)),
                     batch_size: *batch,
                     warehouses: *warehouses,
+                    value_size: 0,
                     group,
                     groups,
                     wh_range: warehouse_range(group, groups, *warehouses),
@@ -257,11 +263,13 @@ impl WorkloadDriver {
     pub(crate) fn next_batch(&mut self) -> (Payload, Batch, f64, usize) {
         if let Some(gen) = self.ycsb.as_mut() {
             // groups = 1 takes the untouched generator path (bit-identical)
-            let b = Arc::new(if self.groups <= 1 {
+            let mut b = if self.groups <= 1 {
                 gen.batch(self.batch_size)
             } else {
                 gen.batch_sharded(self.batch_size, self.group, self.groups)
-            });
+            };
+            b.value_size = self.value_size;
+            let b = Arc::new(b);
             let cost = DocStore::estimate_cost_ms(&b);
             let ops = b.live_ops();
             (Payload::Ycsb(b.clone()), Batch::Ycsb(b), cost, ops)
@@ -446,6 +454,15 @@ pub(crate) struct GroupEngine {
     /// Messages delivered to live nodes (host-profiling telemetry for the
     /// `sim_throughput` bench; never folded into the metrics digest).
     messages: u64,
+    /// Wire bytes delivered to live nodes (fig 27 telemetry; like
+    /// `messages`, never folded into the metrics digest).
+    bytes_sent: u64,
+    /// Effective per-link bandwidth (bytes/ms) for the transfer term —
+    /// resolved once so the send hot path never unwraps the Option.
+    bandwidth: f64,
+    /// Node-facing coding parameters (k, cutover bytes), resolved once and
+    /// re-applied to restarted nodes.
+    coding: Option<(u32, u64)>,
 }
 
 impl GroupEngine {
@@ -469,7 +486,9 @@ impl GroupEngine {
         let timer_rng = root_rng.fork(base + 2);
         let kill_rng = root_rng.fork(base + 3);
         let wl_seed = root_rng.fork(base + 4).next_u64();
-        let driver = WorkloadDriver::new_sharded(&config.workload, wl_seed, gid, groups);
+        let mut driver = WorkloadDriver::new_sharded(&config.workload, wl_seed, gid, groups);
+        driver.value_size = config.value_size;
+        let coding = config.coding_params();
         let nemesis_here = config.nemesis.is_some()
             && config.nemesis_groups.as_ref().map_or(true, |gs| gs.contains(&gid));
         let nemesis = if nemesis_here {
@@ -512,6 +531,7 @@ impl GroupEngine {
                 node.set_pre_vote(config.pre_vote);
                 node.set_read_path(config.read_path);
                 node.set_lease_duration_ms(config.lease_duration_ms());
+                node.set_coding(coding);
                 node.set_durable(config.storage.is_some());
                 if membership_on {
                     node.set_drain_rounds(config.drain_rounds);
@@ -612,6 +632,9 @@ impl GroupEngine {
             out_scratch: Vec::new(),
             host: ReplicaHost::new(gid),
             messages: 0,
+            bytes_sent: 0,
+            bandwidth: config.effective_bandwidth(),
+            coding,
         }
     }
 
@@ -703,6 +726,7 @@ impl GroupEngine {
                     self.service_ms_pipelined(to, &msg)
                 };
                 self.messages += 1;
+                self.bytes_sent += msg.wire_size() as u64;
                 self.nodes[to].observe_time(now);
                 self.step_route(to, Input::Receive(from, msg), service, q);
             }
@@ -903,38 +927,90 @@ impl GroupEngine {
             }
         }
 
-        let (payload, batch, cost_ms, ops, read_batch) =
-            next_round_batch(&mut self.driver, self.config.read_path);
+        // Adaptive leader batching (`max_batch_bytes`): coalesce queued
+        // workload rounds into ONE replication round — one wclock, one
+        // persist record, one AppendEntries per follower — until the byte
+        // budget, the window, the round budget, or the next scheduled
+        // fault/config event stops the draw. None = single-draw, the
+        // historical step sequence bit-for-bit.
+        let mut draws = vec![next_round_batch(&mut self.driver, self.config.read_path)];
+        if let Some(mb) = self.config.max_batch_bytes {
+            let mut bytes = crate::consensus::message::payload_wire(&draws[0].0) as u64;
+            loop {
+                let claimed = self.proposed + draws.len() as u64;
+                if bytes >= mb
+                    || self.pending.len() + draws.len() >= self.depth
+                    || claimed >= self.config.rounds
+                    || self.round_has_scheduled_event(claimed + 1)
+                {
+                    break;
+                }
+                let d = next_round_batch(&mut self.driver, self.config.read_path);
+                bytes += crate::consensus::message::payload_wire(&d.0) as u64;
+                draws.push(d);
+            }
+        }
+        let count = draws.len() as u64;
         let leader_speed = self.effective_speed_at(leader, next_round);
         let leader_apply_done = now + self.config.rpc_proc_ms / leader_speed;
         self.nodes[leader].observe_time(now);
         // window bookkeeping must land between step and route, so this site
         // spells out the scratch-buffer pattern `step_route` wraps
         let mut outs = std::mem::take(&mut self.out_scratch);
-        self.nodes[leader].step_into(Input::Propose(payload), &mut outs);
-        let entry_index = self.nodes[leader].log().last_index();
-        self.batch_costs.insert(entry_index, cost_ms);
-        self.proposed = next_round;
-        self.pending.push_back(PendingRound {
-            round: next_round,
-            entry_index,
-            term: self.nodes[leader].term(),
-            start_ms: now,
-            ops,
-            leader_apply_done,
-            batch,
-        });
+        if count == 1 {
+            // the historical single-proposal step
+            self.nodes[leader].step_into(Input::Propose(draws[0].0.clone()), &mut outs);
+        } else {
+            let payloads: Vec<Payload> = draws.iter().map(|d| d.0.clone()).collect();
+            self.nodes[leader].propose_all(payloads, &mut outs);
+        }
+        let last_index = self.nodes[leader].log().last_index();
+        let first_index = last_index + 1 - count;
+        let term = self.nodes[leader].term();
+        let mut fans: Vec<(u64, YcsbBatch)> = Vec::new();
+        for (i, (_payload, batch, cost_ms, ops, read_batch)) in draws.into_iter().enumerate() {
+            let entry_index = first_index + i as u64;
+            let rnd = next_round + i as u64;
+            self.batch_costs.insert(entry_index, cost_ms);
+            self.pending.push_back(PendingRound {
+                round: rnd,
+                entry_index,
+                term,
+                start_ms: now,
+                ops,
+                leader_apply_done,
+                batch,
+            });
+            if let Some(rb) = read_batch {
+                fans.push((rnd, rb));
+            }
+        }
+        self.proposed = next_round + count - 1;
         self.route(leader, &mut outs, 0.0, q);
         outs.clear();
         self.out_scratch = outs;
-        // this round's read-only ops go through the selected fast path
-        if let Some(rb) = read_batch {
-            self.readctl.issue_fan(self.gid, q, &self.alive, now, next_round, &rb);
+        // the rounds' read-only ops go through the selected fast path
+        for (rnd, rb) in fans {
+            self.readctl.issue_fan(self.gid, q, &self.alive, now, rnd, &rb);
         }
         if self.pending.len() < self.depth && self.proposed < self.config.rounds {
             // back-to-back proposal to fill the window
             self.push(q, 0.2, Ev::ProposeNext);
         }
+    }
+
+    /// Does round `r` carry a scheduled fault/config event? The batching
+    /// coalescer must not draw past one — those events fire at the start of
+    /// their round in the proposer, so the round has to be proposed by its
+    /// own tick.
+    fn round_has_scheduled_event(&self, r: u64) -> bool {
+        self.reconfig_queue.front().map_or(false, |x| x.round == r)
+            || self.membership_queue.front().map_or(false, |x| x.round == r)
+            || self.kills.front().map_or(false, |x| x.round == r)
+            || self.kill_leader_at == Some(r)
+            || self
+                .restart_pending
+                .map_or(false, |rs| rs.kill_round == r || rs.restart_round == r)
     }
 
     /// Fig. 21 kill/restart schedule, shared by both windows: kill the
@@ -961,6 +1037,7 @@ impl GroupEngine {
                 fresh.set_pre_vote(self.config.pre_vote);
                 fresh.set_read_path(self.config.read_path);
                 fresh.set_lease_duration_ms(self.config.lease_duration_ms());
+                fresh.set_coding(self.coding);
                 if self.membership_on {
                     fresh.set_drain_rounds(self.config.drain_rounds);
                     fresh.set_join_warmup(self.config.join_warmup);
@@ -1362,6 +1439,10 @@ impl GroupEngine {
         result.nemesis_stats = self.nemesis.as_ref().map(|nm| nm.stats);
         result.safety = self.safety.take();
         result.messages_delivered = self.messages;
+        result.bytes_sent = self.bytes_sent;
+        let total_ops: u64 = result.rounds.iter().map(|r| r.ops as u64).sum();
+        result.bytes_per_op =
+            if total_ops > 0 { self.bytes_sent as f64 / total_ops as f64 } else { 0.0 };
         result.config_commits = self.config_commits;
         result.wal_appends = self.wal_appends;
         result.wal_fsyncs = self.wal_fsyncs;
@@ -1415,12 +1496,13 @@ impl Effects for SimEffects<'_> {
         // netem delays are installed on follower nodes)
         let shaped_end =
             if self.node == eng.current_leader.unwrap_or(usize::MAX) { to } else { self.node };
-        let lat = eng.config.delay.link_latency(
+        let lat = eng.config.delay.link_latency_bw(
             shaped_end,
             self.n,
             self.now,
             eng.round,
             env.msg.wire_size(),
+            eng.bandwidth,
             &mut eng.net_rng,
         );
         let fate = match eng.nemesis.as_mut() {
@@ -1556,6 +1638,7 @@ impl Effects for SimEffects<'_> {
                     acc: rc.quorum_weight,
                     ct: rc.ct,
                     joint: rc.joint,
+                    coded: rc.coded,
                 });
             }
         }

@@ -211,6 +211,7 @@ mod tests {
             ops: vec![OP_INSERT, OP_UPDATE, OP_READ],
             keys: vec![1, 1, 1],
             vals: vec![10, 20, 0],
+            value_size: 0,
         };
         let r = s.apply(&batch);
         assert_eq!(r.ops_applied, 3);
@@ -224,12 +225,14 @@ mod tests {
             ops: vec![OP_READ; 1000],
             keys: vec![0; 1000],
             vals: vec![0; 1000],
+            value_size: 0,
         };
         let scan_batch = YcsbBatch {
             workload: Workload::E,
             ops: vec![OP_SCAN; 1000],
             keys: vec![0; 1000],
             vals: vec![0; 1000],
+            value_size: 0,
         };
         assert!(DocStore::estimate_cost_ms(&scan_batch) > 3.0 * DocStore::estimate_cost_ms(&read_batch));
     }
@@ -241,6 +244,7 @@ mod tests {
             ops: vec![OP_NOP; 100],
             keys: vec![0; 100],
             vals: vec![0; 100],
+            value_size: 0,
         };
         assert_eq!(DocStore::estimate_cost_ms(&batch), 0.0);
         let mut s = DocStore::new();

@@ -39,7 +39,7 @@ use std::sync::Arc;
 
 use crate::consensus::message::{
     AppState, ClusterConfig, Entry, LogIndex, MemberSpec, MemberState, NodeId, Payload,
-    SnapshotBlob, Term,
+    ShardData, SnapshotBlob, Term,
 };
 use crate::storage::wire::{push_u32, push_u64, read_u32, read_u64};
 use crate::util::Fnv64;
@@ -707,6 +707,7 @@ const PAYLOAD_TPCC: u8 = 2;
 const PAYLOAD_RECONFIG: u8 = 3;
 const PAYLOAD_CONFIG: u8 = 4;
 const PAYLOAD_BYTES: u8 = 5;
+const PAYLOAD_SHARD: u8 = 6;
 
 fn push_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
     for &x in xs {
@@ -732,6 +733,7 @@ fn encode_entry(buf: &mut Vec<u8>, e: &Entry) {
             buf.push(PAYLOAD_YCSB);
             let wl = Workload::ALL.iter().position(|&w| w == b.workload).unwrap_or(0);
             buf.push(wl as u8);
+            push_u64(buf, b.value_size);
             push_u32(buf, b.ops.len() as u32);
             push_u32s(buf, &b.ops);
             push_u32s(buf, &b.keys);
@@ -757,6 +759,14 @@ fn encode_entry(buf: &mut Vec<u8>, e: &Entry) {
             push_u32(buf, b.len() as u32);
             buf.extend_from_slice(b);
         }
+        Payload::Shard(s) => {
+            buf.push(PAYLOAD_SHARD);
+            push_u32(buf, s.shard_id);
+            push_u32(buf, s.k);
+            push_u64(buf, s.total_bytes);
+            push_u32(buf, s.data.len() as u32);
+            buf.extend_from_slice(&s.data);
+        }
     }
 }
 
@@ -771,11 +781,12 @@ fn decode_entry(bytes: &[u8], at: &mut usize) -> Option<Entry> {
         PAYLOAD_YCSB => {
             let wl = *Workload::ALL.get(*bytes.get(*at)? as usize)?;
             *at += 1;
+            let value_size = read_u64(bytes, at)?;
             let n = read_u32(bytes, at)? as usize;
             let ops = read_u32s(bytes, at, n)?;
             let keys = read_u32s(bytes, at, n)?;
             let vals = read_u32s(bytes, at, n)?;
-            Payload::Ycsb(Arc::new(YcsbBatch { workload: wl, ops, keys, vals }))
+            Payload::Ycsb(Arc::new(YcsbBatch { workload: wl, ops, keys, vals, value_size }))
         }
         PAYLOAD_TPCC => {
             let n = read_u32(bytes, at)? as usize;
@@ -792,6 +803,16 @@ fn decode_entry(bytes: &[u8], at: &mut usize) -> Option<Entry> {
             let v = bytes.get(*at..end)?.to_vec();
             *at = end;
             Payload::Bytes(Arc::new(v))
+        }
+        PAYLOAD_SHARD => {
+            let shard_id = read_u32(bytes, at)?;
+            let k = read_u32(bytes, at)?;
+            let total_bytes = read_u64(bytes, at)?;
+            let n = read_u32(bytes, at)? as usize;
+            let end = at.checked_add(n)?;
+            let data = bytes.get(*at..end)?.to_vec();
+            *at = end;
+            Payload::Shard(Arc::new(ShardData { shard_id, k, total_bytes, data: Arc::new(data) }))
         }
         _ => return None,
     };
@@ -1001,6 +1022,7 @@ mod tests {
                 ops: vec![0, 1, 1],
                 keys: vec![7, 8, 9],
                 vals: vec![0, 10, 11],
+                value_size: 0,
             })),
         }
     }
@@ -1054,6 +1076,46 @@ mod tests {
         }
         match &rec.splices[1].2[0].payload {
             Payload::Bytes(b) => assert_eq!(**b, vec![1, 2, 3]),
+            other => panic!("wrong payload: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_and_sized_ycsb_payloads_round_trip() {
+        let (mut wal, _) = Wal::open(MemDisk::new(), WalConfig::default());
+        let shard = ShardData {
+            shard_id: 2,
+            k: 3,
+            total_bytes: 65_536,
+            data: Arc::new(vec![0xab; 97]),
+        };
+        let sized = YcsbBatch {
+            workload: Workload::B,
+            ops: vec![1, 1],
+            keys: vec![4, 5],
+            vals: vec![6, 7],
+            value_size: 65_536,
+        };
+        wal.append_splice(
+            0,
+            1.0,
+            &[
+                Entry { term: 1, index: 1, wclock: 1, payload: Payload::Shard(Arc::new(shard.clone())) },
+                Entry { term: 1, index: 2, wclock: 1, payload: Payload::Ycsb(Arc::new(sized)) },
+            ],
+        );
+        wal.sync();
+        let (_, rec) = Wal::open(wal.into_disk(), WalConfig::default());
+        let es = &rec.splices[0].2;
+        match &es[0].payload {
+            Payload::Shard(s) => assert_eq!(**s, shard),
+            other => panic!("wrong payload: {other:?}"),
+        }
+        match &es[1].payload {
+            Payload::Ycsb(b) => {
+                assert_eq!(b.value_size, 65_536);
+                assert_eq!(b.keys, vec![4, 5]);
+            }
             other => panic!("wrong payload: {other:?}"),
         }
     }

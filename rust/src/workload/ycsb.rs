@@ -78,6 +78,12 @@ pub struct YcsbBatch {
     pub ops: Vec<u32>,
     pub keys: Vec<u32>,
     pub vals: Vec<u32>,
+    /// Modeled value size in bytes per op — the data-heavy dimension
+    /// (1 KB–1 MB in fig27). Values stay one u32 seed word in memory; the
+    /// wire/bandwidth model charges `12 + value_size` bytes per op. 0 (the
+    /// default every generator emits) reproduces the historical
+    /// `12·len + 16` wire model byte-for-byte.
+    pub value_size: u64,
 }
 
 impl YcsbBatch {
@@ -171,7 +177,7 @@ impl YcsbGen {
             keys.push(key);
             vals.push(self.rng.next_u32());
         }
-        YcsbBatch { workload: self.workload, ops, keys, vals }
+        YcsbBatch { workload: self.workload, ops, keys, vals, value_size: 0 }
     }
 
     /// Generate a batch of exactly `size` live ops restricted to shard
@@ -229,7 +235,7 @@ impl YcsbGen {
             keys.push(key);
             vals.push(self.rng.next_u32());
         }
-        YcsbBatch { workload: self.workload, ops, keys, vals }
+        YcsbBatch { workload: self.workload, ops, keys, vals, value_size: 0 }
     }
 
     pub fn record_count(&self) -> u64 {

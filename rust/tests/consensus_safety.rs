@@ -30,6 +30,12 @@ struct Chaos {
     leaders: Vec<(u64, NodeId)>,
     /// Leader-side quorum closures: (leader, wclock, index, quorum weight).
     round_commits: Vec<(NodeId, u64, u64, f64)>,
+    /// The same closures in checker form — weighted-rule evidence plus the
+    /// coded-reconstruction conjunct (distinct acked shards vs k).
+    commit_evidence: Vec<cabinet::sim::CommitEvidence>,
+    /// Bytes per proposed payload (0 = the historical tag-only payloads);
+    /// coded schedules pad proposals past the shard cutover.
+    payload_pad: usize,
     rng: Rng,
     drop_p: f64,
     dup_p: f64,
@@ -60,6 +66,8 @@ impl Chaos {
             commits: vec![Vec::new(); n],
             leaders: Vec::new(),
             round_commits: Vec::new(),
+            commit_evidence: Vec::new(),
+            payload_pad: 0,
             rng: Rng::new(seed),
             drop_p,
             dup_p,
@@ -80,9 +88,19 @@ impl Chaos {
                 Output::Send(dst, msg) => self.queue.push((src, dst, msg)),
                 Output::Commit(e) => self.commits[src].push((e.index, e.term)),
                 Output::BecameLeader { term } => self.leaders.push((term, src)),
-                Output::RoundCommitted { wclock, index, quorum_weight, .. } => {
+                Output::RoundCommitted {
+                    wclock, index, quorum_weight, epoch, ct, joint, coded, ..
+                } => {
                     self.round_commits.push((src, wclock, index, quorum_weight));
                     self.commit_times.push((self.step_no as f64, index));
+                    self.commit_evidence.push(cabinet::sim::CommitEvidence {
+                        index,
+                        epoch,
+                        acc: quorum_weight,
+                        ct,
+                        joint,
+                        coded,
+                    });
                 }
                 Output::ResetElectionTimer => self.last_reset[src] = self.step_no,
                 Output::ReadReady { id, index, lease } => {
@@ -120,6 +138,7 @@ impl Chaos {
         log.leaders = self.leaders.clone();
         log.commit_times = self.commit_times.clone();
         log.reads = self.reads.clone();
+        log.commit_evidence = self.commit_evidence.clone();
         log
     }
 
@@ -201,10 +220,21 @@ impl Chaos {
             .find(|&i| self.alive[i] && self.nodes[i].role() == Role::Leader)
     }
 
+    /// A tagged payload, padded to `payload_pad` bytes on coded schedules
+    /// so data rounds cross the shard cutover.
+    fn payload(&self, tag: &[u8]) -> Payload {
+        let mut data = tag.to_vec();
+        if data.len() < self.payload_pad {
+            data.resize(self.payload_pad, tag[0]);
+        }
+        Payload::Bytes(Arc::new(data))
+    }
+
     /// Propose at whichever node is currently a leader (if any).
     fn try_propose(&mut self, k: u8) {
         if let Some(leader) = self.leader() {
-            self.step_node(leader, Input::Propose(Payload::Bytes(Arc::new(vec![k]))));
+            let p = self.payload(&[k]);
+            self.step_node(leader, Input::Propose(p));
         }
     }
 
@@ -216,10 +246,8 @@ impl Chaos {
                 if self.leader() != Some(leader) {
                     break;
                 }
-                self.step_node(
-                    leader,
-                    Input::Propose(Payload::Bytes(Arc::new(vec![tag, j as u8]))),
-                );
+                let p = self.payload(&[tag, j as u8]);
+                self.step_node(leader, Input::Propose(p));
             }
         }
     }
@@ -463,12 +491,16 @@ fn committed_entries_survive_leader_changes() {
 /// entries), so InstallSnapshot catch-up races the chaos too; half run a
 /// fast linearizable read path (25% ReadIndex, 25% lease — lease schedules
 /// model the minimum election timeout on the step axis) with client reads
-/// injected throughout. Asserts election safety, log matching
-/// (digest-chained across compaction), the weighted-commit rule +
-/// monotonicity, no committed-entry loss, and a clean `bench::safety`
-/// verdict — prefix consistency, single-leader-per-term, monotone commits,
-/// and read linearizability — at every depth.
-fn nemesis_schedule(seed: u64) {
+/// injected throughout; half run payload-adaptive coded replication (k = 2
+/// data shards + XOR parity, 64-byte cutover, proposals padded past it) so
+/// the k-distinct-shards commit conjunct races the same chaos. Asserts
+/// election safety, log matching (digest-chained across compaction), the
+/// weighted-commit rule + monotonicity, no committed-entry loss, and a
+/// clean `bench::safety` verdict — prefix consistency,
+/// single-leader-per-term, monotone commits, read linearizability, and
+/// coded-reconstruction evidence — at every depth. Returns the number of
+/// coded round commits observed so sweeps can assert the slice is live.
+fn nemesis_schedule(seed: u64) -> usize {
     use cabinet::net::nemesis::{NemesisSpec, PartitionKind, PartitionSpec};
     use cabinet::net::rng::splitmix64;
 
@@ -520,6 +552,19 @@ fn nemesis_schedule(seed: u64) {
         for node in &mut c.nodes {
             node.set_pre_vote(true);
         }
+    }
+    // half the schedules ship data rounds coded — k = 2 data shards + XOR
+    // parity (m = 3 fits every n here) with a 64-byte cutover; proposals
+    // are padded to 256 bytes so every client round crosses it. Crash kills
+    // can legitimately leave the survivors short of k distinct shard slots,
+    // in which case coded rounds (safely) stop committing — the checker's
+    // reconstruction property validates every round that did commit.
+    let coded = (bits >> 8) & 1 == 1;
+    if coded {
+        for node in &mut c.nodes {
+            node.set_coding(Some((2, 64)));
+        }
+        c.payload_pad = 256;
     }
     // Lease timing: a 150-step minimum election timeout with a 30-step
     // drift margin (duration 120). ReadIndex needs no timing assumption.
@@ -589,16 +634,25 @@ fn nemesis_schedule(seed: u64) {
     c.assert_weighted_commits(ct, seed);
     c.assert_commits_preserved(&committed_snapshot, seed);
     // the deterministic safety checker agrees: prefix consistency, single
-    // leader per term, monotone commits
+    // leader per term, monotone commits, weighted-rule + coded evidence
     let report = cabinet::bench::safety_check(&c.safety_log());
     assert!(report.is_clean(), "seed {seed}: {:?}", report.violations);
+    let coded_commits =
+        c.commit_evidence.iter().filter(|e| e.coded.is_some()).count();
+    if !coded {
+        assert_eq!(coded_commits, 0, "seed {seed}: coded-off schedule emitted shard evidence");
+    }
+    coded_commits
 }
 
 #[test]
 fn randomized_schedule_safety_sweep() {
+    let mut coded_commits = 0usize;
     for seed in 0..128u64 {
-        nemesis_schedule(seed);
+        coded_commits += nemesis_schedule(seed);
     }
+    // the coded slice must actually exercise the shard commit rule
+    assert!(coded_commits > 0, "no coded round ever committed across the sweep");
 }
 
 /// The long chaos sweep for the scheduled CI `chaos` job:
@@ -606,9 +660,11 @@ fn randomized_schedule_safety_sweep() {
 #[test]
 #[ignore = "long nemesis sweep (512 seeds) — run by the scheduled CI chaos job"]
 fn nemesis_long_sweep() {
+    let mut coded_commits = 0usize;
     for seed in 0..512u64 {
-        nemesis_schedule(seed);
+        coded_commits += nemesis_schedule(seed);
     }
+    assert!(coded_commits > 0, "no coded round ever committed across the sweep");
 }
 
 /// Full-stack randomized sims over the event-driven harness: random delay

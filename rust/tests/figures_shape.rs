@@ -574,6 +574,65 @@ fn fig26_fsync_group_shape() {
     );
 }
 
+/// Fig. 27 acceptance shape: on the 25 MB/s bandwidth-constrained model,
+/// values below the adaptive cutover (35 KB at this bandwidth) take the
+/// full-copy path on both variants — identical wire traffic — while at
+/// 64 KiB and above the coded variant ships shards instead of full copies
+/// and must beat full-copy on both bytes/op (toward 1/k) and committed
+/// wall-clock throughput (transfer time dominates the round trip).
+#[test]
+fn fig27_coded_replication_shape() {
+    let t = figures::fig27_value_size(Scale::Quick);
+    let sizes = figures::fig27_value_sizes(Scale::Quick);
+    // 2 algos × {full, coded} per value size
+    assert_eq!(t.rows.len(), 4 * sizes.len());
+    let cutover = cabinet::consensus::coding::adaptive_cutover(25_000.0);
+    for (i, &vs) in sizes.iter().enumerate() {
+        let base = i * 4;
+        assert_eq!(t.rows[base][1], "raft full");
+        assert_eq!(t.rows[base + 1][1], "raft coded");
+        assert_eq!(t.rows[base + 2][1], "cab f20% full");
+        assert_eq!(t.rows[base + 3][1], "cab f20% coded");
+        for off in [0usize, 2] {
+            let row_full = base + off;
+            let row_coded = base + off + 1;
+            // full-copy rows carry no cutover; coded rows resolve the
+            // adaptive one from the configured bandwidth
+            assert_eq!(t.rows[row_full][5], "-", "row {row_full}: cutover on full");
+            assert_eq!(
+                t.rows[row_coded][5],
+                cutover.to_string(),
+                "row {row_coded}: adaptive cutover mismatch"
+            );
+            let full = t.num(row_full, "bytes_per_op").unwrap();
+            let coded = t.num(row_coded, "bytes_per_op").unwrap();
+            let who = &t.rows[row_coded][1];
+            // the gate sees the whole batch payload's wire size (batch 16),
+            // not the single-value size
+            let wire = (12 + vs) * 16 + 16;
+            if wire < cutover {
+                // below the cutover the coded variant is the full-copy
+                // path bit-for-bit — identical delivered traffic
+                assert!(
+                    (full - coded).abs() < 0.5,
+                    "{who} @ {vs}B (batch wire {wire}B) below cutover diverged: {full} vs {coded}"
+                );
+            } else {
+                assert!(
+                    coded < 0.8 * full,
+                    "{who} @ {vs}B: coded {coded} B/op must undercut full {full} B/op"
+                );
+                let tput_full = t.num(row_full, "wall_tput_ops_s").unwrap();
+                let tput_coded = t.num(row_coded, "wall_tput_ops_s").unwrap();
+                assert!(
+                    tput_coded > tput_full,
+                    "{who} @ {vs}B: coded tput {tput_coded} must beat full {tput_full}"
+                );
+            }
+        }
+    }
+}
+
 /// The `[storage]` table round-trips through the TOML config path into a
 /// running simulation: the WAL runs, the scheduled kill + restart recovers
 /// from the simulated disk, and every round still commits.

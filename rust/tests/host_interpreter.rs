@@ -206,6 +206,7 @@ fn script_commits_and_config() -> Vec<Output> {
             epoch: 1,
             ct: 2.0,
             joint: Some((1.5, 1.0)),
+            coded: None,
         },
         Output::ConfigCommitted { epoch: 1, index: 9, joint: true, voters: vec![0, 1, 2, 3] },
         Output::ConfigCommitted { epoch: 2, index: 10, joint: false, voters: vec![0, 1, 3] },

@@ -231,6 +231,65 @@ fn membership_off_is_bitwise_the_fixed_cluster_driver() {
 }
 
 #[test]
+fn coded_replication_off_is_bitwise_the_full_copy_driver() {
+    // The coding refactor's acceptance criterion: with no [coding] table and
+    // the new knobs absent-or-inert (bandwidth pinned to the stock NIC,
+    // value_size 0, no batching budget), the coded-replication plumbing must
+    // reproduce the historical full-copy digests bit-for-bit — at depth 1
+    // and above, under delays and faults.
+    for depth in [1usize, 4] {
+        let mut c = base(Protocol::Cabinet { t: 2 }, 11, depth, 7);
+        c.delay = DelayModel::Uniform { mean_ms: 100.0, spread_ms: 20.0 };
+        c.kills = vec![KillSpec::new(4, 2, KillStrategy::Random)];
+        let stock = run(&c);
+        let mut inert_cfg = c.clone();
+        inert_cfg.coding = None;
+        inert_cfg.max_batch_bytes = None;
+        inert_cfg.value_size = 0;
+        inert_cfg.bandwidth_bytes_per_ms =
+            Some(cabinet::net::delay::BANDWIDTH_BYTES_PER_MS);
+        let inert = run(&inert_cfg);
+        assert_bit_identical(&stock, &inert, &format!("coding-off depth {depth}"));
+    }
+}
+
+#[test]
+fn coded_replication_replays_bit_identical_at_both_depths() {
+    // Coding on (forced cutover low enough that every data round codes),
+    // sized values, constrained bandwidth, batching budget: the whole
+    // data-heavy configuration must still replay bit-for-bit, and it must
+    // be a real knob vs the full-copy run of the same seed.
+    use cabinet::consensus::coding::CodingConfig;
+    for depth in [1usize, 8] {
+        let mut c = base(Protocol::Cabinet { t: 2 }, 7, depth, 29);
+        c.workload =
+            WorkloadSpec::Ycsb { workload: Workload::A, batch: 16, records: 10_000 };
+        c.value_size = 65_536;
+        c.bandwidth_bytes_per_ms = Some(25_000.0);
+        c.coding = Some(CodingConfig { k: 3, cutover_bytes: None });
+        if depth > 1 {
+            c.max_batch_bytes = Some(1 << 20);
+        }
+        c.validate_coding().unwrap();
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.rounds.len(), 8, "depth {depth}");
+        assert_bit_identical(&a, &b, &format!("coded depth {depth}"));
+        assert!(a.bytes_sent > 0 && a.bytes_sent == b.bytes_sent, "depth {depth}");
+
+        let mut off = c.clone();
+        off.coding = None;
+        let full = run(&off);
+        assert!(
+            full.bytes_sent > a.bytes_sent,
+            "depth {depth}: coding must cut replicated bytes ({} vs {})",
+            full.bytes_sent,
+            a.bytes_sent
+        );
+    }
+}
+
+#[test]
 fn depth_changes_the_trajectory_but_not_the_commit_count() {
     // Depth is a real knob: depth 4 must take a different virtual-time
     // trajectory than depth 1 (same seed) while still committing every
